@@ -1,0 +1,16 @@
+fn main() -> anyhow::Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file("/tmp/multi.hlo.txt")?;
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+    let a = xla::Literal::vec1(&[1f32,2.,3.,4.]).reshape(&[2,2])?;
+    let b = xla::Literal::vec1(&[5f32,6.,7.,8.]).reshape(&[2,2])?;
+    let r = exe.execute::<xla::Literal>(&[a, b])?;
+    println!("outer len = {}", r.len());
+    for (i, row) in r.iter().enumerate() {
+        println!("  output {i}: inner len {} -> {:?}", row.len(), row[0].to_literal_sync()?.to_vec::<f32>()?);
+    }
+    // feed an output buffer back in
+    let r2 = exe.execute_b(&[&r[0][0], &r[1][0]])?;
+    println!("feedback ok: {:?}", r2[0][0].to_literal_sync()?.to_vec::<f32>()?);
+    Ok(())
+}

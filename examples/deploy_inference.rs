@@ -1,0 +1,73 @@
+//! Deployment mode (paper §III-C): extract the optimized model into a
+//! self-contained bundle with **no framework dependency**, load it like a
+//! user application would, and serve batched inference requests.
+//!
+//! Run: `cargo run --release --example deploy_inference`
+
+use sol::deploy::{write_bundle, DeployedModel};
+use sol::devsim::DeviceId;
+use sol::metrics::Timer;
+use sol::passes::{optimize, OptimizeOptions};
+use sol::runtime::manifest::Manifest;
+use sol::util::XorShift;
+use sol::workloads::NetId;
+
+fn cnn_params(rng: &mut XorShift) -> Vec<Vec<f32>> {
+    [
+        vec![3usize, 3, 3, 32], vec![32], vec![3, 3, 32, 64], vec![64],
+        vec![4096, 256], vec![256], vec![256, 10], vec![10],
+    ]
+    .iter()
+    .map(|s| rng.normal_vec(s.iter().product(), 0.08))
+    .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    // ---- build the bundle (the "SOL compiler deployment mode") ---------
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let model = optimize(&NetId::Squeezenet1_1.build(1), &OptimizeOptions::new(DeviceId::Xeon6126));
+    let dir = std::env::temp_dir().join("sol_deploy_demo");
+    let _ = std::fs::remove_dir_all(&dir);
+    write_bundle(&model, &["cnn_infer_sol_b1", "cnn_infer_sol_b32"], &manifest, &dir)?;
+    let files: Vec<String> = std::fs::read_dir(&dir)?
+        .flatten()
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    println!("bundle at {dir:?}: {files:?}");
+
+    // ---- load it as a standalone library (no framework, no SOL state) --
+    let dep = DeployedModel::load(&dir)?;
+    let mut rng = XorShift::new(17);
+    let params = cnn_params(&mut rng);
+
+    // single-image latency
+    let mut lat = Vec::new();
+    for _ in 0..20 {
+        let mut inputs = params.clone();
+        inputs.push(rng.normal_vec(32 * 32 * 3, 1.0));
+        let t = Timer::start();
+        let out = dep.run_f32("cnn_infer_sol_b1", &inputs)?;
+        lat.push(t.ms());
+        assert_eq!(out[0].as_f32()?.len(), 10);
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    // batched throughput
+    let mut inputs = params.clone();
+    inputs.push(rng.normal_vec(32 * 32 * 32 * 3, 1.0));
+    let t = Timer::start();
+    let reps = 10;
+    for _ in 0..reps {
+        dep.run_f32("cnn_infer_sol_b32", &inputs)?;
+    }
+    let batch_ms = t.ms() / reps as f64;
+
+    println!("b=1  latency: p50 {:.2} ms, p95 {:.2} ms", lat[10], lat[18]);
+    println!(
+        "b=32 throughput: {:.0} img/s ({batch_ms:.2} ms/batch)",
+        32.0 * 1e3 / batch_ms
+    );
+    std::fs::remove_dir_all(&dir)?;
+    println!("deploy_inference OK");
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Quickstart — the paper's Listing 1, in Torchlet + SOL:
+//!
+//! ```python
+//! py_model  = initPyTorchModel()
+//! opt_model = sol.optimize(py_model, copy_parameters=True)
+//! output    = opt_model(input)
+//! ```
+//!
+//! Builds a small CNN in the (unmodified) framework, optimizes it with the
+//! SOL middleware for every evaluation device, runs both models and checks
+//! they agree numerically.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use sol::devsim::DeviceId;
+use sol::framework::{install_default, Module, Tensor};
+use sol::frontend::SolModel;
+use sol::passes::OptimizeOptions;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. a normal framework model (PyTorch stand-in) ----------------
+    let py_model = Module::Sequential(vec![
+        Module::conv2d(3, 16, 3, 1, 1, 1),
+        Module::batch_norm(16),
+        Module::ReLU,
+        Module::MaxPool2d { k: 2, stride: 2, pad: 0 },
+        Module::conv2d(16, 32, 3, 1, 1, 2),
+        Module::ReLU,
+        Module::MaxPool2d { k: 2, stride: 2, pad: 0 },
+        Module::Flatten,
+        Module::linear(32 * 8 * 8, 10, 3),
+        Module::Softmax,
+    ]);
+    let reg = install_default();
+    let input = Tensor::randn(&[4, 3, 32, 32], 42, 0.5);
+
+    // ---- 2. sol.optimize(py_model) --------------------------------------
+    let sol_model = SolModel::optimize(
+        &py_model,
+        &[4, 3, 32, 32],
+        "quickstart_cnn",
+        &OptimizeOptions::new(DeviceId::Xeon6126),
+    )?;
+    println!(
+        "optimized: {} framework layers -> {} SOL kernels ({} elided, {} DFP regions)",
+        sol_model.graph.layer_count(),
+        sol_model.optimized.kernel_count(),
+        sol_model.optimized.elided_layers,
+        sol_model.optimized.dfp_kernel_count(),
+    );
+
+    // ---- 3. run both; numerics must agree -------------------------------
+    let reference = py_model.forward(&reg, &input)?;
+    let optimized = sol_model.forward(&input)?;
+    let (a, b) = (reference.to_f32()?, optimized.to_f32()?);
+    let max_err = a
+        .iter()
+        .zip(&b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    println!("max |py - sol| = {max_err:.2e}");
+    assert!(max_err < 1e-4, "numerics diverged");
+
+    // ---- 4. the same model compiles for every device --------------------
+    for dev in DeviceId::ALL {
+        let m = SolModel::optimize(
+            &py_model,
+            &[4, 3, 32, 32],
+            "quickstart_cnn",
+            &OptimizeOptions::new(dev),
+        )?;
+        println!(
+            "  {:?}: {} kernels, {:.1} MB traffic",
+            dev,
+            m.optimized.kernel_count(),
+            m.optimized.total_hbm_bytes() as f64 / 1e6
+        );
+    }
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,110 @@
+"""AOT lowering: every ENTRIES graph -> artifacts/<name>.hlo.txt + manifest.
+
+Interchange format is HLO *text*, NOT ``lowered.compile()`` /
+``.serialize()``: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the rust side's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``).  The text parser reassigns ids, so text round-trips cleanly
+(see /opt/xla-example/README.md).
+
+The manifest records each entry's input/output shapes+dtypes so the rust
+runtime (rust/src/runtime/) can allocate literals and validate signatures
+without re-deriving them from HLO.
+
+Python runs ONCE, at build time (``make artifacts``); the rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import ENTRIES
+
+_DTYPE_NAMES = {"float32": "f32", "int32": "i32", "bfloat16": "bf16"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust unwrap)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def sig_of(aval) -> dict:
+    name = _DTYPE_NAMES.get(str(aval.dtype), str(aval.dtype))
+    return {"shape": list(aval.shape), "dtype": name}
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile-path sources; embedded in the manifest so
+    ``make artifacts`` can skip when nothing changed."""
+    root = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for dirpath, _, files in sorted(os.walk(root)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated entry filter")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    fp = source_fingerprint()
+
+    if args.only is None and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            if old.get("fingerprint") == fp and all(
+                os.path.exists(os.path.join(args.out_dir, f"{n}.hlo.txt"))
+                for n in old.get("entries", {})
+            ) and set(old.get("entries", {})) == set(ENTRIES):
+                print(f"artifacts up-to-date ({len(ENTRIES)} entries), skipping")
+                return
+        except (json.JSONDecodeError, KeyError):
+            pass
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest: dict = {"fingerprint": fp, "entries": {}}
+    for name, (fn, specs) in sorted(ENTRIES.items()):
+        if only is not None and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *specs)
+        manifest["entries"][name] = {
+            "inputs": [sig_of(s) for s in specs],
+            "outputs": [sig_of(o) for o in out_shapes],
+            "hlo_bytes": len(text),
+        }
+        print(f"  {name}: {len(specs)} in, {len(out_shapes)} out, {len(text)//1024} KiB hlo")
+
+    if only is None:
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+        print(f"wrote {manifest_path} ({len(manifest['entries'])} entries)")
+    else:
+        print("partial build (--only): manifest not rewritten", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

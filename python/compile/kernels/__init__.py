@@ -1,0 +1,20 @@
+"""L1 — Pallas kernels implementing SOL's DFP (depth-first parallelism) module.
+
+Each kernel fuses a depth-first chain of layers (conv/bias/ReLU/pool, ...) so
+intermediates never leave VMEM — the Pallas analog of the paper's generated
+ISPC/CUDA/NCC loop nests (Listing 3).  All kernels run with ``interpret=True``
+so they lower to plain HLO ops executable by the rust PJRT CPU client.
+"""
+
+from .avgpool import avgpool_3x3
+from .conv_fused import conv3x3_bias_relu_maxpool
+from .depthwise import depthwise3x3_bias_relu
+from .linear import linear_relu, matmul_tiled
+
+__all__ = [
+    "avgpool_3x3",
+    "conv3x3_bias_relu_maxpool",
+    "depthwise3x3_bias_relu",
+    "linear_relu",
+    "matmul_tiled",
+]

@@ -1,0 +1,54 @@
+"""AveragePooling DFP kernel — the paper's Listing 3, as Pallas.
+
+The paper shows one DFP layer description lowered to four backends (standard
+C++, ISPC, CUDA, NCC).  All four share the same structure: an outer parallel
+loop over channel blocks (taskIndex / blockIdx.x / omp parallel for) and a
+vectorized inner loop over the output pixels with an unrolled 3x3 reduction.
+
+Here the outer channel loop is the Pallas *grid*, the pixel loops are the
+vectorized block body, and the HBM->VMEM movement the CUDA/NCC versions do
+implicitly through caches is explicit in the BlockSpec.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import channel_tile
+
+
+def _avgpool_kernel(x_ref, o_ref, *, kh: int, kw: int, inv_area: float):
+    """Block body: out[c, p1, p0] = mean_{k1,k2} in[c, p1+k1, p0+k2]."""
+    _, oh, ow = o_ref.shape
+    acc = jnp.zeros(o_ref.shape, dtype=jnp.float32)
+    # Unrolled k1/k2 loops, exactly like the generated code in Listing 3.
+    for k1 in range(kh):
+        for k2 in range(kw):
+            acc = acc + x_ref[:, k1 : k1 + oh, k2 : k2 + ow].astype(jnp.float32)
+    o_ref[...] = (acc * inv_area).astype(o_ref.dtype)
+
+
+def avgpool_3x3(x: jax.Array, *, kh: int = 3, kw: int = 3) -> jax.Array:
+    """3x3 stride-1 average pooling over a pre-padded [C, H+kh-1, W+kw-1] input.
+
+    ``count_include_pad=True`` semantics: the divisor is always kh*kw (the
+    paper's ``K.area(p->isCountPadding())``).
+    """
+    c, hp, wp = x.shape
+    oh, ow = hp - kh + 1, wp - kw + 1
+    tc = channel_tile(c, x.dtype.itemsize, spatial=hp * wp)
+    kernel = functools.partial(
+        _avgpool_kernel, kh=kh, kw=kw, inv_area=1.0 / float(kh * kw)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(c // tc,),
+        in_specs=[pl.BlockSpec((tc, hp, wp), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((tc, oh, ow), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, oh, ow), x.dtype),
+        interpret=True,
+    )(x)

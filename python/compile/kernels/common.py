@@ -1,0 +1,60 @@
+"""Shared tiling helpers for the DFP Pallas kernels.
+
+The DFP module's codegen decisions (paper §III-A / §IV) boil down to: pick a
+tile (block) shape that (a) fits the per-core scratchpad (VMEM on TPU,
+L1/L2 on CPU, shared-mem on GPU), (b) keeps the innermost dimensions aligned
+to the SIMD width, and (c) minimizes the number of nested loops.  These
+helpers centralize that choice so every kernel tiles consistently.
+"""
+
+from __future__ import annotations
+
+# TPU-shaped alignment targets (see DESIGN.md §Hardware-Adaptation):
+# the VPU operates on (8, 128) lanes, the MXU on 128x128 systolic tiles.
+LANE = 128
+SUBLANE = 8
+# Per-core VMEM budget we tile for (bytes).  Real TPUv4 has 16 MiB; we leave
+# headroom for double-buffering.
+VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def cdiv(a: int, b: int) -> int:
+    """Ceiling division."""
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    """Round ``a`` up to the next multiple of ``b``."""
+    return cdiv(a, b) * b
+
+
+def largest_divisor_tile(dim: int, max_tile: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``max_tile``.
+
+    Pallas blocks must evenly divide the array in interpret mode for the
+    shapes we use, so the DFP tiler only picks exact divisors.
+    """
+    t = min(dim, max_tile)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def channel_tile(channels: int, bytes_per_elem: int, spatial: int) -> int:
+    """Pick a channel-block size so ``spatial * tile`` fits the VMEM budget.
+
+    Mirrors the DFP module's "use knowledge of vector lengths to ensure
+    vector instructions are not underutilized" (paper §IV-C): prefer
+    LANE-aligned tiles, fall back to exact divisors for small channel counts.
+    """
+    budget_elems = VMEM_BUDGET // (2 * bytes_per_elem)  # in + out buffers
+    max_tile = max(1, budget_elems // max(spatial, 1))
+    if channels % LANE == 0 and LANE <= max_tile:
+        # Largest LANE multiple that divides channels and fits.
+        t = (max_tile // LANE) * LANE
+        while t >= LANE:
+            if channels % t == 0:
+                return t
+            t -= LANE
+        return LANE
+    return largest_divisor_tile(channels, max_tile)

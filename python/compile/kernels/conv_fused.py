@@ -1,0 +1,88 @@
+"""Fused Conv3x3 -> Bias -> ReLU -> MaxPool2x2 DFP kernel.
+
+This is the depth-first-parallelism showcase: the whole chain executes per
+tile inside VMEM, so the conv output never round-trips to HBM before the
+pooling consumes it.  The stock framework baseline (ref.py) materializes
+every intermediate — that traffic difference is exactly the effect the
+paper's Fig. 3 speedups come from.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the 3x3 spatial taps are
+unrolled (as in Listing 3) and each tap is a [N*H*W, Cin] x [Cin, Cout_tile]
+matmul feeding the MXU, instead of the per-lane FMA loops the CUDA/ISPC
+backends emit.  The grid runs over out-channel tiles — the paper's CUDA
+"SIMD-group" trick (independent warps on independent data) maps to
+independent grid cells.  (Perf iteration log, EXPERIMENTS.md §Perf: the
+batch dim moved from the grid into the block so interpret-mode lowering
+emits one large dot per tap instead of per-image slices.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import LANE, largest_divisor_tile
+
+
+def _conv_fused_kernel(x_ref, w_ref, b_ref, o_ref, *, pool: bool):
+    """Block body over one cout-tile grid cell.
+
+    x_ref: [N, H+2, W+2, Cin]   (pre-padded input, full batch)
+    w_ref: [3, 3, Cin, TCo]
+    b_ref: [TCo]
+    o_ref: [N, H/2, W/2, TCo] when pool else [N, H, W, TCo]
+    """
+    n, hp, wp, cin = x_ref.shape
+    h, w = hp - 2, wp - 2
+    tco = o_ref.shape[3]
+    acc = jnp.zeros((n * h * w, tco), dtype=jnp.float32)
+    # Unrolled 3x3 taps: each tap is an MXU matmul over the channel dim.
+    for k1 in range(3):
+        for k2 in range(3):
+            patch = x_ref[:, k1 : k1 + h, k2 : k2 + w, :].reshape(n * h * w, cin)
+            acc = acc + jnp.dot(
+                patch.astype(jnp.float32),
+                w_ref[k1, k2].astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+    # Bias + ReLU, still in VMEM.
+    y = jnp.maximum(acc + b_ref[...].astype(jnp.float32), 0.0)
+    y = y.reshape(n, h, w, tco)
+    if pool:
+        # MaxPool 2x2/2: the ReLU<->MaxPool elision (paper §III-A) already
+        # holds — max(relu(x)) == relu(max(x)) — so fusing them is exact.
+        y = y.reshape(n, h // 2, 2, w // 2, 2, tco).max(axis=(2, 4))
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def conv3x3_bias_relu_maxpool(
+    x: jax.Array, w: jax.Array, b: jax.Array, *, pool: bool = True
+) -> jax.Array:
+    """Fused conv3x3(valid, on pre-padded NHWC input) + bias + ReLU [+ maxpool2x2].
+
+    x: [N, H+2, W+2, Cin], w: [3, 3, Cin, Cout], b: [Cout].
+    Returns [N, H/2, W/2, Cout] (pool) or [N, H, W, Cout].
+    """
+    n, hp, wp, cin = x.shape
+    h, wd = hp - 2, wp - 2
+    cout = w.shape[3]
+    if pool:
+        assert h % 2 == 0 and wd % 2 == 0, "pooled extent must be even"
+    tco = largest_divisor_tile(cout, LANE)
+    oh, ow = (h // 2, wd // 2) if pool else (h, wd)
+    kernel = functools.partial(_conv_fused_kernel, pool=pool)
+    return pl.pallas_call(
+        kernel,
+        grid=(cout // tco,),
+        in_specs=[
+            pl.BlockSpec((n, hp, wp, cin), lambda j: (0, 0, 0, 0)),
+            pl.BlockSpec((3, 3, cin, tco), lambda j: (0, 0, 0, j)),
+            pl.BlockSpec((tco,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((n, oh, ow, tco), lambda j: (0, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, cout), x.dtype),
+        interpret=True,
+    )(x, w, b)

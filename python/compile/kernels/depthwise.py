@@ -1,0 +1,56 @@
+"""Depthwise Conv3x3 + Bias + ReLU DFP kernel ("WeightedPooling").
+
+Paper §III-A: grouped convolutions with groups == output channels (MobileNet,
+MNasNet, ShuffleNet) are NOT sent to the DNN/vendor-library module — they
+boil down to a WeightedPooling layer, which the DFP module handles with the
+same depth-first loop structure as AveragePooling (Listing 3), just with a
+learned per-tap weight.  This kernel is that WeightedPooling.
+
+No MXU work here — it is pure VPU (elementwise FMA over the channel lanes),
+which is also why the paper found VEDNN's hand-written grouped conv beats
+SOL's generated code on the SX-Aurora (§VI-D): there is no matmul to win on.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import channel_tile
+
+
+def _depthwise_kernel(x_ref, w_ref, b_ref, o_ref):
+    """x_ref: [1, H+2, W+2, TC], w_ref: [3, 3, TC], b_ref: [TC], o_ref: [1, H, W, TC]."""
+    h, w = o_ref.shape[1], o_ref.shape[2]
+    acc = jnp.zeros(o_ref.shape[1:], dtype=jnp.float32)
+    for k1 in range(3):
+        for k2 in range(3):
+            acc = acc + x_ref[0, k1 : k1 + h, k2 : k2 + w, :].astype(
+                jnp.float32
+            ) * w_ref[k1, k2].astype(jnp.float32)
+    o_ref[0] = jnp.maximum(acc + b_ref[...].astype(jnp.float32), 0.0).astype(
+        o_ref.dtype
+    )
+
+
+def depthwise3x3_bias_relu(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Fused depthwise conv3x3 (valid, pre-padded NHWC) + bias + ReLU.
+
+    x: [N, H+2, W+2, C], w: [3, 3, C], b: [C].  Returns [N, H, W, C].
+    """
+    n, hp, wp, c = x.shape
+    h, wd = hp - 2, wp - 2
+    tc = channel_tile(c, x.dtype.itemsize, spatial=hp * wp)
+    return pl.pallas_call(
+        _depthwise_kernel,
+        grid=(n, c // tc),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, tc), lambda i, j: (i, 0, 0, j)),
+            pl.BlockSpec((3, 3, tc), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((tc,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, wd, tc), lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, h, wd, c), x.dtype),
+        interpret=True,
+    )(x, w, b)

@@ -1,0 +1,114 @@
+"""Linear (+ReLU) DFP/DNN kernels, with split forward/backward implementations.
+
+Paper §III-A: "SOL can mix the usage of different implementations, algorithms
+and layouts between forward and backward pass".  We reproduce that design
+point literally: ``linear_relu`` is a ``jax.custom_vjp`` whose forward is the
+fused Pallas kernel (bias + ReLU folded into the matmul epilogue — the DFP
+path) and whose backward is built from the plain tiled-matmul kernel (the
+DNN/library path), with the transposed-weight layout the backward pass
+prefers (§III-A's per-pass layout choice).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import LANE, largest_divisor_tile
+
+
+# Tile size for the M/N grid dims.  On a real TPU this would be bounded by
+# VMEM (128..512); under interpret-mode lowering every grid cell becomes a
+# dynamic-slice + dot + dynamic-update-slice in the XLA loop, so the AOT
+# artifacts use the largest tile that divides the dim — one cell per layer,
+# letting XLA CPU see a single large dot (its own blocking is better).
+# Iteration log in EXPERIMENTS.md §Perf: 128 -> 512 -> 8192.
+MM_TILE = 8192
+
+
+def _mm_tile(m: int) -> int:
+    return largest_divisor_tile(m, MM_TILE)
+
+
+def _linear_relu_kernel(x_ref, w_ref, b_ref, o_ref):
+    """o = relu(x @ w + b) over one (M-tile, N-tile) grid cell."""
+    y = jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = jnp.maximum(y + b_ref[...].astype(jnp.float32), 0.0).astype(
+        o_ref.dtype
+    )
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+def matmul_tiled(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Tiled [M,K] @ [K,N] matmul; grid over MXU-aligned (M, N) tiles."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    tm, tn = _mm_tile(m), _mm_tile(n)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // tm, n // tn),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def _linear_relu_fwd_impl(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    m, k = x.shape
+    n = w.shape[1]
+    tm, tn = _mm_tile(m), _mm_tile(n)
+    return pl.pallas_call(
+        _linear_relu_kernel,
+        grid=(m // tm, n // tn),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tn), lambda i, j: (0, j)),
+            pl.BlockSpec((tn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+@jax.custom_vjp
+def linear_relu(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """relu(x @ w + b) — DFP-fused forward, library-style backward."""
+    return _linear_relu_fwd_impl(x, w, b)
+
+
+def _linear_relu_vjp_fwd(x, w, b):
+    y = _linear_relu_fwd_impl(x, w, b)
+    return y, (x, w, y)
+
+
+def _linear_relu_vjp_bwd(res, g):
+    x, w, y = res
+    # ReLU mask comes from the saved activation (cheaper than saving pre-acts).
+    gm = (g * (y > 0).astype(g.dtype)).astype(g.dtype)
+    # Backward uses the transposed-weight layout (paper: untransposed weights
+    # are faster forward on CPU, transposed on Aurora — per-pass choice).
+    dx = matmul_tiled(gm, w.T)
+    dw = matmul_tiled(x.T, gm)
+    db = gm.sum(axis=0)
+    return dx, dw, db
+
+
+linear_relu.defvjp(_linear_relu_vjp_fwd, _linear_relu_vjp_bwd)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every DFP kernel — the correctness contract.
+
+These are the "reference implementations within the AI frameworks" the paper
+benchmarks against: per-layer, unfused, every intermediate materialized.
+pytest asserts kernel-vs-ref allclose; the L2 baseline graphs (model.py) are
+also built from these, so baseline-vs-SOL in the rust benches compares two
+*numerically identical* computations with different execution structure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def avgpool_3x3_ref(x: jax.Array, *, kh: int = 3, kw: int = 3) -> jax.Array:
+    """[C, H+kh-1, W+kw-1] -> [C, H, W]; divisor kh*kw (count_include_pad)."""
+    c, hp, wp = x.shape
+    oh, ow = hp - kh + 1, wp - kw + 1
+    acc = jnp.zeros((c, oh, ow), dtype=jnp.float32)
+    for k1 in range(kh):
+        for k2 in range(kw):
+            acc = acc + x[:, k1 : k1 + oh, k2 : k2 + ow].astype(jnp.float32)
+    return (acc / (kh * kw)).astype(x.dtype)
+
+
+def conv3x3_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Valid conv over pre-padded NHWC input; w: [3, 3, Cin, Cout]."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ).astype(x.dtype)
+
+
+def bias_relu_ref(y: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.maximum(y + b.astype(y.dtype), 0.0)
+
+
+def maxpool2x2_ref(y: jax.Array) -> jax.Array:
+    n, h, w, c = y.shape
+    return y.reshape(n, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def conv3x3_bias_relu_maxpool_ref(
+    x: jax.Array, w: jax.Array, b: jax.Array, *, pool: bool = True
+) -> jax.Array:
+    """The unfused baseline chain: conv -> bias -> relu [-> maxpool]."""
+    y = bias_relu_ref(conv3x3_ref(x, w), b)
+    return maxpool2x2_ref(y) if pool else y
+
+
+def depthwise3x3_bias_relu_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise (groups == channels) conv3x3 + bias + relu, NHWC."""
+    n, hp, wp, c = x.shape
+    h, wd = hp - 2, wp - 2
+    acc = jnp.zeros((n, h, wd, c), dtype=jnp.float32)
+    for k1 in range(3):
+        for k2 in range(3):
+            acc = acc + x[:, k1 : k1 + h, k2 : k2 + wd, :].astype(
+                jnp.float32
+            ) * w[k1, k2].astype(jnp.float32)
+    return jnp.maximum(acc + b.astype(jnp.float32), 0.0).astype(x.dtype)
+
+
+def linear_relu_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.maximum(
+        jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32),
+        0.0,
+    ).astype(x.dtype)
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(a.dtype)

@@ -1,0 +1,348 @@
+"""L2 — JAX compute graphs for the SOL reproduction, in two execution shapes.
+
+Every workload graph exists in (up to) three variants:
+
+* ``sol``  — what SOL's compiler produces: the DFP-fused Pallas kernels
+  (kernels/*) chained into one jitted graph; one executable per network.
+* ``ref``  — the stock-framework computation as one graph (used as the
+  numeric oracle and for training baselines).
+* per-op  — the stock framework's *execution structure*: each layer is its
+  own entry point, so the rust Torchlet dispatcher can run the baseline the
+  way PyTorch actually runs it — one kernel launch + dispatch per op, all
+  intermediates materialized.  SOL-vs-baseline wallclock in the rust benches
+  is therefore a real structural comparison, not a flag on a cost model.
+
+``ENTRIES`` maps entry-point name -> (fn, example_args); aot.py lowers each
+to ``artifacts/<name>.hlo.txt`` and records signatures in ``manifest.json``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    avgpool_3x3,
+    conv3x3_bias_relu_maxpool,
+    depthwise3x3_bias_relu,
+    linear_relu,
+)
+from .kernels import ref as R
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# --------------------------------------------------------------------------
+# Differentiable fused conv block: DFP forward, library backward.
+# Paper §III-A: forward and backward may use different implementations;
+# the backward here is the jnp "vendor library" path via jax.vjp of the ref.
+# --------------------------------------------------------------------------
+def _make_conv_block(pool: bool):
+    @jax.custom_vjp
+    def cb(x, w, b):
+        return conv3x3_bias_relu_maxpool(x, w, b, pool=pool)
+
+    def fwd(x, w, b):
+        return conv3x3_bias_relu_maxpool(x, w, b, pool=pool), (x, w, b)
+
+    def bwd(res, g):
+        x, w, b = res
+        _, vjp = jax.vjp(
+            lambda x, w, b: R.conv3x3_bias_relu_maxpool_ref(x, w, b, pool=pool),
+            x, w, b,
+        )
+        return vjp(g)
+
+    cb.defvjp(fwd, bwd)
+    return cb
+
+
+_conv_block_pool = _make_conv_block(True)
+_conv_block_nopool = _make_conv_block(False)
+
+
+def conv_block(x, w, b, pool=True):
+    """DFP-fused conv block with a library backward (see module docstring)."""
+    return (_conv_block_pool if pool else _conv_block_nopool)(x, w, b)
+
+
+@jax.custom_vjp
+def depthwise_block(x, w, b):
+    return depthwise3x3_bias_relu(x, w, b)
+
+
+def _dw_fwd(x, w, b):
+    return depthwise3x3_bias_relu(x, w, b), (x, w, b)
+
+
+def _dw_bwd(res, g):
+    x, w, b = res
+    _, vjp = jax.vjp(R.depthwise3x3_bias_relu_ref, x, w, b)
+    return vjp(g)
+
+
+depthwise_block.defvjp(_dw_fwd, _dw_bwd)
+
+
+def pad_hw(x):
+    """SAME padding for the pre-padded-input kernels (NHWC)."""
+    return jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+
+
+def softmax_xent(logits, labels):
+    """Mean softmax cross-entropy with integer labels."""
+    logz = jax.nn.log_softmax(logits.astype(F32), axis=-1)
+    return -jnp.take_along_axis(logz, labels[:, None], axis=-1).mean()
+
+
+# --------------------------------------------------------------------------
+# MLP — the paper's "3-layer MLP with 8192 features and ReLU" (§VI-B).
+# 8192 -> 8192 -> 8192 -> 10: ~134M parameters, the e2e training workload.
+# --------------------------------------------------------------------------
+MLP_IN, MLP_HID, MLP_OUT = 8192, 8192, 10
+MLP_LR = 0.1
+
+
+def mlp_params_spec():
+    return [
+        spec((MLP_IN, MLP_HID)), spec((MLP_HID,)),
+        spec((MLP_HID, MLP_HID)), spec((MLP_HID,)),
+        spec((MLP_HID, MLP_OUT)), spec((MLP_OUT,)),
+    ]
+
+
+def mlp_fwd_sol(w1, b1, w2, b2, w3, b3, x):
+    h1 = linear_relu(x, w1, b1)
+    h2 = linear_relu(h1, w2, b2)
+    return (jnp.dot(h2, w3) + b3,)  # final layer: plain DNN-module matmul
+
+
+def mlp_fwd_ref(w1, b1, w2, b2, w3, b3, x):
+    h1 = R.linear_relu_ref(x, w1, b1)
+    h2 = R.linear_relu_ref(h1, w2, b2)
+    return (jnp.dot(h2, w3) + b3,)
+
+
+def _mlp_train_step(fwd, w1, b1, w2, b2, w3, b3, x, y):
+    def loss_fn(params):
+        (logits,) = fwd(*params, x)
+        return softmax_xent(logits, y)
+
+    params = (w1, b1, w2, b2, w3, b3)
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new = tuple(p - MLP_LR * g for p, g in zip(params, grads))
+    return new + (loss,)
+
+
+mlp_train_sol = functools.partial(_mlp_train_step, mlp_fwd_sol)
+mlp_train_ref = functools.partial(_mlp_train_step, mlp_fwd_ref)
+
+
+# --------------------------------------------------------------------------
+# MiniCNN — the end-to-end CNN (quickstart / deploy): CIFAR-shaped input.
+# conv3->32 +pool, conv32->64 +pool, fc 4096->256 relu, fc 256->10.
+# --------------------------------------------------------------------------
+CNN_H = 32
+
+
+def cnn_params_spec():
+    return [
+        spec((3, 3, 3, 32)), spec((32,)),
+        spec((3, 3, 32, 64)), spec((64,)),
+        spec((CNN_H // 4 * CNN_H // 4 * 64, 256)), spec((256,)),
+        spec((256, 10)), spec((10,)),
+    ]
+
+
+def _cnn_fwd(conv, lin, cw1, cb1, cw2, cb2, fw1, fb1, fw2, fb2, x):
+    h = conv(pad_hw(x), cw1, cb1, True)          # [B, 16, 16, 32]
+    h = conv(pad_hw(h), cw2, cb2, True)          # [B, 8, 8, 64]
+    h = h.reshape(h.shape[0], -1)                # [B, 4096]
+    h = lin(h, fw1, fb1)                         # [B, 256]
+    return (jnp.dot(h, fw2) + fb2,)              # [B, 10]
+
+
+def cnn_fwd_sol(*args):
+    return _cnn_fwd(conv_block, linear_relu, *args)
+
+
+def cnn_fwd_ref(*args):
+    return _cnn_fwd(
+        lambda x, w, b, p: R.conv3x3_bias_relu_maxpool_ref(x, w, b, pool=p),
+        R.linear_relu_ref,
+        *args,
+    )
+
+
+CNN_LR = 0.05
+
+
+def _cnn_train_step(fwd, *args):
+    *params, x, y = args
+    params = tuple(params)
+
+    def loss_fn(params):
+        (logits,) = fwd(*params, x)
+        return softmax_xent(logits, y)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new = tuple(p - CNN_LR * g for p, g in zip(params, grads))
+    return new + (loss,)
+
+
+cnn_train_sol = functools.partial(_cnn_train_step, cnn_fwd_sol)
+cnn_train_ref = functools.partial(_cnn_train_step, cnn_fwd_ref)
+
+
+# --------------------------------------------------------------------------
+# Calibration blocks: the unit graphs the rust devsim anchors its per-device
+# efficiency factors on (DESIGN.md §4), plus standalone DFP kernels.
+# --------------------------------------------------------------------------
+CB_C, CB_H = 64, 56  # conv-block site: 64ch, 56x56 (ResNet stage-2 shape)
+DW_C, DW_H = 128, 56  # depthwise site (MobileNet/MNasNet shape)
+AP_C, AP_H = 512, 128  # Listing-3 AveragePooling shape
+
+
+def conv_site_sol(x, w, b):
+    return (conv_block(x, w, b, pool=True),)
+
+
+def conv_site_ref(x, w, b):
+    return (R.conv3x3_bias_relu_maxpool_ref(x, w, b, pool=True),)
+
+
+def dw_site_sol(x, w, b):
+    return (depthwise3x3_bias_relu(x, w, b),)
+
+
+def dw_site_ref(x, w, b):
+    return (R.depthwise3x3_bias_relu_ref(x, w, b),)
+
+
+def avgpool_sol(x):
+    return (avgpool_3x3(x),)
+
+
+def avgpool_ref(x):
+    return (R.avgpool_3x3_ref(x),)
+
+
+# --------------------------------------------------------------------------
+# Per-op entry points — the baseline framework's execution structure.
+# Rust's Torchlet dispatcher runs these one at a time, like PyTorch ops.
+# --------------------------------------------------------------------------
+def op_conv3x3(x, w):
+    return (R.conv3x3_ref(x, w),)
+
+
+def op_bias_relu(y, b):
+    return (R.bias_relu_ref(y, b),)
+
+
+def op_maxpool(y):
+    return (R.maxpool2x2_ref(y),)
+
+
+def op_linear(x, w, b):
+    return (jnp.dot(x, w) + b,)
+
+
+def op_relu(x):
+    return (jnp.maximum(x, 0.0),)
+
+
+def op_pad(x):
+    return (pad_hw(x),)
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+ENTRIES: dict[str, tuple[Callable, list]] = {}
+
+
+def entry(name: str, fn: Callable, args: list) -> None:
+    assert name not in ENTRIES, f"duplicate entry {name}"
+    ENTRIES[name] = (fn, args)
+
+
+def _register_all() -> None:
+    # MLP (paper's MLP workload; inference B=1, training B=64 per §VI-D)
+    ps = mlp_params_spec()
+    for b in (1, 64):
+        entry(f"mlp_infer_sol_b{b}", mlp_fwd_sol, ps + [spec((b, MLP_IN))])
+        entry(f"mlp_infer_ref_b{b}", mlp_fwd_ref, ps + [spec((b, MLP_IN))])
+    for b in (16, 64):
+        targs = ps + [spec((b, MLP_IN)), spec((b,), I32)]
+        entry(f"mlp_train_sol_b{b}", mlp_train_sol, targs)
+        entry(f"mlp_train_ref_b{b}", mlp_train_ref, targs)
+
+    # MiniCNN (e2e example + deploy)
+    cs = cnn_params_spec()
+    for b in (1, 32):
+        entry(f"cnn_infer_sol_b{b}", cnn_fwd_sol, cs + [spec((b, CNN_H, CNN_H, 3))])
+        entry(f"cnn_infer_ref_b{b}", cnn_fwd_ref, cs + [spec((b, CNN_H, CNN_H, 3))])
+    targs = cs + [spec((32, CNN_H, CNN_H, 3)), spec((32,), I32)]
+    entry("cnn_train_sol_b32", cnn_train_sol, targs)
+    entry("cnn_train_ref_b32", cnn_train_ref, targs)
+
+    # Calibration sites (fused vs unfused), B=1 and B=16 (paper's batch sizes)
+    for b in (1, 16):
+        cargs = [
+            spec((b, CB_H + 2, CB_H + 2, CB_C)),
+            spec((3, 3, CB_C, CB_C)),
+            spec((CB_C,)),
+        ]
+        entry(f"conv_site_sol_b{b}", conv_site_sol, cargs)
+        entry(f"conv_site_ref_b{b}", conv_site_ref, cargs)
+        dargs = [
+            spec((b, DW_H + 2, DW_H + 2, DW_C)),
+            spec((3, 3, DW_C)),
+            spec((DW_C,)),
+        ]
+        entry(f"dw_site_sol_b{b}", dw_site_sol, dargs)
+        entry(f"dw_site_ref_b{b}", dw_site_ref, dargs)
+
+    # Listing-3 AveragePooling
+    ap = [spec((AP_C, AP_H + 2, AP_H + 2))]
+    entry("avgpool_sol", avgpool_sol, ap)
+    entry("avgpool_ref", avgpool_ref, ap)
+
+    # Per-op baseline kernels for the conv calibration site
+    for b in (1, 16):
+        entry(
+            f"op_conv3x3_cb_b{b}",
+            op_conv3x3,
+            [spec((b, CB_H + 2, CB_H + 2, CB_C)), spec((3, 3, CB_C, CB_C))],
+        )
+        entry(
+            f"op_bias_relu_cb_b{b}",
+            op_bias_relu,
+            [spec((b, CB_H, CB_H, CB_C)), spec((CB_C,))],
+        )
+        entry(f"op_maxpool_cb_b{b}", op_maxpool, [spec((b, CB_H, CB_H, CB_C))])
+
+    # Per-op baseline kernels for the MLP (linear / relu per layer)
+    for b in (1, 64):
+        entry(
+            f"op_linear_mlp1_b{b}",
+            op_linear,
+            [spec((b, MLP_IN)), spec((MLP_IN, MLP_HID)), spec((MLP_HID,))],
+        )
+        entry(
+            f"op_linear_mlp3_b{b}",
+            op_linear,
+            [spec((b, MLP_HID)), spec((MLP_HID, MLP_OUT)), spec((MLP_OUT,))],
+        )
+        entry(f"op_relu_mlp_b{b}", op_relu, [spec((b, MLP_HID))])
+
+
+_register_all()

@@ -1,0 +1,26 @@
+"""Shared fixtures/helpers for the L1/L2 test suite."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import settings
+
+# interpret-mode Pallas is slow; keep hypothesis budgets tight but meaningful.
+settings.register_profile("sol", max_examples=12, deadline=None)
+settings.load_profile("sol")
+
+
+def rand(key: int, shape, dtype=np.float32, scale: float = 1.0):
+    rng = np.random.default_rng(key)
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+def assert_close(a, b, rtol=1e-4, atol=1e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
+@pytest.fixture(scope="session")
+def cpu():
+    return jax.devices("cpu")[0]

@@ -1,0 +1,72 @@
+"""AOT pipeline: HLO-text emission, manifest integrity, fingerprint skip."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import model as M
+from compile.aot import sig_of, source_fingerprint, to_hlo_text
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_is_parseable_text():
+    fn, specs = M.ENTRIES["avgpool_sol"]
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    assert text.startswith("HloModule"), text[:50]
+    assert "ENTRY" in text
+
+
+def test_hlo_output_is_tuple():
+    """return_tuple=True: rust unwraps with to_tuple1/to_tuple — the root
+    instruction must be tuple-shaped."""
+    fn, specs = M.ENTRIES["avgpool_sol"]
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    # the ENTRY computation's ROOT must produce a tuple
+    root_lines = [l for l in text.splitlines() if "ROOT" in l]
+    assert any("tuple" in l or "(f32" in l for l in root_lines), root_lines
+
+
+def test_sig_of():
+    s = jax.ShapeDtypeStruct((2, 3), jax.numpy.float32)
+    assert sig_of(s) == {"shape": [2, 3], "dtype": "f32"}
+    s = jax.ShapeDtypeStruct((4,), jax.numpy.int32)
+    assert sig_of(s) == {"shape": [4], "dtype": "i32"}
+
+
+def test_fingerprint_stable():
+    assert source_fingerprint() == source_fingerprint()
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestBuiltArtifacts:
+    @pytest.fixture(autouse=True)
+    def _load(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            self.manifest = json.load(f)
+
+    def test_manifest_covers_registry(self):
+        assert set(self.manifest["entries"]) == set(M.ENTRIES)
+
+    def test_all_hlo_files_exist_and_nonempty(self):
+        for name in self.manifest["entries"]:
+            p = os.path.join(ART, f"{name}.hlo.txt")
+            assert os.path.exists(p), p
+            assert os.path.getsize(p) > 100, p
+
+    def test_signatures_match_registry(self):
+        for name, meta in self.manifest["entries"].items():
+            _, specs = M.ENTRIES[name]
+            assert len(meta["inputs"]) == len(specs), name
+            for sig, s in zip(meta["inputs"], specs):
+                assert tuple(sig["shape"]) == tuple(s.shape), name
+
+    def test_train_entries_return_params_plus_loss(self):
+        e = self.manifest["entries"]["mlp_train_sol_b64"]
+        assert len(e["outputs"]) == 7  # 6 params + loss
+        assert e["outputs"][-1]["shape"] == []  # scalar loss

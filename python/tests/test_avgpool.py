@@ -1,0 +1,50 @@
+"""AveragePooling DFP kernel (paper Listing 3) vs pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import avgpool_3x3
+from compile.kernels.ref import avgpool_3x3_ref
+
+from .conftest import assert_close, rand
+
+
+@given(
+    c=st.sampled_from([1, 3, 8, 16, 64]),
+    h=st.integers(1, 12),
+    w=st.integers(1, 12),
+    seed=st.integers(0, 2**16),
+)
+def test_matches_ref_shape_sweep(c, h, w, seed):
+    x = rand(seed, (c, h + 2, w + 2))
+    assert_close(avgpool_3x3(x), avgpool_3x3_ref(x))
+
+
+@pytest.mark.parametrize("kh,kw", [(1, 1), (2, 2), (3, 3), (5, 3)])
+def test_kernel_sizes(kh, kw):
+    x = rand(1, (8, 10 + kh - 1, 10 + kw - 1))
+    assert_close(avgpool_3x3(x, kh=kh, kw=kw), avgpool_3x3_ref(x, kh=kh, kw=kw))
+
+
+def test_listing3_shape():
+    """The paper's exact Listing-3 geometry: 512 channels, 128x128, 3x3."""
+    x = rand(3, (512, 130, 130))
+    out = avgpool_3x3(x)
+    assert out.shape == (512, 128, 128)
+    assert_close(out, avgpool_3x3_ref(x))
+
+
+def test_count_include_pad_semantics():
+    """Divisor is always kh*kw, even where the window covers padding zeros."""
+    x = np.zeros((1, 5, 5), np.float32)
+    x[0, 2, 2] = 9.0  # center contributes 9/9 = 1.0 to every covering window
+    out = np.asarray(avgpool_3x3(jnp.asarray(x)))
+    assert out[0, 1, 1] == pytest.approx(1.0)
+
+
+def test_constant_input_is_identity():
+    x = np.full((4, 8, 8), 2.5, np.float32)
+    assert_close(avgpool_3x3(jnp.asarray(x)), np.full((4, 6, 6), 2.5, np.float32))

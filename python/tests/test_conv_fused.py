@@ -1,0 +1,83 @@
+"""Fused conv3x3+bias+ReLU+maxpool DFP kernel vs the unfused oracle chain."""
+
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import conv3x3_bias_relu_maxpool
+from compile.kernels.ref import conv3x3_bias_relu_maxpool_ref
+
+from .conftest import assert_close, rand
+
+
+def _mk(seed, n, h, w, cin, cout, scale=0.2):
+    return (
+        rand(seed, (n, h + 2, w + 2, cin), scale=scale),
+        rand(seed + 1, (3, 3, cin, cout), scale=scale),
+        rand(seed + 2, (cout,), scale=scale),
+    )
+
+
+@given(
+    n=st.integers(1, 3),
+    hw=st.sampled_from([4, 6, 8, 10]),
+    cin=st.sampled_from([1, 3, 8, 17]),
+    cout=st.sampled_from([4, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_matches_ref_pool(n, hw, cin, cout, seed):
+    x, w, b = _mk(seed, n, hw, hw, cin, cout)
+    assert_close(
+        conv3x3_bias_relu_maxpool(x, w, b, pool=True),
+        conv3x3_bias_relu_maxpool_ref(x, w, b, pool=True),
+        rtol=1e-3, atol=1e-4,
+    )
+
+
+@given(
+    hw=st.sampled_from([3, 5, 8]),  # no-pool allows odd extents
+    cout=st.sampled_from([2, 8, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_matches_ref_nopool(hw, cout, seed):
+    x, w, b = _mk(seed, 1, hw, hw, 4, cout)
+    assert_close(
+        conv3x3_bias_relu_maxpool(x, w, b, pool=False),
+        conv3x3_bias_relu_maxpool_ref(x, w, b, pool=False),
+        rtol=1e-3, atol=1e-4,
+    )
+
+
+def test_relu_clamps_negative():
+    """All-negative bias drives pre-acts negative -> output must be all zero."""
+    x, w, _ = _mk(7, 1, 4, 4, 2, 4, scale=0.01)
+    b = np.full((4,), -10.0, np.float32)
+    out = np.asarray(conv3x3_bias_relu_maxpool(x, w, b))
+    assert (out == 0).all()
+
+
+def test_relu_maxpool_commute():
+    """The §III-A elision identity the fusion relies on: max∘relu == relu∘max."""
+    x, w, b = _mk(11, 2, 8, 8, 3, 8)
+    fused = conv3x3_bias_relu_maxpool(x, w, b, pool=True)
+    ref = conv3x3_bias_relu_maxpool_ref(x, w, b, pool=True)
+    assert_close(fused, ref, rtol=1e-3, atol=1e-4)
+
+
+def test_calibration_site_shape():
+    """The conv_site artifact geometry used by the rust devsim calibration."""
+    x, w, b = _mk(13, 1, 56, 56, 64, 64, scale=0.05)
+    out = conv3x3_bias_relu_maxpool(x, w, b)
+    assert out.shape == (1, 28, 28, 64)
+    assert_close(out, conv3x3_bias_relu_maxpool_ref(x, w, b), rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("cout", [5, 7])  # non-LANE-divisible channel counts
+def test_awkward_cout_tiles(cout):
+    x, w, b = _mk(17, 1, 4, 4, 3, cout)
+    assert_close(
+        conv3x3_bias_relu_maxpool(x, w, b),
+        conv3x3_bias_relu_maxpool_ref(x, w, b),
+        rtol=1e-3, atol=1e-4,
+    )

@@ -1,0 +1,59 @@
+"""Depthwise ("WeightedPooling") DFP kernel vs oracle (paper §III-A)."""
+
+import numpy as np
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import depthwise3x3_bias_relu
+from compile.kernels.ref import depthwise3x3_bias_relu_ref
+
+from .conftest import assert_close, rand
+
+
+def _mk(seed, n, hw, c):
+    return (
+        rand(seed, (n, hw + 2, hw + 2, c)),
+        rand(seed + 1, (3, 3, c)),
+        rand(seed + 2, (c,)),
+    )
+
+
+@given(
+    n=st.integers(1, 3),
+    hw=st.sampled_from([1, 4, 7, 12]),
+    c=st.sampled_from([1, 2, 8, 32, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_matches_ref(n, hw, c, seed):
+    x, w, b = _mk(seed, n, hw, c)
+    assert_close(
+        depthwise3x3_bias_relu(x, w, b),
+        depthwise3x3_bias_relu_ref(x, w, b),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_is_weighted_pooling():
+    """With uniform weights 1/9 and zero bias this IS 3x3 average pooling —
+    the paper's observation that groups==channels convs reduce to pooling."""
+    from compile.kernels import avgpool_3x3
+
+    x = rand(3, (1, 10, 10, 8))
+    w = np.full((3, 3, 8), 1.0 / 9.0, np.float32)
+    b = np.zeros((8,), np.float32)
+    dw = np.asarray(depthwise3x3_bias_relu(x, w, b))
+    # avgpool kernel works in [C, H, W]; relu(avg) == weighted-pool w/ relu
+    ap = np.asarray(avgpool_3x3(np.transpose(x[0], (2, 0, 1))))
+    ap = np.maximum(np.transpose(ap, (1, 2, 0)), 0.0)
+    np.testing.assert_allclose(dw[0], ap, rtol=1e-5, atol=1e-6)
+
+
+def test_channels_independent():
+    """Depthwise must not mix channels: zeroing one channel's weights zeroes
+    exactly that output channel (given zero bias)."""
+    x, w, b = _mk(5, 1, 6, 4)
+    b = np.zeros_like(b)
+    w[:, :, 2] = 0.0
+    out = np.asarray(depthwise3x3_bias_relu(x, w, b))
+    assert (out[..., 2] == 0).all()
+    assert (out[..., 0] != 0).any()

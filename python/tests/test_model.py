@@ -1,0 +1,112 @@
+"""L2 graph equivalence: sol (DFP-fused) vs ref (stock) variants, and
+training-step semantics (loss decreases, params update)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+from .conftest import assert_close, rand
+
+
+def _cnn_params(seed=0, scale=0.1):
+    return [jnp.asarray(rand(seed + i, s.shape, scale=scale)) for i, s in enumerate(M.cnn_params_spec())]
+
+
+def _mlp_params(seed=0, scale=0.02):
+    return [jnp.asarray(rand(seed + i, s.shape, scale=scale)) for i, s in enumerate(M.mlp_params_spec())]
+
+
+class TestCnn:
+    def test_fwd_sol_matches_ref(self):
+        params = _cnn_params()
+        x = jnp.asarray(rand(99, (2, M.CNN_H, M.CNN_H, 3)))
+        (sol,) = M.cnn_fwd_sol(*params, x)
+        (ref,) = M.cnn_fwd_ref(*params, x)
+        assert sol.shape == (2, 10)
+        assert_close(sol, ref, rtol=1e-3, atol=1e-4)
+
+    def test_train_step_sol_matches_ref(self):
+        params = _cnn_params(1)
+        x = jnp.asarray(rand(50, (4, M.CNN_H, M.CNN_H, 3)))
+        y = jnp.asarray(np.arange(4, dtype=np.int32) % 10)
+        out_s = M.cnn_train_sol(*params, x, y)
+        out_r = M.cnn_train_ref(*params, x, y)
+        for s, r in zip(out_s, out_r):
+            assert_close(s, r, rtol=5e-3, atol=1e-4)
+
+    def test_loss_decreases(self):
+        params = _cnn_params(2)
+        x = jnp.asarray(rand(51, (8, M.CNN_H, M.CNN_H, 3)))
+        y = jnp.asarray((np.arange(8) % 10).astype(np.int32))
+        losses = []
+        for _ in range(5):
+            *params, loss = M.cnn_train_sol(*params, x, y)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0], f"no learning: {losses}"
+
+    def test_params_change(self):
+        params = _cnn_params(3)
+        x = jnp.asarray(rand(52, (2, M.CNN_H, M.CNN_H, 3)))
+        y = jnp.asarray(np.zeros(2, np.int32))
+        out = M.cnn_train_sol(*params, x, y)
+        assert not np.allclose(np.asarray(out[0]), np.asarray(params[0]))
+
+
+class TestMlpSmall:
+    """MLP math checked at reduced width (same code path, manageable size)."""
+
+    def test_fwd_variants_agree(self, monkeypatch):
+        w1, b1 = rand(1, (64, 64), scale=0.1), rand(2, (64,), scale=0.1)
+        w2, b2 = rand(3, (64, 64), scale=0.1), rand(4, (64,), scale=0.1)
+        w3, b3 = rand(5, (64, 10), scale=0.1), rand(6, (10,), scale=0.1)
+        x = rand(7, (8, 64))
+        (sol,) = M.mlp_fwd_sol(w1, b1, w2, b2, w3, b3, x)
+        (ref,) = M.mlp_fwd_ref(w1, b1, w2, b2, w3, b3, x)
+        assert_close(sol, ref, rtol=1e-3, atol=1e-4)
+
+    def test_train_step_variants_agree(self):
+        args = [
+            rand(1, (64, 64), scale=0.1), rand(2, (64,), scale=0.1),
+            rand(3, (64, 64), scale=0.1), rand(4, (64,), scale=0.1),
+            rand(5, (64, 10), scale=0.1), rand(6, (10,), scale=0.1),
+            rand(7, (16, 64)), (np.arange(16) % 10).astype(np.int32),
+        ]
+        out_s = M.mlp_train_sol(*map(jnp.asarray, args))
+        out_r = M.mlp_train_ref(*map(jnp.asarray, args))
+        for s, r in zip(out_s, out_r):
+            assert_close(s, r, rtol=5e-3, atol=1e-4)
+
+
+class TestLoss:
+    def test_softmax_xent_uniform(self):
+        logits = jnp.zeros((4, 10))
+        y = jnp.asarray(np.arange(4, dtype=np.int32))
+        assert float(M.softmax_xent(logits, y)) == pytest.approx(np.log(10), rel=1e-5)
+
+    def test_softmax_xent_confident(self):
+        logits = jnp.asarray(np.eye(4, 10, dtype=np.float32) * 100.0)
+        y = jnp.asarray(np.arange(4, dtype=np.int32))
+        assert float(M.softmax_xent(logits, y)) == pytest.approx(0.0, abs=1e-5)
+
+
+class TestRegistry:
+    def test_entry_count_and_naming(self):
+        assert len(M.ENTRIES) >= 30
+        for name in M.ENTRIES:
+            assert any(
+                name.startswith(p)
+                for p in ("mlp_", "cnn_", "conv_site_", "dw_site_", "avgpool_", "op_")
+            ), name
+
+    def test_every_sol_entry_has_ref_twin(self):
+        for name in M.ENTRIES:
+            if "_sol" in name:
+                assert name.replace("_sol", "_ref") in M.ENTRIES, name
+
+    def test_specs_are_static(self):
+        for name, (_, specs) in M.ENTRIES.items():
+            for s in specs:
+                assert all(isinstance(d, int) for d in s.shape), name

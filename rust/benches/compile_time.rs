@@ -1,0 +1,50 @@
+//! E8 — §III-A compile-time claim: "This entire optimization procedure
+//! requires usually less than 1 min (including the auto-tuning)".
+//!
+//! Measures real `optimize()` wall time per network (IR passes, module
+//! assignment, fusion, codegen, layout) plus the simulated auto-tuning
+//! workload cost, and asserts the <1 min budget.
+
+use sol::devsim::DeviceId;
+use sol::metrics::{format_table, Timer};
+use sol::passes::{optimize, OptimizeOptions};
+use sol::util::BenchStats;
+use sol::workloads::NetId;
+
+fn main() {
+    let mut rows = Vec::new();
+    let t_all = Timer::start();
+    for net in NetId::ALL {
+        let g = net.build(1);
+        let mut autotune_us = 0.0;
+        let mut kernels = 0;
+        let stats = BenchStats::measure(net.name(), 1, 5, || {
+            let m = optimize(&g, &OptimizeOptions::new(DeviceId::AuroraVE10B));
+            autotune_us = m.autotune_us;
+            kernels = m.kernel_count();
+        });
+        let total_ms = stats.median() + autotune_us / 1e3;
+        assert!(
+            total_ms < 60_000.0,
+            "{}: compile {total_ms:.0} ms exceeds the paper's 1-minute budget",
+            net.name()
+        );
+        rows.push(vec![
+            net.name().to_string(),
+            g.layer_count().to_string(),
+            kernels.to_string(),
+            format!("{:.1}", stats.median()),
+            format!("{:.1}", autotune_us / 1e3),
+            format!("{:.1}", total_ms),
+        ]);
+    }
+    println!("E8: sol.optimize() cost per network (paper claim: < 1 min incl. auto-tuning)");
+    println!(
+        "{}",
+        format_table(
+            &["net", "layers", "kernels", "compile ms", "autotune ms", "total ms"],
+            &rows
+        )
+    );
+    println!("[compile_time completed in {:.1} s]", t_all.ms() / 1e3);
+}

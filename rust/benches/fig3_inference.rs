@@ -1,0 +1,57 @@
+//! E3 — Fig. 3 (left): inference latency, B=1, 13 networks × 4 devices ×
+//! {baseline, SOL, SOL(TO)}.  Regenerates the paper's figure as a table
+//! plus the §I headline per-device max speedups (E5).
+//!
+//! Pass `--calibrate` to anchor the CPU efficiency table on real PJRT
+//! measurements first (adds ~a minute).
+
+use sol::devsim::DeviceId;
+use sol::exec::calibrate;
+use sol::exec::fig3::{fig3_grid, headline_speedups};
+use sol::metrics::{format_table, Timer};
+use sol::workloads::NetId;
+
+fn main() {
+    let calibrate_flag = std::env::args().any(|a| a == "--calibrate");
+    let (eff, cal) = if calibrate_flag {
+        calibrate::calibrate_or_default()
+    } else {
+        (Default::default(), None)
+    };
+    if let Some(c) = &cal {
+        println!(
+            "[calibration] gemm {:.1} GF/s | fused conv {:.1} GF/s | measured fusion speedup {:.2}x | est host peak {:.1} GF/s",
+            c.matmul_gflops, c.fused_conv_gflops, c.fusion_speedup, c.est_host_peak_gflops
+        );
+    }
+
+    let t = Timer::start();
+    let rows = fig3_grid(false, &eff);
+    let mut table = Vec::new();
+    for net in NetId::ALL {
+        let mut row = vec![net.name().to_string()];
+        for dev in DeviceId::ALL {
+            let r = rows.iter().find(|r| r.net == net && r.device == dev).unwrap();
+            row.push(r.baseline_ms.map_or("n/a".into(), |b| format!("{b:.2}")));
+            row.push(format!("{:.2}", r.sol_ms));
+            row.push(format!("{:.2}", r.sol_to_ms));
+        }
+        table.push(row);
+    }
+    println!("\nFig. 3 (left) — inference, B=1, execution time in ms");
+    println!(
+        "{}",
+        format_table(
+            &[
+                "net", "cpu:pt", "cpu:sol", "cpu:TO", "ve:tfve", "ve:sol", "ve:TO",
+                "p4k:pt", "p4k:sol", "p4k:TO", "titan:pt", "titan:sol", "titan:TO",
+            ],
+            &table
+        )
+    );
+    println!("E5 headline max speedups (paper: CPU 7.79x, Aurora 25.41x, GPU 4.37x):");
+    for (d, s) in headline_speedups(&rows) {
+        println!("  {:?}: {s:.2}x", d);
+    }
+    println!("\n[fig3_inference completed in {:.1} s]", t.ms() / 1e3);
+}

@@ -1,0 +1,48 @@
+//! E4 — Fig. 3 (right): training step time, B=16 (CNN) / B=64 (MLP),
+//! 13 networks × 4 devices × {baseline, SOL native, SOL transparent}.
+
+use sol::devsim::DeviceId;
+use sol::exec::fig3::{fig3_grid, headline_speedups};
+use sol::metrics::{format_table, Timer};
+use sol::workloads::NetId;
+
+fn main() {
+    let t = Timer::start();
+    let rows = fig3_grid(true, &Default::default());
+    let mut table = Vec::new();
+    for net in NetId::ALL {
+        let mut row = vec![net.name().to_string()];
+        for dev in DeviceId::ALL {
+            let r = rows.iter().find(|r| r.net == net && r.device == dev).unwrap();
+            row.push(r.baseline_ms.map_or("n/a".into(), |b| format!("{b:.2}")));
+            row.push(format!("{:.2}", r.sol_ms));
+            row.push(format!("{:.2}", r.sol_to_ms));
+        }
+        table.push(row);
+    }
+    println!("Fig. 3 (right) — training, B=16 CNN / B=64 MLP, step time in ms");
+    println!(
+        "{}",
+        format_table(
+            &[
+                "net", "cpu:pt", "cpu:sol", "cpu:TO", "ve:tfve", "ve:sol", "ve:TO",
+                "p4k:pt", "p4k:sol", "p4k:TO", "titan:pt", "titan:sol", "titan:TO",
+            ],
+            &table
+        )
+    );
+    println!("E5 headline max speedups (paper: CPU 2.41x, Aurora 4.18x, GPU 1.22x):");
+    for (d, s) in headline_speedups(&rows) {
+        println!("  {:?}: {s:.2}x", d);
+    }
+    // §VI-D: native vs TO gap at training on offload devices
+    println!("\nnative-vs-TO training advantage (ms saved per step, §V-A):");
+    for net in [NetId::Resnet50, NetId::Vgg16, NetId::Mlp] {
+        let r = rows
+            .iter()
+            .find(|r| r.net == net && r.device == DeviceId::AuroraVE10B)
+            .unwrap();
+        println!("  {:<10} TO {:.2} -> native {:.2}", net.name(), r.sol_to_ms, r.sol_ms);
+    }
+    println!("\n[fig3_training completed in {:.1} s]", t.ms() / 1e3);
+}

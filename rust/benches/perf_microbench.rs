@@ -1,0 +1,82 @@
+//! §Perf microbenchmarks — the measurements behind EXPERIMENTS.md §Perf.
+//!
+//! Default: L3 hot paths (queue, compiler, Fig-3 harness).  With `--pjrt`
+//! also re-measures the L1/L2 artifact timings (slow: ~2 min).
+
+use sol::devsim::DeviceId;
+use sol::metrics::Timer;
+use sol::passes::{optimize, OptimizeOptions};
+use sol::runtime::queue::AsyncQueue;
+use sol::workloads::NetId;
+
+fn l3() {
+    let n = 100_000;
+    let q = AsyncQueue::new(1 << 30);
+    let t = Timer::start();
+    for _ in 0..n {
+        q.submit(|| {});
+    }
+    q.sync().unwrap();
+    println!("queue submit+drain: {:>7.0} ns/op", t.ms() * 1e6 / n as f64);
+
+    let q = AsyncQueue::new(1 << 30);
+    let t = Timer::start();
+    for _ in 0..n {
+        let p = q.malloc_async(4096);
+        q.free_async(p);
+    }
+    q.sync().unwrap();
+    println!("virtual malloc/free: {:>6.0} ns/pair", t.ms() * 1e6 / n as f64);
+
+    let g = NetId::Densenet169.build(1);
+    let t = Timer::start();
+    for _ in 0..10 {
+        std::hint::black_box(optimize(&g, &OptimizeOptions::new(DeviceId::AuroraVE10B)));
+    }
+    println!("optimize(densenet169, 595 layers): {:.1} ms", t.ms() / 10.0);
+
+    let t = Timer::start();
+    let rows = sol::exec::fig3::fig3_grid(false, &Default::default());
+    println!("fig3 full grid ({} rows): {:.1} ms", rows.len(), t.ms());
+}
+
+fn l12_pjrt() {
+    use sol::runtime::pjrt::{HostTensor, PjrtEngine};
+    use sol::util::XorShift;
+    let Ok(e) = PjrtEngine::new() else {
+        println!("(artifacts not built; skipping PJRT timings)");
+        return;
+    };
+    let mut rng = XorShift::new(1);
+    let time_entry = |entry: &str, inputs: &[HostTensor], reps: usize| -> f64 {
+        e.run(entry, inputs).unwrap();
+        let t = Timer::start();
+        for _ in 0..reps {
+            e.run(entry, inputs).unwrap();
+        }
+        t.ms() / reps as f64
+    };
+    let sig = e.manifest.entry("mlp_train_sol_b16").unwrap().clone();
+    let mut inputs: Vec<HostTensor> = sig.inputs[..6]
+        .iter()
+        .map(|s| HostTensor::F32(rng.normal_vec(s.elems(), 0.01)))
+        .collect();
+    inputs.push(HostTensor::F32(rng.normal_vec(16 * 8192, 0.1)));
+    inputs.push(HostTensor::I32((0..16).map(|i| i % 10).collect()));
+    println!("mlp_train_sol_b16: {:.0} ms", time_entry("mlp_train_sol_b16", &inputs, 2));
+    println!("mlp_train_ref_b16: {:.0} ms", time_entry("mlp_train_ref_b16", &inputs, 2));
+    let ci = vec![
+        HostTensor::F32(rng.normal_vec(16 * 58 * 58 * 64, 0.1)),
+        HostTensor::F32(rng.normal_vec(3 * 3 * 64 * 64, 0.1)),
+        HostTensor::F32(rng.normal_vec(64, 0.1)),
+    ];
+    println!("conv_site_sol_b16: {:.1} ms", time_entry("conv_site_sol_b16", &ci, 3));
+    println!("conv_site_ref_b16: {:.1} ms", time_entry("conv_site_ref_b16", &ci, 3));
+}
+
+fn main() {
+    l3();
+    if std::env::args().any(|a| a == "--pjrt") {
+        l12_pjrt();
+    }
+}

@@ -1,0 +1,53 @@
+//! ARM64 backend (paper §IV-A / §VI-A): "For ARM64 we only require 300
+//! additional lines as it inherits most of its functionality from the X86
+//! backend" — it shares the ISPC flavor and differs only in its library
+//! inventory (no DNNL on ARM; NNPACK + OpenBLAS).
+
+use super::{x86::X86Backend, DeviceBackend};
+use crate::devsim::DeviceId;
+use crate::dfp::Flavor;
+use crate::dnn::Library;
+use crate::framework::DeviceType;
+
+pub struct Arm64Backend;
+
+impl DeviceBackend for Arm64Backend {
+    fn name(&self) -> &'static str {
+        "arm64"
+    }
+
+    fn device(&self) -> DeviceId {
+        // modeled on the same CPU spec; only the library pool differs
+        X86Backend.device()
+    }
+
+    fn flavor(&self) -> Flavor {
+        X86Backend.flavor() // inherited: same ISPC codegen
+    }
+
+    fn libraries(&self) -> Vec<Library> {
+        // DNNL is x86-only (§IV-A)
+        vec![Library::OpenBlas, Library::Nnpack]
+    }
+
+    fn framework_slot(&self) -> DeviceType {
+        DeviceType::Cpu
+    }
+
+    fn main_thread_on_device(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inherits_flavor_differs_in_libs() {
+        let a = Arm64Backend;
+        assert_eq!(a.flavor(), X86Backend.flavor());
+        assert!(!a.libraries().contains(&Library::Dnnl));
+        assert!(a.libraries().contains(&Library::Nnpack));
+    }
+}

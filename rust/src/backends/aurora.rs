@@ -1,0 +1,59 @@
+//! SX-Aurora backend (paper §IV-C): NCC-flavored DFP (vector-length-aware),
+//! VEDNN (SOL's OpenMP-repaired build) + Aurora BLAS for the DNN module,
+//! VEoffload-style launching hidden behind the async execution queue
+//! (`runtime::queue`), and the HIP dispatcher squat for native offloading
+//! (§V-B).
+
+use super::DeviceBackend;
+use crate::devsim::DeviceId;
+use crate::dfp::Flavor;
+use crate::dnn::Library;
+use crate::framework::DeviceType;
+
+pub struct AuroraBackend;
+
+impl DeviceBackend for AuroraBackend {
+    fn name(&self) -> &'static str {
+        "sx-aurora"
+    }
+
+    fn device(&self) -> DeviceId {
+        DeviceId::AuroraVE10B
+    }
+
+    fn flavor(&self) -> Flavor {
+        Flavor::Ncc
+    }
+
+    fn libraries(&self) -> Vec<Library> {
+        vec![Library::VednnSol, Library::AuroraBlas]
+    }
+
+    fn framework_slot(&self) -> DeviceType {
+        // not natively supported by any framework: squat on the HIP slot
+        DeviceType::Hip
+    }
+
+    fn main_thread_on_device(&self) -> bool {
+        // §IV: "the device backend can determine if the main thread shall
+        // run on the host system or the device" — the Aurora keeps the
+        // main thread on the host (VEoffload model).
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aurora_inventory() {
+        let b = AuroraBackend;
+        assert_eq!(b.flavor(), Flavor::Ncc);
+        assert!(b.libraries().contains(&Library::VednnSol));
+        // stock VEDNN is the *baseline's* library, not SOL's
+        assert!(!b.libraries().contains(&Library::VednnStock));
+        assert!(b.needs_transfers());
+        assert_eq!(b.framework_slot(), DeviceType::Hip);
+    }
+}

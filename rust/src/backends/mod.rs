@@ -1,0 +1,86 @@
+//! SOL device backends (paper §IV): "very compact and easy to maintain".
+//!
+//! Each backend is a thin bundle of flavor hooks over the shared DFP/DNN
+//! modules: which code flavor the DFP generator emits, which vendor
+//! libraries the DNN module may dispatch to, how the framework reaches the
+//! device (native public API vs dispatcher squat), and whether the main
+//! thread runs on the host or the device.  The effort bench (E1) counts
+//! these files to regenerate the paper's §VI-A lines-of-code table.
+
+pub mod arm64;
+pub mod aurora;
+pub mod nvidia;
+pub mod x86;
+
+use crate::devsim::DeviceId;
+use crate::dfp::Flavor;
+use crate::dnn::Library;
+use crate::framework::DeviceType;
+
+/// The per-device backend interface.
+pub trait DeviceBackend {
+    /// Backend name (matches the paper's §IV subsections).
+    fn name(&self) -> &'static str;
+    /// The simulated hardware this backend drives.
+    fn device(&self) -> DeviceId;
+    /// DFP code flavor.
+    fn flavor(&self) -> Flavor;
+    /// DNN-module library inventory.
+    fn libraries(&self) -> Vec<Library>;
+    /// Framework device slot used for *native offloading*: CPU/CUDA are
+    /// public API; the Aurora squats on HIP (§V-B).
+    fn framework_slot(&self) -> DeviceType;
+    /// "the device backend can determine if the main thread shall run on
+    /// the host system or the device" (§IV).
+    fn main_thread_on_device(&self) -> bool {
+        false
+    }
+    /// Does offloading require explicit H2D/D2H transfers?
+    fn needs_transfers(&self) -> bool {
+        self.device().spec().is_offload_device()
+    }
+}
+
+/// All registered backends.
+pub fn all_backends() -> Vec<Box<dyn DeviceBackend>> {
+    vec![
+        Box::new(x86::X86Backend),
+        Box::new(arm64::Arm64Backend),
+        Box::new(nvidia::NvidiaBackend::p4000()),
+        Box::new(nvidia::NvidiaBackend::titan_v()),
+        Box::new(aurora::AuroraBackend),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_backends_cover_four_devices() {
+        let b = all_backends();
+        assert_eq!(b.len(), 5);
+        let mut devs: Vec<DeviceId> = b.iter().map(|x| x.device()).collect();
+        devs.dedup();
+        assert_eq!(devs.len(), 4, "arm64 shares the CPU device model");
+    }
+
+    #[test]
+    fn only_aurora_squats_on_hip() {
+        for b in all_backends() {
+            if b.name() == "sx-aurora" {
+                assert_eq!(b.framework_slot(), DeviceType::Hip);
+            } else {
+                assert_ne!(b.framework_slot(), DeviceType::Hip);
+            }
+        }
+    }
+
+    #[test]
+    fn offload_devices_need_transfers() {
+        for b in all_backends() {
+            let expect = b.device().spec().is_offload_device();
+            assert_eq!(b.needs_transfers(), expect, "{}", b.name());
+        }
+    }
+}

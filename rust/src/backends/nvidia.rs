@@ -1,0 +1,61 @@
+//! NVIDIA backend (paper §IV-B): CUDA-flavored DFP (with SIMD-groups =
+//! warp-level vectorization) and CUDNN/CUBLAS for the DNN module.
+
+use super::DeviceBackend;
+use crate::devsim::DeviceId;
+use crate::dfp::Flavor;
+use crate::dnn::Library;
+use crate::framework::DeviceType;
+
+pub struct NvidiaBackend {
+    device: DeviceId,
+}
+
+impl NvidiaBackend {
+    pub fn p4000() -> Self {
+        NvidiaBackend { device: DeviceId::QuadroP4000 }
+    }
+
+    pub fn titan_v() -> Self {
+        NvidiaBackend { device: DeviceId::TitanV }
+    }
+}
+
+impl DeviceBackend for NvidiaBackend {
+    fn name(&self) -> &'static str {
+        "nvidia"
+    }
+
+    fn device(&self) -> DeviceId {
+        self.device
+    }
+
+    fn flavor(&self) -> Flavor {
+        Flavor::Cuda
+    }
+
+    fn libraries(&self) -> Vec<Library> {
+        vec![Library::Cudnn, Library::Cublas]
+    }
+
+    fn framework_slot(&self) -> DeviceType {
+        DeviceType::Cuda // natively supported by the framework (§V-B)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_gpus_one_backend() {
+        assert_eq!(NvidiaBackend::p4000().device(), DeviceId::QuadroP4000);
+        assert_eq!(NvidiaBackend::titan_v().device(), DeviceId::TitanV);
+        assert_eq!(NvidiaBackend::p4000().flavor(), Flavor::Cuda);
+    }
+
+    #[test]
+    fn gpu_needs_transfers() {
+        assert!(NvidiaBackend::titan_v().needs_transfers());
+    }
+}

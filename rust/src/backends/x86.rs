@@ -1,0 +1,50 @@
+//! X86 backend (paper §IV-A): ISPC-flavored DFP codegen; DNN module over
+//! OpenBLAS, DNNL and NNPACK.
+
+use super::DeviceBackend;
+use crate::devsim::DeviceId;
+use crate::dfp::Flavor;
+use crate::dnn::Library;
+use crate::framework::DeviceType;
+
+pub struct X86Backend;
+
+impl DeviceBackend for X86Backend {
+    fn name(&self) -> &'static str {
+        "x86"
+    }
+
+    fn device(&self) -> DeviceId {
+        DeviceId::Xeon6126
+    }
+
+    fn flavor(&self) -> Flavor {
+        Flavor::Ispc
+    }
+
+    fn libraries(&self) -> Vec<Library> {
+        vec![Library::Dnnl, Library::OpenBlas, Library::Nnpack]
+    }
+
+    fn framework_slot(&self) -> DeviceType {
+        DeviceType::Cpu // natively supported: public API suffices (§V-B)
+    }
+
+    fn main_thread_on_device(&self) -> bool {
+        true // host IS the device
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ispc_flavor_and_dnnl() {
+        let b = X86Backend;
+        assert_eq!(b.flavor(), Flavor::Ispc);
+        assert!(b.libraries().contains(&Library::Dnnl));
+        assert!(!b.needs_transfers());
+        assert!(b.main_thread_on_device());
+    }
+}

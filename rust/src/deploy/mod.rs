@@ -1,0 +1,153 @@
+//! Deployment mode (paper §III-C): "extracts the neural network from AI
+//! frameworks to deploy it into a library that can be integrated into a
+//! user application, similar to TVM, TensorRT or OpenVino.  This
+//! specialized NN library does not have any dependencies of the AI
+//! framework or SOL."
+//!
+//! A bundle is a self-contained directory: `bundle.json` (model identity +
+//! schedule summary), a pruned `manifest.json`, and the referenced HLO
+//! artifacts.  [`DeployedModel`] loads and serves a bundle using only the
+//! runtime — no framework (Torchlet) types appear in its API.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::passes::OptimizedModel;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::pjrt::{HostTensor, PjrtEngine};
+use crate::util::Json;
+
+/// Write a deployment bundle for `model`, shipping the given artifact
+/// entries (the compiled executables this model needs at serving time).
+pub fn write_bundle(
+    model: &OptimizedModel,
+    entries: &[&str],
+    src: &Manifest,
+    out_dir: impl AsRef<Path>,
+) -> Result<PathBuf> {
+    let dir = out_dir.as_ref().to_path_buf();
+    std::fs::create_dir_all(&dir)?;
+
+    // prune the manifest to the shipped entries and copy their HLO
+    let mut man_entries = BTreeMap::new();
+    for &e in entries {
+        let sig = src.entry(e)?;
+        let hlo = src.hlo_path(e)?;
+        std::fs::copy(&hlo, dir.join(format!("{e}.hlo.txt")))
+            .with_context(|| format!("copying {hlo:?}"))?;
+        let sig_json = |s: &crate::runtime::manifest::Sig| {
+            let mut o = BTreeMap::new();
+            o.insert(
+                "shape".to_string(),
+                Json::Arr(s.shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+            );
+            o.insert(
+                "dtype".to_string(),
+                Json::Str(s.dtype.manifest_name().to_string()),
+            );
+            Json::Obj(o)
+        };
+        let mut o = BTreeMap::new();
+        o.insert("inputs".into(), Json::Arr(sig.inputs.iter().map(sig_json).collect()));
+        o.insert("outputs".into(), Json::Arr(sig.outputs.iter().map(sig_json).collect()));
+        man_entries.insert(e.to_string(), Json::Obj(o));
+    }
+    let mut man = BTreeMap::new();
+    man.insert("fingerprint".into(), Json::Str(format!("bundle:{}", src.fingerprint)));
+    man.insert("entries".into(), Json::Obj(man_entries));
+    std::fs::write(dir.join("manifest.json"), Json::Obj(man).to_string())?;
+
+    // bundle metadata: identity + schedule summary (inspection/debugging)
+    let mut b = BTreeMap::new();
+    b.insert("net".into(), Json::Str(model.net.clone()));
+    b.insert("device".into(), Json::Str(format!("{:?}", model.device)));
+    b.insert("kernel_count".into(), Json::Num(model.kernel_count() as f64));
+    b.insert("flops".into(), Json::Num(model.total_flops() as f64));
+    b.insert(
+        "entries".into(),
+        Json::Arr(entries.iter().map(|e| Json::Str(e.to_string())).collect()),
+    );
+    std::fs::write(dir.join("bundle.json"), Json::Obj(b).to_string())?;
+    Ok(dir)
+}
+
+/// A loaded, framework-free deployment bundle.
+pub struct DeployedModel {
+    pub net: String,
+    pub entries: Vec<String>,
+    engine: PjrtEngine,
+}
+
+impl DeployedModel {
+    /// Load a bundle directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<DeployedModel> {
+        let dir = dir.as_ref();
+        let meta = Json::parse(&std::fs::read_to_string(dir.join("bundle.json"))?)?;
+        let net = meta
+            .get("net")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("bundle.json missing net"))?
+            .to_string();
+        let entries = meta
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("bundle.json missing entries"))?
+            .iter()
+            .filter_map(|e| e.as_str().map(str::to_string))
+            .collect();
+        let engine = PjrtEngine::with_dir(dir)?;
+        Ok(DeployedModel { net, entries, engine })
+    }
+
+    /// Serve one request through a shipped entry.
+    pub fn run(&self, entry: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.engine.run(entry, inputs)
+    }
+
+    pub fn run_f32(&self, entry: &str, inputs: &[Vec<f32>]) -> Result<Vec<HostTensor>> {
+        self.engine.run_f32(entry, inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devsim::DeviceId;
+    use crate::passes::{optimize, OptimizeOptions};
+    use crate::workloads::NetId;
+
+    #[test]
+    fn bundle_roundtrip() {
+        let Ok(src) = Manifest::load(Manifest::default_dir()) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let model = optimize(&NetId::Mlp.build(1), &OptimizeOptions::new(DeviceId::Xeon6126));
+        let dir = std::env::temp_dir().join(format!("sol_bundle_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        write_bundle(&model, &["avgpool_sol"], &src, &dir).unwrap();
+
+        let dep = DeployedModel::load(&dir).unwrap();
+        assert_eq!(dep.net, "mlp");
+        assert_eq!(dep.entries, vec!["avgpool_sol"]);
+        // serving works without any framework state
+        let x = vec![1.0f32; 512 * 130 * 130];
+        let out = dep.run_f32("avgpool_sol", &[x]).unwrap();
+        let v = out[0].as_f32().unwrap();
+        assert_eq!(v.len(), 512 * 128 * 128);
+        assert!((v[0] - 1.0).abs() < 1e-5); // avg of constant 1 is 1
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bundle_rejects_unknown_entry() {
+        let Ok(src) = Manifest::load(Manifest::default_dir()) else { return };
+        let model = optimize(&NetId::Mlp.build(1), &OptimizeOptions::new(DeviceId::Xeon6126));
+        let dir = std::env::temp_dir().join(format!("sol_bundle_bad_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(write_bundle(&model, &["not_an_entry"], &src, &dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,196 @@
+//! Kernel cost model: roofline + per-class efficiency.
+//!
+//! Every kernel is classified; each (device-kind, class) pair carries a
+//! compute efficiency (fraction of peak FLOP/s) and a bandwidth efficiency
+//! (fraction of peak bytes/s).  `exec::calibrate` overwrites the compute
+//! efficiencies from *measured* PJRT-CPU runs of the calibration artifacts
+//! so the absolute scale is anchored to reality; the table below provides
+//! the documented cross-device defaults.
+
+use std::collections::HashMap;
+
+use super::spec::{DeviceKind, DeviceSpec};
+
+/// What kind of code implements a kernel — decides its efficiency profile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelClass {
+    /// Dense conv/linear through a vendor library (DNNL/CUDNN/VEDNN/BLAS).
+    LibraryMatmul,
+    /// A DFP-generated fused region (bandwidth-bound streaming code).
+    DfpFused,
+    /// Depthwise ("WeightedPooling") conv through DFP codegen.
+    DfpDepthwise,
+    /// Depthwise conv through a vendor library's hand-written kernel
+    /// (VEDNN's — which beats DFP on the Aurora, §VI-D).
+    LibraryDepthwise,
+    /// A lone elementwise op (the unfused baseline's ReLU/BN/Add).
+    Elementwise,
+    /// A lone pooling op.
+    Pooling,
+    /// A layout reorder.
+    Reorder,
+}
+
+/// Per-class efficiency factors.
+#[derive(Debug, Clone, Copy)]
+pub struct Efficiency {
+    /// Fraction of peak FLOP/s this class achieves.
+    pub compute: f64,
+    /// Fraction of peak memory bandwidth this class achieves.
+    pub bandwidth: f64,
+}
+
+/// Efficiency lookup, overridable by calibration.
+#[derive(Debug, Clone)]
+pub struct EfficiencyTable {
+    overrides: HashMap<(DeviceKind, KernelClass), Efficiency>,
+}
+
+impl Default for EfficiencyTable {
+    fn default() -> Self {
+        EfficiencyTable { overrides: HashMap::new() }
+    }
+}
+
+impl EfficiencyTable {
+    /// Documented defaults.  Sources: DNNL/CUDNN typically reach 50-70% of
+    /// peak on ResNet-scale convs; generated streaming code is bandwidth-
+    /// bound; hand-written VEDNN depthwise kernels beat generated code on
+    /// the Aurora (paper §VI-D).
+    pub fn lookup(&self, kind: DeviceKind, class: KernelClass) -> Efficiency {
+        if let Some(e) = self.overrides.get(&(kind, class)) {
+            return *e;
+        }
+        use DeviceKind::*;
+        use KernelClass::*;
+        let (compute, bandwidth) = match (kind, class) {
+            (Cpu, LibraryMatmul) => (0.55, 0.80),
+            (Gpu, LibraryMatmul) => (0.60, 0.85),
+            (Vpu, LibraryMatmul) => (0.45, 0.85),
+            // DFP code streams: compute ceiling is low, bandwidth high.
+            (Cpu, DfpFused) => (0.20, 0.85),
+            (Gpu, DfpFused) => (0.25, 0.90),
+            (Vpu, DfpFused) => (0.30, 0.90),
+            (Cpu, DfpDepthwise) => (0.15, 0.80),
+            (Gpu, DfpDepthwise) => (0.20, 0.85),
+            // §VI-D: SOL's generated grouped-conv code is *much slower*
+            // than VEDNN's hand-written implementation on the Aurora — the
+            // generated loop nest cannot keep the 256-lane pipes busy on
+            // per-channel 3x3 taps.  This is what lets TF-VE win MNasNet
+            // training (the paper's one SOL loss).
+            (Vpu, DfpDepthwise) => (0.025, 0.15),
+            (Cpu, LibraryDepthwise) => (0.12, 0.75),
+            (Gpu, LibraryDepthwise) => (0.18, 0.80),
+            (Vpu, LibraryDepthwise) => (0.25, 0.85),
+            // Lone pointwise/pooling ops are pure bandwidth.
+            (_, Elementwise) => (0.05, 0.85),
+            (_, Pooling) => (0.08, 0.80),
+            (_, Reorder) => (0.02, 0.70),
+        };
+        Efficiency { compute, bandwidth }
+    }
+
+    /// Calibration hook: pin a class's efficiencies from measurement.
+    pub fn set(&mut self, kind: DeviceKind, class: KernelClass, eff: Efficiency) {
+        self.overrides.insert((kind, class), eff);
+    }
+
+    /// Roofline kernel time in µs (excluding launch overhead).
+    ///
+    /// `parallel_fraction` scales usable compute: the stock-VEDNN failure
+    /// mode ("only parallelizes over the batch elements, so that only 1
+    /// out of 8 SX-Aurora cores is active", §VI-C) is
+    /// `min(batch, cores) / cores`.
+    pub fn kernel_us(
+        &self,
+        spec: &DeviceSpec,
+        class: KernelClass,
+        flops: usize,
+        bytes: usize,
+        parallel_fraction: f64,
+    ) -> f64 {
+        let eff = self.lookup(spec.kind, class);
+        let frac = parallel_fraction.clamp(1.0 / spec.cores as f64, 1.0);
+        // Occupancy: a MAC-heavy kernel must carry enough arithmetic to
+        // fill cores x SIMD lanes (+ latency-hiding head-room); B=1 late
+        // layers underfill wide devices.  Streaming classes (fused DFP,
+        // elementwise, reorders) are bandwidth-bound and not throttled
+        // this way.
+        let occ = match class {
+            KernelClass::LibraryMatmul => {
+                let sat = (spec.cores * spec.vector_lanes * 65_536) as f64;
+                (flops as f64 / sat).min(1.0).max(0.1)
+            }
+            // depthwise / DFP / elementwise kernels are streaming:
+            // bandwidth-bound, not MAC-starved
+            _ => 1.0,
+        };
+        let t_compute = flops as f64 / (spec.peak_flops() * eff.compute * frac * occ);
+        let t_mem = bytes as f64 / (spec.peak_bw() * eff.bandwidth * frac.max(0.5));
+        t_compute.max(t_mem) * 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devsim::spec::DeviceId;
+
+    #[test]
+    fn matmul_bound_by_compute() {
+        // 8192x8192x64 GEMM: arithmetic intensity ~ 120 flop/byte >> ridge.
+        let t = EfficiencyTable::default();
+        let spec = DeviceId::Xeon6126.spec();
+        let flops = 2 * 64 * 8192 * 8192;
+        let bytes = (64 * 8192 * 2 + 8192 * 8192) * 4;
+        let us = t.kernel_us(&spec, KernelClass::LibraryMatmul, flops, bytes, 1.0);
+        let pure_compute = flops as f64 / (spec.peak_flops() * 0.55) * 1e6;
+        assert!((us - pure_compute).abs() / pure_compute < 1e-9);
+    }
+
+    #[test]
+    fn elementwise_bound_by_bandwidth() {
+        let t = EfficiencyTable::default();
+        let spec = DeviceId::TitanV.spec();
+        let elems = 16 * 64 * 56 * 56;
+        let us = t.kernel_us(&spec, KernelClass::Elementwise, elems, elems * 8, 1.0);
+        let pure_mem = (elems * 8) as f64 / (spec.peak_bw() * 0.85) * 1e6;
+        assert!((us - pure_mem).abs() / pure_mem < 1e-9);
+    }
+
+    #[test]
+    fn batch_parallelism_penalty() {
+        // B=1 on the 8-core Aurora: stock VEDNN runs 8x slower.
+        let t = EfficiencyTable::default();
+        let spec = DeviceId::AuroraVE10B.spec();
+        let full = t.kernel_us(&spec, KernelClass::LibraryMatmul, 1 << 30, 1 << 20, 1.0);
+        let crippled =
+            t.kernel_us(&spec, KernelClass::LibraryMatmul, 1 << 30, 1 << 20, 1.0 / 8.0);
+        assert!((crippled / full - 8.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn calibration_override_wins() {
+        let mut t = EfficiencyTable::default();
+        t.set(
+            DeviceKind::Cpu,
+            KernelClass::DfpFused,
+            Efficiency { compute: 0.42, bandwidth: 0.9 },
+        );
+        assert_eq!(t.lookup(DeviceKind::Cpu, KernelClass::DfpFused).compute, 0.42);
+        // other kinds untouched
+        assert_eq!(t.lookup(DeviceKind::Gpu, KernelClass::DfpFused).compute, 0.25);
+    }
+
+    #[test]
+    fn vpu_dfp_depthwise_slower_than_library() {
+        // The §VI-D observation is encoded: on Aurora, DFP depthwise loses.
+        let t = EfficiencyTable::default();
+        let spec = DeviceId::AuroraVE10B.spec();
+        let flops = 1 << 28;
+        let bytes = 1 << 26;
+        let dfp = t.kernel_us(&spec, KernelClass::DfpDepthwise, flops, bytes, 1.0);
+        let lib = t.kernel_us(&spec, KernelClass::LibraryDepthwise, flops, bytes, 1.0);
+        assert!(dfp > lib);
+    }
+}

@@ -1,0 +1,210 @@
+//! Simulated execution timeline for one device.
+//!
+//! Replays a schedule of dispatches, launches, kernels and transfers under
+//! either *synchronous* semantics (every op waits: the stock frameworks'
+//! eager mode, and VEoffload's host-operated queue) or *asynchronous*
+//! queue semantics (SOL's §IV-C design: the host enqueues and the device
+//! drains, so launch latencies overlap device work).
+
+
+use super::cost::{EfficiencyTable, KernelClass};
+use super::spec::DeviceSpec;
+
+/// One scheduled event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SimStep {
+    /// Host-side framework dispatch overhead (op lookup, type checks, ...).
+    Dispatch { us: f64 },
+    /// Device kernel: roofline-timed by class.
+    Kernel {
+        class: KernelClass,
+        flops: usize,
+        bytes: usize,
+        /// Usable fraction of device parallelism (see EfficiencyTable).
+        parallel_fraction: f64,
+    },
+    /// Host→device transfer.  `packed` transfers amortize link latency
+    /// (VEO-udma path, §IV-C); unpacked pay it per call.
+    H2D { bytes: usize, packed: bool },
+    /// Device→host transfer.
+    D2H { bytes: usize, packed: bool },
+    /// Full host-device synchronization point.
+    Sync,
+}
+
+/// Timeline accounting result.
+#[derive(Debug, Clone, Default)]
+pub struct SimReport {
+    pub total_us: f64,
+    pub kernel_us: f64,
+    pub transfer_us: f64,
+    /// Host-side overhead (dispatch + unhidden launch latency).
+    pub overhead_us: f64,
+    pub kernel_count: usize,
+    pub transfer_count: usize,
+}
+
+impl SimReport {
+    pub fn total_ms(&self) -> f64 {
+        self.total_us / 1e3
+    }
+}
+
+/// The per-device simulator.
+#[derive(Debug, Clone)]
+pub struct SimEngine {
+    pub spec: DeviceSpec,
+    pub eff: EfficiencyTable,
+    /// Asynchronous-queue semantics (SOL) vs synchronous (stock/VEoffload).
+    pub async_queue: bool,
+    /// Host cost to enqueue one command in async mode, µs.
+    pub enqueue_us: f64,
+}
+
+impl SimEngine {
+    pub fn new(spec: DeviceSpec, eff: EfficiencyTable, async_queue: bool) -> Self {
+        SimEngine { spec, eff, async_queue, enqueue_us: 0.8 }
+    }
+
+    fn transfer_us(&self, bytes: usize, packed: bool) -> f64 {
+        if !self.spec.is_offload_device() {
+            return 0.0; // host-resident: transfers are no-ops
+        }
+        let latency = if packed {
+            // one descriptor for the whole packed segment
+            self.spec.link_latency_us * 0.25
+        } else {
+            self.spec.link_latency_us
+        };
+        latency + bytes as f64 / (self.spec.link_gbs * 1e9) * 1e6
+    }
+
+    /// Replay a schedule and account the timeline.
+    pub fn run(&self, steps: &[SimStep]) -> SimReport {
+        let mut rep = SimReport::default();
+        // Two clocks: host issues work, device executes it.  In sync mode
+        // they ratchet together; in async mode the device clock only waits
+        // for the host when the queue is empty.
+        let mut host = 0.0f64;
+        let mut device = 0.0f64;
+        for step in steps {
+            match *step {
+                SimStep::Dispatch { us } => {
+                    host += us;
+                    rep.overhead_us += us;
+                }
+                SimStep::Kernel { class, flops, bytes, parallel_fraction } => {
+                    let k = self
+                        .eff
+                        .kernel_us(&self.spec, class, flops, bytes, parallel_fraction)
+                        + self.spec.kernel_fixed_us;
+                    rep.kernel_us += k;
+                    rep.kernel_count += 1;
+                    if self.async_queue {
+                        host += self.enqueue_us;
+                        rep.overhead_us += self.enqueue_us;
+                        // device starts when free AND the command arrived
+                        let start = device.max(host + self.spec.launch_us);
+                        rep.overhead_us += (start - device).max(0.0).min(self.spec.launch_us);
+                        device = start + k;
+                    } else {
+                        host += self.spec.launch_us;
+                        rep.overhead_us += self.spec.launch_us;
+                        host = host.max(device) + k;
+                        device = host;
+                    }
+                }
+                SimStep::H2D { bytes, packed } | SimStep::D2H { bytes, packed } => {
+                    let t = self.transfer_us(bytes, packed);
+                    rep.transfer_us += t;
+                    rep.transfer_count += 1;
+                    if self.async_queue && matches!(step, SimStep::H2D { .. }) {
+                        host += self.enqueue_us;
+                        let start = device.max(host);
+                        device = start + t;
+                    } else {
+                        // D2H (and all sync-mode transfers) block the host.
+                        host = host.max(device) + t;
+                        device = host;
+                    }
+                }
+                SimStep::Sync => {
+                    host = host.max(device);
+                    device = host;
+                }
+            }
+        }
+        rep.total_us = host.max(device);
+        rep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devsim::spec::DeviceId;
+
+    fn kernel(flops: usize) -> SimStep {
+        SimStep::Kernel {
+            class: KernelClass::LibraryMatmul,
+            flops,
+            bytes: flops / 10,
+            parallel_fraction: 1.0,
+        }
+    }
+
+    #[test]
+    fn async_hides_launch_latency() {
+        // 50 kernels on the Aurora: sync pays 45µs launch each; async
+        // pipelines them behind device execution.
+        let spec = DeviceId::AuroraVE10B.spec();
+        let steps: Vec<SimStep> = (0..50).map(|_| kernel(1 << 24)).collect();
+        let sync = SimEngine::new(spec.clone(), EfficiencyTable::default(), false).run(&steps);
+        let asy = SimEngine::new(spec, EfficiencyTable::default(), true).run(&steps);
+        assert!(
+            asy.total_us < sync.total_us * 0.7,
+            "async {} vs sync {}",
+            asy.total_us,
+            sync.total_us
+        );
+        // the hidden portion is (roughly) the 45us VEoffload launch per op
+        assert!(sync.total_us - asy.total_us > 50.0 * 40.0);
+        assert_eq!(asy.kernel_count, 50);
+    }
+
+    #[test]
+    fn cpu_transfers_are_free() {
+        let spec = DeviceId::Xeon6126.spec();
+        let eng = SimEngine::new(spec, EfficiencyTable::default(), false);
+        let rep = eng.run(&[SimStep::H2D { bytes: 1 << 30, packed: false }]);
+        assert_eq!(rep.transfer_us, 0.0);
+    }
+
+    #[test]
+    fn packed_transfer_cheaper_for_many_small() {
+        let spec = DeviceId::AuroraVE10B.spec();
+        let eng = SimEngine::new(spec, EfficiencyTable::default(), false);
+        let many: Vec<SimStep> =
+            (0..64).map(|_| SimStep::H2D { bytes: 4096, packed: false }).collect();
+        let packed = vec![SimStep::H2D { bytes: 64 * 4096, packed: true }];
+        assert!(eng.run(&packed).total_us < eng.run(&many).total_us / 4.0);
+    }
+
+    #[test]
+    fn sync_point_joins_clocks() {
+        let spec = DeviceId::TitanV.spec();
+        let eng = SimEngine::new(spec, EfficiencyTable::default(), true);
+        let rep = eng.run(&[kernel(1 << 30), SimStep::Sync]);
+        assert!(rep.total_us >= rep.kernel_us);
+    }
+
+    #[test]
+    fn kernel_dominated_schedule_insensitive_to_queue_mode() {
+        // One huge kernel: async vs sync should be nearly identical.
+        let spec = DeviceId::TitanV.spec();
+        let steps = vec![kernel(1 << 36)];
+        let s = SimEngine::new(spec.clone(), EfficiencyTable::default(), false).run(&steps);
+        let a = SimEngine::new(spec, EfficiencyTable::default(), true).run(&steps);
+        assert!((s.total_us - a.total_us).abs() / s.total_us < 0.01);
+    }
+}

@@ -1,0 +1,190 @@
+//! Simulated device memory space.
+//!
+//! Backs the runtime's asynchronous allocator (§IV-C): allocations are
+//! region-based with a bump/free-list allocator, and the *virtual pointer*
+//! scheme (32-bit reference id + 32-bit offset) resolves against this
+//! space.  The frameworks' habit of pre-allocating device memory (paper
+//! §III-B) is modeled by `reserve`.
+
+use std::collections::HashMap;
+
+use crate::Result;
+use anyhow::{anyhow, bail};
+
+/// One live allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Region {
+    pub base: u64,
+    pub size: u64,
+}
+
+/// A device memory space with explicit capacity accounting.
+#[derive(Debug)]
+pub struct DeviceMemory {
+    capacity: u64,
+    /// Next never-used address (bump frontier).
+    frontier: u64,
+    /// Free list, address-ordered, coalesced.
+    free: Vec<Region>,
+    live: HashMap<u64, Region>,
+    /// Bytes currently allocated.
+    pub used: u64,
+    /// High-water mark.
+    pub peak: u64,
+}
+
+impl DeviceMemory {
+    pub fn new(capacity: u64) -> Self {
+        DeviceMemory {
+            capacity,
+            frontier: 0,
+            free: Vec::new(),
+            live: HashMap::new(),
+            used: 0,
+            peak: 0,
+        }
+    }
+
+    /// Allocate `size` bytes (64-byte aligned), returning the base address.
+    pub fn alloc(&mut self, size: u64) -> Result<u64> {
+        let size = size.max(1).next_multiple_of(64);
+        // best-fit over the free list
+        let mut best: Option<usize> = None;
+        for (i, r) in self.free.iter().enumerate() {
+            if r.size >= size && best.is_none_or(|b| self.free[b].size > r.size) {
+                best = Some(i);
+            }
+        }
+        let base = if let Some(i) = best {
+            let r = self.free[i];
+            if r.size == size {
+                self.free.remove(i);
+            } else {
+                self.free[i] = Region { base: r.base + size, size: r.size - size };
+            }
+            r.base
+        } else {
+            if self.frontier + size > self.capacity {
+                bail!(
+                    "device OOM: want {size} B, frontier {} of {} B",
+                    self.frontier,
+                    self.capacity
+                );
+            }
+            let b = self.frontier;
+            self.frontier += size;
+            b
+        };
+        self.live.insert(base, Region { base, size });
+        self.used += size;
+        self.peak = self.peak.max(self.used);
+        Ok(base)
+    }
+
+    /// Free a previously allocated base address.
+    pub fn free(&mut self, base: u64) -> Result<()> {
+        let r = self
+            .live
+            .remove(&base)
+            .ok_or_else(|| anyhow!("free of unknown base {base:#x}"))?;
+        self.used -= r.size;
+        // insert sorted + coalesce neighbors
+        let pos = self.free.partition_point(|f| f.base < r.base);
+        self.free.insert(pos, r);
+        self.coalesce(pos);
+        Ok(())
+    }
+
+    fn coalesce(&mut self, around: usize) {
+        // merge with next
+        if around + 1 < self.free.len() {
+            let (a, b) = (self.free[around], self.free[around + 1]);
+            if a.base + a.size == b.base {
+                self.free[around] = Region { base: a.base, size: a.size + b.size };
+                self.free.remove(around + 1);
+            }
+        }
+        // merge with prev
+        if around > 0 {
+            let (a, b) = (self.free[around - 1], self.free[around]);
+            if a.base + a.size == b.base {
+                self.free[around - 1] = Region { base: a.base, size: a.size + b.size };
+                self.free.remove(around);
+            }
+        }
+    }
+
+    /// Is `addr` inside a live allocation?
+    pub fn contains(&self, addr: u64) -> bool {
+        self.live
+            .values()
+            .any(|r| addr >= r.base && addr < r.base + r.size)
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_reuse() {
+        let mut m = DeviceMemory::new(1 << 20);
+        let a = m.alloc(1000).unwrap();
+        let b = m.alloc(1000).unwrap();
+        assert_ne!(a, b);
+        m.free(a).unwrap();
+        let c = m.alloc(500).unwrap();
+        assert_eq!(c, a, "best-fit should reuse the freed region");
+    }
+
+    #[test]
+    fn oom() {
+        let mut m = DeviceMemory::new(1024);
+        assert!(m.alloc(2048).is_err());
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let mut m = DeviceMemory::new(1 << 20);
+        let a = m.alloc(64).unwrap();
+        m.free(a).unwrap();
+        assert!(m.free(a).is_err());
+    }
+
+    #[test]
+    fn coalescing_allows_big_realloc() {
+        let mut m = DeviceMemory::new(4096);
+        let a = m.alloc(1024).unwrap();
+        let b = m.alloc(1024).unwrap();
+        let c = m.alloc(1024).unwrap();
+        m.free(a).unwrap();
+        m.free(c).unwrap();
+        m.free(b).unwrap(); // middle last -> coalesce to one 3072 region
+        let d = m.alloc(3072).unwrap();
+        assert_eq!(d, 0);
+    }
+
+    #[test]
+    fn peak_tracking() {
+        let mut m = DeviceMemory::new(1 << 20);
+        let a = m.alloc(100).unwrap();
+        let _b = m.alloc(100).unwrap();
+        m.free(a).unwrap();
+        assert_eq!(m.peak, 256); // two 128-aligned... 100 -> 128 each
+        assert_eq!(m.used, 128);
+    }
+
+    #[test]
+    fn alignment() {
+        let mut m = DeviceMemory::new(1 << 20);
+        let a = m.alloc(1).unwrap();
+        let b = m.alloc(1).unwrap();
+        assert_eq!(a % 64, 0);
+        assert_eq!(b % 64, 0);
+        assert_eq!(b - a, 64);
+    }
+}

@@ -1,0 +1,24 @@
+//! Device simulator substrate.
+//!
+//! This environment has no SX-Aurora, no NVIDIA GPUs and a single-core
+//! host, so the paper's four evaluation devices (Table I) are simulated:
+//! a roofline timing model (peak FLOP/s + memory bandwidth) extended with
+//! the first-order overheads that produce the paper's Fig-3 orderings —
+//! per-op framework dispatch, kernel launch latency, PCIe transfers, and
+//! per-library efficiency/parallelism quirks (e.g. stock VEDNN only
+//! parallelizes over the batch, §VI-C).
+//!
+//! Numerics never run here: real computation happens on the PJRT CPU
+//! client (`runtime::pjrt`).  The simulator only accounts *time*, and its
+//! efficiency table is calibrated against real measured PJRT runs
+//! (`exec::calibrate`) so the model is anchored, not invented.
+
+pub mod cost;
+pub mod engine;
+pub mod memory;
+pub mod spec;
+
+pub use cost::{Efficiency, EfficiencyTable, KernelClass};
+pub use engine::{SimEngine, SimReport, SimStep};
+pub use memory::DeviceMemory;
+pub use spec::{DeviceId, DeviceKind, DeviceSpec};

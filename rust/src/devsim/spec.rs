@@ -1,0 +1,211 @@
+//! Device specifications — the paper's Table I, machine-readable.
+
+
+use crate::ir::DType;
+
+/// The four evaluation devices (paper Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceId {
+    /// Intel Xeon Gold 6126 (CPU).
+    Xeon6126,
+    /// NEC SX-Aurora Tsubasa VE10B (vector processor).
+    AuroraVE10B,
+    /// NVIDIA Quadro P4000 (mid-range GPU).
+    QuadroP4000,
+    /// NVIDIA Titan V (high-end GPU).
+    TitanV,
+}
+
+impl DeviceId {
+    pub const ALL: [DeviceId; 4] = [
+        DeviceId::Xeon6126,
+        DeviceId::AuroraVE10B,
+        DeviceId::QuadroP4000,
+        DeviceId::TitanV,
+    ];
+
+    pub fn spec(self) -> DeviceSpec {
+        DeviceSpec::of(self)
+    }
+}
+
+/// Broad device class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    Cpu,
+    Gpu,
+    /// Vector processor (SX-Aurora).
+    Vpu,
+}
+
+/// Full simulation parameters for one device.
+///
+/// The first five columns are the paper's Table I verbatim; the remaining
+/// fields are the documented first-order overheads (sources in comments).
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub id: DeviceId,
+    pub vendor: &'static str,
+    pub model: &'static str,
+    pub kind: DeviceKind,
+    /// Peak single-precision TFLOP/s (Table I).
+    pub tflops: f64,
+    /// Peak memory bandwidth GB/s (Table I).
+    pub bandwidth_gbs: f64,
+    /// Physical cores (CPU/VPU) or SMs (GPU) — the unit the "parallelize
+    /// over batch only" failure mode wastes (§VI-C).
+    pub cores: usize,
+    /// SIMD width in f32 lanes (AVX-512: 16, warp: 32, Aurora: 256).
+    pub vector_lanes: usize,
+    /// Kernel launch latency, µs.  Host-launched Aurora kernels go through
+    /// VEoffload whose "execution queue is operated by the host system"
+    /// (§IV-C) — SOL's async queue hides most of it.
+    pub launch_us: f64,
+    /// Host→device link bandwidth GB/s (0 = host-resident).
+    pub link_gbs: f64,
+    /// Host→device link latency per transfer, µs.
+    pub link_latency_us: f64,
+    /// Fixed device-side cost per kernel (prologue, tail effects,
+    /// scheduling granularity), µs — paid even when the queue is full.
+    pub kernel_fixed_us: f64,
+    /// Device memory capacity, bytes.
+    pub mem_bytes: usize,
+}
+
+impl DeviceSpec {
+    pub fn of(id: DeviceId) -> Self {
+        match id {
+            DeviceId::Xeon6126 => DeviceSpec {
+                id,
+                vendor: "Intel",
+                model: "Xeon Gold 6126",
+                kind: DeviceKind::Cpu,
+                tflops: 0.88,
+                bandwidth_gbs: 119.21,
+                cores: 12,
+                vector_lanes: 16, // AVX-512
+                launch_us: 0.5,   // a function call + thread wakeup
+                link_gbs: 0.0,    // host-resident
+                link_latency_us: 0.0,
+                kernel_fixed_us: 1.0,
+                mem_bytes: 192 * (1 << 30),
+            },
+            DeviceId::AuroraVE10B => DeviceSpec {
+                id,
+                vendor: "NEC",
+                model: "SX-Aurora VE10B",
+                kind: DeviceKind::Vpu,
+                tflops: 4.30,
+                bandwidth_gbs: 1200.0,
+                cores: 8,
+                vector_lanes: 256,
+                launch_us: 45.0, // VEoffload host-operated queue (§IV-C)
+                link_gbs: 12.0,  // PCIe gen3 x16
+                link_latency_us: 10.0,
+                kernel_fixed_us: 2.0,
+                mem_bytes: 48 * (1 << 30),
+            },
+            DeviceId::QuadroP4000 => DeviceSpec {
+                id,
+                vendor: "NVIDIA",
+                model: "Quadro P4000",
+                kind: DeviceKind::Gpu,
+                tflops: 5.30,
+                bandwidth_gbs: 243.30,
+                cores: 14, // SMs
+                vector_lanes: 32,
+                launch_us: 8.0, // CUDA launch
+                link_gbs: 12.0,
+                link_latency_us: 8.0,
+                kernel_fixed_us: 4.0,
+                mem_bytes: 8 * (1 << 30),
+            },
+            DeviceId::TitanV => DeviceSpec {
+                id,
+                vendor: "NVIDIA",
+                model: "Titan V",
+                kind: DeviceKind::Gpu,
+                tflops: 14.90,
+                bandwidth_gbs: 651.30,
+                cores: 80, // SMs
+                vector_lanes: 32,
+                launch_us: 8.0,
+                link_gbs: 12.0,
+                link_latency_us: 8.0,
+                kernel_fixed_us: 4.0,
+                mem_bytes: 12 * (1 << 30),
+            },
+        }
+    }
+
+    /// Peak FLOP/s in f64.
+    pub fn peak_flops(&self) -> f64 {
+        self.tflops * 1e12
+    }
+
+    /// Peak memory bytes/s.
+    pub fn peak_bw(&self) -> f64 {
+        self.bandwidth_gbs * 1e9
+    }
+
+    /// §IV-C: the SX-Aurora "lacks AI-specific functionality such as
+    /// tensor cores and float16 support".
+    pub fn supports_dtype(&self, dt: DType) -> bool {
+        match dt {
+            DType::BF16 => self.kind == DeviceKind::Gpu,
+            _ => true,
+        }
+    }
+
+    /// Machine balance in FLOP/byte — the roofline ridge point.
+    pub fn ridge_point(&self) -> f64 {
+        self.peak_flops() / self.peak_bw()
+    }
+
+    /// Is this device attached over a link (needs H2D/D2H transfers)?
+    pub fn is_offload_device(&self) -> bool {
+        self.link_gbs > 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values() {
+        // The exact Table I rows.
+        let x = DeviceId::Xeon6126.spec();
+        assert_eq!((x.tflops, x.bandwidth_gbs), (0.88, 119.21));
+        let a = DeviceId::AuroraVE10B.spec();
+        assert_eq!((a.tflops, a.bandwidth_gbs), (4.30, 1200.0));
+        let p = DeviceId::QuadroP4000.spec();
+        assert_eq!((p.tflops, p.bandwidth_gbs), (5.30, 243.30));
+        let t = DeviceId::TitanV.spec();
+        assert_eq!((t.tflops, t.bandwidth_gbs), (14.90, 651.30));
+    }
+
+    #[test]
+    fn aurora_is_bandwidth_monster() {
+        // The Aurora has the lowest ridge point — most ops are compute-bound
+        // on it; that is why fusion pays off so much there (25.41x).
+        let specs: Vec<_> = DeviceId::ALL.iter().map(|d| d.spec()).collect();
+        let aurora = specs.iter().find(|s| s.id == DeviceId::AuroraVE10B).unwrap();
+        for s in &specs {
+            assert!(aurora.ridge_point() <= s.ridge_point());
+        }
+    }
+
+    #[test]
+    fn aurora_no_fp16() {
+        assert!(!DeviceId::AuroraVE10B.spec().supports_dtype(DType::BF16));
+        assert!(DeviceId::TitanV.spec().supports_dtype(DType::BF16));
+        assert!(DeviceId::Xeon6126.spec().supports_dtype(DType::F32));
+    }
+
+    #[test]
+    fn cpu_is_host_resident() {
+        assert!(!DeviceId::Xeon6126.spec().is_offload_device());
+        assert!(DeviceId::AuroraVE10B.spec().is_offload_device());
+    }
+}

@@ -1,0 +1,212 @@
+//! Fused-region formation: greedy depth-first chains over DFP-assigned
+//! nodes.
+//!
+//! A region is a maximal chain `n1 -> n2 -> ... -> nk` of DFP-assigned
+//! nodes where each link is the *sole* consumer edge — exactly the shape
+//! a depth-first loop nest can execute while keeping every intermediate in
+//! registers/VMEM.  Residual `Add`s join a chain when their second operand
+//! comes from outside (it is just one more streamed input).
+
+use crate::ir::{Graph, NodeId, Op};
+
+/// One fusable region (node ids in topological order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FusedRegion {
+    pub nodes: Vec<NodeId>,
+}
+
+impl FusedRegion {
+    /// Total FLOPs of the region.
+    pub fn flops(&self, g: &Graph) -> usize {
+        self.nodes
+            .iter()
+            .map(|&id| {
+                let n = g.node(id);
+                n.inputs
+                    .first()
+                    .map_or(0, |&i| n.op.flops(&g.node(i).meta, &n.meta))
+            })
+            .sum()
+    }
+
+    /// External input bytes: every edge entering the region from outside,
+    /// plus parameter bytes of layers inside.
+    pub fn input_bytes(&self, g: &Graph) -> usize {
+        let inside = |id: NodeId| self.nodes.contains(&id);
+        let mut bytes = 0;
+        for &id in &self.nodes {
+            let n = g.node(id);
+            for &i in &n.inputs {
+                if !inside(i) {
+                    bytes += g.node(i).meta.bytes();
+                }
+            }
+            let inp = n.inputs.first().map(|&i| &g.node(i).meta);
+            if let Some(m) = inp {
+                bytes += n.op.param_count(m) * m.dtype.size();
+            }
+        }
+        bytes
+    }
+
+    /// Output bytes: edges leaving the region (or the graph output).
+    pub fn output_bytes(&self, g: &Graph) -> usize {
+        let inside = |id: NodeId| self.nodes.contains(&id);
+        let cons = g.consumers();
+        let mut bytes = 0;
+        for &id in &self.nodes {
+            let escapes =
+                cons[id].is_empty() || cons[id].iter().any(|&c| !inside(c));
+            if escapes {
+                bytes += g.node(id).meta.bytes();
+            }
+        }
+        bytes
+    }
+
+    /// Intermediate bytes the fusion *avoids* materializing.
+    pub fn saved_bytes(&self, g: &Graph) -> usize {
+        let inside = |id: NodeId| self.nodes.contains(&id);
+        let cons = g.consumers();
+        self.nodes
+            .iter()
+            .filter(|&&id| !cons[id].is_empty() && cons[id].iter().all(|&c| inside(c)))
+            // unfused execution writes + re-reads each intermediate
+            .map(|&id| 2 * g.node(id).meta.bytes())
+            .sum()
+    }
+
+    /// Largest single tensor inside the region (tile sizing input).
+    pub fn peak_tensor_bytes(&self, g: &Graph) -> usize {
+        self.nodes.iter().map(|&id| g.node(id).meta.bytes()).max().unwrap_or(0)
+    }
+
+    /// Does the region contain a depthwise conv ("WeightedPooling")?
+    pub fn has_depthwise(&self, g: &Graph) -> bool {
+        self.nodes.iter().any(|&id| {
+            let n = g.node(id);
+            matches!(n.op, Op::Conv2d { groups, cout, .. } if groups == cout && groups > 1)
+        })
+    }
+}
+
+/// Partition the DFP-assigned nodes of `graph` into maximal fusable chains.
+pub fn fuse_regions(graph: &Graph, assignments: &[bool]) -> Vec<FusedRegion> {
+    assert_eq!(assignments.len(), graph.nodes.len());
+    let cons = graph.consumers();
+    let mut claimed = vec![false; graph.nodes.len()];
+    let mut regions = Vec::new();
+
+    for start in 0..graph.nodes.len() {
+        if claimed[start] || !assignments[start] || matches!(graph.node(start).op, Op::Input) {
+            continue;
+        }
+        // begin a chain at `start`, extend while the sole consumer is also
+        // an unclaimed DFP node whose *first* input is the chain tip
+        let mut chain = vec![start];
+        claimed[start] = true;
+        let mut tip = start;
+        loop {
+            if cons[tip].len() != 1 {
+                break;
+            }
+            let next = cons[tip][0];
+            if claimed[next]
+                || !assignments[next]
+                || matches!(graph.node(next).op, Op::Input)
+                || graph.node(next).inputs[0] != tip
+            {
+                break;
+            }
+            chain.push(next);
+            claimed[next] = true;
+            tip = next;
+        }
+        regions.push(FusedRegion { nodes: chain });
+    }
+    regions
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// conv(DNN) -> bn -> relu -> pool -> conv(DNN) -> relu
+    fn graph_and_assign() -> (Graph, Vec<bool>) {
+        let mut g = Graph::new("t");
+        let x = g.input_image(1, 16, 16, 16);
+        let c1 = g.conv(x, 16, 3, 1, 1, 1);
+        let b1 = g.batch_norm(c1);
+        let r1 = g.relu(b1);
+        let p1 = g.max_pool(r1, 2, 2, 0);
+        let c2 = g.conv(p1, 16, 3, 1, 1, 1);
+        let _r2 = g.relu(c2);
+        let mut assign = vec![true; g.nodes.len()];
+        assign[c1] = false; // conv -> DNN module
+        assign[c2] = false;
+        (g, assign)
+    }
+
+    #[test]
+    fn chains_break_at_dnn_nodes() {
+        let (g, a) = graph_and_assign();
+        let regions = fuse_regions(&g, &a);
+        // bn->relu->pool is one region; final relu alone is another
+        assert_eq!(regions.len(), 2);
+        assert_eq!(regions[0].nodes, vec![2, 3, 4]);
+        assert_eq!(regions[1].nodes, vec![6]);
+    }
+
+    #[test]
+    fn fusion_saves_intermediate_traffic() {
+        let (g, a) = graph_and_assign();
+        let regions = fuse_regions(&g, &a);
+        let r = &regions[0];
+        // two internal edges (bn->relu, relu->pool): saved = 2 * 2 tensors
+        assert_eq!(r.saved_bytes(&g), 2 * 2 * g.node(2).meta.bytes());
+        assert!(r.input_bytes(&g) > 0);
+        assert!(r.output_bytes(&g) > 0);
+    }
+
+    #[test]
+    fn branching_consumer_breaks_chain() {
+        let mut g = Graph::new("b");
+        let x = g.input_image(1, 8, 8, 8);
+        let r = g.relu(x);
+        let a = g.relu(r);
+        let b = g.batch_norm(r); // r now has 2 consumers
+        let _ = g.add(a, b);
+        let assign = vec![true; g.nodes.len()];
+        let regions = fuse_regions(&g, &assign);
+        // r must terminate its own region
+        assert!(regions.iter().any(|reg| reg.nodes == vec![1]));
+    }
+
+    #[test]
+    fn residual_add_joins_chain_of_first_input() {
+        let mut g = Graph::new("res");
+        let x = g.input_image(1, 8, 8, 8);
+        let c = g.conv(x, 8, 3, 1, 1, 1); // DNN
+        let bn = g.batch_norm(c);
+        let ad = g.add(bn, x); // second input from outside the chain
+        let rl = g.relu(ad);
+        let mut assign = vec![true; g.nodes.len()];
+        assign[c] = false;
+        let regions = fuse_regions(&g, &assign);
+        assert_eq!(regions.len(), 1);
+        assert_eq!(regions[0].nodes, vec![bn, ad, rl]);
+    }
+
+    #[test]
+    fn depthwise_detection() {
+        let mut g = Graph::new("dw");
+        let x = g.input_image(1, 32, 8, 8);
+        let d = g.depthwise(x, 3, 1, 1);
+        let r = g.relu(d);
+        let assign = vec![true; g.nodes.len()];
+        let regions = fuse_regions(&g, &assign);
+        assert_eq!(regions.len(), 1);
+        assert!(regions[0].has_depthwise(&g));
+        let _ = r;
+    }
+}

@@ -1,0 +1,52 @@
+//! The **DFP (Depth-First Parallelism) module** — SOL's code-generating
+//! optimizer (paper §III-A, BrainSlug lineage).
+//!
+//! DFP processes computation graphs in depth-first order "to keep data as
+//! long as possible in a processor's registers and caches": it fuses
+//! chains of layers into a single loop nest, minimizes the number of
+//! nested loops, and maps them onto the SIMD architecture of the target
+//! (paper Listing 3 shows the same AveragePooling layer emitted for
+//! ISPC / CUDA / NCC; [`codegen`] reproduces exactly that, plus the
+//! Pallas/TPU flavor this reproduction actually executes).
+
+pub mod codegen;
+pub mod fuse;
+
+pub use codegen::{generate, Flavor};
+pub use fuse::{fuse_regions, FusedRegion};
+
+use crate::devsim::KernelClass;
+use crate::ir::Graph;
+
+/// A generated kernel: one fused region lowered for one device flavor.
+#[derive(Debug, Clone)]
+pub struct KernelPlan {
+    /// Kernel symbol name.
+    pub name: String,
+    /// IR nodes covered by this kernel.
+    pub nodes: Vec<usize>,
+    /// Cost-model classification.
+    pub class: KernelClass,
+    /// Total FLOPs of the fused region.
+    pub flops: usize,
+    /// HBM/DRAM traffic: external inputs + final outputs ONLY — the whole
+    /// point of depth-first fusion is that intermediates never leave the
+    /// cache/VMEM level.
+    pub hbm_bytes: usize,
+    /// Scratchpad footprint of one tile (must fit VMEM / L2 / shared mem).
+    pub vmem_bytes: usize,
+    /// Fraction of device parallelism the loop structure can use.
+    pub parallel_fraction: f64,
+    /// Generated source (Listing-3 style, for inspection/tests/docs).
+    pub source: String,
+}
+
+/// Compute the kernel plans for every fused region of `graph` under
+/// `flavor`.  `assignments[node] == true` marks DFP-assigned nodes
+/// (produced by `passes::assign`).
+pub fn plan_graph(graph: &Graph, assignments: &[bool], flavor: Flavor) -> Vec<KernelPlan> {
+    fuse_regions(graph, assignments)
+        .iter()
+        .map(|r| generate(graph, r, flavor))
+        .collect()
+}

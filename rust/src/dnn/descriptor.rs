@@ -1,0 +1,103 @@
+//! Library descriptor caching (paper §IV): "The descriptors get
+//! initialized once when the neural network gets loaded and cached, to
+//! decrease time during model execution."
+
+use std::collections::HashMap;
+
+use super::libs::{Algorithm, Library};
+
+/// An initialized library descriptor for one (op-signature, library) pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Descriptor {
+    pub signature: String,
+    pub library: Library,
+    pub algorithm: Algorithm,
+    /// Simulated one-time initialization cost (µs) — paid at network load,
+    /// NOT during execution.
+    pub init_us: f64,
+}
+
+/// Cache of initialized descriptors.
+#[derive(Debug, Default)]
+pub struct DescriptorCache {
+    cache: HashMap<String, Descriptor>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl DescriptorCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch or initialize the descriptor for `signature`.
+    pub fn get_or_init(
+        &mut self,
+        signature: &str,
+        library: Library,
+        algorithm: Algorithm,
+    ) -> &Descriptor {
+        if self.cache.contains_key(signature) {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+            self.cache.insert(
+                signature.to_string(),
+                Descriptor {
+                    signature: signature.to_string(),
+                    library,
+                    algorithm,
+                    // library descriptor setup: plan search, workspace alloc
+                    init_us: 120.0,
+                },
+            );
+        }
+        &self.cache[signature]
+    }
+
+    pub fn len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cache.is_empty()
+    }
+
+    /// Total one-time initialization cost paid so far (µs).
+    pub fn total_init_us(&self) -> f64 {
+        self.cache.values().map(|d| d.init_us).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn second_lookup_hits() {
+        let mut c = DescriptorCache::new();
+        c.get_or_init("conv 64x64 3x3", Library::Dnnl, Algorithm::Winograd);
+        c.get_or_init("conv 64x64 3x3", Library::Dnnl, Algorithm::Winograd);
+        assert_eq!((c.hits, c.misses), (1, 1));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn distinct_signatures_distinct_descriptors() {
+        let mut c = DescriptorCache::new();
+        c.get_or_init("a", Library::Dnnl, Algorithm::Direct);
+        c.get_or_init("b", Library::Cudnn, Algorithm::Gemm);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.total_init_us(), 240.0);
+    }
+
+    #[test]
+    fn init_cost_is_one_time() {
+        let mut c = DescriptorCache::new();
+        for _ in 0..100 {
+            c.get_or_init("x", Library::Dnnl, Algorithm::Direct);
+        }
+        assert_eq!(c.total_init_us(), 120.0);
+        assert_eq!(c.hits, 99);
+    }
+}

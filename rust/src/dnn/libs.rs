@@ -1,0 +1,223 @@
+//! Simulated vendor libraries and their algorithm inventories.
+
+use crate::devsim::{DeviceKind, KernelClass};
+use crate::ir::{Op, TensorMeta};
+
+/// The optimized DNN libraries of paper §II-B / §IV.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Library {
+    /// Intel DNNL (x86 only).
+    Dnnl,
+    /// OpenBLAS (x86/arm64 GEMM).
+    OpenBlas,
+    /// NNPACK — "performance no longer competitive" (§II-B).
+    Nnpack,
+    /// NVIDIA CUDNN.
+    Cudnn,
+    /// NVIDIA CUBLAS.
+    Cublas,
+    /// Stock VEDNN: "only parallelizes over the batch elements, so that
+    /// only 1 out of 8 SX-Aurora cores is active" (§VI-C).
+    VednnStock,
+    /// SOL's modified VEDNN "with a different, OpenMP-based parallelization".
+    VednnSol,
+    /// NEC SX-Aurora BLAS ("secondary implementation for Linear layers").
+    AuroraBlas,
+}
+
+/// Convolution algorithm choices (the auto-tuning space, §III-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    Direct,
+    Im2colGemm,
+    /// 3x3/stride-1 only; reduces arithmetic ~2.25x at f32.
+    Winograd,
+    Gemm,
+}
+
+impl Library {
+    /// Libraries available on a device kind (the per-backend inventory of
+    /// §IV-A/B/C).
+    pub fn available(kind: DeviceKind) -> &'static [Library] {
+        match kind {
+            DeviceKind::Cpu => &[Library::Dnnl, Library::OpenBlas, Library::Nnpack],
+            DeviceKind::Gpu => &[Library::Cudnn, Library::Cublas],
+            DeviceKind::Vpu => &[Library::VednnSol, Library::VednnStock, Library::AuroraBlas],
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Library::Dnnl => "dnnl",
+            Library::OpenBlas => "openblas",
+            Library::Nnpack => "nnpack",
+            Library::Cudnn => "cudnn",
+            Library::Cublas => "cublas",
+            Library::VednnStock => "vednn(stock)",
+            Library::VednnSol => "vednn(sol-omp)",
+            Library::AuroraBlas => "aurora-blas",
+        }
+    }
+
+    /// Can this library implement `op`?
+    pub fn supports(self, op: &Op) -> bool {
+        match (self, op) {
+            // BLAS libraries: GEMM only -> Linear
+            (Library::OpenBlas | Library::Cublas | Library::AuroraBlas, Op::Linear { .. }) => true,
+            (Library::OpenBlas | Library::Cublas | Library::AuroraBlas, _) => false,
+            // NNPACK: inference conv + linear on CPU
+            (Library::Nnpack, Op::Conv2d { .. } | Op::Linear { .. }) => true,
+            (Library::Nnpack, _) => false,
+            // full DNN libraries
+            (
+                Library::Dnnl | Library::Cudnn | Library::VednnStock | Library::VednnSol,
+                Op::Conv2d { .. } | Op::Linear { .. },
+            ) => true,
+            _ => false,
+        }
+    }
+
+    /// Algorithms this library offers for `op`.
+    pub fn algorithms(self, op: &Op) -> Vec<Algorithm> {
+        match op {
+            Op::Linear { .. } => vec![Algorithm::Gemm],
+            Op::Conv2d { kh, kw, stride, .. } => {
+                let mut v = vec![Algorithm::Direct, Algorithm::Im2colGemm];
+                if *kh == 3 && *kw == 3 && *stride == 1 && self.has_winograd() {
+                    v.push(Algorithm::Winograd);
+                }
+                v
+            }
+            _ => vec![],
+        }
+    }
+
+    fn has_winograd(self) -> bool {
+        matches!(self, Library::Dnnl | Library::Cudnn | Library::Nnpack)
+    }
+
+    /// Relative compute-efficiency multiplier vs the class baseline
+    /// (1.0 = the EfficiencyTable's LibraryMatmul default).
+    pub fn efficiency_factor(self) -> f64 {
+        match self {
+            Library::Dnnl => 1.0,
+            Library::Cudnn => 1.0,
+            Library::Cublas => 1.05, // pure GEMM slightly beats conv paths
+            Library::OpenBlas => 0.9,
+            Library::Nnpack => 0.55, // "no longer competitive" (§II-B)
+            // stock VEDNN's per-image kernels underfill the 256-lane
+            // vector units (it was tuned for batch-parallel throughput)
+            Library::VednnStock => 0.65,
+            Library::VednnSol => 1.0,
+            Library::AuroraBlas => 1.05,
+        }
+    }
+
+    /// Usable fraction of device cores for a given batch size — the
+    /// stock-VEDNN batch-parallel pathology (§VI-C).
+    pub fn parallel_fraction(self, batch: usize, cores: usize) -> f64 {
+        match self {
+            Library::VednnStock => (batch.min(cores) as f64) / cores as f64,
+            _ => 1.0,
+        }
+    }
+
+    /// Cost-model class for an op through this library.
+    pub fn kernel_class(self, op: &Op, input: &TensorMeta) -> KernelClass {
+        match op {
+            Op::Conv2d { groups, cout, .. } if *groups == *cout && *groups == input.channels() => {
+                KernelClass::LibraryDepthwise
+            }
+            _ => KernelClass::LibraryMatmul,
+        }
+    }
+}
+
+impl Algorithm {
+    /// Effective-FLOP multiplier (Winograd does ~2.25x less arithmetic for
+    /// 3x3/s1 at some extra bandwidth).
+    pub fn flop_scale(self) -> f64 {
+        match self {
+            Algorithm::Winograd => 1.0 / 2.25,
+            _ => 1.0,
+        }
+    }
+
+    /// Extra memory-traffic multiplier (im2col materializes patches).
+    pub fn bytes_scale(self) -> f64 {
+        match self {
+            Algorithm::Im2colGemm => 1.8,
+            Algorithm::Winograd => 1.3,
+            _ => 1.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Direct => "direct",
+            Algorithm::Im2colGemm => "im2col+gemm",
+            Algorithm::Winograd => "winograd",
+            Algorithm::Gemm => "gemm",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv3x3() -> Op {
+        Op::Conv2d { cout: 64, kh: 3, kw: 3, stride: 1, pad: 1, groups: 1 }
+    }
+
+    #[test]
+    fn per_device_inventories_match_paper() {
+        use DeviceKind::*;
+        assert!(Library::available(Cpu).contains(&Library::Dnnl));
+        assert!(Library::available(Gpu).contains(&Library::Cudnn));
+        assert!(Library::available(Vpu).contains(&Library::VednnSol));
+        assert!(!Library::available(Vpu).contains(&Library::Cudnn));
+    }
+
+    #[test]
+    fn blas_is_linear_only() {
+        assert!(Library::OpenBlas.supports(&Op::Linear { out_features: 10 }));
+        assert!(!Library::OpenBlas.supports(&conv3x3()));
+        assert!(Library::AuroraBlas.supports(&Op::Linear { out_features: 10 }));
+    }
+
+    #[test]
+    fn winograd_gated_on_3x3_s1() {
+        let algos = Library::Dnnl.algorithms(&conv3x3());
+        assert!(algos.contains(&Algorithm::Winograd));
+        let c1 = Op::Conv2d { cout: 64, kh: 1, kw: 1, stride: 1, pad: 0, groups: 1 };
+        assert!(!Library::Dnnl.algorithms(&c1).contains(&Algorithm::Winograd));
+        let s2 = Op::Conv2d { cout: 64, kh: 3, kw: 3, stride: 2, pad: 1, groups: 1 };
+        assert!(!Library::Cudnn.algorithms(&s2).contains(&Algorithm::Winograd));
+    }
+
+    #[test]
+    fn stock_vednn_batch_pathology() {
+        // B=1 on 8 cores: stock uses 1/8 of the device; SOL's uses all.
+        assert_eq!(Library::VednnStock.parallel_fraction(1, 8), 1.0 / 8.0);
+        assert_eq!(Library::VednnStock.parallel_fraction(16, 8), 1.0);
+        assert_eq!(Library::VednnSol.parallel_fraction(1, 8), 1.0);
+    }
+
+    #[test]
+    fn stock_vednn_underutilizes_vectors() {
+        assert!(Library::VednnStock.efficiency_factor() < Library::VednnSol.efficiency_factor());
+    }
+
+    #[test]
+    fn nnpack_not_competitive() {
+        assert!(Library::Nnpack.efficiency_factor() < Library::Dnnl.efficiency_factor());
+    }
+
+    #[test]
+    fn winograd_saves_flops_costs_bytes() {
+        assert!(Algorithm::Winograd.flop_scale() < 0.5);
+        assert!(Algorithm::Winograd.bytes_scale() > 1.0);
+        assert_eq!(Algorithm::Direct.flop_scale(), 1.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! The **DNN module** — maps Convolution/Linear layers onto vendor
+//! libraries (paper §III-A/§IV): CUDNN/CUBLAS for NVIDIA, DNNL/OpenBLAS/
+//! NNPACK for CPU, VEDNN + Aurora BLAS for the SX-Aurora.
+//!
+//! The libraries themselves are *simulated substrates* here (DESIGN.md §4):
+//! each carries the documented performance profile of its real counterpart
+//! — including the stock-VEDNN batch-only parallelization that cripples
+//! TF-VE (§VI-C) and SOL's OpenMP-repaired variant — while the actual
+//! numerics run through the PJRT artifacts.
+
+pub mod descriptor;
+pub mod libs;
+pub mod tune;
+
+pub use descriptor::{Descriptor, DescriptorCache};
+pub use libs::{Algorithm, Library};
+pub use tune::{autotune_node, DnnPlan};

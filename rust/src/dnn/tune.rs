@@ -1,0 +1,188 @@
+//! The DNN module's auto-tuner (paper §III-A): "In case we have multiple
+//! libraries or algorithms or layouts available to implement one of these
+//! layers, we either use heuristics or run a very short auto-tuning
+//! workload to determine the best combination given the layer's
+//! hyperparameters."
+
+use crate::devsim::{DeviceSpec, EfficiencyTable, KernelClass};
+use crate::ir::layout::WeightLayout;
+use crate::ir::{Graph, NodeId};
+
+use super::libs::{Algorithm, Library};
+
+/// Chosen implementation for one DNN-module node.
+#[derive(Debug, Clone)]
+pub struct DnnPlan {
+    pub node: NodeId,
+    pub library: Library,
+    pub algorithm: Algorithm,
+    pub class: KernelClass,
+    pub flops: usize,
+    pub hbm_bytes: usize,
+    pub parallel_fraction: f64,
+    /// Weight layout for Linear layers (§III-A: untransposed on CPU,
+    /// transposed on the Aurora).
+    pub weight_layout: WeightLayout,
+    /// Tuned cost estimate, µs.
+    pub est_us: f64,
+}
+
+/// Weight-layout heuristic from the paper.
+pub fn preferred_weight_layout(spec: &DeviceSpec) -> WeightLayout {
+    use crate::devsim::DeviceKind;
+    match spec.kind {
+        DeviceKind::Vpu => WeightLayout::InOut,
+        _ => WeightLayout::OutIn,
+    }
+}
+
+fn raw_cost(
+    eff: &EfficiencyTable,
+    spec: &DeviceSpec,
+    class: KernelClass,
+    lib: Library,
+    algo: Algorithm,
+    flops: usize,
+    bytes: usize,
+    batch: usize,
+) -> f64 {
+    let f = (flops as f64 * algo.flop_scale() / lib.efficiency_factor()) as usize;
+    let b = (bytes as f64 * algo.bytes_scale()) as usize;
+    let frac = lib.parallel_fraction(batch, spec.cores);
+    eff.kernel_us(spec, class, f, b, frac)
+}
+
+/// Pick the best (library, algorithm) pair for `node` on `spec`.
+/// `allow` filters the library pool (e.g. the TF-VE baseline only has
+/// stock VEDNN).
+pub fn autotune_node(
+    g: &Graph,
+    node: NodeId,
+    spec: &DeviceSpec,
+    eff: &EfficiencyTable,
+    allow: Option<&[Library]>,
+) -> Option<DnnPlan> {
+    let n = g.node(node);
+    let input = &g.node(*n.inputs.first()?).meta;
+    if !n.op.is_dnn_candidate(input) {
+        return None;
+    }
+    let flops = n.op.flops(input, &n.meta);
+    let params = n.op.param_count(input) * input.dtype.size();
+    let hbm = input.bytes() + n.meta.bytes() + params;
+    let batch = input.batch();
+
+    let pool: Vec<Library> = Library::available(spec.kind)
+        .iter()
+        .copied()
+        .filter(|l| allow.is_none_or(|a| a.contains(l)))
+        .filter(|l| l.supports(&n.op))
+        .collect();
+
+    let mut best: Option<DnnPlan> = None;
+    for lib in pool {
+        let class = lib.kernel_class(&n.op, input);
+        for algo in lib.algorithms(&n.op) {
+            let est = raw_cost(eff, spec, class, lib, algo, flops, hbm, batch);
+            if best.as_ref().is_none_or(|b| est < b.est_us) {
+                best = Some(DnnPlan {
+                    node,
+                    library: lib,
+                    algorithm: algo,
+                    class,
+                    flops: (flops as f64 * algo.flop_scale()) as usize,
+                    hbm_bytes: (hbm as f64 * algo.bytes_scale()) as usize,
+                    parallel_fraction: lib.parallel_fraction(batch, spec.cores),
+                    weight_layout: preferred_weight_layout(spec),
+                    est_us: est,
+                });
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devsim::DeviceId;
+    use crate::ir::layout::WeightLayout;
+
+    fn conv_graph() -> (Graph, NodeId) {
+        let mut g = Graph::new("t");
+        let x = g.input_image(1, 64, 56, 56);
+        let c = g.conv(x, 64, 3, 1, 1, 1);
+        (g, c)
+    }
+
+    #[test]
+    fn winograd_wins_3x3_s1_on_cpu() {
+        let (g, c) = conv_graph();
+        let plan = autotune_node(
+            &g, c, &DeviceId::Xeon6126.spec(), &EfficiencyTable::default(), None,
+        )
+        .unwrap();
+        assert_eq!(plan.algorithm, Algorithm::Winograd);
+        assert_eq!(plan.library, Library::Dnnl);
+    }
+
+    #[test]
+    fn pointwise_conv_uses_direct_or_gemm() {
+        let mut g = Graph::new("t");
+        let x = g.input_image(1, 256, 14, 14);
+        let c = g.conv(x, 64, 1, 1, 0, 1);
+        let plan = autotune_node(
+            &g, c, &DeviceId::TitanV.spec(), &EfficiencyTable::default(), None,
+        )
+        .unwrap();
+        assert_ne!(plan.algorithm, Algorithm::Winograd);
+    }
+
+    #[test]
+    fn linear_layout_differs_cpu_vs_aurora() {
+        assert_eq!(
+            preferred_weight_layout(&DeviceId::Xeon6126.spec()),
+            WeightLayout::OutIn
+        );
+        assert_eq!(
+            preferred_weight_layout(&DeviceId::AuroraVE10B.spec()),
+            WeightLayout::InOut
+        );
+    }
+
+    #[test]
+    fn tfve_restriction_forces_stock_vednn() {
+        let (g, c) = conv_graph();
+        let spec = DeviceId::AuroraVE10B.spec();
+        let eff = EfficiencyTable::default();
+        let stock =
+            autotune_node(&g, c, &spec, &eff, Some(&[Library::VednnStock])).unwrap();
+        assert_eq!(stock.library, Library::VednnStock);
+        let sol = autotune_node(&g, c, &spec, &eff, None).unwrap();
+        assert_eq!(sol.library, Library::VednnSol);
+        // B=1: stock is ~8x slower (1 of 8 cores active)
+        assert!(stock.est_us > sol.est_us * 6.0);
+    }
+
+    #[test]
+    fn relu_is_not_a_dnn_node() {
+        let mut g = Graph::new("t");
+        let x = g.input_image(1, 8, 8, 8);
+        let r = g.relu(x);
+        assert!(autotune_node(
+            &g, r, &DeviceId::Xeon6126.spec(), &EfficiencyTable::default(), None
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn depthwise_not_claimed_by_dnn() {
+        let mut g = Graph::new("t");
+        let x = g.input_image(1, 64, 14, 14);
+        let d = g.depthwise(x, 3, 1, 1);
+        assert!(autotune_node(
+            &g, d, &DeviceId::Xeon6126.spec(), &EfficiencyTable::default(), None
+        )
+        .is_none());
+    }
+}

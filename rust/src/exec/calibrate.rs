@@ -1,0 +1,140 @@
+//! Simulator calibration against *measured* PJRT executions.
+//!
+//! The devsim efficiency table ships documented cross-device defaults
+//! (devsim::cost); this module anchors the CPU-kind numbers to reality by
+//! timing the calibration artifacts (conv site fused vs unfused, MLP
+//! GEMM) on the real PJRT CPU client and converting the measured
+//! throughputs into efficiency fractions.  DESIGN.md §4 documents the
+//! method; EXPERIMENTS.md records the measured values.
+
+use anyhow::Result;
+
+use crate::devsim::{DeviceKind, Efficiency, EfficiencyTable, KernelClass};
+use crate::metrics::Timer;
+use crate::runtime::PjrtEngine;
+use crate::util::XorShift;
+
+/// Measured calibration numbers (also printed by the benches).
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// GEMM throughput of the 64x8192x8192 linear, GFLOP/s.
+    pub matmul_gflops: f64,
+    /// Fused conv-site throughput, GFLOP/s.
+    pub fused_conv_gflops: f64,
+    /// Unfused (per-op path) conv-site time / fused time.
+    pub fusion_speedup: f64,
+    /// Estimated host peak (GFLOP/s) back-derived from the GEMM.
+    pub est_host_peak_gflops: f64,
+}
+
+fn time_entry(e: &PjrtEngine, entry: &str, inputs: &[Vec<f32>], reps: usize) -> Result<f64> {
+    // warmup (includes compile)
+    e.run_f32(entry, inputs)?;
+    let t = Timer::start();
+    for _ in 0..reps {
+        e.run_f32(entry, inputs)?;
+    }
+    Ok(t.ms() / reps as f64)
+}
+
+/// Run the calibration workloads.  ~a few seconds of wall time.
+pub fn measure(e: &PjrtEngine) -> Result<Calibration> {
+    let mut rng = XorShift::new(99);
+
+    // GEMM: op_linear_mlp1_b64 = [64,8192] @ [8192,8192] + bias
+    let x = rng.normal_vec(64 * 8192, 0.05);
+    let w = rng.normal_vec(8192 * 8192, 0.02);
+    let b = rng.normal_vec(8192, 0.02);
+    let gemm_ms = time_entry(e, "op_linear_mlp1_b64", &[x, w, b], 3)?;
+    let gemm_flops = 2.0 * 64.0 * 8192.0 * 8192.0;
+    let matmul_gflops = gemm_flops / (gemm_ms * 1e6);
+
+    // conv site fused (SOL) vs per-op chain (baseline structure)
+    let cx = rng.normal_vec(16 * 58 * 58 * 64, 0.05);
+    let cw = rng.normal_vec(3 * 3 * 64 * 64, 0.05);
+    let cb = rng.normal_vec(64, 0.05);
+    let fused_ms = time_entry(e, "conv_site_sol_b16", &[cx.clone(), cw.clone(), cb.clone()], 3)?;
+    let conv_flops = 2.0 * 16.0 * 64.0 * 56.0 * 56.0 * 64.0 * 9.0;
+    let fused_conv_gflops = conv_flops / (fused_ms * 1e6);
+
+    // the unfused execution structure: conv -> bias_relu -> maxpool as
+    // three separate executables (per-op dispatch like the framework)
+    let conv_out = e.run_f32("op_conv3x3_cb_b16", &[cx.clone(), cw.clone()])?;
+    let y = conv_out[0].as_f32()?.to_vec();
+    let t = Timer::start();
+    let reps = 3;
+    for _ in 0..reps {
+        let c = e.run_f32("op_conv3x3_cb_b16", &[cx.clone(), cw.clone()])?;
+        let br = e.run_f32("op_bias_relu_cb_b16", &[c[0].as_f32()?.to_vec(), cb.clone()])?;
+        let _p = e.run_f32("op_maxpool_cb_b16", &[br[0].as_f32()?.to_vec()])?;
+    }
+    let unfused_ms = t.ms() / reps as f64;
+    let _ = y;
+
+    Ok(Calibration {
+        matmul_gflops,
+        fused_conv_gflops,
+        fusion_speedup: unfused_ms / fused_ms,
+        est_host_peak_gflops: matmul_gflops / 0.55,
+    })
+}
+
+/// Turn measurements into an anchored efficiency table.
+///
+/// By construction the GEMM defines `LibraryMatmul = 0.55` of the derived
+/// host peak; the fused conv-site throughput then lands `DfpFused` at its
+/// *measured* fraction of the same peak, so the simulated fused/library
+/// ratio matches the real XLA-measured ratio.
+pub fn calibrated_table(c: &Calibration) -> EfficiencyTable {
+    let mut t = EfficiencyTable::default();
+    let dfp_eff = (c.fused_conv_gflops / c.est_host_peak_gflops).clamp(0.02, 0.95);
+    t.set(
+        DeviceKind::Cpu,
+        KernelClass::DfpFused,
+        Efficiency { compute: dfp_eff, bandwidth: 0.85 },
+    );
+    t
+}
+
+/// Measure + build, falling back to defaults when artifacts are missing.
+pub fn calibrate_or_default() -> (EfficiencyTable, Option<Calibration>) {
+    match PjrtEngine::new().and_then(|e| measure(&e)) {
+        Ok(c) => {
+            let t = calibrated_table(&c);
+            (t, Some(c))
+        }
+        Err(_) => (EfficiencyTable::default(), None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibrated_table_reflects_measurement() {
+        let c = Calibration {
+            matmul_gflops: 55.0,
+            fused_conv_gflops: 20.0,
+            fusion_speedup: 1.8,
+            est_host_peak_gflops: 100.0,
+        };
+        let t = calibrated_table(&c);
+        let e = t.lookup(DeviceKind::Cpu, KernelClass::DfpFused);
+        assert!((e.compute - 0.2).abs() < 1e-9);
+        // other kinds keep defaults
+        assert_eq!(t.lookup(DeviceKind::Gpu, KernelClass::DfpFused).compute, 0.25);
+    }
+
+    #[test]
+    fn clamping_defends_against_degenerate_measurements() {
+        let c = Calibration {
+            matmul_gflops: 1.0,
+            fused_conv_gflops: 1e9,
+            fusion_speedup: 1.0,
+            est_host_peak_gflops: 1.8,
+        };
+        let t = calibrated_table(&c);
+        assert!(t.lookup(DeviceKind::Cpu, KernelClass::DfpFused).compute <= 0.95);
+    }
+}

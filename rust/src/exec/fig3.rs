@@ -1,0 +1,181 @@
+//! The Fig-3 harness: execution time (ms) for every network × device ×
+//! execution mode, inference (B=1) and training (B=16 CNN / B=64 MLP).
+
+use crate::devsim::{DeviceId, EfficiencyTable, SimEngine};
+use crate::passes::{optimize, OptimizeOptions};
+use crate::workloads::NetId;
+
+use super::baseline::{baseline_infer_steps, baseline_train_steps, BaselineKind};
+use super::solrun::{sol_infer_steps, sol_train_steps, OffloadMode};
+
+/// Execution mode, in the paper's Fig-3 legend order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// PyTorch 1.4 / TF-VE 2.1.
+    Baseline,
+    /// SOL, native offloading.
+    Sol,
+    /// SOL, transparent offloading (steady state).
+    SolTO,
+}
+
+/// One row of the Fig-3 grid.
+#[derive(Debug, Clone)]
+pub struct Fig3Row {
+    pub net: NetId,
+    pub device: DeviceId,
+    pub training: bool,
+    /// `None` when the baseline cannot run the net (TF-VE + ShuffleNet,
+    /// §VI-B).
+    pub baseline_ms: Option<f64>,
+    pub sol_ms: f64,
+    pub sol_to_ms: f64,
+}
+
+impl Fig3Row {
+    pub fn speedup(&self) -> Option<f64> {
+        self.baseline_ms.map(|b| b / self.sol_ms)
+    }
+}
+
+/// Compute one grid row.
+pub fn fig3_row(net: NetId, device: DeviceId, training: bool, eff: &EfficiencyTable) -> Fig3Row {
+    let b = if training { net.training_batch() } else { 1 };
+    let g = net.build(b);
+
+    // --- baseline ---
+    let kind = BaselineKind::for_device(device);
+    let baseline_ms = if kind == BaselineKind::TfVe && !net.supported_by_tfve() {
+        None
+    } else {
+        // queue semantics per framework (CUDA streams are async)
+        let eng = SimEngine::new(device.spec(), eff.clone(), kind.async_queue(device));
+        let steps = if training {
+            baseline_train_steps(&g, device, kind, eff)
+        } else {
+            baseline_infer_steps(&g, device, kind, eff)
+        };
+        Some(eng.run(&steps).total_ms())
+    };
+
+    // --- SOL (async queue) ---
+    let mut opts = OptimizeOptions::new(device);
+    opts.eff = eff.clone();
+    let model = optimize(&g, &opts);
+    let eng = SimEngine::new(device.spec(), eff.clone(), true);
+    let sol_ms = if training {
+        eng.run(&sol_train_steps(&model, OffloadMode::Native)).total_ms()
+    } else {
+        eng.run(&sol_infer_steps(&model, OffloadMode::Native, false)).total_ms()
+    };
+    let sol_to_ms = if training {
+        eng.run(&sol_train_steps(&model, OffloadMode::Transparent)).total_ms()
+    } else {
+        eng.run(&sol_infer_steps(&model, OffloadMode::Transparent, false)).total_ms()
+    };
+
+    Fig3Row { net, device, training, baseline_ms, sol_ms, sol_to_ms }
+}
+
+/// The whole grid for one phase (inference or training).
+pub fn fig3_grid(training: bool, eff: &EfficiencyTable) -> Vec<Fig3Row> {
+    let mut rows = Vec::new();
+    for net in NetId::ALL {
+        for dev in DeviceId::ALL {
+            rows.push(fig3_row(net, dev, training, eff));
+        }
+    }
+    rows
+}
+
+/// Max speedup per device — the paper's §I headline numbers
+/// (Inference/Training: CPU 7.79/2.41, GPU 4.37/1.22, Aurora 25.41/4.18).
+pub fn headline_speedups(rows: &[Fig3Row]) -> Vec<(DeviceId, f64)> {
+    DeviceId::ALL
+        .iter()
+        .map(|&d| {
+            let max = rows
+                .iter()
+                .filter(|r| r.device == d)
+                .filter_map(|r| r.speedup())
+                .fold(0.0f64, f64::max);
+            (d, max)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn eff() -> EfficiencyTable {
+        EfficiencyTable::default()
+    }
+
+    #[test]
+    fn sol_never_slower_in_inference() {
+        // §VI-C: "Overall SOL is always faster than the baseline
+        // implementations in the inference tests, on all devices."
+        for net in [NetId::Densenet121, NetId::Resnet50, NetId::Vgg16, NetId::Mlp] {
+            for dev in DeviceId::ALL {
+                let r = fig3_row(net, dev, false, &eff());
+                if let Some(b) = r.baseline_ms {
+                    assert!(
+                        r.sol_ms <= b * 1.02,
+                        "{} on {:?}: sol {} vs baseline {}",
+                        net.name(),
+                        dev,
+                        r.sol_ms,
+                        b
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mlp_shows_no_cpu_inference_gain() {
+        // §VI-C: "For the MLP there is no difference visible."
+        let r = fig3_row(NetId::Mlp, DeviceId::Xeon6126, false, &eff());
+        let s = r.speedup().unwrap();
+        assert!(s < 1.35, "MLP speedup should be marginal, got {s:.2}");
+    }
+
+    #[test]
+    fn aurora_inference_speedup_is_large() {
+        // TF-VE's single-core VEDNN makes the Aurora the biggest win
+        let r = fig3_row(NetId::Resnet50, DeviceId::AuroraVE10B, false, &eff());
+        assert!(r.speedup().unwrap() > 4.0, "{:?}", r);
+    }
+
+    #[test]
+    fn shufflenet_has_no_tfve_baseline() {
+        let r = fig3_row(NetId::ShufflenetV2X0_5, DeviceId::AuroraVE10B, false, &eff());
+        assert!(r.baseline_ms.is_none());
+        assert!(r.sol_ms > 0.0);
+    }
+
+    #[test]
+    fn training_speedups_smaller_than_inference() {
+        // §VI-D: training gains are "not as high as for the inference
+        // cases" — true per device at the grid level (max speedup).
+        let inf = headline_speedups(&fig3_grid(false, &eff()));
+        let tr = headline_speedups(&fig3_grid(true, &eff()));
+        for ((d, i), (_, t)) in inf.iter().zip(&tr) {
+            assert!(t < i, "{d:?}: train {t:.2} !< infer {i:.2}");
+        }
+    }
+
+    #[test]
+    fn headline_ordering_matches_paper() {
+        // Aurora > CPU > GPU for max inference speedup
+        let rows = fig3_grid(false, &eff());
+        let hs = headline_speedups(&rows);
+        let get = |d: DeviceId| hs.iter().find(|(x, _)| *x == d).unwrap().1;
+        let aurora = get(DeviceId::AuroraVE10B);
+        let cpu = get(DeviceId::Xeon6126);
+        let gpu = get(DeviceId::TitanV).max(get(DeviceId::QuadroP4000));
+        assert!(aurora > cpu, "aurora {aurora:.1} vs cpu {cpu:.1}");
+        assert!(cpu > gpu, "cpu {cpu:.1} vs gpu {gpu:.1}");
+    }
+}

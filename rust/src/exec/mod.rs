@@ -1,0 +1,20 @@
+//! End-to-end execution paths and the Fig-3 harness.
+//!
+//! * [`baseline`] — the stock frameworks' execution structure: one
+//!   dispatcher round-trip + one kernel per layer, every intermediate
+//!   materialized (PyTorch 1.4 on CPU/GPU; TF-VE 2.1 on the Aurora).
+//! * [`solrun`] — SOL's execution: the optimized schedule through the
+//!   asynchronous queue, in native or transparent-offloading mode.
+//! * [`calibrate`] — anchors the simulator's efficiency table against
+//!   *measured* PJRT runs of the calibration artifacts.
+//! * [`fig3`] — the harness that regenerates Fig. 3 (inference + training
+//!   grids) and the §I headline speedups.
+
+pub mod baseline;
+pub mod calibrate;
+pub mod fig3;
+pub mod solrun;
+
+pub use baseline::{baseline_infer_steps, baseline_train_steps, BaselineKind};
+pub use fig3::{fig3_row, Fig3Row, Mode};
+pub use solrun::{sol_infer_steps, sol_train_steps, OffloadMode};

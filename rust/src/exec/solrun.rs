@@ -1,0 +1,230 @@
+//! SOL execution schedules: the optimized model through the asynchronous
+//! queue, in native or transparent-offloading mode (paper §V).
+
+use crate::devsim::{KernelClass, SimStep};
+use crate::ir::Op;
+use crate::passes::{OptimizedModel, Step};
+use crate::runtime::memcpy::{plan_transfers, Transfer, TransferPlan};
+
+/// How SOL reaches the device (paper §V-A vs §V-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OffloadMode {
+    /// Native: SOL shares the framework's device memory space; parameters
+    /// and activations live on the device across steps.
+    Native,
+    /// Transparent: host-resident framework; parameters cached on device,
+    /// input/output copied per run, gradients+weights per training step.
+    Transparent,
+}
+
+/// One `sol.call`: a single host-side entry (not one dispatch per layer).
+const SOL_CALL_US: f64 = 3.0;
+
+fn kernel_steps(model: &OptimizedModel) -> Vec<SimStep> {
+    let mut steps = Vec::new();
+    for s in &model.steps {
+        match s {
+            Step::Kernel(k) => steps.push(SimStep::Kernel {
+                class: k.class,
+                flops: k.flops,
+                bytes: k.hbm_bytes,
+                parallel_fraction: k.parallel_fraction,
+            }),
+            Step::Reorder { bytes } => steps.push(SimStep::Kernel {
+                class: KernelClass::Reorder,
+                flops: 0,
+                bytes: *bytes,
+                parallel_fraction: 1.0,
+            }),
+        }
+    }
+    steps
+}
+
+/// Parameter-upload wire plan (packed where profitable, §IV-C).
+fn param_upload_steps(model: &OptimizedModel) -> Vec<SimStep> {
+    let reqs: Vec<Transfer> = model
+        .graph
+        .nodes
+        .iter()
+        .filter_map(|n| {
+            let inp = n.inputs.first().map(|&i| &model.graph.node(i).meta)?;
+            let bytes = n.op.param_count(inp) * 4;
+            (bytes > 0).then_some(Transfer { bytes, to_device: true })
+        })
+        .collect();
+    plan_transfers(&reqs)
+        .into_iter()
+        .map(|p| match p {
+            TransferPlan::Single(t) => SimStep::H2D { bytes: t.bytes, packed: false },
+            TransferPlan::Packed { total_bytes, .. } => {
+                SimStep::H2D { bytes: total_bytes, packed: true }
+            }
+        })
+        .collect()
+}
+
+/// Inference schedule.
+///
+/// `first_run`: transparent offloading uploads the parameter context once;
+/// steady-state runs move only input/output (§V-A).  Native mode shares
+/// the framework's device memory, so parameters never move either way.
+pub fn sol_infer_steps(model: &OptimizedModel, mode: OffloadMode, first_run: bool) -> Vec<SimStep> {
+    let spec = model.device.spec();
+    let mut steps = vec![SimStep::Dispatch { us: SOL_CALL_US }];
+    if spec.is_offload_device() {
+        if mode == OffloadMode::Transparent && first_run {
+            steps.extend(param_upload_steps(model));
+        }
+        steps.push(SimStep::H2D { bytes: model.input_bytes, packed: false });
+    }
+    steps.extend(kernel_steps(model));
+    if spec.is_offload_device() {
+        steps.push(SimStep::D2H { bytes: model.output_bytes, packed: false });
+    }
+    steps.push(SimStep::Sync);
+    steps
+}
+
+/// Training-step schedule: forward + backward (2x kernel work) + optimizer.
+///
+/// Transparent mode pays the §V-A tax every step: gradients D2H (the
+/// "gradient upgrade is processed on the host system") and the updated
+/// weights H2D.  Native mode keeps parameters in the framework's device
+/// memory space: only input and loss cross the link.
+pub fn sol_train_steps(model: &OptimizedModel, mode: OffloadMode) -> Vec<SimStep> {
+    let spec = model.device.spec();
+    let mut steps = vec![SimStep::Dispatch { us: SOL_CALL_US }];
+    if spec.is_offload_device() {
+        if mode == OffloadMode::Transparent {
+            // weights re-uploaded every step (context invalidated by the
+            // host-side optimizer update)
+            steps.extend(param_upload_steps(model));
+        }
+        steps.push(SimStep::H2D { bytes: model.input_bytes, packed: false });
+    }
+    // forward
+    let fwd = kernel_steps(model);
+    steps.extend(fwd.iter().cloned());
+    // backward: reverse order, ~2x work per kernel
+    for s in fwd.iter().rev() {
+        if let SimStep::Kernel { class, flops, bytes, parallel_fraction } = *s {
+            steps.push(SimStep::Kernel {
+                class,
+                flops: 2 * flops,
+                bytes: 2 * bytes,
+                parallel_fraction,
+            });
+        }
+    }
+    let param_bytes = model.param_bytes;
+    let param_count = param_bytes / 4;
+    match mode {
+        OffloadMode::Transparent if spec.is_offload_device() => {
+            // gradients back to host; optimizer on host
+            steps.push(SimStep::D2H { bytes: param_bytes, packed: true });
+        }
+        _ => {
+            // native / host-resident: update on device via framework ops
+            steps.push(SimStep::Kernel {
+                class: KernelClass::Elementwise,
+                flops: 2 * param_count,
+                bytes: 3 * param_bytes,
+                parallel_fraction: 1.0,
+            });
+        }
+    }
+    if spec.is_offload_device() {
+        steps.push(SimStep::D2H { bytes: 4, packed: false }); // the loss
+    }
+    steps.push(SimStep::Sync);
+    steps
+}
+
+/// Count the layers the schedule elides into fused kernels (for tests).
+pub fn fused_away(model: &OptimizedModel) -> usize {
+    let covered: usize = model
+        .steps
+        .iter()
+        .filter_map(|s| match s {
+            Step::Kernel(k) => Some(k.flops.max(1)),
+            _ => None,
+        })
+        .count();
+    model
+        .graph
+        .nodes
+        .iter()
+        .filter(|n| !matches!(n.op, Op::Input))
+        .count()
+        .saturating_sub(covered)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devsim::{DeviceId, EfficiencyTable, SimEngine};
+    use crate::passes::{optimize, OptimizeOptions};
+    use crate::workloads::NetId;
+
+    fn model(net: NetId, dev: DeviceId, b: usize) -> OptimizedModel {
+        optimize(&net.build(b), &OptimizeOptions::new(dev))
+    }
+
+    fn run(dev: DeviceId, steps: &[SimStep]) -> f64 {
+        SimEngine::new(dev.spec(), EfficiencyTable::default(), true)
+            .run(steps)
+            .total_us
+    }
+
+    #[test]
+    fn steady_state_faster_than_first_run_on_offload_device() {
+        let m = model(NetId::Resnet18, DeviceId::AuroraVE10B, 1);
+        let first = run(DeviceId::AuroraVE10B, &sol_infer_steps(&m, OffloadMode::Transparent, true));
+        let steady = run(DeviceId::AuroraVE10B, &sol_infer_steps(&m, OffloadMode::Transparent, false));
+        assert!(steady < first, "{steady} vs {first}");
+    }
+
+    #[test]
+    fn to_equals_native_for_steady_inference() {
+        // §VI-C: "there is no difference to be seen between the transparent
+        // and native offloading model" for inference
+        let m = model(NetId::Resnet18, DeviceId::AuroraVE10B, 1);
+        let to = run(DeviceId::AuroraVE10B, &sol_infer_steps(&m, OffloadMode::Transparent, false));
+        let nat = run(DeviceId::AuroraVE10B, &sol_infer_steps(&m, OffloadMode::Native, false));
+        let rel = (to - nat).abs() / nat;
+        assert!(rel < 0.05, "TO {to} vs native {nat}");
+    }
+
+    #[test]
+    fn native_beats_to_for_training() {
+        // §VI-D: "the native offloading always yields in higher performance,
+        // because of less memcopy between the host and the device"
+        let m = model(NetId::Resnet18, DeviceId::AuroraVE10B, 16);
+        let to = run(DeviceId::AuroraVE10B, &sol_train_steps(&m, OffloadMode::Transparent));
+        let nat = run(DeviceId::AuroraVE10B, &sol_train_steps(&m, OffloadMode::Native));
+        assert!(nat < to, "native {nat} vs TO {to}");
+    }
+
+    #[test]
+    fn cpu_mode_is_mode_independent() {
+        let m = model(NetId::Squeezenet1_0, DeviceId::Xeon6126, 1);
+        let to = run(DeviceId::Xeon6126, &sol_infer_steps(&m, OffloadMode::Transparent, true));
+        let nat = run(DeviceId::Xeon6126, &sol_infer_steps(&m, OffloadMode::Native, false));
+        assert!((to - nat).abs() / nat < 0.02);
+    }
+
+    #[test]
+    fn param_uploads_are_packed_for_small_tensor_nets() {
+        let m = model(NetId::ShufflenetV2X0_5, DeviceId::AuroraVE10B, 1);
+        let ups = param_upload_steps(&m);
+        assert!(
+            ups.iter().any(|s| matches!(s, SimStep::H2D { packed: true, .. })),
+            "shufflenet's many small params should pack"
+        );
+        // VGG's giant fc weights stay single
+        let v = model(NetId::Vgg16, DeviceId::AuroraVE10B, 1);
+        let vups = param_upload_steps(&v);
+        assert!(vups.iter().any(|s| matches!(s, SimStep::H2D { packed: false, .. })));
+    }
+}

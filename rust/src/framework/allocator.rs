@@ -1,0 +1,116 @@
+//! The framework's pluggable allocator interface (`at::Allocator` analog).
+//!
+//! Paper §V-B: "it is necessary to implement the `at::Allocator` interface,
+//! which becomes the default allocator for the given device."  External
+//! libraries install an allocator for a device slot; the framework then
+//! routes every tensor allocation on that device through it.  This is also
+//! how the middleware *shares the framework's memory space* instead of
+//! maintaining its own (§III-B).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{anyhow, Result};
+
+use super::device::DeviceType;
+
+/// Device allocator: returns opaque handles, not raw pointers, so exotic
+/// devices (or asynchronous allocators) can defer real allocation.
+pub trait Allocator: Send + Sync {
+    /// Allocate `bytes`; returns an opaque handle.
+    fn allocate(&self, bytes: usize) -> Result<u64>;
+    /// Release a handle.
+    fn deallocate(&self, handle: u64) -> Result<()>;
+    /// Bytes currently allocated (for leak tests / memory accounting).
+    fn allocated_bytes(&self) -> usize;
+}
+
+/// Trivial host allocator: handles are leaked box addresses of the size —
+/// host tensors carry their own `Vec`s, so this only tracks accounting.
+#[derive(Default)]
+pub struct HostAllocator {
+    live: Mutex<HashMap<u64, usize>>,
+    next: Mutex<u64>,
+}
+
+impl Allocator for HostAllocator {
+    fn allocate(&self, bytes: usize) -> Result<u64> {
+        let mut n = self.next.lock().unwrap();
+        *n += 1;
+        let h = *n;
+        self.live.lock().unwrap().insert(h, bytes);
+        Ok(h)
+    }
+
+    fn deallocate(&self, handle: u64) -> Result<()> {
+        self.live
+            .lock()
+            .unwrap()
+            .remove(&handle)
+            .map(|_| ())
+            .ok_or_else(|| anyhow!("unknown handle {handle}"))
+    }
+
+    fn allocated_bytes(&self) -> usize {
+        self.live.lock().unwrap().values().sum()
+    }
+}
+
+type Registry = Mutex<HashMap<DeviceType, Arc<dyn Allocator>>>;
+
+fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| {
+        let mut m: HashMap<DeviceType, Arc<dyn Allocator>> = HashMap::new();
+        m.insert(DeviceType::Cpu, Arc::new(HostAllocator::default()));
+        Mutex::new(m)
+    })
+}
+
+/// Install the default allocator for a device type (public extension API).
+pub fn set_allocator(device: DeviceType, alloc: Arc<dyn Allocator>) {
+    registry().lock().unwrap().insert(device, alloc);
+}
+
+/// Fetch the allocator for a device type.
+pub fn get_allocator(device: DeviceType) -> Result<Arc<dyn Allocator>> {
+    registry()
+        .lock()
+        .unwrap()
+        .get(&device)
+        .cloned()
+        .ok_or_else(|| anyhow!("no allocator registered for {device:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_allocator_preinstalled() {
+        let a = get_allocator(DeviceType::Cpu).unwrap();
+        let h = a.allocate(128).unwrap();
+        assert!(a.allocated_bytes() >= 128);
+        a.deallocate(h).unwrap();
+    }
+
+    #[test]
+    fn foreign_device_has_no_allocator_until_registered() {
+        // OpenCL: never registered anywhere in this codebase.
+        assert!(get_allocator(DeviceType::OpenCl).is_err());
+    }
+
+    #[test]
+    fn registration_is_visible() {
+        set_allocator(DeviceType::Xla, Arc::new(HostAllocator::default()));
+        assert!(get_allocator(DeviceType::Xla).is_ok());
+    }
+
+    #[test]
+    fn double_free_detected() {
+        let a = HostAllocator::default();
+        let h = a.allocate(64).unwrap();
+        a.deallocate(h).unwrap();
+        assert!(a.deallocate(h).is_err());
+    }
+}

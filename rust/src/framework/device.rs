@@ -1,0 +1,97 @@
+//! The framework's fixed device-type enum.
+//!
+//! Mirrors PyTorch's `c10/core/DeviceType.h`: a closed enumeration that
+//! "cannot be extended from the outside" (paper §V-B).  A foreign device
+//! must therefore squat on one of the existing-but-unused slots; the
+//! paper (and this reproduction) picks **HIP**, because the default
+//! package only ever uses CPU and CUDA, and `DispatchStub` (Listing 5)
+//! carries a HIP function pointer but not an OpenCL/XLA one.
+
+
+/// Closed device-type enumeration (c10 analog).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceType {
+    Cpu,
+    Cuda,
+    /// AMD HIP — unused by the default package; the slot §V-B borrows.
+    Hip,
+    /// OpenCL — present in the enum, but `DispatchStub` has no slot for it.
+    OpenCl,
+    /// XLA — same situation as OpenCL.
+    Xla,
+}
+
+impl DeviceType {
+    /// All enum members (the closed world).
+    pub const ALL: [DeviceType; 5] = [
+        DeviceType::Cpu,
+        DeviceType::Cuda,
+        DeviceType::Hip,
+        DeviceType::OpenCl,
+        DeviceType::Xla,
+    ];
+
+    /// Device types the default installation actually ships kernels for.
+    pub fn used_by_default(self) -> bool {
+        matches!(self, DeviceType::Cpu | DeviceType::Cuda)
+    }
+
+    /// Does `DispatchStub` carry a function-pointer slot for this type?
+    /// (Listing 5: CPU, CUDA and HIP only.)
+    pub fn has_dispatch_stub_slot(self) -> bool {
+        matches!(self, DeviceType::Cpu | DeviceType::Cuda | DeviceType::Hip)
+    }
+}
+
+/// A concrete device: type + index (e.g. `hip:0`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Device {
+    pub kind: DeviceType,
+    pub index: usize,
+}
+
+impl Device {
+    pub fn new(kind: DeviceType, index: usize) -> Self {
+        Device { kind, index }
+    }
+
+    pub fn cpu() -> Self {
+        Device::new(DeviceType::Cpu, 0)
+    }
+}
+
+impl std::fmt::Display for Device {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let name = match self.kind {
+            DeviceType::Cpu => "cpu",
+            DeviceType::Cuda => "cuda",
+            DeviceType::Hip => "hip",
+            DeviceType::OpenCl => "opencl",
+            DeviceType::Xla => "xla",
+        };
+        write!(f, "{}:{}", name, self.index)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hip_is_free_but_dispatchable() {
+        // The §V-B selection logic: the chosen slot must (a) not be used by
+        // the default package and (b) have a DispatchStub slot.  HIP is the
+        // unique such type.
+        let candidates: Vec<_> = DeviceType::ALL
+            .iter()
+            .filter(|d| !d.used_by_default() && d.has_dispatch_stub_slot())
+            .collect();
+        assert_eq!(candidates, vec![&DeviceType::Hip]);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Device::new(DeviceType::Hip, 0).to_string(), "hip:0");
+        assert_eq!(Device::cpu().to_string(), "cpu:0");
+    }
+}

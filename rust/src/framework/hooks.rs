@@ -1,0 +1,74 @@
+//! Device hooks interface — the `at::HIPHooksInterface` analog (§V-B):
+//! "methods to determine the number of available devices in the system,
+//! or the default device index".  External libraries install a hooks
+//! object when they bring up a foreign device.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::device::DeviceType;
+
+/// Minimal per-device-type runtime introspection.
+pub trait DeviceHooks: Send + Sync {
+    /// Number of devices of this type in the system.
+    fn device_count(&self) -> usize;
+    /// Default device index.
+    fn default_index(&self) -> usize {
+        0
+    }
+    /// Human-readable backend identity (for diagnostics).
+    fn backend_name(&self) -> String;
+}
+
+/// Built-in CPU hooks.
+pub struct CpuHooks;
+
+impl DeviceHooks for CpuHooks {
+    fn device_count(&self) -> usize {
+        1
+    }
+    fn backend_name(&self) -> String {
+        "native-cpu".into()
+    }
+}
+
+type HooksMap = Mutex<HashMap<DeviceType, Arc<dyn DeviceHooks>>>;
+
+fn hooks() -> &'static HooksMap {
+    static H: OnceLock<HooksMap> = OnceLock::new();
+    H.get_or_init(|| {
+        let mut m: HashMap<DeviceType, Arc<dyn DeviceHooks>> = HashMap::new();
+        m.insert(DeviceType::Cpu, Arc::new(CpuHooks));
+        Mutex::new(m)
+    })
+}
+
+/// Install hooks for a device type (public extension API).
+pub fn set_hooks(device: DeviceType, h: Arc<dyn DeviceHooks>) {
+    hooks().lock().unwrap().insert(device, h);
+}
+
+/// Query hooks; `None` when no backend ever registered (the stock package
+/// state for HIP/OpenCL/XLA).
+pub fn get_hooks(device: DeviceType) -> Option<Arc<dyn DeviceHooks>> {
+    hooks().lock().unwrap().get(&device).cloned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_hooks_preinstalled() {
+        let h = get_hooks(DeviceType::Cpu).unwrap();
+        assert_eq!(h.device_count(), 1);
+        assert_eq!(h.default_index(), 0);
+    }
+
+    #[test]
+    fn hip_vacant_until_registered() {
+        // NOTE: other tests may register HIP hooks; use OpenCL which no
+        // backend in this codebase ever claims.
+        assert!(get_hooks(DeviceType::OpenCl).is_none());
+    }
+}

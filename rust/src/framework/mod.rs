@@ -1,0 +1,44 @@
+//! **Torchlet** — a self-contained mini AI framework (the PyTorch 1.4
+//! stand-in of this reproduction; see DESIGN.md §4).
+//!
+//! Torchlet reproduces the architecture of Fig. 1 of the paper and the
+//! extension points its §V-B integration relies on:
+//!
+//! * a **fixed device enum** ([`device::DeviceType`]) that cannot be
+//!   extended from the outside (c10/core/DeviceType.h);
+//! * an **operator registry** with per-device kernel callbacks, open for
+//!   registration by other libraries ([`dispatcher::OperatorRegistry`],
+//!   the `c10::RegisterOperators` analog);
+//! * a [`dispatcher::DispatchStub`] that stores separate function pointers
+//!   for CPU, CUDA and HIP *only* (Listing 5);
+//! * a pluggable per-device [`allocator::Allocator`] (`at::Allocator`);
+//! * a [`hooks::DeviceHooks`] interface (`at::HIPHooksInterface`).
+//!
+//! This module deliberately knows **nothing** about the middleware that
+//! integrates with it — `rust/tests/no_source_changes.rs` mechanically
+//! enforces that no file under `framework/` references it.  That is the
+//! paper's core claim: device support can be added *without changing the
+//! framework's source code*.
+
+pub mod allocator;
+pub mod device;
+pub mod dispatcher;
+pub mod hooks;
+pub mod module;
+pub mod ops_cpu;
+pub mod optim;
+pub mod tensor;
+
+pub use device::DeviceType;
+pub use dispatcher::{DispatchStub, OperatorRegistry};
+pub use module::Module;
+pub use tensor::Tensor;
+
+/// Install the stock framework state: CPU kernels + CPU allocator, like a
+/// default PyTorch pip package (only CPU and CUDA are used; the HIP slot
+/// is vacant — which is exactly what §V-B exploits).
+pub fn install_default() -> OperatorRegistry {
+    let mut reg = OperatorRegistry::new();
+    ops_cpu::register_cpu_kernels(&mut reg);
+    reg
+}

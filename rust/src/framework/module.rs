@@ -1,0 +1,309 @@
+//! The framework's module (model) tree.
+//!
+//! Equivalent of `torch.nn`: a composable tree of layers whose `forward`
+//! issues op calls through the dispatcher based on the *input tensor's
+//! device* — the Fig.-1 architecture ("the core ... processes the
+//! computation graphs ... by issuing function calls to device specific
+//! backends").  The tree is public and introspectable, which is what an
+//! external tracer/extractor consumes (the analog of TorchScript/FX
+//! tracing over `nn.Module`).
+
+use anyhow::Result;
+
+use super::device::DeviceType;
+use super::dispatcher::{Attrs, OperatorRegistry};
+use super::tensor::Tensor;
+
+/// Layer configuration + parameters.  Custom control flow that PyTorch
+/// users write in `forward()` (residuals, dense blocks, shuffles) appears
+/// here as structural combinators, like FX graph modules.
+pub enum Module {
+    Conv2d {
+        weight: Tensor,
+        bias: Tensor,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+    },
+    Linear {
+        weight: Tensor,
+        bias: Tensor,
+    },
+    ReLU,
+    BatchNorm2d {
+        gamma: Tensor,
+        beta: Tensor,
+    },
+    MaxPool2d {
+        k: usize,
+        stride: usize,
+        pad: usize,
+    },
+    AvgPool2d {
+        k: usize,
+        stride: usize,
+        pad: usize,
+    },
+    GlobalAvgPool,
+    Dropout,
+    Flatten,
+    Softmax,
+    Sequential(Vec<Module>),
+    /// `x + f(x)` — residual connection.
+    Residual(Box<Module>),
+    /// DenseNet-style block: each layer consumes the concat of all
+    /// previous outputs (including the input).
+    DenseBlock(Vec<Module>),
+    ChannelShuffle {
+        groups: usize,
+    },
+}
+
+impl Module {
+    /// Conv2d with deterministic random init.
+    pub fn conv2d(cin: usize, cout: usize, k: usize, stride: usize, pad: usize, seed: u64) -> Self {
+        let scale = (2.0 / (cin * k * k) as f32).sqrt();
+        Module::Conv2d {
+            weight: Tensor::randn(&[cout, cin, k, k], seed, scale),
+            bias: Tensor::zeros(&[cout]),
+            stride,
+            pad,
+            groups: 1,
+        }
+    }
+
+    /// Depthwise conv (groups == channels).
+    pub fn depthwise(c: usize, k: usize, stride: usize, pad: usize, seed: u64) -> Self {
+        let scale = (2.0 / (k * k) as f32).sqrt();
+        Module::Conv2d {
+            weight: Tensor::randn(&[c, 1, k, k], seed, scale),
+            bias: Tensor::zeros(&[c]),
+            stride,
+            pad,
+            groups: c,
+        }
+    }
+
+    pub fn linear(fin: usize, fout: usize, seed: u64) -> Self {
+        let scale = (2.0 / fin as f32).sqrt();
+        Module::Linear {
+            weight: Tensor::randn(&[fout, fin], seed, scale),
+            bias: Tensor::zeros(&[fout]),
+        }
+    }
+
+    pub fn batch_norm(c: usize) -> Self {
+        Module::BatchNorm2d {
+            gamma: Tensor::from_f32(vec![1.0; c], &[c]),
+            beta: Tensor::zeros(&[c]),
+        }
+    }
+
+    /// Run the module through the dispatcher on `x`'s device.
+    pub fn forward(&self, reg: &OperatorRegistry, x: &Tensor) -> Result<Tensor> {
+        let dev = x.device.kind;
+        match self {
+            Module::Conv2d { weight, bias, stride, pad, groups } => {
+                let a = Attrs::new()
+                    .with_int("stride", *stride as i64)
+                    .with_int("pad", *pad as i64)
+                    .with_int("groups", *groups as i64);
+                reg.dispatch("aten::conv2d", dev, &[x.clone(), weight.clone(), bias.clone()], &a)
+            }
+            Module::Linear { weight, bias } => reg.dispatch(
+                "aten::linear",
+                dev,
+                &[x.clone(), weight.clone(), bias.clone()],
+                &Attrs::new(),
+            ),
+            Module::ReLU => reg.dispatch("aten::relu", dev, &[x.clone()], &Attrs::new()),
+            Module::BatchNorm2d { gamma, beta } => reg.dispatch(
+                "aten::batch_norm",
+                dev,
+                &[x.clone(), gamma.clone(), beta.clone()],
+                &Attrs::new(),
+            ),
+            Module::MaxPool2d { k, stride, pad } => {
+                let a = Attrs::new()
+                    .with_int("k", *k as i64)
+                    .with_int("stride", *stride as i64)
+                    .with_int("pad", *pad as i64);
+                reg.dispatch("aten::max_pool2d", dev, &[x.clone()], &a)
+            }
+            Module::AvgPool2d { k, stride, pad } => {
+                let a = Attrs::new()
+                    .with_int("k", *k as i64)
+                    .with_int("stride", *stride as i64)
+                    .with_int("pad", *pad as i64);
+                reg.dispatch("aten::avg_pool2d", dev, &[x.clone()], &a)
+            }
+            Module::GlobalAvgPool => {
+                reg.dispatch("aten::adaptive_avg_pool2d", dev, &[x.clone()], &Attrs::new())
+            }
+            Module::Dropout => reg.dispatch("aten::dropout", dev, &[x.clone()], &Attrs::new()),
+            Module::Flatten => reg.dispatch("aten::flatten", dev, &[x.clone()], &Attrs::new()),
+            Module::Softmax => reg.dispatch("aten::softmax", dev, &[x.clone()], &Attrs::new()),
+            Module::Sequential(ms) => {
+                let mut cur = x.clone();
+                for m in ms {
+                    cur = m.forward(reg, &cur)?;
+                }
+                Ok(cur)
+            }
+            Module::Residual(f) => {
+                let fx = f.forward(reg, x)?;
+                reg.dispatch("aten::add", dev, &[fx, x.clone()], &Attrs::new())
+            }
+            Module::DenseBlock(layers) => {
+                let mut feats = vec![x.clone()];
+                for l in layers {
+                    let cat = if feats.len() == 1 {
+                        feats[0].clone()
+                    } else {
+                        reg.dispatch("aten::cat", dev, &feats, &Attrs::new())?
+                    };
+                    feats.push(l.forward(reg, &cat)?);
+                }
+                reg.dispatch("aten::cat", dev, &feats, &Attrs::new())
+            }
+            Module::ChannelShuffle { groups } => {
+                let a = Attrs::new().with_int("groups", *groups as i64);
+                reg.dispatch("aten::channel_shuffle", dev, &[x.clone()], &a)
+            }
+        }
+    }
+
+    /// Collect all parameter tensors with hierarchical names.
+    pub fn parameters(&self) -> Vec<(String, Tensor)> {
+        let mut out = Vec::new();
+        self.collect_params("", &mut out);
+        out
+    }
+
+    fn collect_params(&self, prefix: &str, out: &mut Vec<(String, Tensor)>) {
+        let p = |s: &str| {
+            if prefix.is_empty() {
+                s.to_string()
+            } else {
+                format!("{prefix}.{s}")
+            }
+        };
+        match self {
+            Module::Conv2d { weight, bias, .. } | Module::Linear { weight, bias } => {
+                out.push((p("weight"), weight.clone()));
+                out.push((p("bias"), bias.clone()));
+            }
+            Module::BatchNorm2d { gamma, beta } => {
+                out.push((p("gamma"), gamma.clone()));
+                out.push((p("beta"), beta.clone()));
+            }
+            Module::Sequential(ms) | Module::DenseBlock(ms) => {
+                for (i, m) in ms.iter().enumerate() {
+                    m.collect_params(&p(&i.to_string()), out);
+                }
+            }
+            Module::Residual(f) => f.collect_params(&p("fn"), out),
+            _ => {}
+        }
+    }
+
+    /// Highest version counter over all parameters — an external cache can
+    /// compare this to detect parameter mutation (§V-A).
+    pub fn param_version(&self) -> u64 {
+        self.parameters().iter().map(|(_, t)| t.version()).max().unwrap_or(0)
+    }
+
+    /// Device check: all params on one device type (or no params).
+    pub fn param_device(&self) -> Option<DeviceType> {
+        self.parameters().first().map(|(_, t)| t.device.kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::install_default;
+
+    fn mini() -> Module {
+        Module::Sequential(vec![
+            Module::conv2d(1, 4, 3, 1, 1, 7),
+            Module::ReLU,
+            Module::MaxPool2d { k: 2, stride: 2, pad: 0 },
+            Module::Flatten,
+            Module::linear(4 * 2 * 2, 3, 8),
+            Module::Softmax,
+        ])
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let reg = install_default();
+        let x = Tensor::randn(&[2, 1, 4, 4], 1, 1.0);
+        let y = mini().forward(&reg, &x).unwrap();
+        assert_eq!(y.shape, vec![2, 3]);
+        // softmax output
+        let v = y.to_f32().unwrap();
+        let s: f32 = v[..3].iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn parameters_are_named_and_shared() {
+        let m = mini();
+        let ps = m.parameters();
+        assert_eq!(ps.len(), 4); // conv w/b + linear w/b
+        assert!(ps[0].0.starts_with("0.weight"));
+        // parameters() returns *shared* tensors, not copies:
+        ps[0].1.fill_(0.5).unwrap();
+        let again = m.parameters();
+        assert_eq!(again[0].1.to_f32().unwrap()[0], 0.5);
+    }
+
+    #[test]
+    fn param_version_tracks_mutation() {
+        let m = mini();
+        let v0 = m.param_version();
+        m.parameters()[0].1.fill_(1.0).unwrap();
+        assert!(m.param_version() > v0);
+    }
+
+    #[test]
+    fn residual_adds_input() {
+        let reg = install_default();
+        // Residual(conv1x1 with weight 0) == identity + 0 -> x
+        let conv = Module::Conv2d {
+            weight: Tensor::zeros(&[2, 2, 1, 1]),
+            bias: Tensor::zeros(&[2]),
+            stride: 1,
+            pad: 0,
+            groups: 1,
+        };
+        let m = Module::Residual(Box::new(conv));
+        let x = Tensor::randn(&[1, 2, 3, 3], 5, 1.0);
+        let y = m.forward(&reg, &x).unwrap();
+        let (xv, yv) = (x.to_f32().unwrap(), y.to_f32().unwrap());
+        for (a, b) in xv.iter().zip(&yv) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn dense_block_grows_channels() {
+        let reg = install_default();
+        // two layers, each producing 2 channels from whatever it sees
+        let l1 = Module::conv2d(2, 2, 3, 1, 1, 1);
+        let l2 = Module::conv2d(4, 2, 3, 1, 1, 2);
+        let m = Module::DenseBlock(vec![l1, l2]);
+        let x = Tensor::randn(&[1, 2, 4, 4], 9, 1.0);
+        let y = m.forward(&reg, &x).unwrap();
+        assert_eq!(y.shape, vec![1, 6, 4, 4]); // 2 + 2 + 2
+    }
+
+    #[test]
+    fn forward_on_unsupported_device_fails() {
+        let reg = install_default();
+        let m = Module::ReLU;
+        let x = Tensor::from_device_handle(1, 64, &[4], super::super::device::Device::new(DeviceType::Hip, 0));
+        assert!(m.forward(&reg, &x).is_err());
+    }
+}

@@ -1,0 +1,501 @@
+//! The stock CPU backend: naive reference kernels for every framework op.
+//!
+//! This is the "26,000 lines for CPU within PyTorch" counterpart (§VI-A),
+//! shrunk to readable reference loops.  Correctness matters here —
+//! integration tests validate middleware numerics against these kernels —
+//! performance does not (large-model baselines are timed by the device
+//! simulator, not by running these loops).
+//!
+//! All image kernels take NCHW layout, the framework default.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::device::DeviceType;
+use super::dispatcher::{Attrs, Kernel, OperatorRegistry};
+use super::tensor::Tensor;
+
+fn t4(t: &Tensor) -> Result<(usize, usize, usize, usize)> {
+    match t.shape[..] {
+        [n, c, h, w] => Ok((n, c, h, w)),
+        _ => bail!("expected 4-D NCHW tensor, got {:?}", t.shape),
+    }
+}
+
+/// `aten::conv2d(x, w, b)` — attrs: stride, pad, groups.  w: [cout, cin/g, kh, kw].
+fn conv2d(inputs: &[Tensor], attrs: &Attrs) -> Result<Tensor> {
+    let (x, w, b) = (&inputs[0], &inputs[1], &inputs[2]);
+    let (n, c, h, wd) = t4(x)?;
+    let (cout, cing, kh, kw) = t4(w)?;
+    let stride = attrs.int_or("stride", 1) as usize;
+    let pad = attrs.int_or("pad", 0) as usize;
+    let groups = attrs.int_or("groups", 1) as usize;
+    if c / groups != cing {
+        bail!("conv2d channel mismatch: cin {c} groups {groups} w-cin {cing}");
+    }
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (wd + 2 * pad - kw) / stride + 1;
+    let xv = x.to_f32()?;
+    let wv = w.to_f32()?;
+    let bv = b.to_f32()?;
+    let mut out = vec![0f32; n * cout * oh * ow];
+    let cpg_out = cout / groups;
+    for ni in 0..n {
+        for co in 0..cout {
+            let g = co / cpg_out;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = bv[co];
+                    for ci in 0..cing {
+                        let cin_abs = g * cing + ci;
+                        for ky in 0..kh {
+                            let iy = oy * stride + ky;
+                            if iy < pad || iy - pad >= h {
+                                continue;
+                            }
+                            for kx in 0..kw {
+                                let ix = ox * stride + kx;
+                                if ix < pad || ix - pad >= wd {
+                                    continue;
+                                }
+                                let xi = ((ni * c + cin_abs) * h + (iy - pad)) * wd + (ix - pad);
+                                let wi = ((co * cing + ci) * kh + ky) * kw + kx;
+                                acc += xv[xi] * wv[wi];
+                            }
+                        }
+                    }
+                    out[((ni * cout + co) * oh + oy) * ow + ox] = acc;
+                }
+            }
+        }
+    }
+    Ok(Tensor::from_f32(out, &[n, cout, oh, ow]))
+}
+
+/// `aten::linear(x, w, b)` — w: [out, in] (PyTorch's untransposed layout).
+fn linear(inputs: &[Tensor], _attrs: &Attrs) -> Result<Tensor> {
+    let (x, w, b) = (&inputs[0], &inputs[1], &inputs[2]);
+    let (n, fin) = match x.shape[..] {
+        [n, f] => (n, f),
+        _ => bail!("linear expects 2-D input, got {:?}", x.shape),
+    };
+    let (fout, fin2) = match w.shape[..] {
+        [o, i] => (o, i),
+        _ => bail!("linear weight must be 2-D"),
+    };
+    if fin != fin2 {
+        bail!("linear shape mismatch: x {fin} vs w {fin2}");
+    }
+    let xv = x.to_f32()?;
+    let wv = w.to_f32()?;
+    let bv = b.to_f32()?;
+    let mut out = vec![0f32; n * fout];
+    for ni in 0..n {
+        for o in 0..fout {
+            let mut acc = bv[o];
+            for i in 0..fin {
+                acc += xv[ni * fin + i] * wv[o * fin + i];
+            }
+            out[ni * fout + o] = acc;
+        }
+    }
+    Ok(Tensor::from_f32(out, &[n, fout]))
+}
+
+fn relu(inputs: &[Tensor], _attrs: &Attrs) -> Result<Tensor> {
+    let v: Vec<f32> = inputs[0].to_f32()?.iter().map(|x| x.max(0.0)).collect();
+    Ok(Tensor::from_f32(v, &inputs[0].shape))
+}
+
+fn add(inputs: &[Tensor], _attrs: &Attrs) -> Result<Tensor> {
+    let a = inputs[0].to_f32()?;
+    let b = inputs[1].to_f32()?;
+    if a.len() != b.len() {
+        bail!("add: length mismatch");
+    }
+    let v: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+    Ok(Tensor::from_f32(v, &inputs[0].shape))
+}
+
+/// Inference batch-norm folded to scale+shift: `y = x * gamma_c + beta_c`.
+fn batch_norm(inputs: &[Tensor], _attrs: &Attrs) -> Result<Tensor> {
+    let (x, gamma, beta) = (&inputs[0], &inputs[1], &inputs[2]);
+    let (n, c, h, w) = t4(x)?;
+    let xv = x.to_f32()?;
+    let gv = gamma.to_f32()?;
+    let bv = beta.to_f32()?;
+    let mut out = vec![0f32; xv.len()];
+    for ni in 0..n {
+        for ci in 0..c {
+            for p in 0..h * w {
+                let i = (ni * c + ci) * h * w + p;
+                out[i] = xv[i] * gv[ci] + bv[ci];
+            }
+        }
+    }
+    Ok(Tensor::from_f32(out, &x.shape))
+}
+
+fn pool2d(inputs: &[Tensor], attrs: &Attrs, is_max: bool) -> Result<Tensor> {
+    let x = &inputs[0];
+    let (n, c, h, w) = t4(x)?;
+    let k = attrs.int_or("k", 2) as usize;
+    let stride = attrs.int_or("stride", k as i64) as usize;
+    let pad = attrs.int_or("pad", 0) as usize;
+    let count_include_pad = attrs.int_or("count_include_pad", 1) != 0;
+    // A MaxPool carrying min_value=0 has absorbed a ReLU (§III-A elision).
+    let min_value = attrs.float_or("min_value", f64::NEG_INFINITY) as f32;
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
+    let xv = x.to_f32()?;
+    let mut out = vec![0f32; n * c * oh * ow];
+    for ni in 0..n {
+        for ci in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = if is_max { min_value } else { 0.0 };
+                    let mut cnt = 0usize;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let iy = oy * stride + ky;
+                            let ix = ox * stride + kx;
+                            if iy < pad || ix < pad || iy - pad >= h || ix - pad >= w {
+                                continue;
+                            }
+                            let v = xv[((ni * c + ci) * h + iy - pad) * w + ix - pad];
+                            if is_max {
+                                acc = acc.max(v);
+                            } else {
+                                acc += v;
+                            }
+                            cnt += 1;
+                        }
+                    }
+                    out[((ni * c + ci) * oh + oy) * ow + ox] = if is_max {
+                        acc
+                    } else if count_include_pad {
+                        acc / (k * k) as f32
+                    } else {
+                        acc / cnt.max(1) as f32
+                    };
+                }
+            }
+        }
+    }
+    Ok(Tensor::from_f32(out, &[n, c, oh, ow]))
+}
+
+fn global_avg_pool(inputs: &[Tensor], _attrs: &Attrs) -> Result<Tensor> {
+    let x = &inputs[0];
+    let (n, c, h, w) = t4(x)?;
+    let xv = x.to_f32()?;
+    let mut out = vec![0f32; n * c];
+    for ni in 0..n {
+        for ci in 0..c {
+            let s: f32 = (0..h * w).map(|p| xv[(ni * c + ci) * h * w + p]).sum();
+            out[ni * c + ci] = s / (h * w) as f32;
+        }
+    }
+    Ok(Tensor::from_f32(out, &[n, c, 1, 1]))
+}
+
+fn cat_channels(inputs: &[Tensor], _attrs: &Attrs) -> Result<Tensor> {
+    let (n, _, h, w) = t4(&inputs[0])?;
+    let ctot: usize = inputs.iter().map(|t| t.shape[1]).sum();
+    let mut out = Vec::with_capacity(n * ctot * h * w);
+    for ni in 0..n {
+        for t in inputs {
+            let (tn, tc, th, tw) = t4(t)?;
+            if (tn, th, tw) != (n, h, w) {
+                bail!("cat: incompatible shapes");
+            }
+            let v = t.to_f32()?;
+            out.extend_from_slice(&v[ni * tc * h * w..(ni + 1) * tc * h * w]);
+        }
+    }
+    Ok(Tensor::from_f32(out, &[n, ctot, h, w]))
+}
+
+fn channel_shuffle(inputs: &[Tensor], attrs: &Attrs) -> Result<Tensor> {
+    let x = &inputs[0];
+    let (n, c, h, w) = t4(x)?;
+    let g = attrs.int_or("groups", 1) as usize;
+    if c % g != 0 {
+        bail!("channel_shuffle: {c} channels not divisible by {g} groups");
+    }
+    let xv = x.to_f32()?;
+    let mut out = vec![0f32; xv.len()];
+    let cpg = c / g;
+    for ni in 0..n {
+        for ci in 0..c {
+            // [g, c/g] -> transpose -> [c/g, g]
+            let (gi, cj) = (ci / cpg, ci % cpg);
+            let dst = cj * g + gi;
+            let src_off = (ni * c + ci) * h * w;
+            let dst_off = (ni * c + dst) * h * w;
+            out[dst_off..dst_off + h * w].copy_from_slice(&xv[src_off..src_off + h * w]);
+        }
+    }
+    Ok(Tensor::from_f32(out, &x.shape))
+}
+
+fn flatten(inputs: &[Tensor], _attrs: &Attrs) -> Result<Tensor> {
+    let x = &inputs[0];
+    let n = x.shape[0];
+    x.reshape(&[n, x.numel() / n])
+}
+
+fn softmax(inputs: &[Tensor], _attrs: &Attrs) -> Result<Tensor> {
+    let x = &inputs[0];
+    let (n, k) = match x.shape[..] {
+        [n, k] => (n, k),
+        _ => bail!("softmax expects 2-D"),
+    };
+    let xv = x.to_f32()?;
+    let mut out = vec![0f32; xv.len()];
+    for ni in 0..n {
+        let row = &xv[ni * k..(ni + 1) * k];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = row.iter().map(|v| (v - m).exp()).collect();
+        let s: f32 = exps.iter().sum();
+        for (j, e) in exps.iter().enumerate() {
+            out[ni * k + j] = e / s;
+        }
+    }
+    Ok(Tensor::from_f32(out, &x.shape))
+}
+
+/// Mean softmax cross-entropy with integer labels.
+fn cross_entropy(inputs: &[Tensor], _attrs: &Attrs) -> Result<Tensor> {
+    let (logits, labels) = (&inputs[0], &inputs[1]);
+    let (n, k) = match logits.shape[..] {
+        [n, k] => (n, k),
+        _ => bail!("cross_entropy expects 2-D logits"),
+    };
+    let xv = logits.to_f32()?;
+    let yv = labels.to_i32()?;
+    let mut loss = 0f32;
+    for ni in 0..n {
+        let row = &xv[ni * k..(ni + 1) * k];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let logsum = row.iter().map(|v| (v - m).exp()).sum::<f32>().ln() + m;
+        loss += logsum - row[yv[ni] as usize];
+    }
+    Ok(Tensor::from_f32(vec![loss / n as f32], &[1]))
+}
+
+fn reduce(inputs: &[Tensor], _attrs: &Attrs, f: fn(&[f32]) -> f32) -> Result<Tensor> {
+    let v = inputs[0].to_f32()?;
+    Ok(Tensor::from_f32(vec![f(&v)], &[1]))
+}
+
+fn binary(inputs: &[Tensor], f: fn(f32, f32) -> f32) -> Result<Tensor> {
+    let a = inputs[0].to_f32()?;
+    let b = inputs[1].to_f32()?;
+    if a.len() != b.len() {
+        bail!("binary op: length mismatch");
+    }
+    let v: Vec<f32> = a.iter().zip(&b).map(|(x, y)| f(*x, *y)).collect();
+    Ok(Tensor::from_f32(v, &inputs[0].shape))
+}
+
+fn k(f: fn(&[Tensor], &Attrs) -> Result<Tensor>) -> Kernel {
+    Arc::new(f)
+}
+
+/// Install every stock CPU kernel (what the default pip package ships).
+pub fn register_cpu_kernels(reg: &mut OperatorRegistry) {
+    reg.register("aten::conv2d", DeviceType::Cpu, k(conv2d));
+    reg.register("aten::linear", DeviceType::Cpu, k(linear));
+    reg.register("aten::batch_norm", DeviceType::Cpu, k(batch_norm));
+    reg.register("aten::max_pool2d", DeviceType::Cpu, k(|i, a| pool2d(i, a, true)));
+    reg.register("aten::avg_pool2d", DeviceType::Cpu, k(|i, a| pool2d(i, a, false)));
+    reg.register("aten::adaptive_avg_pool2d", DeviceType::Cpu, k(global_avg_pool));
+    reg.register("aten::cat", DeviceType::Cpu, k(cat_channels));
+    reg.register("aten::channel_shuffle", DeviceType::Cpu, k(channel_shuffle));
+    reg.register("aten::flatten", DeviceType::Cpu, k(flatten));
+    reg.register("aten::softmax", DeviceType::Cpu, k(softmax));
+    reg.register("aten::dropout", DeviceType::Cpu, k(|i, _| Ok(i[0].clone())));
+    reg.register("aten::cross_entropy", DeviceType::Cpu, k(cross_entropy));
+    // reductions / scalar reads (§V-B's minimal kernel set)
+    reg.register("aten::sum", DeviceType::Cpu, k(|i, a| reduce(i, a, |v| v.iter().sum())));
+    reg.register("aten::mean", DeviceType::Cpu, k(|i, a| {
+        reduce(i, a, |v| v.iter().sum::<f32>() / v.len().max(1) as f32)
+    }));
+    reg.register("aten::min", DeviceType::Cpu, k(|i, a| {
+        reduce(i, a, |v| v.iter().cloned().fold(f32::INFINITY, f32::min))
+    }));
+    reg.register("aten::max", DeviceType::Cpu, k(|i, a| {
+        reduce(i, a, |v| v.iter().cloned().fold(f32::NEG_INFINITY, f32::max))
+    }));
+    // elementwise binary + logical
+    reg.register("aten::mul", DeviceType::Cpu, k(|i, _| binary(i, |a, b| a * b)));
+    reg.register("aten::sub", DeviceType::Cpu, k(|i, _| binary(i, |a, b| a - b)));
+    reg.register("aten::div", DeviceType::Cpu, k(|i, _| binary(i, |a, b| a / b)));
+    reg.register("aten::lt", DeviceType::Cpu, k(|i, _| binary(i, |a, b| (a < b) as i32 as f32)));
+    reg.register("aten::le", DeviceType::Cpu, k(|i, _| binary(i, |a, b| (a <= b) as i32 as f32)));
+    reg.register("aten::gt", DeviceType::Cpu, k(|i, _| binary(i, |a, b| (a > b) as i32 as f32)));
+    reg.register("aten::ge", DeviceType::Cpu, k(|i, _| binary(i, |a, b| (a >= b) as i32 as f32)));
+    reg.register("aten::__and__", DeviceType::Cpu, k(|i, _| {
+        binary(i, |a, b| ((a != 0.0) && (b != 0.0)) as i32 as f32)
+    }));
+    reg.register("aten::__or__", DeviceType::Cpu, k(|i, _| {
+        binary(i, |a, b| ((a != 0.0) || (b != 0.0)) as i32 as f32)
+    }));
+    // stub-routed ops (Listing 5 path)
+    reg.register_stub("aten::relu", DeviceType::Cpu, k(relu)).unwrap();
+    reg.register_stub("aten::add", DeviceType::Cpu, k(add)).unwrap();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg() -> OperatorRegistry {
+        let mut r = OperatorRegistry::new();
+        register_cpu_kernels(&mut r);
+        r
+    }
+
+    fn dispatch(r: &OperatorRegistry, op: &str, inputs: &[Tensor], attrs: &Attrs) -> Tensor {
+        r.dispatch(op, DeviceType::Cpu, inputs, attrs).unwrap()
+    }
+
+    #[test]
+    fn conv2d_identity_kernel() {
+        let r = reg();
+        // 1x1 conv with identity weight = passthrough
+        let x = Tensor::from_f32((0..16).map(|i| i as f32).collect(), &[1, 1, 4, 4]);
+        let w = Tensor::from_f32(vec![1.0], &[1, 1, 1, 1]);
+        let b = Tensor::zeros(&[1]);
+        let y = dispatch(&r, "aten::conv2d", &[x.clone(), w, b], &Attrs::new());
+        assert_eq!(y.to_f32().unwrap(), x.to_f32().unwrap());
+    }
+
+    #[test]
+    fn conv2d_3x3_sum_kernel() {
+        let r = reg();
+        let x = Tensor::from_f32(vec![1.0; 9], &[1, 1, 3, 3]);
+        let w = Tensor::from_f32(vec![1.0; 9], &[1, 1, 3, 3]);
+        let b = Tensor::zeros(&[1]);
+        let a = Attrs::new().with_int("pad", 1);
+        let y = dispatch(&r, "aten::conv2d", &[x, w, b], &a);
+        let v = y.to_f32().unwrap();
+        assert_eq!(y.shape, vec![1, 1, 3, 3]);
+        assert_eq!(v[4], 9.0); // center sees all 9 ones
+        assert_eq!(v[0], 4.0); // corner sees 4
+    }
+
+    #[test]
+    fn depthwise_conv_groups() {
+        let r = reg();
+        // 2 channels, groups=2, each 1x1 weight scales its channel
+        let x = Tensor::from_f32(vec![1.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0, 2.0], &[1, 2, 2, 2]);
+        let w = Tensor::from_f32(vec![10.0, 100.0], &[2, 1, 1, 1]);
+        let b = Tensor::zeros(&[2]);
+        let a = Attrs::new().with_int("groups", 2);
+        let y = dispatch(&r, "aten::conv2d", &[x, w, b], &a).to_f32().unwrap();
+        assert_eq!(y, vec![10.0, 10.0, 10.0, 10.0, 200.0, 200.0, 200.0, 200.0]);
+    }
+
+    #[test]
+    fn linear_matches_manual() {
+        let r = reg();
+        let x = Tensor::from_f32(vec![1.0, 2.0], &[1, 2]);
+        let w = Tensor::from_f32(vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0], &[3, 2]);
+        let b = Tensor::from_f32(vec![0.0, 0.0, 10.0], &[3]);
+        let y = dispatch(&r, "aten::linear", &[x, w, b], &Attrs::new()).to_f32().unwrap();
+        assert_eq!(y, vec![1.0, 2.0, 13.0]);
+    }
+
+    #[test]
+    fn maxpool_with_min_value_absorbs_relu() {
+        let r = reg();
+        let x = Tensor::from_f32(vec![-5.0, -3.0, -2.0, -1.0], &[1, 1, 2, 2]);
+        // plain maxpool: max = -1
+        let y = dispatch(&r, "aten::max_pool2d", &[x.clone()], &Attrs::new().with_int("k", 2));
+        assert_eq!(y.to_f32().unwrap(), vec![-1.0]);
+        // min_value=0 (ReLU absorbed): max(0, ...) = 0
+        let a = Attrs::new().with_int("k", 2).with_float("min_value", 0.0);
+        let y = dispatch(&r, "aten::max_pool2d", &[x], &a);
+        assert_eq!(y.to_f32().unwrap(), vec![0.0]);
+    }
+
+    #[test]
+    fn avgpool_count_include_pad() {
+        let r = reg();
+        let x = Tensor::from_f32(vec![4.0], &[1, 1, 1, 1]);
+        let a = Attrs::new().with_int("k", 2).with_int("pad", 1).with_int("stride", 1);
+        // window covers 1 real + 3 pad: include -> 4/4 = 1; exclude -> 4/1 = 4
+        let inc = dispatch(&r, "aten::avg_pool2d", &[x.clone()], &a).to_f32().unwrap();
+        assert_eq!(inc[0], 1.0);
+        let a = a.with_int("count_include_pad", 0);
+        let exc = dispatch(&r, "aten::avg_pool2d", &[x], &a).to_f32().unwrap();
+        assert_eq!(exc[0], 4.0);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let r = reg();
+        let x = Tensor::from_f32(vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0], &[2, 3]);
+        let y = dispatch(&r, "aten::softmax", &[x], &Attrs::new()).to_f32().unwrap();
+        let s1: f32 = y[..3].iter().sum();
+        let s2: f32 = y[3..].iter().sum();
+        assert!((s1 - 1.0).abs() < 1e-6 && (s2 - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cross_entropy_uniform_is_log_k() {
+        let r = reg();
+        let logits = Tensor::zeros(&[4, 10]);
+        let labels = Tensor::from_i32(vec![0, 3, 7, 9], &[4]);
+        let l = dispatch(&r, "aten::cross_entropy", &[logits, labels], &Attrs::new());
+        assert!((l.item().unwrap() - 10f32.ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn channel_shuffle_roundtrip() {
+        let r = reg();
+        let x = Tensor::from_f32((0..8).map(|i| i as f32).collect(), &[1, 4, 1, 2]);
+        let a = Attrs::new().with_int("groups", 2);
+        let y = dispatch(&r, "aten::channel_shuffle", &[x.clone()], &a);
+        let z = dispatch(&r, "aten::channel_shuffle", &[y], &a);
+        // shuffle with g=2 over 4 channels is an involution
+        assert_eq!(z.to_f32().unwrap(), x.to_f32().unwrap());
+    }
+
+    #[test]
+    fn cat_and_global_pool() {
+        let r = reg();
+        let a = Tensor::from_f32(vec![1.0; 4], &[1, 1, 2, 2]);
+        let b = Tensor::from_f32(vec![3.0; 4], &[1, 1, 2, 2]);
+        let y = dispatch(&r, "aten::cat", &[a, b], &Attrs::new());
+        assert_eq!(y.shape, vec![1, 2, 2, 2]);
+        let g = dispatch(&r, "aten::adaptive_avg_pool2d", &[y], &Attrs::new());
+        assert_eq!(g.to_f32().unwrap(), vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn logical_and_reduction_ops() {
+        let r = reg();
+        let a = Tensor::from_f32(vec![1.0, 0.0, 2.0], &[3]);
+        let b = Tensor::from_f32(vec![1.0, 1.0, 0.0], &[3]);
+        let y = dispatch(&r, "aten::__and__", &[a.clone(), b], &Attrs::new());
+        assert_eq!(y.to_f32().unwrap(), vec![1.0, 0.0, 0.0]);
+        let s = dispatch(&r, "aten::sum", &[a.clone()], &Attrs::new());
+        assert_eq!(s.item().unwrap(), 3.0);
+        let m = dispatch(&r, "aten::max", &[a], &Attrs::new());
+        assert_eq!(m.item().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn relu_add_via_stub_path() {
+        let r = reg();
+        let x = Tensor::from_f32(vec![-1.0, 2.0], &[2]);
+        let y = dispatch(&r, "aten::relu", &[x.clone()], &Attrs::new());
+        assert_eq!(y.to_f32().unwrap(), vec![0.0, 2.0]);
+        let z = dispatch(&r, "aten::add", &[x.clone(), x], &Attrs::new());
+        assert_eq!(z.to_f32().unwrap(), vec![-2.0, 4.0]);
+    }
+}

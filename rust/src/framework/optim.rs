@@ -1,0 +1,108 @@
+//! Host-side optimizers — the framework's "available learning methods"
+//! (paper §V-A) that external middleware can leverage instead of
+//! reimplementing.  Seen from the framework's side these are just
+//! parameter updates over its own tensors.
+
+use anyhow::Result;
+
+use super::tensor::Tensor;
+
+/// Plain SGD.
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Sgd {
+    pub fn new(lr: f32) -> Self {
+        Sgd { lr }
+    }
+
+    /// Apply one step: `p -= lr * g` for each (param, grad) pair.
+    pub fn step(&self, params: &[(String, Tensor)], grads: &[(String, Tensor)]) -> Result<()> {
+        for (name, p) in params {
+            if let Some((_, g)) = grads.iter().find(|(gn, _)| gn == name) {
+                p.sub_scaled_(g, self.lr)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// SGD with momentum (kept host-side, like the paper's design where
+/// "the gradient upgrade is processed on the host system", §V-A).
+pub struct SgdMomentum {
+    pub lr: f32,
+    pub momentum: f32,
+    velocity: std::collections::HashMap<String, Vec<f32>>,
+}
+
+impl SgdMomentum {
+    pub fn new(lr: f32, momentum: f32) -> Self {
+        SgdMomentum { lr, momentum, velocity: Default::default() }
+    }
+
+    pub fn step(&mut self, params: &[(String, Tensor)], grads: &[(String, Tensor)]) -> Result<()> {
+        for (name, p) in params {
+            let Some((_, g)) = grads.iter().find(|(gn, _)| gn == name) else {
+                continue;
+            };
+            let gv = g.to_f32()?;
+            let v = self
+                .velocity
+                .entry(name.clone())
+                .or_insert_with(|| vec![0.0; gv.len()]);
+            for (vi, gi) in v.iter_mut().zip(&gv) {
+                *vi = self.momentum * *vi + gi;
+            }
+            let mut pv = p.to_f32()?;
+            for (pi, vi) in pv.iter_mut().zip(v.iter()) {
+                *pi -= self.lr * *vi;
+            }
+            p.set_f32(pv)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn named(t: Tensor) -> Vec<(String, Tensor)> {
+        vec![("w".into(), t)]
+    }
+
+    #[test]
+    fn sgd_step() {
+        let p = Tensor::from_f32(vec![1.0], &[1]);
+        let g = Tensor::from_f32(vec![2.0], &[1]);
+        Sgd::new(0.5).step(&named(p.clone()), &named(g)).unwrap();
+        assert_eq!(p.item().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn sgd_skips_missing_grads() {
+        let p = Tensor::from_f32(vec![1.0], &[1]);
+        Sgd::new(0.5).step(&named(p.clone()), &[]).unwrap();
+        assert_eq!(p.item().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let p = Tensor::from_f32(vec![0.0], &[1]);
+        let g = Tensor::from_f32(vec![1.0], &[1]);
+        let mut opt = SgdMomentum::new(1.0, 0.5);
+        opt.step(&named(p.clone()), &named(g.clone())).unwrap(); // v=1, p=-1
+        opt.step(&named(p.clone()), &named(g)).unwrap(); // v=1.5, p=-2.5
+        assert!((p.item().unwrap() + 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sgd_bumps_param_version() {
+        let p = Tensor::from_f32(vec![1.0], &[1]);
+        let v0 = p.version();
+        let g = Tensor::from_f32(vec![1.0], &[1]);
+        Sgd::new(0.1).step(&named(p.clone()), &named(g)).unwrap();
+        assert!(p.version() > v0, "optimizer must bump the version counter");
+    }
+}

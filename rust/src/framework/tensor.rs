@@ -1,0 +1,282 @@
+//! Framework tensors.
+//!
+//! A tensor owns (a handle to) storage that lives either on the host or on
+//! a device registered through the allocator interface.  Storage carries a
+//! **version counter**, bumped on every mutation — the same mechanism
+//! PyTorch uses for autograd bookkeeping, and what lets an external
+//! parameter cache detect staleness without hooking framework internals
+//! (paper §V-A: "As long as the model parameters do not get modified ...
+//! this context is kept alive").
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::device::Device;
+
+/// Element storage: host vectors, or an opaque device allocation handle
+/// produced by the device's registered allocator.
+#[derive(Debug)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    /// Device-resident data: allocator handle + byte size.
+    DeviceOpaque { handle: u64, bytes: usize },
+}
+
+#[derive(Debug)]
+struct Inner {
+    storage: Mutex<Storage>,
+    version: AtomicU64,
+}
+
+/// A framework tensor (shape + device + shared storage).
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    inner: Arc<Inner>,
+    pub shape: Vec<usize>,
+    pub device: Device,
+}
+
+impl Tensor {
+    fn wrap(storage: Storage, shape: Vec<usize>, device: Device) -> Self {
+        Tensor {
+            inner: Arc::new(Inner {
+                storage: Mutex::new(storage),
+                version: AtomicU64::new(0),
+            }),
+            shape,
+            device,
+        }
+    }
+
+    /// Host f32 tensor from data.
+    pub fn from_f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::wrap(Storage::F32(data), shape.to_vec(), Device::cpu())
+    }
+
+    /// Host i32 tensor from data.
+    pub fn from_i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::wrap(Storage::I32(data), shape.to_vec(), Device::cpu())
+    }
+
+    /// Host zeros.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor::from_f32(vec![0.0; shape.iter().product()], shape)
+    }
+
+    /// Deterministic pseudo-random host tensor (xorshift; keeps the
+    /// framework dependency-free).
+    pub fn randn(shape: &[usize], seed: u64, scale: f32) -> Self {
+        let n: usize = shape.iter().product();
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).max(1);
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            // xorshift64*
+            s ^= s >> 12;
+            s ^= s << 25;
+            s ^= s >> 27;
+            let u = s.wrapping_mul(0x2545F4914F6CDD1D);
+            // two uniforms -> Box-Muller-ish via sum of 4 (Irwin-Hall approx)
+            let a = ((u >> 11) as f64 / (1u64 << 53) as f64) as f32;
+            let b = ((u << 13 >> 11) as f64 / (1u64 << 53) as f64) as f32;
+            data.push((a + b - 1.0) * 1.732 * 2.0 * scale);
+        }
+        Tensor::from_f32(data, shape)
+    }
+
+    /// Device-resident tensor from an allocator handle.
+    pub fn from_device_handle(handle: u64, bytes: usize, shape: &[usize], device: Device) -> Self {
+        Tensor::wrap(Storage::DeviceOpaque { handle, bytes }, shape.to_vec(), device)
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        let s = self.inner.storage.lock().unwrap();
+        match &*s {
+            Storage::F32(v) => v.len() * 4,
+            Storage::I32(v) => v.len() * 4,
+            Storage::DeviceOpaque { bytes, .. } => *bytes,
+        }
+    }
+
+    /// Mutation counter (autograd/version-counter analog).
+    pub fn version(&self) -> u64 {
+        self.inner.version.load(Ordering::Acquire)
+    }
+
+    fn bump(&self) {
+        self.inner.version.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Storage aliasing check (two tensors sharing one buffer).
+    pub fn same_storage(&self, other: &Tensor) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner)
+    }
+
+    /// Read host f32 data (errors on device tensors — printing a device
+    /// tensor requires the device backend's copy kernels, §V-B).
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        let s = self.inner.storage.lock().unwrap();
+        match &*s {
+            Storage::F32(v) => Ok(v.clone()),
+            Storage::I32(_) => bail!("dtype mismatch: tensor is i32"),
+            Storage::DeviceOpaque { .. } => {
+                bail!("tensor on {} — copy to host first", self.device)
+            }
+        }
+    }
+
+    pub fn to_i32(&self) -> Result<Vec<i32>> {
+        let s = self.inner.storage.lock().unwrap();
+        match &*s {
+            Storage::I32(v) => Ok(v.clone()),
+            _ => bail!("dtype mismatch: tensor is not i32"),
+        }
+    }
+
+    /// Scalar read (`aten::item` analog).
+    pub fn item(&self) -> Result<f32> {
+        let v = self.to_f32()?;
+        if v.len() != 1 {
+            bail!("item() on tensor with {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+
+    /// Device allocation handle, if device-resident.
+    pub fn device_handle(&self) -> Option<u64> {
+        let s = self.inner.storage.lock().unwrap();
+        match &*s {
+            Storage::DeviceOpaque { handle, .. } => Some(*handle),
+            _ => None,
+        }
+    }
+
+    /// Overwrite host f32 contents in place (bumps version).
+    pub fn set_f32(&self, data: Vec<f32>) -> Result<()> {
+        let mut s = self.inner.storage.lock().unwrap();
+        match &mut *s {
+            Storage::F32(v) => {
+                if v.len() != data.len() {
+                    bail!("set_f32 length mismatch {} vs {}", v.len(), data.len());
+                }
+                *v = data;
+            }
+            _ => bail!("set_f32 on non-f32/host tensor"),
+        }
+        drop(s);
+        self.bump();
+        Ok(())
+    }
+
+    /// In-place `self -= lr * grad` (host; the optimizer hot path).
+    pub fn sub_scaled_(&self, grad: &Tensor, lr: f32) -> Result<()> {
+        let g = grad.to_f32()?;
+        let mut s = self.inner.storage.lock().unwrap();
+        match &mut *s {
+            Storage::F32(v) => {
+                if v.len() != g.len() {
+                    bail!("grad shape mismatch");
+                }
+                for (p, gi) in v.iter_mut().zip(&g) {
+                    *p -= lr * gi;
+                }
+            }
+            _ => bail!("sub_scaled_ on non-f32/host tensor"),
+        }
+        drop(s);
+        self.bump();
+        Ok(())
+    }
+
+    /// In-place fill (`aten::fill_`).
+    pub fn fill_(&self, value: f32) -> Result<()> {
+        let mut s = self.inner.storage.lock().unwrap();
+        match &mut *s {
+            Storage::F32(v) => v.iter_mut().for_each(|x| *x = value),
+            _ => bail!("fill_ on non-f32/host tensor"),
+        }
+        drop(s);
+        self.bump();
+        Ok(())
+    }
+
+    /// Reshape (same element count; returns a view sharing storage).
+    pub fn reshape(&self, shape: &[usize]) -> Result<Tensor> {
+        if shape.iter().product::<usize>() != self.numel() {
+            return Err(anyhow!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.shape,
+                shape
+            ));
+        }
+        let mut t = self.clone();
+        t.shape = shape.to_vec();
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_item() {
+        let t = Tensor::from_f32(vec![42.0], &[1]);
+        assert_eq!(t.item().unwrap(), 42.0);
+        assert_eq!(t.numel(), 1);
+    }
+
+    #[test]
+    fn version_bumps_on_mutation_only() {
+        let t = Tensor::from_f32(vec![1.0, 2.0], &[2]);
+        let v0 = t.version();
+        let _ = t.to_f32().unwrap();
+        assert_eq!(t.version(), v0);
+        t.fill_(0.0).unwrap();
+        assert_eq!(t.version(), v0 + 1);
+        t.sub_scaled_(&Tensor::from_f32(vec![1.0, 1.0], &[2]), 0.5).unwrap();
+        assert_eq!(t.version(), v0 + 2);
+    }
+
+    #[test]
+    fn sgd_update_math() {
+        let p = Tensor::from_f32(vec![1.0, 2.0], &[2]);
+        let g = Tensor::from_f32(vec![10.0, 20.0], &[2]);
+        p.sub_scaled_(&g, 0.1).unwrap();
+        let v = p.to_f32().unwrap();
+        assert!((v[0] - 0.0).abs() < 1e-6 && (v[1] - 0.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reshape_shares_storage() {
+        let t = Tensor::from_f32(vec![0.0; 6], &[2, 3]);
+        let r = t.reshape(&[3, 2]).unwrap();
+        assert!(t.same_storage(&r));
+        assert!(t.reshape(&[4]).is_err());
+    }
+
+    #[test]
+    fn device_tensor_refuses_host_read() {
+        use super::super::device::{Device, DeviceType};
+        let t = Tensor::from_device_handle(7, 64, &[16], Device::new(DeviceType::Hip, 0));
+        assert!(t.to_f32().is_err());
+        assert_eq!(t.device_handle(), Some(7));
+    }
+
+    #[test]
+    fn randn_is_deterministic() {
+        let a = Tensor::randn(&[8], 1, 1.0).to_f32().unwrap();
+        let b = Tensor::randn(&[8], 1, 1.0).to_f32().unwrap();
+        let c = Tensor::randn(&[8], 2, 1.0).to_f32().unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,160 @@
+//! Graph extraction: framework module tree → SOL IR.
+//!
+//! The paper's `sol.optimize(...)` "extracts the computation graph from
+//! the framework and translates it into SOL's own graph intermediate
+//! representation".  Torchlet's module tree is public and structural
+//! (FX-style), so extraction is a fold over it; parameters are *not*
+//! copied — the returned mapping ties IR nodes back to the framework
+//! tensors that stay "managed by framework" (Listing 2).
+
+use anyhow::{bail, Result};
+
+use crate::framework::{Module, Tensor};
+use crate::ir::{Graph, NodeId};
+
+/// IR node → framework parameter tensors (weights stay in the framework).
+pub type ParamBinding = Vec<(NodeId, Vec<(String, Tensor)>)>;
+
+/// Extract `module` into a SOL graph, given the input image shape
+/// `[n, c, h, w]` (or `[n, f]` for MLPs).
+pub fn extract_graph(
+    module: &Module,
+    input_shape: &[usize],
+    name: &str,
+) -> Result<(Graph, ParamBinding)> {
+    let mut g = Graph::new(name);
+    let input = match *input_shape {
+        [n, c, h, w] => g.input_image(n, c, h, w),
+        [n, f] => g.input_features(n, f),
+        _ => bail!("unsupported input rank {:?}", input_shape),
+    };
+    let mut binding = ParamBinding::new();
+    let out = walk(module, &mut g, input, &mut binding)?;
+    let _ = out;
+    Ok((g, binding))
+}
+
+fn walk(
+    m: &Module,
+    g: &mut Graph,
+    x: NodeId,
+    binding: &mut ParamBinding,
+) -> Result<NodeId> {
+    Ok(match m {
+        Module::Conv2d { weight, bias, stride, pad, groups } => {
+            let (cout, k) = (weight.shape[0], weight.shape[2]);
+            let id = g.conv(x, cout, k, *stride, *pad, *groups);
+            binding.push((
+                id,
+                vec![("weight".into(), weight.clone()), ("bias".into(), bias.clone())],
+            ));
+            id
+        }
+        Module::Linear { weight, bias } => {
+            let id = g.linear(x, weight.shape[0]);
+            binding.push((
+                id,
+                vec![("weight".into(), weight.clone()), ("bias".into(), bias.clone())],
+            ));
+            id
+        }
+        Module::ReLU => g.relu(x),
+        Module::BatchNorm2d { gamma, beta } => {
+            let id = g.batch_norm(x);
+            binding.push((
+                id,
+                vec![("gamma".into(), gamma.clone()), ("beta".into(), beta.clone())],
+            ));
+            id
+        }
+        Module::MaxPool2d { k, stride, pad } => g.max_pool(x, *k, *stride, *pad),
+        Module::AvgPool2d { k, stride, pad } => g.avg_pool(x, *k, *stride, *pad),
+        Module::GlobalAvgPool => g.global_avg_pool(x),
+        Module::Dropout => g.dropout(x),
+        Module::Flatten => g.flatten(x),
+        Module::Softmax => g.softmax(x),
+        Module::Sequential(ms) => {
+            let mut cur = x;
+            for m in ms {
+                cur = walk(m, g, cur, binding)?;
+            }
+            cur
+        }
+        Module::Residual(f) => {
+            let fx = walk(f, g, x, binding)?;
+            g.add(fx, x)
+        }
+        Module::DenseBlock(layers) => {
+            let mut feats = vec![x];
+            for l in layers {
+                let cat = if feats.len() == 1 { feats[0] } else { g.concat(&feats) };
+                let out = walk(l, g, cat, binding)?;
+                feats.push(out);
+            }
+            g.concat(&feats)
+        }
+        Module::ChannelShuffle { groups } => g.channel_shuffle(x, *groups),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Op;
+
+    fn mini() -> Module {
+        Module::Sequential(vec![
+            Module::conv2d(3, 8, 3, 1, 1, 1),
+            Module::ReLU,
+            Module::MaxPool2d { k: 2, stride: 2, pad: 0 },
+            Module::Flatten,
+            Module::linear(8 * 16 * 16, 10, 2),
+        ])
+    }
+
+    #[test]
+    fn extraction_matches_structure() {
+        let (g, binding) = extract_graph(&mini(), &[1, 3, 32, 32], "mini").unwrap();
+        let ops: Vec<&str> = g.nodes.iter().map(|n| n.op.name()).collect();
+        assert_eq!(ops, vec!["Input", "Conv2d", "ReLU", "MaxPool", "Flatten", "Linear"]);
+        // two parameterized layers bound
+        assert_eq!(binding.len(), 2);
+        assert_eq!(g.node(g.output()).meta.features_extent(), 10);
+    }
+
+    #[test]
+    fn params_stay_in_framework() {
+        let m = mini();
+        let (_, binding) = extract_graph(&m, &[1, 3, 32, 32], "mini").unwrap();
+        // binding tensors alias the module's tensors (no copies)
+        let module_params = m.parameters();
+        let bound = &binding[0].1[0].1;
+        assert!(module_params.iter().any(|(_, t)| t.same_storage(bound)));
+    }
+
+    #[test]
+    fn residual_and_dense_extract() {
+        let m = Module::Sequential(vec![
+            Module::conv2d(3, 8, 3, 1, 1, 7),
+            Module::Residual(Box::new(Module::conv2d(8, 8, 3, 1, 1, 8))),
+            Module::DenseBlock(vec![Module::conv2d(8, 4, 3, 1, 1, 9)]),
+        ]);
+        let (g, _) = extract_graph(&m, &[1, 3, 16, 16], "rd").unwrap();
+        assert!(g.nodes.iter().any(|n| matches!(n.op, Op::Add)));
+        assert!(g.nodes.iter().any(|n| matches!(n.op, Op::Concat)));
+        // dense block output: 8 + 4 channels
+        assert_eq!(g.node(g.output()).meta.channels(), 12);
+    }
+
+    #[test]
+    fn mlp_input_shape() {
+        let m = Module::Sequential(vec![Module::linear(64, 32, 1), Module::ReLU]);
+        let (g, _) = extract_graph(&m, &[4, 64], "mlp").unwrap();
+        assert_eq!(g.node(g.output()).meta.shape(), vec![4, 32]);
+    }
+
+    #[test]
+    fn bad_input_rank_rejected() {
+        assert!(extract_graph(&Module::ReLU, &[1, 2, 3], "bad").is_err());
+    }
+}

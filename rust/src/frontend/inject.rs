@@ -1,0 +1,288 @@
+//! `SolModel` — the custom model SOL injects back into the framework
+//! (paper Listing 2):
+//!
+//! ```python
+//! class SolModel(torch.nn.Module):
+//!     def __init__(self):
+//!         self.param_0 = ...   # managed by framework
+//!     def forward(self, input):
+//!         return sol.call(...) # executed by SOL
+//! ```
+//!
+//! Parameters remain framework tensors (so the framework's own learning
+//! methods keep working, §V-A); `forward` bypasses the framework's per-op
+//! dispatcher entirely — one `sol.call` executes the whole optimized
+//! schedule.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::framework::dispatcher::Attrs;
+use crate::framework::{install_default, Module, OperatorRegistry, Tensor};
+use crate::ir::{Graph, NodeId, Op};
+use crate::passes::{optimize, OptimizeOptions, OptimizedModel};
+
+use super::extract::{extract_graph, ParamBinding};
+
+/// The injected model: optimized schedule + framework-owned parameters.
+pub struct SolModel {
+    /// Extracted (pre-optimization) graph — the numeric reference.
+    pub graph: Graph,
+    /// Framework parameter tensors, bound per IR node.
+    pub params: ParamBinding,
+    /// The compiled schedule for the target device.
+    pub optimized: OptimizedModel,
+    /// SOL's private kernel registry ("executed by SOL": these calls do
+    /// NOT go through the framework dispatcher).
+    kernels: OperatorRegistry,
+    calls: AtomicU64,
+}
+
+impl SolModel {
+    /// `sol.optimize(py_model, ...)` (paper Listing 1): extract, compile,
+    /// inject.
+    pub fn optimize(
+        module: &Module,
+        input_shape: &[usize],
+        name: &str,
+        opts: &OptimizeOptions,
+    ) -> Result<SolModel> {
+        let (graph, params) = extract_graph(module, input_shape, name)?;
+        let optimized = optimize(&graph, opts);
+        Ok(SolModel {
+            graph,
+            params,
+            optimized,
+            kernels: install_default(),
+            calls: AtomicU64::new(0),
+        })
+    }
+
+    /// `sol_model(input)` — one `sol.call`, executing the whole network.
+    ///
+    /// Numerics: the extracted DAG is evaluated with SOL's kernel set
+    /// (numerically identical to the framework baseline by construction —
+    /// integration tests assert this); structure: a single external call
+    /// instead of one dispatcher round-trip per layer.
+    pub fn forward(&self, input: &Tensor) -> Result<Tensor> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let pmap: HashMap<NodeId, &Vec<(String, Tensor)>> =
+            self.params.iter().map(|(id, ps)| (*id, ps)).collect();
+        let mut values: Vec<Option<Tensor>> = vec![None; self.graph.nodes.len()];
+        for n in &self.graph.nodes {
+            let val = match &n.op {
+                Op::Input => input.clone(),
+                op => {
+                    let ins: Vec<Tensor> = n
+                        .inputs
+                        .iter()
+                        .map(|&i| values[i].clone().ok_or_else(|| anyhow!("missing value")))
+                        .collect::<Result<_>>()?;
+                    self.eval(op, n.id, &ins, &pmap)?
+                }
+            };
+            values[n.id] = Some(val);
+        }
+        values[self.graph.output()]
+            .clone()
+            .ok_or_else(|| anyhow!("no output computed"))
+    }
+
+    fn eval(
+        &self,
+        op: &Op,
+        id: NodeId,
+        ins: &[Tensor],
+        pmap: &HashMap<NodeId, &Vec<(String, Tensor)>>,
+    ) -> Result<Tensor> {
+        let dev = crate::framework::device::DeviceType::Cpu;
+        let param = |k: &str| -> Result<Tensor> {
+            pmap.get(&id)
+                .and_then(|ps| ps.iter().find(|(n, _)| n == k))
+                .map(|(_, t)| t.clone())
+                .ok_or_else(|| anyhow!("node {id}: missing param {k}"))
+        };
+        let r = &self.kernels;
+        match op {
+            Op::Conv2d { stride, pad, groups, .. } => {
+                let a = Attrs::new()
+                    .with_int("stride", *stride as i64)
+                    .with_int("pad", *pad as i64)
+                    .with_int("groups", *groups as i64);
+                r.dispatch(
+                    "aten::conv2d",
+                    dev,
+                    &[ins[0].clone(), param("weight")?, param("bias")?],
+                    &a,
+                )
+            }
+            Op::Linear { .. } => r.dispatch(
+                "aten::linear",
+                dev,
+                &[ins[0].clone(), param("weight")?, param("bias")?],
+                &Attrs::new(),
+            ),
+            Op::ReLU => r.dispatch("aten::relu", dev, ins, &Attrs::new()),
+            Op::BatchNorm => r.dispatch(
+                "aten::batch_norm",
+                dev,
+                &[ins[0].clone(), param("gamma")?, param("beta")?],
+                &Attrs::new(),
+            ),
+            Op::MaxPool { k, stride, pad, min_value } => {
+                let mut a = Attrs::new()
+                    .with_int("k", *k as i64)
+                    .with_int("stride", *stride as i64)
+                    .with_int("pad", *pad as i64);
+                if *min_value == 0.0 {
+                    a = a.with_float("min_value", 0.0);
+                }
+                r.dispatch("aten::max_pool2d", dev, ins, &a)
+            }
+            Op::AvgPool { k, stride, pad, count_include_pad } => {
+                let a = Attrs::new()
+                    .with_int("k", *k as i64)
+                    .with_int("stride", *stride as i64)
+                    .with_int("pad", *pad as i64)
+                    .with_int("count_include_pad", *count_include_pad as i64);
+                r.dispatch("aten::avg_pool2d", dev, ins, &a)
+            }
+            Op::GlobalAvgPool => r.dispatch("aten::adaptive_avg_pool2d", dev, ins, &Attrs::new()),
+            Op::Add => r.dispatch("aten::add", dev, ins, &Attrs::new()),
+            Op::Concat => r.dispatch("aten::cat", dev, ins, &Attrs::new()),
+            Op::ChannelShuffle { groups } => {
+                let a = Attrs::new().with_int("groups", *groups as i64);
+                r.dispatch("aten::channel_shuffle", dev, ins, &a)
+            }
+            Op::Slice { offset, channels } => {
+                // view op: executed inline by SOL (no framework kernel)
+                let x = &ins[0];
+                let (n, c, h, w) =
+                    (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+                let v = x.to_f32()?;
+                let mut out = Vec::with_capacity(n * channels * h * w);
+                for ni in 0..n {
+                    let s = (ni * c + offset) * h * w;
+                    out.extend_from_slice(&v[s..s + channels * h * w]);
+                }
+                Ok(Tensor::from_f32(out, &[n, *channels, h, w]))
+            }
+            Op::Flatten => r.dispatch("aten::flatten", dev, ins, &Attrs::new()),
+            Op::Softmax => r.dispatch("aten::softmax", dev, ins, &Attrs::new()),
+            Op::Dropout => Ok(ins[0].clone()),
+            Op::Input => bail!("Input evaluated twice"),
+        }
+    }
+
+    /// How many times `sol.call` ran.
+    pub fn call_count(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Max version over bound parameters — the cache-invalidation signal
+    /// for transparent offloading (§V-A).
+    pub fn param_version(&self) -> u64 {
+        self.params
+            .iter()
+            .flat_map(|(_, ps)| ps.iter().map(|(_, t)| t.version()))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total parameter bytes (device cache sizing).
+    pub fn param_bytes(&self) -> usize {
+        self.params
+            .iter()
+            .flat_map(|(_, ps)| ps.iter().map(|(_, t)| t.byte_len()))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devsim::DeviceId;
+    use crate::framework::install_default;
+
+    fn mini() -> Module {
+        Module::Sequential(vec![
+            Module::conv2d(3, 8, 3, 1, 1, 41),
+            Module::batch_norm(8),
+            Module::ReLU,
+            Module::MaxPool2d { k: 2, stride: 2, pad: 0 },
+            Module::Flatten,
+            Module::linear(8 * 8 * 8, 10, 42),
+            Module::Softmax,
+        ])
+    }
+
+    #[test]
+    fn sol_model_matches_framework_numerics() {
+        let m = mini();
+        let reg = install_default();
+        let x = Tensor::randn(&[2, 3, 16, 16], 5, 0.5);
+        let native = m.forward(&reg, &x).unwrap();
+        let sol = SolModel::optimize(
+            &m,
+            &[2, 3, 16, 16],
+            "mini",
+            &OptimizeOptions::new(DeviceId::Xeon6126),
+        )
+        .unwrap();
+        let out = sol.forward(&x).unwrap();
+        let (a, b) = (native.to_f32().unwrap(), out.to_f32().unwrap());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+        assert_eq!(sol.call_count(), 1);
+    }
+
+    #[test]
+    fn sol_call_bypasses_framework_dispatcher() {
+        let m = mini();
+        let reg = install_default(); // the framework's registry
+        let before = reg.dispatches();
+        let sol = SolModel::optimize(
+            &m,
+            &[1, 3, 16, 16],
+            "mini",
+            &OptimizeOptions::new(DeviceId::Xeon6126),
+        )
+        .unwrap();
+        let x = Tensor::randn(&[1, 3, 16, 16], 6, 0.5);
+        sol.forward(&x).unwrap();
+        // the framework's dispatcher saw nothing
+        assert_eq!(reg.dispatches(), before);
+    }
+
+    #[test]
+    fn fewer_kernels_than_framework_ops() {
+        let m = mini();
+        let sol = SolModel::optimize(
+            &m,
+            &[1, 3, 16, 16],
+            "mini",
+            &OptimizeOptions::new(DeviceId::Xeon6126),
+        )
+        .unwrap();
+        assert!(sol.optimized.kernel_count() < sol.graph.layer_count());
+    }
+
+    #[test]
+    fn param_version_propagates() {
+        let m = mini();
+        let sol = SolModel::optimize(
+            &m,
+            &[1, 3, 16, 16],
+            "mini",
+            &OptimizeOptions::new(DeviceId::Xeon6126),
+        )
+        .unwrap();
+        let v0 = sol.param_version();
+        m.parameters()[0].1.fill_(0.1).unwrap();
+        assert!(sol.param_version() > v0, "shared storage must reflect updates");
+    }
+}

@@ -1,0 +1,26 @@
+//! The SOL↔framework **frontend** (paper §V): everything that touches
+//! Torchlet, strictly through its public APIs.
+//!
+//! * [`extract`] — pull the computation graph out of a framework module
+//!   tree into the SOL IR (what `sol.optimize(py_model, ...)` does).
+//! * [`inject`] — the `SolModel` custom layer (paper Listing 2): the
+//!   optimized model masquerades as a normal framework module; parameters
+//!   stay inside the framework.
+//! * [`offload`] — **transparent offloading** (§V-A): Keras-style
+//!   host-resident usage; parameters cached on the device in an
+//!   offloading context invalidated by the framework's own version
+//!   counters.
+//! * [`native`] — **native offloading** (§V-B): SOL registers allocator,
+//!   hooks and the minimal kernel set for the vacant HIP dispatcher slot,
+//!   making `hip:0` a fully usable framework device without one line of
+//!   framework change.
+
+pub mod extract;
+pub mod inject;
+pub mod native;
+pub mod offload;
+
+pub use extract::extract_graph;
+pub use inject::SolModel;
+pub use native::install_native_backend;
+pub use offload::{OffloadContext, TransparentOffload};

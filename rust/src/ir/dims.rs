@@ -1,0 +1,129 @@
+//! Purpose-tagged tensor dimensions (paper §II-C).
+//!
+//! Barham & Isard criticize frameworks for addressing tensor dimensions by
+//! numeric position; SOL instead names each dimension by *purpose* and
+//! index: a tensor in NCHW format has dimensions `[N0, C0, P1, P0]`, in
+//! NHWC `[N0, P1, P0, C0]`.  Layers then select dimensions by kind — a
+//! normalization layer asks for "all channel dims" and works under any
+//! layout, with any number of channel dims (e.g. DNNL-blocked `C1`+`C0`).
+
+use std::fmt;
+
+/// The purpose of a dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DimKind {
+    /// `N` — batch-like, no structural meaning ("None" in the paper).
+    None,
+    /// `C` — channel.
+    Channel,
+    /// `P` — pixel/spatial.
+    Pixel,
+    /// `F` — feature (linear layers' contraction/output dims).
+    Feature,
+}
+
+impl DimKind {
+    /// Single-letter tag used in display form (`N0`, `C0`, `P1`, `F0`).
+    pub fn letter(self) -> char {
+        match self {
+            DimKind::None => 'N',
+            DimKind::Channel => 'C',
+            DimKind::Pixel => 'P',
+            DimKind::Feature => 'F',
+        }
+    }
+}
+
+/// One purpose-tagged dimension: kind, index-within-kind, and extent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Dim {
+    pub kind: DimKind,
+    pub index: u8,
+    pub extent: usize,
+}
+
+impl Dim {
+    pub fn new(kind: DimKind, index: u8, extent: usize) -> Self {
+        Dim { kind, index, extent }
+    }
+
+    pub fn batch(extent: usize) -> Self {
+        Dim::new(DimKind::None, 0, extent)
+    }
+
+    pub fn channel(index: u8, extent: usize) -> Self {
+        Dim::new(DimKind::Channel, index, extent)
+    }
+
+    pub fn pixel(index: u8, extent: usize) -> Self {
+        Dim::new(DimKind::Pixel, index, extent)
+    }
+
+    pub fn feature(index: u8, extent: usize) -> Self {
+        Dim::new(DimKind::Feature, index, extent)
+    }
+}
+
+impl fmt::Display for Dim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}{}={}", self.kind.letter(), self.index, self.extent)
+    }
+}
+
+/// Select every dimension of `kind` from a dim list (the paper's
+/// "automatically selecting all channel dimensions" for normalization).
+pub fn select_dims(dims: &[Dim], kind: DimKind) -> Vec<usize> {
+    dims.iter()
+        .enumerate()
+        .filter(|(_, d)| d.kind == kind)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nchw() -> Vec<Dim> {
+        vec![
+            Dim::batch(2),
+            Dim::channel(0, 64),
+            Dim::pixel(1, 56),
+            Dim::pixel(0, 56),
+        ]
+    }
+
+    #[test]
+    fn display_form_matches_paper() {
+        let d = nchw();
+        let s: Vec<String> = d.iter().map(|d| d.to_string()).collect();
+        assert_eq!(s, vec!["N0=2", "C0=64", "P1=56", "P0=56"]);
+    }
+
+    #[test]
+    fn select_channels_independent_of_layout() {
+        // NCHW: channel at position 1; NHWC: channel at position 3.
+        let nchw = nchw();
+        let nhwc = vec![
+            Dim::batch(2),
+            Dim::pixel(1, 56),
+            Dim::pixel(0, 56),
+            Dim::channel(0, 64),
+        ];
+        assert_eq!(select_dims(&nchw, DimKind::Channel), vec![1]);
+        assert_eq!(select_dims(&nhwc, DimKind::Channel), vec![3]);
+    }
+
+    #[test]
+    fn select_blocked_channels() {
+        // DNNL-blocked layout has two channel dims (C1 outer, C0 inner=8).
+        let blocked = vec![
+            Dim::batch(1),
+            Dim::channel(1, 8),
+            Dim::pixel(1, 8),
+            Dim::pixel(0, 8),
+            Dim::channel(0, 8),
+        ];
+        assert_eq!(select_dims(&blocked, DimKind::Channel), vec![1, 4]);
+    }
+}

@@ -1,0 +1,71 @@
+//! Element types known to the IR and the runtime.
+
+
+/// Tensor element type.
+///
+/// The SX-Aurora backend note in the paper (§IV-C: "lacks ... float16
+/// support") is modeled by [`crate::devsim::DeviceSpec::supports_dtype`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    BF16,
+    I32,
+    I64,
+    U8,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::BF16 => 2,
+            DType::I64 => 8,
+            DType::U8 => 1,
+        }
+    }
+
+    /// Manifest name used by the python AOT pipeline (`aot.py::sig_of`).
+    pub fn manifest_name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::BF16 => "bf16",
+            DType::I32 => "i32",
+            DType::I64 => "i64",
+            DType::U8 => "u8",
+        }
+    }
+
+    /// Parse a manifest dtype name.
+    pub fn from_manifest(name: &str) -> Option<Self> {
+        Some(match name {
+            "f32" => DType::F32,
+            "bf16" => DType::BF16,
+            "i32" => DType::I32,
+            "i64" => DType::I64,
+            "u8" => DType::U8,
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(DType::F32.size(), 4);
+        assert_eq!(DType::BF16.size(), 2);
+        assert_eq!(DType::I64.size(), 8);
+        assert_eq!(DType::U8.size(), 1);
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        for d in [DType::F32, DType::BF16, DType::I32, DType::I64, DType::U8] {
+            assert_eq!(DType::from_manifest(d.manifest_name()), Some(d));
+        }
+        assert_eq!(DType::from_manifest("f64"), None);
+    }
+}

@@ -1,0 +1,323 @@
+//! The SOL graph: a DAG of layer nodes with inferred shapes.
+//!
+//! Built either directly (tests, model zoo) or by extraction from a
+//! Torchlet module tree (`frontend::extract`).  Nodes are stored in
+//! topological (insertion) order; the builder infers every output
+//! [`TensorMeta`] at insertion time, so passes never re-derive shapes.
+
+
+use super::layout::Layout;
+use super::node::Op;
+use super::shape::TensorMeta;
+
+/// Index of a node within its graph.
+pub type NodeId = usize;
+
+/// One node: operator + input edges + inferred output metadata.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+    pub meta: TensorMeta,
+    pub name: String,
+}
+
+/// The SOL graph IR.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn new(name: impl Into<String>) -> Self {
+        Graph { name: name.into(), nodes: Vec::new() }
+    }
+
+    fn push(&mut self, op: Op, inputs: Vec<NodeId>, meta: TensorMeta) -> NodeId {
+        let id = self.nodes.len();
+        let name = format!("{}_{}", op.name().to_lowercase(), id);
+        for &i in &inputs {
+            assert!(i < id, "graph edges must point backwards (topo order)");
+        }
+        self.nodes.push(Node { id, op, inputs, meta, name });
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    /// Add an image input `[n, c, h, w]`.
+    pub fn input_image(&mut self, n: usize, c: usize, h: usize, w: usize) -> NodeId {
+        self.push(Op::Input, vec![], TensorMeta::image(n, c, h, w, Layout::Nchw))
+    }
+
+    /// Add a feature input `[n, f]`.
+    pub fn input_features(&mut self, n: usize, f: usize) -> NodeId {
+        self.push(Op::Input, vec![], TensorMeta::features(n, f))
+    }
+
+    pub fn conv(
+        &mut self,
+        x: NodeId,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+    ) -> NodeId {
+        let m = &self.nodes[x].meta;
+        let (h, w) = m.spatial();
+        let oh = (h + 2 * pad - k) / stride + 1;
+        let ow = (w + 2 * pad - k) / stride + 1;
+        let meta = TensorMeta::image(m.batch(), cout, oh, ow, m.layout);
+        self.push(
+            Op::Conv2d { cout, kh: k, kw: k, stride, pad, groups },
+            vec![x],
+            meta,
+        )
+    }
+
+    /// Depthwise conv (groups == channels) — the DFP "WeightedPooling" case.
+    pub fn depthwise(&mut self, x: NodeId, k: usize, stride: usize, pad: usize) -> NodeId {
+        let c = self.nodes[x].meta.channels();
+        self.conv(x, c, k, stride, pad, c)
+    }
+
+    pub fn linear(&mut self, x: NodeId, out_features: usize) -> NodeId {
+        let m = &self.nodes[x].meta;
+        let meta = TensorMeta::features(m.batch(), out_features);
+        self.push(Op::Linear { out_features }, vec![x], meta)
+    }
+
+    pub fn relu(&mut self, x: NodeId) -> NodeId {
+        let meta = self.nodes[x].meta.clone();
+        self.push(Op::ReLU, vec![x], meta)
+    }
+
+    pub fn batch_norm(&mut self, x: NodeId) -> NodeId {
+        let meta = self.nodes[x].meta.clone();
+        self.push(Op::BatchNorm, vec![x], meta)
+    }
+
+    pub fn dropout(&mut self, x: NodeId) -> NodeId {
+        let meta = self.nodes[x].meta.clone();
+        self.push(Op::Dropout, vec![x], meta)
+    }
+
+    fn pooled_meta(&self, x: NodeId, k: usize, stride: usize, pad: usize) -> TensorMeta {
+        let m = &self.nodes[x].meta;
+        let (h, w) = m.spatial();
+        let oh = (h + 2 * pad - k) / stride + 1;
+        let ow = (w + 2 * pad - k) / stride + 1;
+        TensorMeta::image(m.batch(), m.channels(), oh, ow, m.layout)
+    }
+
+    pub fn max_pool(&mut self, x: NodeId, k: usize, stride: usize, pad: usize) -> NodeId {
+        let meta = self.pooled_meta(x, k, stride, pad);
+        self.push(
+            Op::MaxPool { k, stride, pad, min_value: f32::NEG_INFINITY },
+            vec![x],
+            meta,
+        )
+    }
+
+    pub fn avg_pool(&mut self, x: NodeId, k: usize, stride: usize, pad: usize) -> NodeId {
+        let meta = self.pooled_meta(x, k, stride, pad);
+        self.push(
+            Op::AvgPool { k, stride, pad, count_include_pad: true },
+            vec![x],
+            meta,
+        )
+    }
+
+    pub fn global_avg_pool(&mut self, x: NodeId) -> NodeId {
+        let m = &self.nodes[x].meta;
+        let meta = TensorMeta::image(m.batch(), m.channels(), 1, 1, m.layout);
+        self.push(Op::GlobalAvgPool, vec![x], meta)
+    }
+
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let ma = self.nodes[a].meta.clone();
+        let mb = &self.nodes[b].meta;
+        assert_eq!(ma.shape(), mb.shape(), "Add requires equal shapes");
+        self.push(Op::Add, vec![a, b], ma)
+    }
+
+    pub fn concat(&mut self, xs: &[NodeId]) -> NodeId {
+        assert!(!xs.is_empty());
+        let m0 = &self.nodes[xs[0]].meta;
+        let (h, w) = m0.spatial();
+        let n = m0.batch();
+        let layout = m0.layout;
+        let c: usize = xs.iter().map(|&x| self.nodes[x].meta.channels()).sum();
+        let meta = TensorMeta::image(n, c, h, w, layout);
+        self.push(Op::Concat, xs.to_vec(), meta)
+    }
+
+    /// Channel slice (zero-FLOP view).
+    pub fn slice_channels(&mut self, x: NodeId, offset: usize, channels: usize) -> NodeId {
+        let m = &self.nodes[x].meta;
+        assert!(offset + channels <= m.channels(), "slice out of range");
+        let (h, w) = m.spatial();
+        let meta = TensorMeta::image(m.batch(), channels, h, w, m.layout);
+        self.push(Op::Slice { offset, channels }, vec![x], meta)
+    }
+
+    pub fn channel_shuffle(&mut self, x: NodeId, groups: usize) -> NodeId {
+        let meta = self.nodes[x].meta.clone();
+        self.push(Op::ChannelShuffle { groups }, vec![x], meta)
+    }
+
+    pub fn flatten(&mut self, x: NodeId) -> NodeId {
+        let m = &self.nodes[x].meta;
+        let meta = TensorMeta::features(m.batch(), m.elems() / m.batch());
+        self.push(Op::Flatten, vec![x], meta)
+    }
+
+    pub fn softmax(&mut self, x: NodeId) -> NodeId {
+        let meta = self.nodes[x].meta.clone();
+        self.push(Op::Softmax, vec![x], meta)
+    }
+
+    /// Output node (by convention the last node).
+    pub fn output(&self) -> NodeId {
+        self.nodes.len() - 1
+    }
+
+    /// Consumers of each node (adjacency reversed).
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut cons = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                cons[i].push(n.id);
+            }
+        }
+        cons
+    }
+
+    /// Total trainable parameters.
+    pub fn param_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| {
+                let inp = n.inputs.first().map(|&i| &self.nodes[i].meta);
+                inp.map_or(0, |m| n.op.param_count(m))
+            })
+            .sum()
+    }
+
+    /// Total forward FLOPs.
+    pub fn flops(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| {
+                let inp = n.inputs.first().map(|&i| &self.nodes[i].meta);
+                inp.map_or(0, |m| n.op.flops(m, &n.meta))
+            })
+            .sum()
+    }
+
+    /// Sum of all intermediate tensor bytes (the traffic an unfused,
+    /// per-layer execution materializes — the baseline's burden).
+    pub fn intermediate_bytes(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| !matches!(n.op, Op::Input))
+            .map(|n| n.meta.bytes())
+            .sum()
+    }
+
+    /// Number of non-input layers (the baseline's dispatch count).
+    pub fn layer_count(&self) -> usize {
+        self.nodes.iter().filter(|n| !matches!(n.op, Op::Input)).count()
+    }
+
+    /// Batch size of the first input.
+    pub fn batch(&self) -> usize {
+        self.nodes
+            .iter()
+            .find(|n| matches!(n.op, Op::Input))
+            .map(|n| n.meta.batch())
+            .unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cnn() -> Graph {
+        let mut g = Graph::new("tiny");
+        let x = g.input_image(1, 3, 32, 32);
+        let c = g.conv(x, 16, 3, 1, 1, 1);
+        let r = g.relu(c);
+        let p = g.max_pool(r, 2, 2, 0);
+        let f = g.flatten(p);
+        let l = g.linear(f, 10);
+        g.softmax(l);
+        g
+    }
+
+    #[test]
+    fn shape_inference_chain() {
+        let g = tiny_cnn();
+        let out = g.node(g.output());
+        assert_eq!(out.meta.shape(), vec![1, 10]);
+        // conv keeps 32x32 under pad=1; pool halves it
+        assert_eq!(g.nodes[3].meta.spatial(), (16, 16));
+        // flatten: 16 * 16 * 16
+        assert_eq!(g.nodes[4].meta.features_extent(), 16 * 16 * 16);
+    }
+
+    #[test]
+    fn param_and_flop_counts() {
+        let g = tiny_cnn();
+        let conv_params = 3 * 16 * 9 + 16;
+        let lin_params = 16 * 16 * 16 * 10 + 10;
+        assert_eq!(g.param_count(), conv_params + lin_params);
+        assert!(g.flops() > 2 * 16 * 32 * 32 * 3 * 9);
+    }
+
+    #[test]
+    fn consumers_reverse_edges() {
+        let g = tiny_cnn();
+        let cons = g.consumers();
+        assert_eq!(cons[0], vec![1]); // input -> conv
+        assert_eq!(cons[1], vec![2]); // conv -> relu
+        assert!(cons[g.output()].is_empty());
+    }
+
+    #[test]
+    fn residual_add_and_concat() {
+        let mut g = Graph::new("res");
+        let x = g.input_image(1, 8, 8, 8);
+        let c1 = g.conv(x, 8, 3, 1, 1, 1);
+        let a = g.add(c1, x);
+        let cat = g.concat(&[a, x]);
+        assert_eq!(g.node(cat).meta.channels(), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "equal shapes")]
+    fn add_shape_mismatch_panics() {
+        let mut g = Graph::new("bad");
+        let x = g.input_image(1, 8, 8, 8);
+        let y = g.conv(x, 16, 3, 1, 1, 1);
+        g.add(x, y);
+    }
+
+    #[test]
+    fn stride_and_padding_arithmetic() {
+        let mut g = Graph::new("s");
+        let x = g.input_image(1, 3, 224, 224);
+        // 7x7/2 pad 3 (ResNet stem): 224 -> 112
+        let c = g.conv(x, 64, 7, 2, 3, 1);
+        assert_eq!(g.node(c).meta.spatial(), (112, 112));
+        // 3x3/2 pad 1 maxpool: 112 -> 56
+        let p = g.max_pool(c, 3, 2, 1);
+        assert_eq!(g.node(p).meta.spatial(), (56, 56));
+    }
+}

@@ -1,0 +1,145 @@
+//! Memory layouts and reorder-cost reasoning (paper §III-A).
+//!
+//! SOL "determines optimal memory layouts for the given data (e.g., DNNL
+//! prefers blocked memory layouts) and takes care that data are always
+//! given in the optimal layout to the layers, while trying to minimize the
+//! number of reorder operations."  Layouts here are *semantic* tags over
+//! the purpose-tagged dims; the layout pass (passes::layout) inserts
+//! explicit reorders where producers and consumers disagree.
+
+
+use super::dims::{Dim, DimKind};
+
+/// A memory layout for activation tensors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Layout {
+    /// `[N0, C0, P1, P0]` — PyTorch's default.
+    Nchw,
+    /// `[N0, P1, P0, C0]` — what the TPU/Pallas kernels use.
+    Nhwc,
+    /// `[N0, C1, P1, P0, C0=8]` — DNNL-style blocked channels.
+    BlockedC8,
+    /// `[N0, C1, P1, P0, C0=16]` — AVX-512-width blocked channels.
+    BlockedC16,
+    /// `[N0, F0]` — row-major 2-D (linear layers).
+    RowMajor,
+    /// `[F0, N0]` — transposed 2-D.
+    ColMajor,
+}
+
+/// Weight layout for Linear layers (paper §III-A: untransposed
+/// `[Out, In]` is fastest on CPU, `[In, Out]` on the SX-Aurora).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WeightLayout {
+    /// `[OutChannels, InChannels]` — untransposed.
+    OutIn,
+    /// `[InChannels, OutChannels]` — transposed.
+    InOut,
+}
+
+impl Layout {
+    /// Is this a 4-D (image) layout?
+    pub fn is_spatial(self) -> bool {
+        !matches!(self, Layout::RowMajor | Layout::ColMajor)
+    }
+
+    /// Channel block size, when channels are blocked.
+    pub fn channel_block(self) -> Option<usize> {
+        match self {
+            Layout::BlockedC8 => Some(8),
+            Layout::BlockedC16 => Some(16),
+            _ => None,
+        }
+    }
+
+    /// Build the purpose-tagged dim list for an image tensor
+    /// `[n, c, h, w]` under this layout.
+    pub fn image_dims(self, n: usize, c: usize, h: usize, w: usize) -> Vec<Dim> {
+        match self {
+            Layout::Nchw => vec![
+                Dim::batch(n),
+                Dim::channel(0, c),
+                Dim::pixel(1, h),
+                Dim::pixel(0, w),
+            ],
+            Layout::Nhwc => vec![
+                Dim::batch(n),
+                Dim::pixel(1, h),
+                Dim::pixel(0, w),
+                Dim::channel(0, c),
+            ],
+            Layout::BlockedC8 | Layout::BlockedC16 => {
+                let blk = self.channel_block().unwrap();
+                vec![
+                    Dim::batch(n),
+                    Dim::channel(1, c.div_ceil(blk)),
+                    Dim::pixel(1, h),
+                    Dim::pixel(0, w),
+                    Dim::channel(0, blk),
+                ]
+            }
+            Layout::RowMajor | Layout::ColMajor => {
+                panic!("image_dims on 2-D layout {self:?}")
+            }
+        }
+    }
+
+    /// Cost (bytes moved) of reordering `elems` elements of `esize` bytes
+    /// from `self` to `to`: a reorder reads + writes the whole tensor.
+    pub fn reorder_bytes(self, to: Layout, elems: usize, esize: usize) -> usize {
+        if self == to {
+            0
+        } else {
+            2 * elems * esize
+        }
+    }
+}
+
+/// Number of logical channels in a dim list (product of all Channel dims).
+pub fn channel_extent(dims: &[Dim]) -> usize {
+    dims.iter()
+        .filter(|d| d.kind == DimKind::Channel)
+        .map(|d| d.extent)
+        .product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nchw_dims() {
+        let d = Layout::Nchw.image_dims(2, 64, 56, 56);
+        let s: Vec<String> = d.iter().map(|d| d.to_string()).collect();
+        assert_eq!(s, vec!["N0=2", "C0=64", "P1=56", "P0=56"]);
+    }
+
+    #[test]
+    fn nhwc_dims_match_paper() {
+        // "[N0, P1, P0, C0] in NHWC format"
+        let d = Layout::Nhwc.image_dims(1, 3, 224, 224);
+        assert_eq!(d[3].kind, DimKind::Channel);
+        assert_eq!(d[1].kind, DimKind::Pixel);
+        assert_eq!(d[1].index, 1);
+    }
+
+    #[test]
+    fn blocked_has_two_channel_dims() {
+        let d = Layout::BlockedC16.image_dims(1, 64, 8, 8);
+        assert_eq!(channel_extent(&d), 64);
+        assert_eq!(d.len(), 5);
+        assert_eq!(d[1].extent, 4); // 64 / 16
+    }
+
+    #[test]
+    fn blocked_rounds_up_partial_blocks() {
+        let d = Layout::BlockedC8.image_dims(1, 20, 4, 4);
+        assert_eq!(d[1].extent, 3); // ceil(20/8)
+    }
+
+    #[test]
+    fn reorder_cost() {
+        assert_eq!(Layout::Nchw.reorder_bytes(Layout::Nchw, 100, 4), 0);
+        assert_eq!(Layout::Nchw.reorder_bytes(Layout::Nhwc, 100, 4), 800);
+    }
+}

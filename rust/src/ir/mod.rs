@@ -1,0 +1,21 @@
+//! SOL's graph intermediate representation.
+//!
+//! The IR is what `sol.optimize(...)` extracts from the framework (paper
+//! §III-A): a DAG of layers over tensors whose dimensions carry *purpose*
+//! (`None`/`Channel`/`Pixel`, §II-C) instead of bare positions, so passes
+//! and codegen can reason about layouts (`NCHW` = `[N0, C0, P1, P0]`)
+//! without hard-coding axis numbers.
+
+pub mod dims;
+pub mod dtype;
+pub mod graph;
+pub mod layout;
+pub mod node;
+pub mod shape;
+
+pub use dims::{Dim, DimKind};
+pub use dtype::DType;
+pub use graph::{Graph, Node, NodeId};
+pub use layout::Layout;
+pub use node::Op;
+pub use shape::TensorMeta;

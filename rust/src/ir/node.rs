@@ -1,0 +1,178 @@
+//! Layer operators of the SOL IR.
+
+
+use super::shape::TensorMeta;
+
+/// One layer / operator.  Parameters (weights) are attributes of the layer
+/// node, as in the paper's high-level IR — they live in the *framework*
+/// (Listing 2: "managed by framework") and SOL only references them.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Network input placeholder.
+    Input,
+    /// 2-D convolution.  `groups == cin == cout` is the depthwise /
+    /// "WeightedPooling" case the DFP module claims (paper §III-A).
+    Conv2d {
+        cout: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+    },
+    /// Fully connected layer.
+    Linear { out_features: usize },
+    ReLU,
+    /// Inference-mode batch norm (folded scale+shift over channel dims).
+    BatchNorm,
+    MaxPool {
+        k: usize,
+        stride: usize,
+        pad: usize,
+        /// Minimum value of the pooling window; the ReLU-elision pass sets
+        /// this to 0 to absorb an adjacent ReLU (paper §III-A).
+        min_value: f32,
+    },
+    AvgPool {
+        k: usize,
+        stride: usize,
+        pad: usize,
+        count_include_pad: bool,
+    },
+    /// Global average pooling to `[n, c, 1, 1]`.
+    GlobalAvgPool,
+    /// Elementwise sum of two inputs (residual connections).
+    Add,
+    /// Channel-wise concatenation (DenseNet).
+    Concat,
+    /// ShuffleNet's channel shuffle.
+    ChannelShuffle { groups: usize },
+    /// Channel slice (ShuffleNet's split): take `channels` starting at
+    /// `offset`.  Zero-FLOP view-like op.
+    Slice { offset: usize, channels: usize },
+    /// Collapse `[n, c, h, w]` to `[n, c*h*w]`.
+    Flatten,
+    Softmax,
+    /// Identity at inference; kept so extraction sees realistic graphs.
+    Dropout,
+}
+
+impl Op {
+    /// Human-readable operator name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Input => "Input",
+            Op::Conv2d { .. } => "Conv2d",
+            Op::Linear { .. } => "Linear",
+            Op::ReLU => "ReLU",
+            Op::BatchNorm => "BatchNorm",
+            Op::MaxPool { .. } => "MaxPool",
+            Op::AvgPool { .. } => "AvgPool",
+            Op::GlobalAvgPool => "GlobalAvgPool",
+            Op::Add => "Add",
+            Op::Concat => "Concat",
+            Op::ChannelShuffle { .. } => "ChannelShuffle",
+            Op::Slice { .. } => "Slice",
+            Op::Flatten => "Flatten",
+            Op::Softmax => "Softmax",
+            Op::Dropout => "Dropout",
+        }
+    }
+
+    /// Trainable parameter count given the (first) input meta.
+    pub fn param_count(&self, input: &TensorMeta) -> usize {
+        match self {
+            Op::Conv2d {
+                cout, kh, kw, groups, ..
+            } => {
+                let cin = input.channels();
+                cin / groups * cout * kh * kw + cout
+            }
+            Op::Linear { out_features } => {
+                input.features_extent() * out_features + out_features
+            }
+            Op::BatchNorm => 2 * input.channels(),
+            _ => 0,
+        }
+    }
+
+    /// Forward FLOPs (multiply-accumulate counted as 2) given input/output.
+    pub fn flops(&self, input: &TensorMeta, output: &TensorMeta) -> usize {
+        match self {
+            Op::Conv2d {
+                cout, kh, kw, groups, ..
+            } => {
+                let cin = input.channels();
+                let (oh, ow) = output.spatial();
+                2 * output.batch() * cout * oh * ow * (cin / groups) * kh * kw
+            }
+            Op::Linear { out_features } => {
+                2 * input.batch() * input.features_extent() * out_features
+            }
+            Op::ReLU | Op::BatchNorm | Op::Add | Op::Dropout => output.elems(),
+            Op::MaxPool { k, .. } | Op::AvgPool { k, .. } => output.elems() * k * k,
+            Op::GlobalAvgPool => input.elems(),
+            Op::Softmax => 4 * output.elems(),
+            Op::Concat | Op::ChannelShuffle { .. } | Op::Slice { .. } | Op::Flatten | Op::Input => 0,
+        }
+    }
+
+    /// Is this op a "work-intensive" layer the DNN module would claim?
+    /// (paper §III-A: Convolutions and Linears go to DNN — *except*
+    /// depthwise convs, which are WeightedPooling and go to DFP.)
+    pub fn is_dnn_candidate(&self, input: &TensorMeta) -> bool {
+        match self {
+            Op::Conv2d { cout, groups, .. } => {
+                !(*groups == *cout && *groups == input.channels())
+            }
+            Op::Linear { .. } => true,
+            _ => false,
+        }
+    }
+
+    /// Pointwise ops commute with reorders and fuse freely in DFP regions.
+    pub fn is_pointwise(&self) -> bool {
+        matches!(self, Op::ReLU | Op::BatchNorm | Op::Add | Op::Dropout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::layout::Layout;
+
+    #[test]
+    fn conv_params_and_flops() {
+        let inp = TensorMeta::image(1, 64, 56, 56, Layout::Nchw);
+        let out = TensorMeta::image(1, 64, 56, 56, Layout::Nchw);
+        let op = Op::Conv2d { cout: 64, kh: 3, kw: 3, stride: 1, pad: 1, groups: 1 };
+        assert_eq!(op.param_count(&inp), 64 * 64 * 9 + 64);
+        assert_eq!(op.flops(&inp, &out), 2 * 64 * 56 * 56 * 64 * 9);
+    }
+
+    #[test]
+    fn depthwise_is_dfp_not_dnn() {
+        let inp = TensorMeta::image(1, 128, 56, 56, Layout::Nchw);
+        let dw = Op::Conv2d { cout: 128, kh: 3, kw: 3, stride: 1, pad: 1, groups: 128 };
+        let full = Op::Conv2d { cout: 128, kh: 3, kw: 3, stride: 1, pad: 1, groups: 1 };
+        assert!(!dw.is_dnn_candidate(&inp));
+        assert!(full.is_dnn_candidate(&inp));
+    }
+
+    #[test]
+    fn grouped_but_not_depthwise_is_dnn() {
+        // ShuffleNet-style grouped conv (groups < cout) stays on DNN.
+        let inp = TensorMeta::image(1, 64, 28, 28, Layout::Nchw);
+        let g = Op::Conv2d { cout: 128, kh: 1, kw: 1, stride: 1, pad: 0, groups: 4 };
+        assert!(g.is_dnn_candidate(&inp));
+    }
+
+    #[test]
+    fn linear_params() {
+        let inp = TensorMeta::features(64, 8192);
+        let op = Op::Linear { out_features: 8192 };
+        assert_eq!(op.param_count(&inp), 8192 * 8192 + 8192);
+        let out = TensorMeta::features(64, 8192);
+        assert_eq!(op.flops(&inp, &out), 2 * 64 * 8192 * 8192);
+    }
+}

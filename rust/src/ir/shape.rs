@@ -1,0 +1,144 @@
+//! Tensor metadata: purpose-tagged dims + dtype + layout.
+
+
+use super::dims::{Dim, DimKind};
+use super::dtype::DType;
+use super::layout::Layout;
+
+/// Static metadata of one tensor value in the graph.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorMeta {
+    pub dims: Vec<Dim>,
+    pub dtype: DType,
+    pub layout: Layout,
+}
+
+impl TensorMeta {
+    /// 4-D image tensor under `layout`.
+    pub fn image(n: usize, c: usize, h: usize, w: usize, layout: Layout) -> Self {
+        TensorMeta {
+            dims: layout.image_dims(n, c, h, w),
+            dtype: DType::F32,
+            layout,
+        }
+    }
+
+    /// 2-D feature tensor `[batch, features]`.
+    pub fn features(n: usize, f: usize) -> Self {
+        TensorMeta {
+            dims: vec![Dim::batch(n), Dim::feature(0, f)],
+            dtype: DType::F32,
+            layout: Layout::RowMajor,
+        }
+    }
+
+    /// Positional extents (physical order of `dims`).
+    pub fn shape(&self) -> Vec<usize> {
+        self.dims.iter().map(|d| d.extent).collect()
+    }
+
+    pub fn elems(&self) -> usize {
+        self.dims.iter().map(|d| d.extent).product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elems() * self.dtype.size()
+    }
+
+    fn extent_of(&self, kind: DimKind) -> usize {
+        let p: usize = self
+            .dims
+            .iter()
+            .filter(|d| d.kind == kind)
+            .map(|d| d.extent)
+            .product();
+        // product over empty set is 1, which is the right default
+        p
+    }
+
+    /// Batch extent.
+    pub fn batch(&self) -> usize {
+        self.extent_of(DimKind::None)
+    }
+
+    /// Total logical channels (product of channel dims — blocked layouts
+    /// may over-count padded channels, which mirrors real blocked storage).
+    pub fn channels(&self) -> usize {
+        self.extent_of(DimKind::Channel)
+    }
+
+    /// Feature extent for 2-D tensors.
+    pub fn features_extent(&self) -> usize {
+        self.extent_of(DimKind::Feature)
+    }
+
+    /// Spatial extents `(h, w)`; `(1, 1)` for 2-D tensors.
+    pub fn spatial(&self) -> (usize, usize) {
+        let mut h = 1;
+        let mut w = 1;
+        for d in &self.dims {
+            if d.kind == DimKind::Pixel {
+                if d.index == 1 {
+                    h = d.extent;
+                } else {
+                    w = d.extent;
+                }
+            }
+        }
+        (h, w)
+    }
+
+    /// Re-derive this meta under a different layout (same logical value).
+    pub fn with_layout(&self, layout: Layout) -> Self {
+        if !layout.is_spatial() || !self.layout.is_spatial() {
+            let mut m = self.clone();
+            m.layout = layout;
+            return m;
+        }
+        let (h, w) = self.spatial();
+        let mut m = TensorMeta::image(self.batch(), self.channels(), h, w, layout);
+        m.dtype = self.dtype;
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_accessors() {
+        let m = TensorMeta::image(2, 64, 56, 28, Layout::Nchw);
+        assert_eq!(m.batch(), 2);
+        assert_eq!(m.channels(), 64);
+        assert_eq!(m.spatial(), (56, 28));
+        assert_eq!(m.elems(), 2 * 64 * 56 * 28);
+        assert_eq!(m.bytes(), m.elems() * 4);
+    }
+
+    #[test]
+    fn features_accessors() {
+        let m = TensorMeta::features(64, 8192);
+        assert_eq!(m.batch(), 64);
+        assert_eq!(m.features_extent(), 8192);
+        assert_eq!(m.spatial(), (1, 1));
+    }
+
+    #[test]
+    fn layout_roundtrip_preserves_logical_shape() {
+        let m = TensorMeta::image(1, 32, 8, 8, Layout::Nchw);
+        let n = m.with_layout(Layout::Nhwc);
+        assert_eq!(n.channels(), 32);
+        assert_eq!(n.spatial(), (8, 8));
+        assert_eq!(n.layout, Layout::Nhwc);
+        // positional shapes differ
+        assert_ne!(m.shape(), n.shape());
+    }
+
+    #[test]
+    fn blocked_layout_pads_channels() {
+        let m = TensorMeta::image(1, 20, 4, 4, Layout::Nchw);
+        let b = m.with_layout(Layout::BlockedC8);
+        assert_eq!(b.channels(), 24); // 3 blocks of 8
+    }
+}

@@ -1,0 +1,52 @@
+//! # SOL — AI acceleration middleware (reproduction)
+//!
+//! Reproduction of *"SOL: Effortless Device Support for AI Frameworks
+//! without Source Code Changes"* (Nicolas Weber & Felipe Huici, NEC
+//! Laboratories Europe, 2020) as a three-layer rust + JAX + Pallas stack.
+//!
+//! The crate is organized exactly along the paper's architecture (Fig. 2):
+//!
+//! * [`ir`] — SOL's graph intermediate representation with purpose-tagged
+//!   dimensions and explicit memory layouts.
+//! * [`passes`] — the SOL compiler: high-level mathematical optimizations,
+//!   per-device cloning, module assignment (DFP vs DNN), layout selection,
+//!   and short auto-tuning.
+//! * [`dfp`] — the Depth-First-Parallelism codegen module (BrainSlug
+//!   lineage): fuses layer chains into single loop nests and maps them
+//!   onto each device's SIMD shape, emitting per-backend kernel plans.
+//! * [`dnn`] — the DNN module: dispatches Convolution/Linear layers to
+//!   (simulated) vendor libraries with descriptor caching and auto-tuning.
+//! * [`backends`] — thin per-device backends: X86, ARM64, NVIDIA, SX-Aurora.
+//! * [`framework`] — **Torchlet**, the PyTorch stand-in this reproduction
+//!   integrates with *without touching its sources* (enforced by test).
+//! * [`frontend`] — the SOL↔Torchlet frontend: graph extraction, model
+//!   injection, transparent & native offloading.
+//! * [`devsim`] — device simulator substrate (Table I roofline models).
+//! * [`runtime`] — PJRT runtime executing the AOT-compiled HLO artifacts,
+//!   plus the paper's asynchronous execution queue with virtual pointers
+//!   and packed memcopy batching (§IV-C).
+//! * [`exec`] — end-to-end execution paths: stock-framework baseline,
+//!   TF-VE-analog baseline, and SOL native / transparent offloading.
+//! * [`workloads`] — the 13-network model zoo of the paper's evaluation.
+//! * [`deploy`] — deployment mode: framework-free inference bundles.
+
+pub mod backends;
+pub mod deploy;
+pub mod devsim;
+pub mod dfp;
+pub mod dnn;
+pub mod exec;
+pub mod framework;
+pub mod frontend;
+pub mod ir;
+pub mod metrics;
+pub mod passes;
+pub mod runtime;
+pub mod util;
+pub mod workloads;
+
+pub use ir::graph::Graph;
+pub use passes::optimizer::{optimize, OptimizeOptions, OptimizedModel};
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,337 @@
+//! `sol` — the leader binary.
+//!
+//! Subcommands (run `sol help`):
+//!
+//! * `devices`   — Table I, from the machine-readable specs
+//! * `optimize`  — compile one network for one device; print the schedule
+//! * `kernels`   — show generated DFP kernel sources (Listing-3 style)
+//! * `fig3`      — the Fig-3 grid (`--training` for the right half)
+//! * `train-mlp` — REAL end-to-end training of the paper's 134M-param MLP
+//!   through the PJRT artifacts (loss curve to stdout)
+//! * `deploy`    — write a framework-free deployment bundle
+//! * `serve`     — load a bundle and serve synthetic requests
+//! * `effort`    — the §VI-A programming-effort table measured on this repo
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use sol::devsim::DeviceId;
+use sol::exec::calibrate;
+use sol::exec::fig3::{fig3_grid, headline_speedups};
+use sol::metrics::{format_table, Timer};
+use sol::passes::{optimize, KernelOrigin, OptimizeOptions, Step};
+use sol::runtime::pjrt::{HostTensor, PjrtEngine};
+use sol::util::XorShift;
+use sol::workloads::NetId;
+
+fn parse_device(s: &str) -> Result<DeviceId> {
+    Ok(match s {
+        "cpu" | "xeon" => DeviceId::Xeon6126,
+        "aurora" | "ve" | "vpu" => DeviceId::AuroraVE10B,
+        "p4000" => DeviceId::QuadroP4000,
+        "titanv" | "gpu" => DeviceId::TitanV,
+        other => bail!("unknown device '{other}' (cpu|aurora|p4000|titanv)"),
+    })
+}
+
+fn parse_net(s: &str) -> Result<NetId> {
+    NetId::ALL
+        .iter()
+        .copied()
+        .find(|n| n.name() == s || n.name().replace(['.', '_'], "") == s.replace(['.', '_'], ""))
+        .ok_or_else(|| anyhow!("unknown net '{s}'"))
+}
+
+/// Minimal `--key value` argument parsing.
+fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
+    let mut flags = HashMap::new();
+    let mut pos = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(k) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(k.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(k.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (flags, pos)
+}
+
+fn cmd_devices() {
+    let rows: Vec<Vec<String>> = DeviceId::ALL
+        .iter()
+        .map(|d| {
+            let s = d.spec();
+            vec![
+                s.vendor.to_string(),
+                s.model.to_string(),
+                format!("{:?}", s.kind),
+                format!("{:.2}", s.tflops),
+                format!("{:.2}", s.bandwidth_gbs),
+                s.cores.to_string(),
+                s.vector_lanes.to_string(),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        format_table(
+            &["Vendor", "Model", "Type", "TFLOP/s", "BW(GB/s)", "Cores", "Lanes"],
+            &rows
+        )
+    );
+}
+
+fn cmd_optimize(flags: &HashMap<String, String>) -> Result<()> {
+    let net = parse_net(flags.get("net").map(String::as_str).unwrap_or("resnet18"))?;
+    let dev = parse_device(flags.get("device").map(String::as_str).unwrap_or("cpu"))?;
+    let b: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let t = Timer::start();
+    let g = net.build(b);
+    let m = optimize(&g, &OptimizeOptions::new(dev));
+    println!(
+        "optimized {} for {:?} in {:.1} ms (simulated autotune: {:.1} ms)",
+        net.name(),
+        dev,
+        t.ms(),
+        m.autotune_us / 1e3
+    );
+    println!(
+        "  layers: {} -> kernels: {} ({} DFP fused, {} library calls), {} elided",
+        g.layer_count(),
+        m.kernel_count(),
+        m.dfp_kernel_count(),
+        m.kernel_count() - m.dfp_kernel_count(),
+        m.elided_layers
+    );
+    println!(
+        "  {:.2} GFLOP effective | {:.1} MB HBM traffic | {:.1} MB params | {} reorders",
+        m.total_flops() as f64 / 1e9,
+        m.total_hbm_bytes() as f64 / 1e6,
+        m.param_bytes as f64 / 1e6,
+        m.layout.reorders.len()
+    );
+    for s in m.steps.iter().take(12) {
+        match s {
+            Step::Kernel(k) => {
+                let origin = match &k.origin {
+                    KernelOrigin::Dfp => "dfp".to_string(),
+                    KernelOrigin::Dnn { library, algorithm } => {
+                        format!("{}:{}", library.name(), algorithm.name())
+                    }
+                };
+                println!("    {:<44} [{origin}]", k.name);
+            }
+            Step::Reorder { bytes } => println!("    reorder ({:.2} MB)", *bytes as f64 / 1e6),
+        }
+    }
+    if m.steps.len() > 12 {
+        println!("    ... {} more steps", m.steps.len() - 12);
+    }
+    Ok(())
+}
+
+fn cmd_kernels(flags: &HashMap<String, String>) -> Result<()> {
+    let net = parse_net(flags.get("net").map(String::as_str).unwrap_or("resnet18"))?;
+    let dev = parse_device(flags.get("device").map(String::as_str).unwrap_or("aurora"))?;
+    let count: usize = flags.get("count").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let m = optimize(&net.build(1), &OptimizeOptions::new(dev));
+    for k in m.kernels().filter(|k| k.source.is_some()).take(count) {
+        println!("// ==== {} ({:?}) ====", k.name, k.class);
+        println!("{}\n", k.source.as_deref().unwrap());
+    }
+    Ok(())
+}
+
+fn cmd_fig3(flags: &HashMap<String, String>) -> Result<()> {
+    let training = flags.contains_key("training");
+    let (eff, cal) = if flags.contains_key("calibrate") {
+        calibrate::calibrate_or_default()
+    } else {
+        (Default::default(), None)
+    };
+    if let Some(c) = &cal {
+        println!(
+            "calibrated on PJRT: gemm {:.1} GF/s, fused conv {:.1} GF/s, fusion speedup {:.2}x",
+            c.matmul_gflops, c.fused_conv_gflops, c.fusion_speedup
+        );
+    }
+    let rows = fig3_grid(training, &eff);
+    let mut table = Vec::new();
+    for net in NetId::ALL {
+        let mut row = vec![net.name().to_string()];
+        for dev in DeviceId::ALL {
+            let r = rows.iter().find(|r| r.net == net && r.device == dev).unwrap();
+            row.push(r.baseline_ms.map_or("n/a".into(), |b| format!("{b:.2}")));
+            row.push(format!("{:.2}", r.sol_ms));
+            row.push(format!("{:.2}", r.sol_to_ms));
+        }
+        table.push(row);
+    }
+    let phase = if training { "training (B=16 CNN / B=64 MLP)" } else { "inference (B=1)" };
+    println!("Fig. 3 {phase} — execution time, ms");
+    println!(
+        "{}",
+        format_table(
+            &[
+                "net", "cpu:base", "cpu:sol", "cpu:TO", "ve:base", "ve:sol", "ve:TO",
+                "p4000:base", "p4000:sol", "p4000:TO", "titan:base", "titan:sol", "titan:TO",
+            ],
+            &table
+        )
+    );
+    println!("max speedup per device (paper §I: CPU 7.79/2.41, Aurora 25.41/4.18, GPU 4.37/1.22):");
+    for (d, s) in headline_speedups(&rows) {
+        println!("  {:?}: {s:.2}x", d);
+    }
+    Ok(())
+}
+
+fn cmd_train_mlp(flags: &HashMap<String, String>) -> Result<()> {
+    let steps: usize = flags.get("steps").map(|s| s.parse()).transpose()?.unwrap_or(20);
+    let batch: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(16);
+    let entry = format!("mlp_train_sol_b{batch}");
+    let engine = PjrtEngine::new()?;
+    println!("platform: {}", engine.platform());
+    let sig = engine.manifest.entry(&entry)?.clone();
+    let mut rng = XorShift::new(7);
+    let n_params: usize = sig.inputs[..6].iter().map(|s| s.elems()).sum();
+    println!("initializing {n_params} params ...");
+    let mut params: Vec<HostTensor> = sig.inputs[..6]
+        .iter()
+        .map(|s| {
+            let scale = if s.shape.len() == 2 { 0.01 } else { 0.0 };
+            HostTensor::F32(rng.normal_vec(s.elems(), scale))
+        })
+        .collect();
+    let t_all = Timer::start();
+    for step in 0..steps {
+        // synthetic classification batch with learnable signal
+        let labels: Vec<i32> = (0..batch).map(|i| (i % 10) as i32).collect();
+        let mut x = rng.normal_vec(batch * 8192, 0.1);
+        for (i, &l) in labels.iter().enumerate() {
+            for j in 0..64 {
+                x[i * 8192 + (l as usize) * 64 + j] += 1.0; // class-dependent bump
+            }
+        }
+        let mut inputs = params.clone();
+        inputs.push(HostTensor::F32(x));
+        inputs.push(HostTensor::I32(labels));
+        let t = Timer::start();
+        let mut out = engine.run(&entry, &inputs)?;
+        let loss = out.pop().unwrap().scalar_f32()?;
+        params = out;
+        println!("step {step:>3}  loss {loss:.4}  ({:.0} ms)", t.ms());
+    }
+    println!("trained {steps} steps in {:.1} s", t_all.ms() / 1e3);
+    Ok(())
+}
+
+fn cmd_deploy(flags: &HashMap<String, String>) -> Result<()> {
+    let out = flags.get("out").cloned().unwrap_or_else(|| "/tmp/sol_bundle".into());
+    let manifest = sol::runtime::manifest::Manifest::load(
+        sol::runtime::manifest::Manifest::default_dir(),
+    )?;
+    let m = optimize(&NetId::Mlp.build(1), &OptimizeOptions::new(DeviceId::Xeon6126));
+    sol::deploy::write_bundle(&m, &["cnn_infer_sol_b1", "cnn_infer_sol_b32"], &manifest, &out)?;
+    println!("wrote bundle to {out}");
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = flags.get("bundle").cloned().unwrap_or_else(|| "/tmp/sol_bundle".into());
+    let n: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(16);
+    let dep = sol::deploy::DeployedModel::load(&dir)?;
+    println!("serving {} (entries: {:?})", dep.net, dep.entries);
+    let mut rng = XorShift::new(3);
+    let mut params: Vec<Vec<f32>> = Vec::new();
+    for s in [
+        vec![3, 3, 3, 32], vec![32], vec![3, 3, 32, 64], vec![64],
+        vec![4096, 256], vec![256], vec![256, 10], vec![10],
+    ] {
+        params.push(rng.normal_vec(s.iter().product(), 0.1));
+    }
+    let mut lat = Vec::new();
+    for _ in 0..n {
+        let mut inputs = params.clone();
+        inputs.push(rng.normal_vec(32 * 32 * 3, 1.0));
+        let t = Timer::start();
+        let _ = dep.run_f32("cnn_infer_sol_b1", &inputs)?;
+        lat.push(t.ms());
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "served {n} requests: p50 {:.2} ms, p99 {:.2} ms",
+        lat[n / 2],
+        lat[(n * 99 / 100).min(n - 1)]
+    );
+    Ok(())
+}
+
+fn cmd_effort() {
+    // measured lines of code per component, like §VI-A
+    let count = |dir: &str| -> usize {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(dir);
+        fn walk(p: &std::path::Path) -> usize {
+            let mut n = 0;
+            if let Ok(rd) = std::fs::read_dir(p) {
+                for e in rd.flatten() {
+                    let path = e.path();
+                    if path.is_dir() {
+                        n += walk(&path);
+                    } else if path.extension().is_some_and(|x| x == "rs" || x == "py") {
+                        n += std::fs::read_to_string(&path).map_or(0, |s| s.lines().count());
+                    }
+                }
+            }
+            n
+        }
+        walk(&root)
+    };
+    let rows = vec![
+        vec!["device backends (x86+arm64+nvidia+aurora)".into(), count("rust/src/backends").to_string()],
+        vec!["dfp module (all devices)".into(), count("rust/src/dfp").to_string()],
+        vec!["dnn module (all libraries)".into(), count("rust/src/dnn").to_string()],
+        vec!["frontend (extract/inject/TO/native)".into(), count("rust/src/frontend").to_string()],
+        vec!["runtime (queue/memcpy/pjrt)".into(), count("rust/src/runtime").to_string()],
+        vec!["framework (the 'PyTorch')".into(), count("rust/src/framework").to_string()],
+        vec!["pallas kernels (L1)".into(), count("python/compile/kernels").to_string()],
+    ];
+    println!("{}", format_table(&["component", "LoC"], &rows));
+}
+
+const HELP: &str = "sol — SOL middleware reproduction
+USAGE: sol <devices|optimize|kernels|fig3|train-mlp|deploy|serve|effort|help> [--flags]
+  optimize  --net resnet18 --device cpu [--batch 1]
+  kernels   --net resnet18 --device aurora [--count 2]
+  fig3      [--training] [--calibrate]
+  train-mlp [--steps 20] [--batch 16]
+  deploy    [--out DIR]
+  serve     [--bundle DIR] [--requests 16]";
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest: Vec<String> = args.iter().skip(1).cloned().collect();
+    let (flags, _pos) = parse_flags(&rest);
+    match cmd {
+        "devices" => cmd_devices(),
+        "optimize" => cmd_optimize(&flags)?,
+        "kernels" => cmd_kernels(&flags)?,
+        "fig3" => cmd_fig3(&flags)?,
+        "train-mlp" => cmd_train_mlp(&flags)?,
+        "deploy" => cmd_deploy(&flags)?,
+        "serve" => cmd_serve(&flags)?,
+        "effort" => cmd_effort(),
+        _ => println!("{HELP}"),
+    }
+    Ok(())
+}

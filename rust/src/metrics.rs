@@ -1,0 +1,85 @@
+//! Lightweight timing + table-formatting helpers shared by the CLI,
+//! examples and benches.
+
+use std::time::Instant;
+
+/// Wall-clock timer.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn us(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e6
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Format a plain-text table: header + rows, column-aligned.
+pub fn format_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let mut out = line(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    out.push('\n');
+    out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&line(row));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.ms() >= 1.0);
+        assert!(t.us() > t.ms()); // µs value numerically larger
+    }
+
+    #[test]
+    fn table_alignment() {
+        let s = format_table(
+            &["net", "ms"],
+            &[
+                vec!["resnet18".into(), "1.5".into()],
+                vec!["vgg16".into(), "10.25".into()],
+            ],
+        );
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[2].contains("resnet18"));
+        // right-aligned numeric column
+        assert!(lines[3].ends_with("10.25"));
+    }
+}

@@ -1,0 +1,91 @@
+//! Optimizing-module assignment (paper §III-A): "For now, we make this
+//! purely heuristically, where all layers except Convolutions and Linears
+//! get implemented using the Depth First Parallelism (DFP) module. ...
+//! There is one exception: if the Convolution is grouped and has as many
+//! groups as output channels ... they get also implemented using the DFP
+//! module, as this boils down to a WeightedPooling layer."
+
+use crate::ir::{Graph, Op};
+
+/// `true` = DFP module, `false` = DNN module, per node.
+/// Input nodes are marked DFP-but-ignored (they generate no code).
+pub fn assign_modules(g: &Graph) -> Vec<bool> {
+    g.nodes
+        .iter()
+        .map(|n| match &n.op {
+            Op::Input => true,
+            op => {
+                let input = n.inputs.first().map(|&i| &g.node(i).meta);
+                match input {
+                    Some(m) => !op.is_dnn_candidate(m),
+                    None => true,
+                }
+            }
+        })
+        .collect()
+}
+
+/// Count of DNN-module nodes (for stats/tests).
+pub fn dnn_node_count(g: &Graph) -> usize {
+    assign_modules(g).iter().filter(|&&dfp| !dfp).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::NetId;
+
+    #[test]
+    fn convs_and_linears_to_dnn_rest_to_dfp() {
+        let mut g = Graph::new("t");
+        let x = g.input_image(1, 8, 8, 8);
+        let c = g.conv(x, 8, 3, 1, 1, 1);
+        let r = g.relu(c);
+        let f = g.flatten(r);
+        let l = g.linear(f, 10);
+        let a = assign_modules(&g);
+        assert!(!a[c] && !a[l], "conv+linear -> DNN");
+        assert!(a[r] && a[f], "relu+flatten -> DFP");
+    }
+
+    #[test]
+    fn depthwise_exception_goes_to_dfp() {
+        let mut g = Graph::new("t");
+        let x = g.input_image(1, 32, 8, 8);
+        let d = g.depthwise(x, 3, 1, 1);
+        let c = g.conv(d, 64, 1, 1, 0, 1);
+        let a = assign_modules(&g);
+        assert!(a[d], "depthwise (WeightedPooling) -> DFP");
+        assert!(!a[c], "pointwise conv -> DNN");
+    }
+
+    #[test]
+    fn mnasnet_mixes_modules() {
+        let g = NetId::Mnasnet1_0.build(1);
+        let a = assign_modules(&g);
+        let dfp_convs = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Conv2d { .. }) && a[n.id])
+            .count();
+        let dnn_convs = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Conv2d { .. }) && !a[n.id])
+            .count();
+        assert!(dfp_convs > 10, "depthwise convs on DFP: {dfp_convs}");
+        assert!(dnn_convs > 10, "dense convs on DNN: {dnn_convs}");
+    }
+
+    #[test]
+    fn vgg_has_no_dfp_convs() {
+        let g = NetId::Vgg16.build(1);
+        let a = assign_modules(&g);
+        for n in &g.nodes {
+            if matches!(n.op, Op::Conv2d { .. }) {
+                assert!(!a[n.id]);
+            }
+        }
+        assert_eq!(dnn_node_count(&g), 13 + 3); // 13 convs + 3 linears
+    }
+}

@@ -1,0 +1,166 @@
+//! High-level mathematical graph optimizations (paper §III-A): "a ReLU
+//! (y = max(x, 0)) followed or preceded by a MaxPooling can be removed
+//! from the graph when the minimum value of the Pooling gets set to 0".
+//! Dropout is likewise elided at inference.
+
+use std::collections::HashMap;
+
+use crate::ir::{Graph, Node, NodeId, Op};
+
+/// Rebuild `g` with ReLU⇄MaxPool pairs elided (pool absorbs the ReLU via
+/// `min_value = 0`) and inference-time Dropout removed.  Returns the new
+/// graph and the number of layers removed.
+pub fn elide_relu_maxpool(g: &Graph) -> (Graph, usize) {
+    let cons = g.consumers();
+    let mut drop: Vec<bool> = vec![false; g.nodes.len()];
+    let mut pool_min_zero: Vec<bool> = vec![false; g.nodes.len()];
+
+    for n in &g.nodes {
+        match n.op {
+            // Dropout is identity at inference
+            Op::Dropout => drop[n.id] = true,
+            // ReLU followed by MaxPool (sole consumer)
+            Op::ReLU => {
+                if cons[n.id].len() == 1 {
+                    let c = cons[n.id][0];
+                    if matches!(g.node(c).op, Op::MaxPool { .. }) {
+                        drop[n.id] = true;
+                        pool_min_zero[c] = true;
+                    }
+                }
+            }
+            // MaxPool followed by ReLU: absorb the *following* ReLU
+            Op::MaxPool { .. } => {
+                if cons[n.id].len() == 1 {
+                    let c = cons[n.id][0];
+                    if matches!(g.node(c).op, Op::ReLU) {
+                        drop[c] = true;
+                        pool_min_zero[n.id] = true;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // rebuild, remapping edges through dropped nodes
+    let mut out = Graph::new(g.name.clone());
+    let mut remap: HashMap<NodeId, NodeId> = HashMap::new();
+    let mut removed = 0;
+    for n in &g.nodes {
+        if drop[n.id] {
+            // dropped node forwards its input
+            let src = remap[&n.inputs[0]];
+            remap.insert(n.id, src);
+            removed += 1;
+            continue;
+        }
+        let mut op = n.op.clone();
+        if pool_min_zero[n.id] {
+            if let Op::MaxPool { ref mut min_value, .. } = op {
+                *min_value = 0.0;
+            }
+        }
+        let inputs: Vec<NodeId> = n.inputs.iter().map(|i| remap[i]).collect();
+        let id = out.nodes.len();
+        out.nodes.push(Node {
+            id,
+            op,
+            inputs,
+            meta: n.meta.clone(),
+            name: n.name.clone(),
+        });
+        remap.insert(n.id, id);
+    }
+    (out, removed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_before_maxpool_elided() {
+        let mut g = Graph::new("t");
+        let x = g.input_image(1, 8, 8, 8);
+        let c = g.conv(x, 8, 3, 1, 1, 1);
+        let r = g.relu(c);
+        let _p = g.max_pool(r, 2, 2, 0);
+        let (e, removed) = elide_relu_maxpool(&g);
+        assert_eq!(removed, 1);
+        assert!(e.nodes.iter().all(|n| !matches!(n.op, Op::ReLU)));
+        let pool = e.nodes.iter().find(|n| matches!(n.op, Op::MaxPool { .. })).unwrap();
+        match pool.op {
+            Op::MaxPool { min_value, .. } => assert_eq!(min_value, 0.0),
+            _ => unreachable!(),
+        }
+        // pool's input is now the conv directly
+        assert!(matches!(e.node(pool.inputs[0]).op, Op::Conv2d { .. }));
+    }
+
+    #[test]
+    fn relu_after_maxpool_elided() {
+        let mut g = Graph::new("t");
+        let x = g.input_image(1, 8, 8, 8);
+        let p = g.max_pool(x, 2, 2, 0);
+        let _r = g.relu(p);
+        let (e, removed) = elide_relu_maxpool(&g);
+        assert_eq!(removed, 1);
+        assert_eq!(e.nodes.len(), 2);
+    }
+
+    #[test]
+    fn lone_relu_kept() {
+        let mut g = Graph::new("t");
+        let x = g.input_image(1, 8, 8, 8);
+        let c = g.conv(x, 8, 3, 1, 1, 1);
+        let _r = g.relu(c);
+        let (e, removed) = elide_relu_maxpool(&g);
+        assert_eq!(removed, 0);
+        assert_eq!(e.nodes.len(), g.nodes.len());
+    }
+
+    #[test]
+    fn relu_with_two_consumers_kept() {
+        let mut g = Graph::new("t");
+        let x = g.input_image(1, 8, 8, 8);
+        let r = g.relu(x);
+        let _p = g.max_pool(r, 2, 2, 0);
+        let _b = g.batch_norm(r); // second consumer of the relu
+        let (_, removed) = elide_relu_maxpool(&g);
+        assert_eq!(removed, 0);
+    }
+
+    #[test]
+    fn dropout_removed_and_edges_rewired() {
+        let mut g = Graph::new("t");
+        let x = g.input_features(1, 64);
+        let l = g.linear(x, 32);
+        let d = g.dropout(l);
+        let _o = g.linear(d, 10);
+        let (e, removed) = elide_relu_maxpool(&g);
+        assert_eq!(removed, 1);
+        let last = e.node(e.output());
+        // final linear now reads the first linear directly
+        assert!(matches!(e.node(last.inputs[0]).op, Op::Linear { .. }));
+    }
+
+    #[test]
+    fn semantics_preserving_flop_count() {
+        // elision removes only zero/low-cost ops: conv flops unchanged
+        let mut g = Graph::new("t");
+        let x = g.input_image(1, 8, 16, 16);
+        let c = g.conv(x, 8, 3, 1, 1, 1);
+        let r = g.relu(c);
+        let _p = g.max_pool(r, 2, 2, 0);
+        let conv_flops = |gr: &Graph| {
+            gr.nodes
+                .iter()
+                .filter(|n| matches!(n.op, Op::Conv2d { .. }))
+                .map(|n| n.op.flops(&gr.node(n.inputs[0]).meta, &n.meta))
+                .sum::<usize>()
+        };
+        let (e, _) = elide_relu_maxpool(&g);
+        assert_eq!(conv_flops(&g), conv_flops(&e));
+    }
+}

@@ -1,0 +1,129 @@
+//! Memory-layout assignment (paper §III-A): give every layer its preferred
+//! layout "while trying to minimize the number of reorder operations".
+//!
+//! DNN-module layers demand the library's blocked/native layout; DFP
+//! regions are layout-polymorphic (purpose-tagged dims make the generated
+//! code layout-independent) and simply adopt whatever their producer
+//! emits, so reorders only appear at DFP↔DNN boundaries where the library
+//! actually requires one.
+
+use crate::devsim::{DeviceKind, DeviceSpec};
+use crate::ir::{Graph, Layout, NodeId, Op};
+
+/// Result of layout assignment.
+#[derive(Debug, Clone)]
+pub struct LayoutPlan {
+    /// Output layout per node.
+    pub per_node: Vec<Layout>,
+    /// Inserted reorders: (before-node, bytes moved).
+    pub reorders: Vec<(NodeId, usize)>,
+}
+
+impl LayoutPlan {
+    pub fn total_reorder_bytes(&self) -> usize {
+        self.reorders.iter().map(|(_, b)| b).sum()
+    }
+}
+
+/// Library-preferred activation layout for a DNN node on `spec`
+/// (e.g. "DNNL prefers blocked memory layouts", §III-A).
+pub fn dnn_preferred_layout(spec: &DeviceSpec) -> Layout {
+    match spec.kind {
+        DeviceKind::Cpu => Layout::BlockedC16, // DNNL blocked, AVX-512 width
+        DeviceKind::Gpu => Layout::Nchw,       // CUDNN f32 native
+        DeviceKind::Vpu => Layout::Nchw,       // VEDNN
+    }
+}
+
+/// Assign layouts for a forward (or backward) pass.  The backward pass may
+/// legitimately pick different layouts (§II-C discussion of Barham&Isard);
+/// here the backward prefers the framework-native NCHW so gradient tensors
+/// interchange with the host optimizer without an extra transform.
+pub fn assign_layouts(g: &Graph, spec: &DeviceSpec, assignments: &[bool], backward: bool) -> LayoutPlan {
+    let lib_layout = if backward { Layout::Nchw } else { dnn_preferred_layout(spec) };
+    let mut per_node: Vec<Layout> = Vec::with_capacity(g.nodes.len());
+    let mut reorders = Vec::new();
+
+    for n in &g.nodes {
+        let out_layout = match &n.op {
+            Op::Input => n.meta.layout,
+            Op::Linear { .. } | Op::Flatten | Op::Softmax => Layout::RowMajor,
+            _ if !n.meta.layout.is_spatial() => n.meta.layout,
+            _ if !assignments[n.id] => {
+                // DNN node: demand the library layout on its (first) input
+                let src = n.inputs[0];
+                let have = per_node[src];
+                if have != lib_layout && have.is_spatial() {
+                    let m = &g.node(src).meta;
+                    reorders.push((n.id, have.reorder_bytes(lib_layout, m.elems(), m.dtype.size())));
+                }
+                lib_layout
+            }
+            _ => {
+                // DFP node: adopt the producer's layout (layout-polymorphic)
+                n.inputs.first().map(|&i| per_node[i]).unwrap_or(n.meta.layout)
+            }
+        };
+        per_node.push(out_layout);
+    }
+    LayoutPlan { per_node, reorders }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devsim::DeviceId;
+    use crate::passes::assign::assign_modules;
+
+    fn conv_chain() -> Graph {
+        let mut g = Graph::new("t");
+        let x = g.input_image(1, 64, 28, 28);
+        let c1 = g.conv(x, 64, 3, 1, 1, 1);
+        let r = g.relu(c1);
+        let c2 = g.conv(r, 64, 3, 1, 1, 1);
+        let _ = g.relu(c2);
+        g
+    }
+
+    #[test]
+    fn one_reorder_into_blocked_then_stable() {
+        let g = conv_chain();
+        let a = assign_modules(&g);
+        let plan = assign_layouts(&g, &DeviceId::Xeon6126.spec(), &a, false);
+        // only the first conv needs a reorder (NCHW input -> blocked);
+        // the relu between convs adopts blocked, so conv2 needs none.
+        assert_eq!(plan.reorders.len(), 1);
+        assert_eq!(plan.per_node[1], Layout::BlockedC16);
+        assert_eq!(plan.per_node[2], Layout::BlockedC16); // relu adopts
+        assert_eq!(plan.per_node[3], Layout::BlockedC16);
+    }
+
+    #[test]
+    fn gpu_native_layout_needs_no_reorders() {
+        let g = conv_chain();
+        let a = assign_modules(&g);
+        let plan = assign_layouts(&g, &DeviceId::TitanV.spec(), &a, false);
+        assert!(plan.reorders.is_empty(), "{:?}", plan.reorders);
+    }
+
+    #[test]
+    fn backward_prefers_framework_layout() {
+        let g = conv_chain();
+        let a = assign_modules(&g);
+        let fwd = assign_layouts(&g, &DeviceId::Xeon6126.spec(), &a, false);
+        let bwd = assign_layouts(&g, &DeviceId::Xeon6126.spec(), &a, true);
+        // fwd uses blocked; bwd stays NCHW -> zero reorders
+        assert!(fwd.total_reorder_bytes() > 0);
+        assert_eq!(bwd.total_reorder_bytes(), 0);
+    }
+
+    #[test]
+    fn linear_goes_row_major() {
+        let mut g = Graph::new("t");
+        let x = g.input_features(4, 128);
+        let l = g.linear(x, 64);
+        let a = assign_modules(&g);
+        let plan = assign_layouts(&g, &DeviceId::Xeon6126.spec(), &a, false);
+        assert_eq!(plan.per_node[l], Layout::RowMajor);
+    }
+}

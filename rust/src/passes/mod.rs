@@ -1,0 +1,22 @@
+//! The SOL compiler pipeline (paper §III-A), triggered by
+//! `sol.optimize(...)`:
+//!
+//! 1. high-level mathematical optimizations on the framework-extracted IR
+//!    ([`elide`]: the ReLU ⇄ MaxPooling elision);
+//! 2. per-device cloning + optimizing-module assignment ([`assign`]:
+//!    heuristic "DFP for everything except Convolutions and Linears,
+//!    depthwise convs back to DFP");
+//! 3. memory-layout selection minimizing reorders ([`layout`]);
+//! 4. per-layer library/algorithm auto-tuning (`dnn::tune`);
+//! 5. kernel-plan generation (`dfp::codegen`) and schedule assembly
+//!    ([`optimizer`]).
+
+pub mod assign;
+pub mod elide;
+pub mod layout;
+pub mod optimizer;
+
+pub use assign::assign_modules;
+pub use elide::elide_relu_maxpool;
+pub use layout::{assign_layouts, LayoutPlan};
+pub use optimizer::{optimize, CompiledKernel, KernelOrigin, OptimizeOptions, OptimizedModel, Step};

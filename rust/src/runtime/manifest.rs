@@ -1,0 +1,195 @@
+//! AOT artifact manifest: entry-point signatures emitted by
+//! `python/compile/aot.py` so the runtime can allocate and validate
+//! buffers without re-deriving shapes from HLO.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::ir::DType;
+use crate::util::Json;
+
+/// One tensor signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Sig {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl Sig {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elems() * self.dtype.size()
+    }
+}
+
+/// One AOT entry point.
+#[derive(Debug, Clone)]
+pub struct EntrySig {
+    pub name: String,
+    pub inputs: Vec<Sig>,
+    pub outputs: Vec<Sig>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub fingerprint: String,
+    pub entries: BTreeMap<String, EntrySig>,
+}
+
+fn parse_sig(j: &Json) -> Result<Sig> {
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("sig missing shape"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dt = j
+        .get("dtype")
+        .and_then(Json::as_str)
+        .and_then(DType::from_manifest)
+        .ok_or_else(|| anyhow!("bad dtype"))?;
+    Ok(Sig { shape, dtype: dt })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let fingerprint = j
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string();
+        let mut entries = BTreeMap::new();
+        let obj = j
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?;
+        for (name, e) in obj {
+            let parse_list = |key: &str| -> Result<Vec<Sig>> {
+                e.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("{name}: missing {key}"))?
+                    .iter()
+                    .map(parse_sig)
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                EntrySig {
+                    name: name.clone(),
+                    inputs: parse_list("inputs")?,
+                    outputs: parse_list("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest { dir, fingerprint, entries })
+    }
+
+    /// Locate the artifacts directory: `$SOL_ARTIFACTS` or `artifacts/`
+    /// relative to the crate root / cwd.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("SOL_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let candidates = [
+            PathBuf::from("artifacts"),
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        ];
+        for c in &candidates {
+            if c.join("manifest.json").exists() {
+                return c.clone();
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySig> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact entry '{name}'"))
+    }
+
+    /// Path of an entry's HLO text file.
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        let p = self.dir.join(format!("{name}.hlo.txt"));
+        if !p.exists() {
+            bail!("missing artifact {p:?} — run `make artifacts`");
+        }
+        Ok(p)
+    }
+
+    /// Entries whose names match a prefix (e.g. all `op_*` baselines).
+    pub fn entries_with_prefix(&self, prefix: &str) -> Vec<&EntrySig> {
+        self.entries
+            .values()
+            .filter(|e| e.name.starts_with(prefix))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art() -> Option<Manifest> {
+        let d = Manifest::default_dir();
+        Manifest::load(d).ok()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(m) = art() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(m.entries.len() >= 30);
+        assert!(!m.fingerprint.is_empty());
+    }
+
+    #[test]
+    fn mlp_signatures() {
+        let Some(m) = art() else { return };
+        let e = m.entry("mlp_train_sol_b64").unwrap();
+        assert_eq!(e.inputs.len(), 8);
+        assert_eq!(e.outputs.len(), 7);
+        assert_eq!(e.inputs[0].shape, vec![8192, 8192]);
+        assert_eq!(e.inputs[7].dtype, DType::I32);
+        assert_eq!(e.outputs[6].shape, Vec::<usize>::new()); // scalar loss
+    }
+
+    #[test]
+    fn hlo_paths_exist_for_all_entries() {
+        let Some(m) = art() else { return };
+        for name in m.entries.keys() {
+            assert!(m.hlo_path(name).is_ok(), "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_entry_errors() {
+        let Some(m) = art() else { return };
+        assert!(m.entry("nope").is_err());
+        assert!(m.hlo_path("nope").is_err());
+    }
+
+    #[test]
+    fn prefix_query() {
+        let Some(m) = art() else { return };
+        let ops = m.entries_with_prefix("op_");
+        assert!(ops.len() >= 10);
+        assert!(ops.iter().all(|e| e.name.starts_with("op_")));
+    }
+}

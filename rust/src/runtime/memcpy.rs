@@ -1,0 +1,158 @@
+//! Transfer gathering + packing (paper §IV-C): "we gather multiple
+//! adjacent memcopies and group them together within our asynchronous
+//! execution queue.  If only a small number of small tensors need to be
+//! transferred, we use the latency-optimized VEoffload memcopy methods.
+//! Otherwise, we use the peak bandwidth optimized VEO-udma library, which
+//! supports packed memcopies so that many small tensors can be packed
+//! into a big data segment."
+
+/// One pending host↔device copy request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transfer {
+    pub bytes: usize,
+    pub to_device: bool,
+}
+
+/// A planned wire operation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TransferPlan {
+    /// Latency-optimized single copy (VEoffload path).
+    Single(Transfer),
+    /// Bandwidth-optimized packed segment (VEO-udma path): many small
+    /// tensors coalesced into one descriptor.
+    Packed { transfers: Vec<Transfer>, total_bytes: usize },
+}
+
+impl TransferPlan {
+    pub fn total_bytes(&self) -> usize {
+        match self {
+            TransferPlan::Single(t) => t.bytes,
+            TransferPlan::Packed { total_bytes, .. } => *total_bytes,
+        }
+    }
+
+    /// Number of link round-trips this plan costs.
+    pub fn descriptor_count(&self) -> usize {
+        1
+    }
+}
+
+/// Tensors below this size are "small" (latency-dominated on PCIe).
+pub const SMALL_TENSOR_BYTES: usize = 256 * 1024;
+/// Pack only when at least this many small tensors are adjacent.
+pub const MIN_PACK_COUNT: usize = 3;
+
+/// Gather a request stream into wire operations.
+///
+/// Adjacent same-direction *small* tensors are packed into one segment;
+/// large tensors (bandwidth-dominated already) go out as singles.
+pub fn plan_transfers(reqs: &[Transfer]) -> Vec<TransferPlan> {
+    let mut plans = Vec::new();
+    let mut run: Vec<Transfer> = Vec::new();
+
+    let flush = |run: &mut Vec<Transfer>, plans: &mut Vec<TransferPlan>| {
+        match run.len() {
+            0 => {}
+            1 => plans.push(TransferPlan::Single(run[0])),
+            n if n < MIN_PACK_COUNT => {
+                for t in run.iter() {
+                    plans.push(TransferPlan::Single(*t));
+                }
+            }
+            _ => {
+                let total = run.iter().map(|t| t.bytes).sum();
+                plans.push(TransferPlan::Packed {
+                    transfers: std::mem::take(run),
+                    total_bytes: total,
+                });
+            }
+        }
+        run.clear();
+    };
+
+    for &t in reqs {
+        let small = t.bytes < SMALL_TENSOR_BYTES;
+        let same_dir = run.first().is_none_or(|r| r.to_device == t.to_device);
+        if small && same_dir {
+            run.push(t);
+        } else {
+            flush(&mut run, &mut plans);
+            if small {
+                run.push(t);
+            } else {
+                plans.push(TransferPlan::Single(t));
+            }
+        }
+    }
+    flush(&mut run, &mut plans);
+    plans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn h2d(bytes: usize) -> Transfer {
+        Transfer { bytes, to_device: true }
+    }
+
+    fn d2h(bytes: usize) -> Transfer {
+        Transfer { bytes, to_device: false }
+    }
+
+    #[test]
+    fn many_small_get_packed() {
+        // a MobileNet-ish parameter set: dozens of small tensors
+        let reqs: Vec<Transfer> = (0..50).map(|_| h2d(4 * 1024)).collect();
+        let plans = plan_transfers(&reqs);
+        assert_eq!(plans.len(), 1);
+        match &plans[0] {
+            TransferPlan::Packed { transfers, total_bytes } => {
+                assert_eq!(transfers.len(), 50);
+                assert_eq!(*total_bytes, 50 * 4 * 1024);
+            }
+            p => panic!("expected packed, got {p:?}"),
+        }
+    }
+
+    #[test]
+    fn large_tensors_stay_single() {
+        let plans = plan_transfers(&[h2d(64 << 20), h2d(64 << 20)]);
+        assert_eq!(plans.len(), 2);
+        assert!(matches!(plans[0], TransferPlan::Single(_)));
+    }
+
+    #[test]
+    fn direction_change_breaks_run() {
+        let reqs = vec![h2d(1024), h2d(1024), h2d(1024), d2h(1024), d2h(1024), d2h(1024)];
+        let plans = plan_transfers(&reqs);
+        assert_eq!(plans.len(), 2);
+        assert!(plans.iter().all(|p| matches!(p, TransferPlan::Packed { .. })));
+    }
+
+    #[test]
+    fn below_min_pack_count_stays_single() {
+        let plans = plan_transfers(&[h2d(1024), h2d(1024)]);
+        assert_eq!(plans.len(), 2);
+        assert!(plans.iter().all(|p| matches!(p, TransferPlan::Single(_))));
+    }
+
+    #[test]
+    fn mixed_stream() {
+        // small small BIG small small small -> [packed? no: 2 singles] BIG [packed 3]
+        let reqs = vec![h2d(1024), h2d(1024), h2d(300 << 20), h2d(1024), h2d(1024), h2d(1024)];
+        let plans = plan_transfers(&reqs);
+        assert_eq!(plans.len(), 4);
+        assert_eq!(plans[3].total_bytes(), 3 * 1024);
+        assert!(matches!(plans[3], TransferPlan::Packed { .. }));
+    }
+
+    #[test]
+    fn byte_conservation() {
+        let reqs: Vec<Transfer> =
+            (0..20).map(|i| h2d(if i % 5 == 0 { 1 << 20 } else { 2048 })).collect();
+        let plans = plan_transfers(&reqs);
+        let total: usize = plans.iter().map(|p| p.total_bytes()).sum();
+        assert_eq!(total, reqs.iter().map(|t| t.bytes).sum::<usize>());
+    }
+}

@@ -1,0 +1,22 @@
+//! The SOL runtime (paper §III-B + §IV-C).
+//!
+//! * [`manifest`] — signatures of the AOT artifacts (`artifacts/manifest.json`).
+//! * [`pjrt`] — the PJRT engine: loads `artifacts/*.hlo.txt` (HLO text →
+//!   `HloModuleProto` → compile) and executes them on the CPU client.
+//!   This is where the L2/L1 computations actually run.
+//! * [`queue`] — the asynchronous execution queue with **virtual
+//!   pointers** (32-bit reference + 32-bit offset) and asynchronous
+//!   malloc/free, rebuilt from §IV-C.
+//! * [`memcpy`] — the transfer gatherer: adjacent small copies are packed
+//!   into one segment (VEO-udma path); large/lone copies take the
+//!   latency-optimized path.
+
+pub mod manifest;
+pub mod memcpy;
+pub mod pjrt;
+pub mod queue;
+
+pub use manifest::{EntrySig, Manifest, Sig};
+pub use memcpy::{plan_transfers, Transfer, TransferPlan};
+pub use pjrt::PjrtEngine;
+pub use queue::{AsyncQueue, QueueStats, VirtualPtr};

@@ -1,0 +1,221 @@
+//! The PJRT engine: lazily compiles HLO-text artifacts and executes them.
+//!
+//! This is the reproduction's *numerics* substrate: every measured
+//! computation (fused SOL graphs, per-op baselines, training steps) runs
+//! through here on the XLA CPU client.  One compiled executable per model
+//! variant, cached for the process lifetime (paper §III-B: "the runtime
+//! component is responsible for loading the optimized kernel functions").
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Manifest, Sig};
+use crate::ir::DType;
+
+/// Host-side tensor value passed to / returned from the engine.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("expected scalar, got {} elems", v.len());
+        }
+        Ok(v[0])
+    }
+}
+
+/// The engine: PJRT CPU client + manifest + executable cache.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    /// compile count (for cache tests)
+    compiles: Mutex<usize>,
+}
+
+impl PjrtEngine {
+    /// Create an engine over the default artifacts directory.
+    pub fn new() -> Result<Self> {
+        Self::with_dir(Manifest::default_dir())
+    }
+
+    pub fn with_dir(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtEngine {
+            client,
+            manifest,
+            executables: Mutex::new(HashMap::new()),
+            compiles: Mutex::new(0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn compile_count(&self) -> usize {
+        *self.compiles.lock().unwrap()
+    }
+
+    /// Fetch (compiling if needed) the executable for `entry`.
+    pub fn load(&self, entry: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.executables.lock().unwrap().get(entry) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.hlo_path(entry)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {entry}"))?,
+        );
+        *self.compiles.lock().unwrap() += 1;
+        self.executables.lock().unwrap().insert(entry.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    fn literal_of(&self, sig: &Sig, t: &HostTensor) -> Result<xla::Literal> {
+        if t.len() != sig.elems() {
+            bail!(
+                "input element count {} != signature {:?} ({})",
+                t.len(),
+                sig.shape,
+                sig.elems()
+            );
+        }
+        let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+        let lit = match (t, sig.dtype) {
+            (HostTensor::F32(v), DType::F32) => xla::Literal::vec1(v),
+            (HostTensor::I32(v), DType::I32) => xla::Literal::vec1(v),
+            (t, dt) => bail!("dtype mismatch: host {t:?} vs manifest {dt:?}"),
+        };
+        Ok(if dims.is_empty() { lit } else { lit.reshape(&dims)? })
+    }
+
+    fn host_of(&self, sig: &Sig, lit: &xla::Literal) -> Result<HostTensor> {
+        Ok(match sig.dtype {
+            DType::I32 => HostTensor::I32(lit.to_vec::<i32>()?),
+            _ => HostTensor::F32(lit.to_vec::<f32>()?),
+        })
+    }
+
+    /// Execute `entry` on host tensors, returning host tensors.
+    ///
+    /// Inputs are validated against the manifest signature; the tuple
+    /// output (AOT lowers with `return_tuple=True`) is decomposed into the
+    /// manifest's output list.
+    pub fn run(&self, entry: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let sig = self.manifest.entry(entry)?.clone();
+        if inputs.len() != sig.inputs.len() {
+            bail!(
+                "{entry}: got {} inputs, signature has {}",
+                inputs.len(),
+                sig.inputs.len()
+            );
+        }
+        let exe = self.load(entry)?;
+        let literals = inputs
+            .iter()
+            .zip(&sig.inputs)
+            .map(|(t, s)| self.literal_of(s, t))
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let buffer = &result[0][0];
+        let tuple = buffer.to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != sig.outputs.len() {
+            bail!(
+                "{entry}: executable returned {} outputs, manifest says {}",
+                parts.len(),
+                sig.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&sig.outputs)
+            .map(|(l, s)| self.host_of(s, l))
+            .collect()
+    }
+
+    /// Convenience: run with all-f32 inputs.
+    pub fn run_f32(&self, entry: &str, inputs: &[Vec<f32>]) -> Result<Vec<HostTensor>> {
+        let h: Vec<HostTensor> = inputs.iter().map(|v| HostTensor::F32(v.clone())).collect();
+        self.run(entry, &h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    fn engine() -> Option<PjrtEngine> {
+        PjrtEngine::new().ok()
+    }
+
+    #[test]
+    fn avgpool_sol_matches_ref_entry() {
+        let Some(e) = engine() else {
+            eprintln!("skipping: no artifacts/PJRT");
+            return;
+        };
+        let mut rng = XorShift::new(3);
+        let x = rng.normal_vec(512 * 130 * 130, 1.0);
+        let sol = e.run_f32("avgpool_sol", &[x.clone()]).unwrap();
+        let rf = e.run_f32("avgpool_ref", &[x]).unwrap();
+        let (a, b) = (sol[0].as_f32().unwrap(), rf[0].as_f32().unwrap());
+        assert_eq!(a.len(), 512 * 128 * 128);
+        for (x, y) in a.iter().zip(b).step_by(977) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn executable_cache_compiles_once() {
+        let Some(e) = engine() else { return };
+        let x = vec![0.5f32; 512 * 130 * 130];
+        e.run_f32("avgpool_sol", &[x.clone()]).unwrap();
+        let c = e.compile_count();
+        e.run_f32("avgpool_sol", &[x]).unwrap();
+        assert_eq!(e.compile_count(), c);
+    }
+
+    #[test]
+    fn input_validation() {
+        let Some(e) = engine() else { return };
+        // wrong arity
+        assert!(e.run_f32("avgpool_sol", &[]).is_err());
+        // wrong element count
+        assert!(e.run_f32("avgpool_sol", &[vec![0.0; 7]]).is_err());
+        // unknown entry
+        assert!(e.run_f32("nope", &[vec![]]).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! In-tree utilities (offline build: no serde/clap/criterion/proptest).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::XorShift;
+pub use stats::BenchStats;

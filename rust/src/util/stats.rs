@@ -1,0 +1,97 @@
+//! Tiny benchmark statistics (criterion is unavailable offline).
+
+use std::time::Instant;
+
+/// Summary statistics over repeated timed runs.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples_ms: Vec<f64>,
+}
+
+impl BenchStats {
+    /// Time `f` for `warmup + samples` iterations, keeping the last `samples`.
+    pub fn measure<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> Self {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut v = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            f();
+            v.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        BenchStats { name: name.to_string(), samples_ms: v }
+    }
+
+    pub fn from_samples(name: &str, samples_ms: Vec<f64>) -> Self {
+        BenchStats { name: name.to_string(), samples_ms }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len().max(1) as f64
+    }
+
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples_ms.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if s.is_empty() {
+            return 0.0;
+        }
+        let mid = s.len() / 2;
+        if s.len() % 2 == 0 {
+            (s[mid - 1] + s[mid]) / 2.0
+        } else {
+            s[mid]
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples_ms.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        let var = self
+            .samples_ms
+            .iter()
+            .map(|x| (x - m) * (x - m))
+            .sum::<f64>()
+            / self.samples_ms.len().max(1) as f64;
+        var.sqrt()
+    }
+
+    /// One formatted row: `name  median±dev ms`.
+    pub fn row(&self) -> String {
+        format!("{:<42} {:>10.3} ms  ±{:>7.3}", self.name, self.median(), self.stddev())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_even_odd() {
+        let b = BenchStats::from_samples("x", vec![1.0, 3.0, 2.0]);
+        assert_eq!(b.median(), 2.0);
+        let b = BenchStats::from_samples("x", vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(b.median(), 2.5);
+    }
+
+    #[test]
+    fn measure_counts() {
+        let mut n = 0;
+        let b = BenchStats::measure("t", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(b.samples_ms.len(), 5);
+        assert!(b.min() >= 0.0);
+    }
+
+    #[test]
+    fn stddev_zero_for_constant() {
+        let b = BenchStats::from_samples("x", vec![2.0; 10]);
+        assert!(b.stddev() < 1e-12);
+        assert_eq!(b.mean(), 2.0);
+    }
+}

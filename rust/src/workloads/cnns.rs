@@ -1,0 +1,442 @@
+//! CNN builders with torchvision-faithful stage configurations.
+//!
+//! All take ImageNet input `[b, 3, 224, 224]` and end in a 1000-class
+//! classifier, matching the paper's TorchVision workloads (§VI-B).
+
+use crate::ir::{Graph, NodeId};
+
+/// conv + bn + relu helper.
+fn cbr(g: &mut Graph, x: NodeId, cout: usize, k: usize, s: usize, p: usize) -> NodeId {
+    let c = g.conv(x, cout, k, s, p, 1);
+    let b = g.batch_norm(c);
+    g.relu(b)
+}
+
+// ---------------------------------------------------------------------------
+// VGG
+// ---------------------------------------------------------------------------
+
+/// VGG-A/D/E family: `convs_per_stage` 3x3 convs (+ReLU) per stage, then
+/// 2x2 maxpool; classifier 4096-4096-1000 with dropout.
+pub fn vgg(b: usize, convs_per_stage: &[usize], name: &str) -> Graph {
+    let chans = [64, 128, 256, 512, 512];
+    let mut g = Graph::new(name);
+    let mut x = g.input_image(b, 3, 224, 224);
+    for (stage, &n) in convs_per_stage.iter().enumerate() {
+        for _ in 0..n {
+            x = g.conv(x, chans[stage], 3, 1, 1, 1);
+            x = g.relu(x);
+        }
+        x = g.max_pool(x, 2, 2, 0);
+    }
+    x = g.flatten(x); // 512 * 7 * 7
+    x = g.linear(x, 4096);
+    x = g.relu(x);
+    x = g.dropout(x);
+    x = g.linear(x, 4096);
+    x = g.relu(x);
+    x = g.dropout(x);
+    g.linear(x, 1000);
+    g
+}
+
+// ---------------------------------------------------------------------------
+// ResNet
+// ---------------------------------------------------------------------------
+
+fn resnet_stem(g: &mut Graph, b: usize) -> NodeId {
+    let x = g.input_image(b, 3, 224, 224);
+    let x = cbr(g, x, 64, 7, 2, 3);
+    g.max_pool(x, 3, 2, 1)
+}
+
+fn basic_block(g: &mut Graph, x: NodeId, cout: usize, stride: usize) -> NodeId {
+    let cin = g.node(x).meta.channels();
+    let c1 = g.conv(x, cout, 3, stride, 1, 1);
+    let b1 = g.batch_norm(c1);
+    let r1 = g.relu(b1);
+    let c2 = g.conv(r1, cout, 3, 1, 1, 1);
+    let b2 = g.batch_norm(c2);
+    let short = if stride != 1 || cin != cout {
+        let sc = g.conv(x, cout, 1, stride, 0, 1);
+        g.batch_norm(sc)
+    } else {
+        x
+    };
+    let a = g.add(b2, short);
+    g.relu(a)
+}
+
+fn bottleneck_block(g: &mut Graph, x: NodeId, planes: usize, stride: usize) -> NodeId {
+    let cin = g.node(x).meta.channels();
+    let cout = planes * 4;
+    let c1 = g.conv(x, planes, 1, 1, 0, 1);
+    let b1 = g.batch_norm(c1);
+    let r1 = g.relu(b1);
+    let c2 = g.conv(r1, planes, 3, stride, 1, 1);
+    let b2 = g.batch_norm(c2);
+    let r2 = g.relu(b2);
+    let c3 = g.conv(r2, cout, 1, 1, 0, 1);
+    let b3 = g.batch_norm(c3);
+    let short = if stride != 1 || cin != cout {
+        let sc = g.conv(x, cout, 1, stride, 0, 1);
+        g.batch_norm(sc)
+    } else {
+        x
+    };
+    let a = g.add(b3, short);
+    g.relu(a)
+}
+
+/// ResNet-18/34 shape (BasicBlock).
+pub fn resnet_basic(b: usize, blocks: &[usize; 4], name: &str) -> Graph {
+    let mut g = Graph::new(name);
+    let mut x = resnet_stem(&mut g, b);
+    for (stage, &n) in blocks.iter().enumerate() {
+        let cout = 64 << stage;
+        for i in 0..n {
+            let stride = if stage > 0 && i == 0 { 2 } else { 1 };
+            x = basic_block(&mut g, x, cout, stride);
+        }
+    }
+    let p = g.global_avg_pool(x);
+    let f = g.flatten(p);
+    g.linear(f, 1000);
+    g
+}
+
+/// ResNet-50/101/152 shape (Bottleneck).
+pub fn resnet_bottleneck(b: usize, blocks: &[usize; 4], name: &str) -> Graph {
+    let mut g = Graph::new(name);
+    let mut x = resnet_stem(&mut g, b);
+    for (stage, &n) in blocks.iter().enumerate() {
+        let planes = 64 << stage;
+        for i in 0..n {
+            let stride = if stage > 0 && i == 0 { 2 } else { 1 };
+            x = bottleneck_block(&mut g, x, planes, stride);
+        }
+    }
+    let p = g.global_avg_pool(x);
+    let f = g.flatten(p);
+    g.linear(f, 1000);
+    g
+}
+
+// ---------------------------------------------------------------------------
+// DenseNet
+// ---------------------------------------------------------------------------
+
+/// DenseNet-121/169: dense blocks with bn-relu-conv1x1(4k)-bn-relu-conv3x3(k)
+/// layers, concat-growing features; compressing transitions between blocks.
+pub fn densenet(b: usize, block_layers: &[usize], growth: usize, name: &str) -> Graph {
+    let mut g = Graph::new(name);
+    let x = g.input_image(b, 3, 224, 224);
+    let x = cbr(&mut g, x, 2 * growth, 7, 2, 3);
+    let mut x = g.max_pool(x, 3, 2, 1);
+    for (bi, &layers) in block_layers.iter().enumerate() {
+        // dense block: every layer consumes the concat of all predecessors
+        let mut feats = vec![x];
+        for _ in 0..layers {
+            let cat = if feats.len() == 1 { feats[0] } else { g.concat(&feats) };
+            let b1 = g.batch_norm(cat);
+            let r1 = g.relu(b1);
+            let c1 = g.conv(r1, 4 * growth, 1, 1, 0, 1); // bottleneck
+            let b2 = g.batch_norm(c1);
+            let r2 = g.relu(b2);
+            let c2 = g.conv(r2, growth, 3, 1, 1, 1);
+            feats.push(c2);
+        }
+        x = g.concat(&feats);
+        if bi + 1 < block_layers.len() {
+            // transition: bn + conv1x1 (compress 0.5) + avgpool2
+            let c = g.node(x).meta.channels();
+            let bt = g.batch_norm(x);
+            let rt = g.relu(bt);
+            let ct = g.conv(rt, c / 2, 1, 1, 0, 1);
+            x = g.avg_pool(ct, 2, 2, 0);
+        }
+    }
+    let bf = g.batch_norm(x);
+    let rf = g.relu(bf);
+    let p = g.global_avg_pool(rf);
+    let f = g.flatten(p);
+    g.linear(f, 1000);
+    g
+}
+
+// ---------------------------------------------------------------------------
+// SqueezeNet
+// ---------------------------------------------------------------------------
+
+fn fire(g: &mut Graph, x: NodeId, squeeze: usize, e1: usize, e3: usize) -> NodeId {
+    let s = g.conv(x, squeeze, 1, 1, 0, 1);
+    let s = g.relu(s);
+    let a = g.conv(s, e1, 1, 1, 0, 1);
+    let a = g.relu(a);
+    let b = g.conv(s, e3, 3, 1, 1, 1);
+    let b = g.relu(b);
+    g.concat(&[a, b])
+}
+
+/// SqueezeNet 1.0 / 1.1 (v1_1 moves the pools earlier and shrinks the stem).
+pub fn squeezenet(b: usize, v1_1: bool) -> Graph {
+    let name = if v1_1 { "squeezenet1.1" } else { "squeezenet1.0" };
+    let mut g = Graph::new(name);
+    let x = g.input_image(b, 3, 224, 224);
+    let mut x = if v1_1 {
+        let c = g.conv(x, 64, 3, 2, 0, 1);
+        let r = g.relu(c);
+        g.max_pool(r, 3, 2, 0)
+    } else {
+        let c = g.conv(x, 96, 7, 2, 0, 1);
+        let r = g.relu(c);
+        g.max_pool(r, 3, 2, 0)
+    };
+    if v1_1 {
+        x = fire(&mut g, x, 16, 64, 64);
+        x = fire(&mut g, x, 16, 64, 64);
+        x = g.max_pool(x, 3, 2, 0);
+        x = fire(&mut g, x, 32, 128, 128);
+        x = fire(&mut g, x, 32, 128, 128);
+        x = g.max_pool(x, 3, 2, 0);
+        x = fire(&mut g, x, 48, 192, 192);
+        x = fire(&mut g, x, 48, 192, 192);
+        x = fire(&mut g, x, 64, 256, 256);
+        x = fire(&mut g, x, 64, 256, 256);
+    } else {
+        x = fire(&mut g, x, 16, 64, 64);
+        x = fire(&mut g, x, 16, 64, 64);
+        x = fire(&mut g, x, 32, 128, 128);
+        x = g.max_pool(x, 3, 2, 0);
+        x = fire(&mut g, x, 32, 128, 128);
+        x = fire(&mut g, x, 48, 192, 192);
+        x = fire(&mut g, x, 48, 192, 192);
+        x = fire(&mut g, x, 64, 256, 256);
+        x = g.max_pool(x, 3, 2, 0);
+        x = fire(&mut g, x, 64, 256, 256);
+    }
+    x = g.dropout(x);
+    // classifier: conv1x1 to 1000, relu, global pool
+    let c = g.conv(x, 1000, 1, 1, 0, 1);
+    let r = g.relu(c);
+    let p = g.global_avg_pool(r);
+    g.flatten(p);
+    g
+}
+
+// ---------------------------------------------------------------------------
+// ShuffleNet V2
+// ---------------------------------------------------------------------------
+
+fn shuffle_unit(g: &mut Graph, x: NodeId, cout: usize, downsample: bool) -> NodeId {
+    let cin = g.node(x).meta.channels();
+    let branch = cout / 2;
+    if downsample {
+        // both branches see the full input
+        // branch 1: dw3x3/2 + conv1x1
+        let d1 = g.depthwise(x, 3, 2, 1);
+        let b1 = g.batch_norm(d1);
+        let c1 = g.conv(b1, branch, 1, 1, 0, 1);
+        let b1 = g.batch_norm(c1);
+        let r1 = g.relu(b1);
+        // branch 2: conv1x1 + dw3x3/2 + conv1x1
+        let c2 = g.conv(x, branch, 1, 1, 0, 1);
+        let b2 = g.batch_norm(c2);
+        let r2 = g.relu(b2);
+        let d2 = g.depthwise(r2, 3, 2, 1);
+        let b2 = g.batch_norm(d2);
+        let c2 = g.conv(b2, branch, 1, 1, 0, 1);
+        let b2 = g.batch_norm(c2);
+        let r2 = g.relu(b2);
+        let cat = g.concat(&[r1, r2]);
+        g.channel_shuffle(cat, 2)
+    } else {
+        // split: half passes through, half is transformed
+        let keep = g.slice_channels(x, 0, cin / 2);
+        let work = g.slice_channels(x, cin / 2, cin / 2);
+        let c = g.conv(work, branch, 1, 1, 0, 1);
+        let bn = g.batch_norm(c);
+        let r = g.relu(bn);
+        let d = g.depthwise(r, 3, 1, 1);
+        let bn = g.batch_norm(d);
+        let c = g.conv(bn, branch, 1, 1, 0, 1);
+        let bn = g.batch_norm(c);
+        let r = g.relu(bn);
+        let cat = g.concat(&[keep, r]);
+        g.channel_shuffle(cat, 2)
+    }
+}
+
+/// ShuffleNet V2 (x0.5 / x1.0): `chans = [stem, s2, s3, s4, final]`.
+pub fn shufflenet_v2(b: usize, chans: [usize; 5], name: &str) -> Graph {
+    let mut g = Graph::new(name);
+    let x = g.input_image(b, 3, 224, 224);
+    let x = cbr(&mut g, x, chans[0], 3, 2, 1);
+    let mut x = g.max_pool(x, 3, 2, 1);
+    for (stage, &reps) in [4usize, 8, 4].iter().enumerate() {
+        let cout = chans[stage + 1];
+        x = shuffle_unit(&mut g, x, cout, true);
+        for _ in 1..reps {
+            x = shuffle_unit(&mut g, x, cout, false);
+        }
+    }
+    let x = cbr(&mut g, x, chans[4], 1, 1, 0);
+    let p = g.global_avg_pool(x);
+    let f = g.flatten(p);
+    g.linear(f, 1000);
+    g
+}
+
+// ---------------------------------------------------------------------------
+// MNasNet
+// ---------------------------------------------------------------------------
+
+fn mbconv(
+    g: &mut Graph,
+    x: NodeId,
+    cout: usize,
+    expand: usize,
+    k: usize,
+    stride: usize,
+) -> NodeId {
+    let cin = g.node(x).meta.channels();
+    let mid = cin * expand;
+    let mut h = x;
+    if expand != 1 {
+        h = cbr(g, h, mid, 1, 1, 0);
+    }
+    let d = g.depthwise(h, k, stride, k / 2);
+    let bd = g.batch_norm(d);
+    let rd = g.relu(bd);
+    let c = g.conv(rd, cout, 1, 1, 0, 1);
+    let bc = g.batch_norm(c);
+    if stride == 1 && cin == cout {
+        g.add(bc, x)
+    } else {
+        bc
+    }
+}
+
+fn scale_c(c: usize, alpha: f64) -> usize {
+    // round to multiple of 8, like torchvision's _round_to_multiple_of
+    let v = (c as f64 * alpha).max(8.0);
+    let r = ((v / 8.0).round() * 8.0) as usize;
+    if (r as f64) < 0.9 * v {
+        r + 8
+    } else {
+        r
+    }
+}
+
+/// MNasNet (torchvision B1 shape) at depth multiplier `alpha`.
+pub fn mnasnet(b: usize, alpha: f64, name: &str) -> Graph {
+    let mut g = Graph::new(name);
+    let x = g.input_image(b, 3, 224, 224);
+    let c32 = scale_c(32, alpha);
+    let x = cbr(&mut g, x, c32, 3, 2, 1);
+    // separable stem: dw3x3 + conv1x1 -> 16
+    let d = g.depthwise(x, 3, 1, 1);
+    let bd = g.batch_norm(d);
+    let rd = g.relu(bd);
+    let c16 = scale_c(16, alpha);
+    let c = g.conv(rd, c16, 1, 1, 0, 1);
+    let mut x = g.batch_norm(c);
+    // (cout, expand, kernel, stride, repeats) — torchvision MNASNet stacks
+    let cfg: [(usize, usize, usize, usize, usize); 6] = [
+        (24, 3, 3, 2, 3),
+        (40, 3, 5, 2, 3),
+        (80, 6, 5, 2, 3),
+        (96, 6, 3, 1, 2),
+        (192, 6, 5, 2, 4),
+        (320, 6, 3, 1, 1),
+    ];
+    for (cout, t, k, s, n) in cfg {
+        let co = scale_c(cout, alpha);
+        x = mbconv(&mut g, x, co, t, k, s);
+        for _ in 1..n {
+            x = mbconv(&mut g, x, co, t, k, 1);
+        }
+    }
+    // head: conv1x1 1280 (not scaled), pool, fc
+    let x = cbr(&mut g, x, 1280, 1, 1, 0);
+    let p = g.global_avg_pool(x);
+    let f = g.flatten(p);
+    let dr = g.dropout(f);
+    g.linear(dr, 1000);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_structure() {
+        let g = vgg(1, &[2, 2, 3, 3, 3], "vgg16");
+        // 13 convs + 3 linears
+        let convs = g.nodes.iter().filter(|n| n.op.name() == "Conv2d").count();
+        let lins = g.nodes.iter().filter(|n| n.op.name() == "Linear").count();
+        assert_eq!((convs, lins), (13, 3));
+        // features end at 7x7x512
+        let flat = g.nodes.iter().find(|n| n.op.name() == "Flatten").unwrap();
+        assert_eq!(flat.meta.features_extent(), 512 * 7 * 7);
+    }
+
+    #[test]
+    fn resnet18_spatial_ladder() {
+        let g = resnet_basic(1, &[2, 2, 2, 2], "resnet18");
+        // final pre-pool feature map must be 7x7x512
+        let gp = g.nodes.iter().find(|n| n.op.name() == "GlobalAvgPool").unwrap();
+        let inp = &g.nodes[gp.inputs[0]];
+        assert_eq!(inp.meta.spatial(), (7, 7));
+        assert_eq!(inp.meta.channels(), 512);
+    }
+
+    #[test]
+    fn resnet50_channels() {
+        let g = resnet_bottleneck(1, &[3, 4, 6, 3], "resnet50");
+        let gp = g.nodes.iter().find(|n| n.op.name() == "GlobalAvgPool").unwrap();
+        assert_eq!(g.nodes[gp.inputs[0]].meta.channels(), 2048);
+    }
+
+    #[test]
+    fn densenet121_feature_count() {
+        // 64 + 32*(6+12+24+16) compressed at transitions -> 1024 final
+        let g = densenet(1, &[6, 12, 24, 16], 32, "densenet121");
+        let gp = g.nodes.iter().find(|n| n.op.name() == "GlobalAvgPool").unwrap();
+        assert_eq!(g.nodes[gp.inputs[0]].meta.channels(), 1024);
+    }
+
+    #[test]
+    fn shufflenet_has_depthwise_and_shuffle() {
+        let g = shufflenet_v2(1, [24, 48, 96, 192, 1024], "x0.5");
+        let has_shuffle = g.nodes.iter().any(|n| n.op.name() == "ChannelShuffle");
+        let has_dw = g.nodes.iter().any(|n| {
+            matches!(n.op, crate::ir::Op::Conv2d { groups, cout, .. } if groups == cout && groups > 1)
+        });
+        assert!(has_shuffle && has_dw);
+    }
+
+    #[test]
+    fn mnasnet_depthwise_heavy() {
+        let g = mnasnet(1, 1.0, "mnasnet1.0");
+        let dw = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, crate::ir::Op::Conv2d { groups, .. } if groups > 1))
+            .count();
+        assert!(dw >= 16, "expected many depthwise convs, got {dw}");
+    }
+
+    #[test]
+    fn squeezenet_variants_differ() {
+        let a = squeezenet(1, false);
+        let b = squeezenet(1, true);
+        // 1.1 is cheaper (that was its whole point)
+        assert!(b.flops() < a.flops() / 2);
+        // but both have ~1.25M params
+        let pa = a.param_count() as f64;
+        let pb = b.param_count() as f64;
+        assert!((pa / pb - 1.0).abs() < 0.1);
+    }
+}

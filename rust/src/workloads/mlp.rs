@@ -1,0 +1,47 @@
+//! The paper's MLP workload: "a 3-layer MLP with 8192 features and a ReLU
+//! activation" (§VI-B) — ~134M parameters, the one network where SOL shows
+//! *no* speedup because it is pure library matmul (§VI-C).
+
+use crate::ir::Graph;
+
+pub const MLP_FEATURES: usize = 8192;
+pub const MLP_CLASSES: usize = 10;
+
+/// 8192 -> 8192 -> 8192 -> 10, ReLU between layers.
+pub fn mlp3(b: usize) -> Graph {
+    let mut g = Graph::new("mlp");
+    let x = g.input_features(b, MLP_FEATURES);
+    let l1 = g.linear(x, MLP_FEATURES);
+    let r1 = g.relu(l1);
+    let l2 = g.linear(r1, MLP_FEATURES);
+    let r2 = g.relu(l2);
+    g.linear(r2, MLP_CLASSES);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn three_linears_two_relus() {
+        let g = mlp3(64);
+        let lins = g.nodes.iter().filter(|n| n.op.name() == "Linear").count();
+        let relus = g.nodes.iter().filter(|n| n.op.name() == "ReLU").count();
+        assert_eq!((lins, relus), (3, 2));
+    }
+
+    #[test]
+    fn flops_scale_with_batch() {
+        let f1 = mlp3(1).flops();
+        let f64_ = mlp3(64).flops();
+        assert_eq!(f64_, 64 * f1);
+    }
+
+    #[test]
+    fn param_count_exact() {
+        let g = mlp3(1);
+        let expect = (8192 * 8192 + 8192) * 2 + 8192 * 10 + 10;
+        assert_eq!(g.param_count(), expect);
+    }
+}

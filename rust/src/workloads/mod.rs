@@ -1,0 +1,195 @@
+//! The evaluation model zoo (paper §VI-B): "Densenet, Resnet, Squeezenet,
+//! VGG, ShuffleNet v2, and MNasNet (two versions each) and a 3-layer MLP
+//! with 8192 features" — thirteen networks, CNN input `[B, 3, 224, 224]`.
+//!
+//! Graphs are built directly in the SOL IR with the torchvision
+//! architectures' channel/stage configurations, so FLOP and parameter
+//! counts land in the right regime for the Fig-3 simulation.
+
+pub mod cnns;
+pub mod mlp;
+
+use crate::ir::Graph;
+
+/// Identifier for one evaluation network.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NetId {
+    Densenet121,
+    Densenet169,
+    Resnet18,
+    Resnet50,
+    Squeezenet1_0,
+    Squeezenet1_1,
+    Vgg16,
+    Vgg19,
+    ShufflenetV2X0_5,
+    ShufflenetV2X1_0,
+    Mnasnet0_5,
+    Mnasnet1_0,
+    Mlp,
+}
+
+impl NetId {
+    /// The full evaluation set, in the paper's Fig-3 ordering.
+    pub const ALL: [NetId; 13] = [
+        NetId::Densenet121,
+        NetId::Densenet169,
+        NetId::Resnet18,
+        NetId::Resnet50,
+        NetId::Squeezenet1_0,
+        NetId::Squeezenet1_1,
+        NetId::Vgg16,
+        NetId::Vgg19,
+        NetId::ShufflenetV2X0_5,
+        NetId::ShufflenetV2X1_0,
+        NetId::Mnasnet0_5,
+        NetId::Mnasnet1_0,
+        NetId::Mlp,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            NetId::Densenet121 => "densenet121",
+            NetId::Densenet169 => "densenet169",
+            NetId::Resnet18 => "resnet18",
+            NetId::Resnet50 => "resnet50",
+            NetId::Squeezenet1_0 => "squeezenet1.0",
+            NetId::Squeezenet1_1 => "squeezenet1.1",
+            NetId::Vgg16 => "vgg16",
+            NetId::Vgg19 => "vgg19",
+            NetId::ShufflenetV2X0_5 => "shufflenet_v2_x0.5",
+            NetId::ShufflenetV2X1_0 => "shufflenet_v2_x1.0",
+            NetId::Mnasnet0_5 => "mnasnet0.5",
+            NetId::Mnasnet1_0 => "mnasnet1.0",
+            NetId::Mlp => "mlp",
+        }
+    }
+
+    /// §VI-B: ShuffleNet needs 5-D permutations TF-VE 2.1 doesn't support.
+    pub fn supported_by_tfve(self) -> bool {
+        !matches!(self, NetId::ShufflenetV2X0_5 | NetId::ShufflenetV2X1_0)
+    }
+
+    /// Does the net contain depthwise ("WeightedPooling") convolutions?
+    pub fn has_depthwise(self) -> bool {
+        matches!(
+            self,
+            NetId::ShufflenetV2X0_5
+                | NetId::ShufflenetV2X1_0
+                | NetId::Mnasnet0_5
+                | NetId::Mnasnet1_0
+        )
+    }
+
+    /// Paper batch sizes: inference B=1; training B=16 (CNN) / B=64 (MLP).
+    pub fn training_batch(self) -> usize {
+        if self == NetId::Mlp {
+            64
+        } else {
+            16
+        }
+    }
+
+    /// Build the graph at batch size `b`.
+    pub fn build(self, b: usize) -> Graph {
+        match self {
+            NetId::Densenet121 => cnns::densenet(b, &[6, 12, 24, 16], 32, "densenet121"),
+            NetId::Densenet169 => cnns::densenet(b, &[6, 12, 32, 32], 32, "densenet169"),
+            NetId::Resnet18 => cnns::resnet_basic(b, &[2, 2, 2, 2], "resnet18"),
+            NetId::Resnet50 => cnns::resnet_bottleneck(b, &[3, 4, 6, 3], "resnet50"),
+            NetId::Squeezenet1_0 => cnns::squeezenet(b, false),
+            NetId::Squeezenet1_1 => cnns::squeezenet(b, true),
+            NetId::ShufflenetV2X0_5 => {
+                cnns::shufflenet_v2(b, [24, 48, 96, 192, 1024], "shufflenet_v2_x0.5")
+            }
+            NetId::ShufflenetV2X1_0 => {
+                cnns::shufflenet_v2(b, [24, 116, 232, 464, 1024], "shufflenet_v2_x1.0")
+            }
+            NetId::Vgg16 => cnns::vgg(b, &[2, 2, 3, 3, 3], "vgg16"),
+            NetId::Vgg19 => cnns::vgg(b, &[2, 2, 4, 4, 4], "vgg19"),
+            NetId::Mnasnet0_5 => cnns::mnasnet(b, 0.5, "mnasnet0.5"),
+            NetId::Mnasnet1_0 => cnns::mnasnet(b, 1.0, "mnasnet1.0"),
+            NetId::Mlp => mlp::mlp3(b),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_nets_build_at_b1_and_b16() {
+        for id in NetId::ALL {
+            let g1 = id.build(1);
+            assert!(g1.layer_count() > 2, "{}", id.name());
+            let gt = id.build(id.training_batch());
+            assert_eq!(gt.batch(), id.training_batch());
+        }
+    }
+
+    #[test]
+    fn classifier_output_is_1000_classes() {
+        for id in NetId::ALL {
+            let g = id.build(1);
+            let out = g.node(g.output());
+            let f = out.meta.features_extent();
+            let classes = if id == NetId::Mlp { 10 } else { 1000 };
+            assert_eq!(f, classes, "{}: {:?}", id.name(), out.meta.shape());
+        }
+    }
+
+    /// Parameter counts should be within ~25% of the torchvision models —
+    /// close enough that FLOP/byte simulation lands in the right regime.
+    #[test]
+    fn param_counts_near_torchvision() {
+        let expect: &[(NetId, f64)] = &[
+            (NetId::Densenet121, 7.98e6),
+            (NetId::Densenet169, 14.15e6),
+            (NetId::Resnet18, 11.69e6),
+            (NetId::Resnet50, 25.56e6),
+            (NetId::Squeezenet1_0, 1.25e6),
+            (NetId::Squeezenet1_1, 1.24e6),
+            (NetId::Vgg16, 138.36e6),
+            (NetId::Vgg19, 143.67e6),
+            (NetId::ShufflenetV2X0_5, 1.37e6),
+            (NetId::ShufflenetV2X1_0, 2.28e6),
+            (NetId::Mnasnet0_5, 2.22e6),
+            (NetId::Mnasnet1_0, 4.38e6),
+        ];
+        for (id, want) in expect {
+            let got = id.build(1).param_count() as f64;
+            let rel = (got - want).abs() / want;
+            assert!(
+                rel < 0.25,
+                "{}: {} params vs torchvision {} ({:.0}% off)",
+                id.name(),
+                got,
+                want,
+                rel * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn mlp_is_paper_scale() {
+        // 3-layer, 8192 features: ~134M params.
+        let g = NetId::Mlp.build(64);
+        let p = g.param_count() as f64;
+        assert!(p > 1.3e8 && p < 1.4e8, "{p}");
+    }
+
+    #[test]
+    fn vgg_flops_regime() {
+        // VGG16 @ 224 is ~15.5 GMAC = ~31 GFLOP.
+        let g = NetId::Vgg16.build(1);
+        let gf = g.flops() as f64 / 1e9;
+        assert!(gf > 20.0 && gf < 40.0, "vgg16 {gf} GFLOP");
+    }
+
+    #[test]
+    fn tfve_shufflenet_gap() {
+        assert!(!NetId::ShufflenetV2X0_5.supported_by_tfve());
+        assert!(NetId::Resnet18.supported_by_tfve());
+    }
+}

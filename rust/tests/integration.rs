@@ -1,0 +1,238 @@
+//! Cross-layer integration tests: the rust coordinator driving real PJRT
+//! executions of the AOT artifacts (L1 Pallas kernels inside L2 jax
+//! graphs), plus whole-stack frontend flows.
+//!
+//! These tests need `make artifacts` to have run; they skip (with a
+//! message) when the artifacts are absent so `cargo test` stays green in
+//! a fresh checkout.
+
+use sol::devsim::DeviceId;
+use sol::framework::{install_default, Module, Tensor};
+use sol::frontend::{install_native_backend, SolModel, TransparentOffload};
+use sol::passes::OptimizeOptions;
+use sol::runtime::pjrt::{HostTensor, PjrtEngine};
+use sol::util::XorShift;
+
+fn engine() -> Option<PjrtEngine> {
+    match PjrtEngine::new() {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("skipping PJRT test: {e}");
+            None
+        }
+    }
+}
+
+fn close(a: &[f32], b: &[f32], tol: f32) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+            "elem {i}: {x} vs {y}"
+        );
+    }
+}
+
+/// The SOL-fused conv block and the stock per-op chain must agree:
+/// fused pallas kernel vs conv->bias_relu->maxpool as separate executables.
+#[test]
+fn fused_conv_site_matches_per_op_chain() {
+    let Some(e) = engine() else { return };
+    let mut rng = XorShift::new(21);
+    let x = rng.normal_vec(58 * 58 * 64, 0.1);
+    let w = rng.normal_vec(3 * 3 * 64 * 64, 0.1);
+    let b = rng.normal_vec(64, 0.1);
+
+    let fused = e.run_f32("conv_site_sol_b1", &[x.clone(), w.clone(), b.clone()]).unwrap();
+
+    let conv = e.run_f32("op_conv3x3_cb_b1", &[x, w]).unwrap();
+    let br = e
+        .run_f32("op_bias_relu_cb_b1", &[conv[0].as_f32().unwrap().to_vec(), b])
+        .unwrap();
+    let pool = e
+        .run_f32("op_maxpool_cb_b1", &[br[0].as_f32().unwrap().to_vec()])
+        .unwrap();
+
+    close(fused[0].as_f32().unwrap(), pool[0].as_f32().unwrap(), 1e-3);
+}
+
+/// SOL variant == reference variant for every paired artifact we ship.
+#[test]
+fn sol_and_ref_artifacts_agree() {
+    let Some(e) = engine() else { return };
+    let mut rng = XorShift::new(22);
+    for (sol_e, shapes) in [
+        ("dw_site_sol_b1", vec![vec![1usize, 58, 58, 128], vec![3, 3, 128], vec![128]]),
+        ("avgpool_sol", vec![vec![512, 130, 130]]),
+    ] {
+        let ref_e = sol_e.replace("_sol", "_ref");
+        let inputs: Vec<Vec<f32>> = shapes
+            .iter()
+            .map(|s| rng.normal_vec(s.iter().product(), 0.2))
+            .collect();
+        let a = e.run_f32(sol_e, &inputs).unwrap();
+        let b = e.run_f32(&ref_e, &inputs).unwrap();
+        close(a[0].as_f32().unwrap(), b[0].as_f32().unwrap(), 1e-3);
+    }
+}
+
+/// Full CNN inference: the DFP-fused graph equals the reference graph.
+#[test]
+fn cnn_infer_sol_matches_ref() {
+    let Some(e) = engine() else { return };
+    let mut rng = XorShift::new(23);
+    let shapes: Vec<Vec<usize>> = vec![
+        vec![3, 3, 3, 32], vec![32], vec![3, 3, 32, 64], vec![64],
+        vec![4096, 256], vec![256], vec![256, 10], vec![10],
+        vec![1, 32, 32, 3],
+    ];
+    let inputs: Vec<Vec<f32>> =
+        shapes.iter().map(|s| rng.normal_vec(s.iter().product(), 0.1)).collect();
+    let a = e.run_f32("cnn_infer_sol_b1", &inputs).unwrap();
+    let b = e.run_f32("cnn_infer_ref_b1", &inputs).unwrap();
+    close(a[0].as_f32().unwrap(), b[0].as_f32().unwrap(), 2e-3);
+}
+
+/// One SOL training step == one reference training step (params + loss),
+/// despite the different forward implementation (custom_vjp fused fwd).
+#[test]
+fn cnn_train_step_sol_matches_ref() {
+    let Some(e) = engine() else { return };
+    let mut rng = XorShift::new(24);
+    let shapes: Vec<Vec<usize>> = vec![
+        vec![3, 3, 3, 32], vec![32], vec![3, 3, 32, 64], vec![64],
+        vec![4096, 256], vec![256], vec![256, 10], vec![10],
+    ];
+    let mut inputs: Vec<HostTensor> = shapes
+        .iter()
+        .map(|s| HostTensor::F32(rng.normal_vec(s.iter().product(), 0.05)))
+        .collect();
+    inputs.push(HostTensor::F32(rng.normal_vec(32 * 32 * 32 * 3, 0.5)));
+    inputs.push(HostTensor::I32((0..32).map(|i| i % 10).collect()));
+
+    let a = e.run("cnn_train_sol_b32", &inputs).unwrap();
+    let b = e.run("cnn_train_ref_b32", &inputs).unwrap();
+    assert_eq!(a.len(), 9); // 8 updated params + loss
+    for (x, y) in a.iter().zip(&b) {
+        close(x.as_f32().unwrap(), y.as_f32().unwrap(), 5e-3);
+    }
+}
+
+/// MLP training through PJRT actually learns on a separable problem.
+#[test]
+fn mlp_training_loss_decreases() {
+    let Some(e) = engine() else { return };
+    let entry = "mlp_train_sol_b16";
+    let sig = e.manifest.entry(entry).unwrap().clone();
+    let mut rng = XorShift::new(25);
+    let mut params: Vec<HostTensor> = sig.inputs[..6]
+        .iter()
+        .map(|s| {
+            let scale = if s.shape.len() == 2 { 0.01 } else { 0.0 };
+            HostTensor::F32(rng.normal_vec(s.elems(), scale))
+        })
+        .collect();
+    let mut losses = Vec::new();
+    for _ in 0..4 {
+        let labels: Vec<i32> = (0..16).map(|i| i % 10).collect();
+        let mut x = rng.normal_vec(16 * 8192, 0.1);
+        for (i, &l) in labels.iter().enumerate() {
+            for j in 0..64 {
+                x[i * 8192 + (l as usize) * 64 + j] += 1.0;
+            }
+        }
+        let mut inputs = params.clone();
+        inputs.push(HostTensor::F32(x));
+        inputs.push(HostTensor::I32(labels));
+        let mut out = e.run(entry, &inputs).unwrap();
+        losses.push(out.pop().unwrap().scalar_f32().unwrap());
+        params = out;
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "{losses:?}"
+    );
+}
+
+/// Whole-stack transparent offloading on an extracted framework model,
+/// with numerics checked against the framework's own execution.
+#[test]
+fn transparent_offload_full_stack() {
+    let py_model = Module::Sequential(vec![
+        Module::conv2d(3, 8, 3, 1, 1, 31),
+        Module::ReLU,
+        Module::MaxPool2d { k: 2, stride: 2, pad: 0 },
+        Module::Flatten,
+        Module::linear(8 * 8 * 8, 10, 32),
+    ]);
+    let reg = install_default();
+    let x = Tensor::randn(&[1, 3, 16, 16], 33, 0.5);
+    let want = py_model.forward(&reg, &x).unwrap().to_f32().unwrap();
+
+    let sol = SolModel::optimize(
+        &py_model,
+        &[1, 3, 16, 16],
+        "it",
+        &OptimizeOptions::new(DeviceId::AuroraVE10B),
+    )
+    .unwrap();
+    let mut to = TransparentOffload::set_device(DeviceId::AuroraVE10B);
+    let got = to.forward(&sol, &x).unwrap().to_f32().unwrap();
+    close(&want, &got, 1e-4);
+    assert_eq!(to.param_uploads, 1);
+}
+
+/// Native offloading: a DenseNet-style block runs on hip:0 through the
+/// unmodified framework dispatcher.
+#[test]
+fn native_offload_dense_block() {
+    let mut reg = install_default();
+    let be = install_native_backend(&mut reg).unwrap();
+    let m = Module::Sequential(vec![
+        Module::DenseBlock(vec![
+            Module::conv2d(4, 4, 3, 1, 1, 41),
+            Module::conv2d(8, 4, 3, 1, 1, 42),
+        ]),
+        Module::ReLU,
+        Module::GlobalAvgPool,
+    ]);
+    let x = Tensor::randn(&[2, 4, 8, 8], 43, 0.5);
+    let want = m.forward(&reg, &x).unwrap().to_f32().unwrap();
+    let got = be
+        .to_host(&m.forward(&reg, &be.to_device(&x).unwrap()).unwrap())
+        .unwrap()
+        .to_f32()
+        .unwrap();
+    close(&want, &got, 1e-5);
+}
+
+/// The deployment bundle serves real PJRT inference with zero framework
+/// involvement.
+#[test]
+fn deployment_bundle_serves() {
+    let Ok(manifest) =
+        sol::runtime::manifest::Manifest::load(sol::runtime::manifest::Manifest::default_dir())
+    else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    use sol::passes::optimize;
+    use sol::workloads::NetId;
+    let model = optimize(&NetId::Squeezenet1_1.build(1), &OptimizeOptions::new(DeviceId::Xeon6126));
+    let dir = std::env::temp_dir().join(format!("sol_it_bundle_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    sol::deploy::write_bundle(&model, &["cnn_infer_sol_b1"], &manifest, &dir).unwrap();
+    let dep = sol::deploy::DeployedModel::load(&dir).unwrap();
+    let mut rng = XorShift::new(55);
+    let mut inputs: Vec<Vec<f32>> = [
+        vec![3usize, 3, 3, 32], vec![32], vec![3, 3, 32, 64], vec![64],
+        vec![4096, 256], vec![256], vec![256, 10], vec![10],
+    ]
+    .iter()
+    .map(|s| rng.normal_vec(s.iter().product(), 0.1))
+    .collect();
+    inputs.push(rng.normal_vec(32 * 32 * 3, 1.0));
+    let out = dep.run_f32("cnn_infer_sol_b1", &inputs).unwrap();
+    assert_eq!(out[0].as_f32().unwrap().len(), 10);
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,287 @@
+//! Property-based tests over coordinator invariants (in-tree harness: the
+//! offline build has no proptest crate; `sol::util::XorShift` drives the
+//! generation, failures print the seed for reproduction).
+
+use sol::devsim::{DeviceId, DeviceMemory, EfficiencyTable};
+use sol::framework::{install_default, Module, Tensor};
+use sol::frontend::SolModel;
+use sol::ir::Graph;
+use sol::passes::{elide_relu_maxpool, optimize, OptimizeOptions};
+use sol::runtime::memcpy::{plan_transfers, Transfer, TransferPlan};
+use sol::runtime::queue::{AsyncQueue, VirtualPtr};
+use sol::util::{Json, XorShift};
+
+const CASES: usize = 40;
+
+/// Random small CNN as both a framework module and its input shape.
+fn random_module(rng: &mut XorShift) -> (Module, Vec<usize>) {
+    let c0 = *rng.pick(&[1usize, 2, 3]);
+    let hw = *rng.pick(&[8usize, 12, 16]);
+    let mut layers = Vec::new();
+    let mut c = c0;
+    let mut size = hw;
+    let depth = rng.range(1, 4);
+    for li in 0..depth {
+        let cout = *rng.pick(&[4usize, 6, 8]);
+        layers.push(Module::conv2d(c, cout, 3, 1, 1, 100 + li as u64));
+        c = cout;
+        match rng.below(3) {
+            0 => layers.push(Module::ReLU),
+            1 => {
+                layers.push(Module::batch_norm(c));
+                layers.push(Module::ReLU);
+            }
+            _ => {}
+        }
+        if size >= 8 && rng.below(2) == 0 {
+            layers.push(Module::MaxPool2d { k: 2, stride: 2, pad: 0 });
+            size /= 2;
+        }
+    }
+    layers.push(Module::Flatten);
+    layers.push(Module::linear(c * size * size, 5, 7));
+    (Module::Sequential(layers), vec![1, c0, hw, hw])
+}
+
+/// PROPERTY: for any architecture, SolModel::forward == framework forward.
+#[test]
+fn prop_sol_model_equals_framework() {
+    let reg = install_default();
+    for seed in 0..CASES as u64 {
+        let mut rng = XorShift::new(seed);
+        let (m, shape) = random_module(&mut rng);
+        let x = Tensor::randn(&shape, seed + 999, 0.5);
+        let want = m.forward(&reg, &x).unwrap().to_f32().unwrap();
+        for dev in [DeviceId::Xeon6126, DeviceId::AuroraVE10B] {
+            let sol =
+                SolModel::optimize(&m, &shape, "prop", &OptimizeOptions::new(dev)).unwrap();
+            let got = sol.forward(&x).unwrap().to_f32().unwrap();
+            for (a, b) in want.iter().zip(&got) {
+                assert!((a - b).abs() < 1e-4, "seed {seed} dev {dev:?}: {a} vs {b}");
+            }
+        }
+    }
+}
+
+/// PROPERTY: elision never changes parameter count, conv FLOPs, or output
+/// shape, and never *adds* layers.
+#[test]
+fn prop_elision_invariants() {
+    for seed in 0..CASES as u64 {
+        let mut rng = XorShift::new(seed + 500);
+        let g = random_graph(&mut rng);
+        let (e, removed) = elide_relu_maxpool(&g);
+        assert_eq!(g.param_count(), e.param_count(), "seed {seed}");
+        assert_eq!(e.nodes.len() + removed, g.nodes.len(), "seed {seed}");
+        assert_eq!(
+            g.node(g.output()).meta.shape(),
+            e.node(e.output()).meta.shape(),
+            "seed {seed}"
+        );
+    }
+}
+
+fn random_graph(rng: &mut XorShift) -> Graph {
+    let mut g = Graph::new("prop");
+    let mut x = g.input_image(*rng.pick(&[1usize, 2]), *rng.pick(&[3usize, 8]), 16, 16);
+    for _ in 0..rng.range(2, 8) {
+        x = match rng.below(6) {
+            0 => g.conv(x, *rng.pick(&[4usize, 8, 16]), 3, 1, 1, 1),
+            1 => g.relu(x),
+            2 => g.batch_norm(x),
+            3 if g.node(x).meta.spatial().0 >= 4 => g.max_pool(x, 2, 2, 0),
+            4 => g.dropout(x),
+            _ => g.relu(x),
+        };
+    }
+    g
+}
+
+/// PROPERTY: the optimizer's schedule covers all compute — effective FLOPs
+/// are positive, no kernel exceeds the whole graph's raw FLOPs, and fusing
+/// never increases HBM traffic.
+#[test]
+fn prop_optimizer_schedule_invariants() {
+    for seed in 0..CASES as u64 {
+        let mut rng = XorShift::new(seed + 900);
+        let g = random_graph(&mut rng);
+        if g.flops() == 0 {
+            continue;
+        }
+        for dev in [DeviceId::Xeon6126, DeviceId::TitanV] {
+            let mut opts = OptimizeOptions::new(dev);
+            let fused = optimize(&g, &opts);
+            opts.enable_fusion = false;
+            let unfused = optimize(&g, &opts);
+            assert!(fused.total_flops() > 0, "seed {seed}");
+            assert!(
+                fused.kernel_count() <= unfused.kernel_count(),
+                "seed {seed}: fusion increased kernel count"
+            );
+            assert!(
+                fused.total_hbm_bytes() <= unfused.total_hbm_bytes(),
+                "seed {seed}: fusion increased traffic"
+            );
+        }
+    }
+}
+
+/// PROPERTY: the transfer planner conserves bytes, preserves direction
+/// within every packed segment, and never packs a large tensor.
+#[test]
+fn prop_memcpy_planner() {
+    for seed in 0..200u64 {
+        let mut rng = XorShift::new(seed + 1300);
+        let reqs: Vec<Transfer> = (0..rng.range(0, 40))
+            .map(|_| Transfer {
+                bytes: *rng.pick(&[64usize, 4096, 100_000, 1 << 20, 600 << 10]),
+                to_device: rng.below(2) == 0,
+            })
+            .collect();
+        let plans = plan_transfers(&reqs);
+        let total: usize = plans.iter().map(|p| p.total_bytes()).sum();
+        assert_eq!(total, reqs.iter().map(|t| t.bytes).sum::<usize>(), "seed {seed}");
+        for p in &plans {
+            if let TransferPlan::Packed { transfers, .. } = p {
+                assert!(transfers.len() >= 3, "seed {seed}: packed too few");
+                let dir = transfers[0].to_device;
+                assert!(transfers.iter().all(|t| t.to_device == dir), "seed {seed}");
+                assert!(
+                    transfers.iter().all(|t| t.bytes < 256 * 1024),
+                    "seed {seed}: large tensor packed"
+                );
+            }
+        }
+    }
+}
+
+/// PROPERTY: DeviceMemory never double-books bytes; used == sum(live);
+/// alloc-after-free reuses space (no unbounded growth under churn).
+#[test]
+fn prop_device_memory_churn() {
+    for seed in 0..60u64 {
+        let mut rng = XorShift::new(seed + 1700);
+        let mut mem = DeviceMemory::new(1 << 22);
+        let mut live: Vec<(u64, u64)> = Vec::new();
+        let mut expected_used = 0u64;
+        for _ in 0..300 {
+            if live.is_empty() || rng.below(5) < 3 {
+                let size = rng.range(1, 60_000) as u64;
+                if let Ok(base) = mem.alloc(size) {
+                    let aligned = size.max(1).next_multiple_of(64);
+                    live.push((base, aligned));
+                    expected_used += aligned;
+                }
+            } else {
+                let idx = rng.below(live.len());
+                let (base, size) = live.swap_remove(idx);
+                mem.free(base).unwrap();
+                expected_used -= size;
+            }
+            assert_eq!(mem.used, expected_used, "seed {seed}");
+        }
+        // no overlap among live regions
+        let mut regions = live.clone();
+        regions.sort();
+        for w in regions.windows(2) {
+            assert!(w[0].0 + w[0].1 <= w[1].0, "seed {seed}: overlap");
+        }
+    }
+}
+
+/// PROPERTY: async queue executes everything exactly once, in order, for
+/// arbitrary interleavings of malloc/free/work/sync.
+#[test]
+fn prop_queue_linearizes() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    for seed in 0..30u64 {
+        let mut rng = XorShift::new(seed + 2100);
+        let q = AsyncQueue::new(1 << 24);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let mut ptrs: Vec<VirtualPtr> = Vec::new();
+        let mut submitted = 0usize;
+        for _ in 0..rng.range(10, 120) {
+            match rng.below(4) {
+                0 => ptrs.push(q.malloc_async(rng.range(64, 4096) as u64)),
+                1 if !ptrs.is_empty() => {
+                    let p = ptrs.swap_remove(rng.below(ptrs.len()));
+                    q.free_async(p);
+                }
+                2 if !ptrs.is_empty() => {
+                    let p = *rng.pick(&ptrs);
+                    let c = counter.clone();
+                    let expect = submitted;
+                    submitted += 1;
+                    q.submit_with_ptrs(vec![p], move |addrs| {
+                        assert!(!addrs.is_empty());
+                        let prev = c.fetch_add(1, Ordering::SeqCst);
+                        assert_eq!(prev, expect, "out of order");
+                    });
+                }
+                _ => {
+                    let c = counter.clone();
+                    let expect = submitted;
+                    submitted += 1;
+                    q.submit(move || {
+                        let prev = c.fetch_add(1, Ordering::SeqCst);
+                        assert_eq!(prev, expect, "out of order");
+                    });
+                }
+            }
+        }
+        q.sync().unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), submitted, "seed {seed}");
+    }
+}
+
+/// PROPERTY: JSON writer/parser round-trips arbitrary values.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut XorShift, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.below(100000) as f64) - 5000.0),
+            3 => {
+                let n = rng.below(12);
+                Json::Str((0..n).map(|_| *rng.pick(&['a', 'ü', '"', '\\', '\n', 'z'])).collect())
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for seed in 0..300u64 {
+        let mut rng = XorShift::new(seed + 2500);
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(v, back, "seed {seed}");
+    }
+}
+
+/// PROPERTY: cost model is monotone — more flops or more bytes never makes
+/// a kernel faster.
+#[test]
+fn prop_cost_monotone() {
+    let t = EfficiencyTable::default();
+    for seed in 0..200u64 {
+        let mut rng = XorShift::new(seed + 3000);
+        let spec = DeviceId::ALL[rng.below(4)].spec();
+        let class = *rng.pick(&[
+            sol::devsim::KernelClass::LibraryMatmul,
+            sol::devsim::KernelClass::DfpFused,
+            sol::devsim::KernelClass::Elementwise,
+        ]);
+        let f = rng.range(1, 1 << 26);
+        let b = rng.range(1, 1 << 24);
+        let frac = 0.1 + 0.9 * rng.f32() as f64;
+        let base = t.kernel_us(&spec, class, f, b, frac);
+        assert!(t.kernel_us(&spec, class, f * 2, b, frac) >= base, "seed {seed}");
+        assert!(t.kernel_us(&spec, class, f, b * 2, frac) >= base, "seed {seed}");
+    }
+}
