@@ -7,8 +7,8 @@
 use sol::deploy::{write_bundle, DeployedModel};
 use sol::devsim::DeviceId;
 use sol::metrics::Timer;
-use sol::passes::{optimize, OptimizeOptions};
 use sol::runtime::manifest::Manifest;
+use sol::session::Session;
 use sol::util::XorShift;
 use sol::workloads::NetId;
 
@@ -25,7 +25,8 @@ fn cnn_params(rng: &mut XorShift) -> Vec<Vec<f32>> {
 fn main() -> anyhow::Result<()> {
     // ---- build the bundle (the "SOL compiler deployment mode") ---------
     let manifest = Manifest::load(Manifest::default_dir())?;
-    let model = optimize(&NetId::Squeezenet1_1.build(1), &OptimizeOptions::new(DeviceId::Xeon6126));
+    let session = Session::new();
+    let model = session.compile(&NetId::Squeezenet1_1.build(1), DeviceId::Xeon6126);
     let dir = std::env::temp_dir().join("sol_deploy_demo");
     let _ = std::fs::remove_dir_all(&dir);
     write_bundle(&model, &["cnn_infer_sol_b1", "cnn_infer_sol_b32"], &manifest, &dir)?;

@@ -13,15 +13,29 @@
 //! Run: `cargo run --release --example e2e_train_mlp -- [steps] [batch]`
 //! (defaults: 30 steps, batch 16; batch must be one of {16, 64})
 
+use sol::devsim::DeviceId;
 use sol::metrics::Timer;
 use sol::runtime::pjrt::{HostTensor, PjrtEngine};
+use sol::session::Session;
 use sol::util::XorShift;
+use sol::workloads::NetId;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let steps: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(30);
     let batch: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(16);
     let entry = format!("mlp_train_sol_b{batch}");
+
+    // the coordinator's compile view of the same workload: the session
+    // pipeline plans the schedule the PJRT artifact implements
+    let session = Session::new();
+    let plan = session.compile(&NetId::Mlp.build(batch), DeviceId::Xeon6126);
+    println!(
+        "session plan: {} kernels ({} DNN library calls), {:.1} ms simulated autotune",
+        plan.kernel_count(),
+        plan.kernel_count() - plan.dfp_kernel_count(),
+        plan.autotune_us / 1e3
+    );
 
     let engine = PjrtEngine::new()?;
     println!("PJRT platform: {}", engine.platform());

@@ -15,8 +15,20 @@ use sol::framework::dispatcher::Attrs;
 use sol::framework::{install_default, DeviceType, Module, Tensor};
 use sol::framework::allocator::Allocator;
 use sol::frontend::install_native_backend;
+use sol::session::Session;
 
 fn main() -> anyhow::Result<()> {
+    // the session's backend registry resolves which SOL backend squats on
+    // the framework's vacant HIP slot (paper §V-B)
+    let session = Session::new();
+    let squatter = session
+        .registry()
+        .by_framework_slot(DeviceType::Hip)
+        .first()
+        .map(|b| (b.name(), b.device()))
+        .expect("a backend must claim the HIP slot");
+    println!("registry: {} drives {:?} via the hip slot", squatter.0, squatter.1);
+
     // stock framework + SOL's native backend (no framework code changed)
     let mut reg = install_default();
     let backend = install_native_backend(&mut reg)?;

@@ -15,7 +15,7 @@
 use sol::devsim::DeviceId;
 use sol::framework::{install_default, Module, Tensor};
 use sol::frontend::SolModel;
-use sol::passes::OptimizeOptions;
+use sol::session::Session;
 
 fn main() -> anyhow::Result<()> {
     // ---- 1. a normal framework model (PyTorch stand-in) ----------------
@@ -34,12 +34,14 @@ fn main() -> anyhow::Result<()> {
     let reg = install_default();
     let input = Tensor::randn(&[4, 3, 32, 32], 42, 0.5);
 
-    // ---- 2. sol.optimize(py_model) --------------------------------------
-    let sol_model = SolModel::optimize(
+    // ---- 2. sol.optimize(py_model) through a compilation session --------
+    let session = Session::new();
+    let sol_model = SolModel::optimize_in(
+        &session,
         &py_model,
         &[4, 3, 32, 32],
         "quickstart_cnn",
-        &OptimizeOptions::new(DeviceId::Xeon6126),
+        DeviceId::Xeon6126,
     )?;
     println!(
         "optimized: {} framework layers -> {} SOL kernels ({} elided, {} DFP regions)",
@@ -63,12 +65,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- 4. the same model compiles for every device --------------------
     for dev in DeviceId::ALL {
-        let m = SolModel::optimize(
-            &py_model,
-            &[4, 3, 32, 32],
-            "quickstart_cnn",
-            &OptimizeOptions::new(dev),
-        )?;
+        let m = SolModel::optimize_in(&session, &py_model, &[4, 3, 32, 32], "quickstart_cnn", dev)?;
         println!(
             "  {:?}: {} kernels, {:.1} MB traffic",
             dev,
@@ -76,6 +73,14 @@ fn main() -> anyhow::Result<()> {
             m.optimized.total_hbm_bytes() as f64 / 1e6
         );
     }
+    // the CPU artifact was already in the session's compile cache (step 2)
+    println!(
+        "compile cache: {} hits / {} misses over {} artifacts",
+        session.cache().hits(),
+        session.cache().misses(),
+        session.cache().len()
+    );
+    assert!(session.cache().hits() >= 1, "Xeon recompile must hit the cache");
     println!("quickstart OK");
     Ok(())
 }

@@ -12,7 +12,7 @@ use sol::devsim::DeviceId;
 use sol::framework::optim::Sgd;
 use sol::framework::{Module, Tensor};
 use sol::frontend::{SolModel, TransparentOffload};
-use sol::passes::OptimizeOptions;
+use sol::session::Session;
 
 fn main() -> anyhow::Result<()> {
     let py_model = Module::Sequential(vec![
@@ -25,11 +25,13 @@ fn main() -> anyhow::Result<()> {
         Module::Flatten,
         Module::linear(48, 10, 9),
     ]);
-    let sol_model = SolModel::optimize(
+    let session = Session::new();
+    let sol_model = SolModel::optimize_in(
+        &session,
         &py_model,
         &[1, 3, 32, 32],
         "to_demo",
-        &OptimizeOptions::new(DeviceId::AuroraVE10B),
+        DeviceId::AuroraVE10B,
     )?;
 
     // sol.device.set(DEVICE, IDX)

@@ -1,0 +1,64 @@
+//! E8b — compile-cache ablation: compile the same workload N times with
+//! the content-addressed cache on (one `Session`) vs off (a fresh
+//! pipeline per call) and report amortized compile time.
+//!
+//! Extends the E8 compile-time story (paper §III-A: "usually less than
+//! 1 min including the auto-tuning"): under repeated traffic — the same
+//! model (re)deployed across workers, devices, or restarts — SOL pays
+//! the pipeline once per `(graph, device, config)` and serves the rest
+//! from the cache.
+//!
+//! Run: `cargo bench --bench cache_ablation [-- N]`
+
+use sol::devsim::DeviceId;
+use sol::metrics::{format_table, Timer};
+use sol::session::Session;
+use sol::workloads::NetId;
+
+fn main() {
+    let n: usize = std::env::args()
+        .skip(1)
+        .find_map(|a| a.parse().ok())
+        .unwrap_or(32);
+    let nets = [NetId::Resnet18, NetId::Resnet50, NetId::Vgg16, NetId::Mnasnet1_0];
+    let dev = DeviceId::AuroraVE10B;
+
+    println!("compile-cache ablation: {n} compiles per net on {dev:?}\n");
+    let mut rows = Vec::new();
+    for net in nets {
+        let g = net.build(1);
+
+        // --- cache off: every call runs the full pipeline ---
+        let t = Timer::start();
+        for _ in 0..n {
+            let session = Session::new(); // fresh cache each time
+            let _ = session.compile(&g, dev);
+        }
+        let off_ms = t.ms() / n as f64;
+
+        // --- cache on: one session, N compiles, N-1 hits ---
+        let session = Session::new();
+        let t = Timer::start();
+        for _ in 0..n {
+            let _ = session.compile(&g, dev);
+        }
+        let on_ms = t.ms() / n as f64;
+        assert_eq!(session.cache().misses(), 1, "{}: expected one miss", net.name());
+        assert_eq!(session.cache().hits(), (n - 1) as u64);
+
+        rows.push(vec![
+            net.name().to_string(),
+            format!("{off_ms:.3}"),
+            format!("{on_ms:.4}"),
+            format!("{:.0}x", off_ms / on_ms.max(1e-6)),
+            format!("{}/{}", session.cache().hits(), session.cache().misses()),
+        ]);
+    }
+    println!(
+        "{}",
+        format_table(
+            &["net", "cache-off ms/compile", "cache-on ms/compile", "amortized speedup", "hit/miss"],
+            &rows
+        )
+    );
+}

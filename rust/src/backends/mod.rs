@@ -41,15 +41,95 @@ pub trait DeviceBackend {
     }
 }
 
-/// All registered backends.
+/// Lookup-capable backend registry — the session subsystem's index over
+/// the per-device backends (by [`DeviceId`], by name, by framework slot).
+///
+/// Replaces the old flat `all_backends()` vector: adding a device means
+/// registering one more thin backend here, nothing else changes
+/// (the paper's maintainability argument, §IV / SOL 2022).
+pub struct BackendRegistry {
+    backends: Vec<Box<dyn DeviceBackend>>,
+}
+
+impl Default for BackendRegistry {
+    fn default() -> Self {
+        Self::with_defaults()
+    }
+}
+
+impl BackendRegistry {
+    /// An empty registry (tests, custom device sets).
+    pub fn new() -> Self {
+        BackendRegistry { backends: Vec::new() }
+    }
+
+    /// The five shipped backends over the paper's four devices.
+    pub fn with_defaults() -> Self {
+        let mut r = Self::new();
+        r.register(Box::new(x86::X86Backend));
+        r.register(Box::new(arm64::Arm64Backend));
+        r.register(Box::new(nvidia::NvidiaBackend::p4000()));
+        r.register(Box::new(nvidia::NvidiaBackend::titan_v()));
+        r.register(Box::new(aurora::AuroraBackend));
+        r
+    }
+
+    pub fn register(&mut self, backend: Box<dyn DeviceBackend>) {
+        self.backends.push(backend);
+    }
+
+    pub fn len(&self) -> usize {
+        self.backends.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.backends.is_empty()
+    }
+
+    /// All backends, registration order.
+    pub fn iter(&self) -> impl Iterator<Item = &dyn DeviceBackend> {
+        self.backends.iter().map(|b| b.as_ref())
+    }
+
+    /// First backend driving `device` (registration order wins, like a
+    /// dispatcher slot).
+    pub fn by_device(&self, device: DeviceId) -> Option<&dyn DeviceBackend> {
+        self.iter().find(|b| b.device() == device)
+    }
+
+    /// Backend by its `name()` (the paper's §IV subsection names).
+    pub fn by_name(&self, name: &str) -> Option<&dyn DeviceBackend> {
+        self.iter().find(|b| b.name() == name)
+    }
+
+    /// Backends squatting on / serving a given framework device slot.
+    pub fn by_framework_slot(&self, slot: DeviceType) -> Vec<&dyn DeviceBackend> {
+        self.iter().filter(|b| b.framework_slot() == slot).collect()
+    }
+
+    /// The distinct devices covered by this registry (first-seen order,
+    /// independent of where same-device backends were registered).
+    pub fn devices(&self) -> Vec<DeviceId> {
+        let mut devs: Vec<DeviceId> = Vec::new();
+        for b in self.iter() {
+            let d = b.device();
+            if !devs.contains(&d) {
+                devs.push(d);
+            }
+        }
+        devs
+    }
+
+    /// Consume into the flat backend list (legacy shape).
+    pub fn into_backends(self) -> Vec<Box<dyn DeviceBackend>> {
+        self.backends
+    }
+}
+
+/// All registered backends (legacy accessor; thin wrapper over
+/// [`BackendRegistry::with_defaults`]).
 pub fn all_backends() -> Vec<Box<dyn DeviceBackend>> {
-    vec![
-        Box::new(x86::X86Backend),
-        Box::new(arm64::Arm64Backend),
-        Box::new(nvidia::NvidiaBackend::p4000()),
-        Box::new(nvidia::NvidiaBackend::titan_v()),
-        Box::new(aurora::AuroraBackend),
-    ]
+    BackendRegistry::with_defaults().into_backends()
 }
 
 #[cfg(test)]
@@ -82,5 +162,41 @@ mod tests {
             let expect = b.device().spec().is_offload_device();
             assert_eq!(b.needs_transfers(), expect, "{}", b.name());
         }
+    }
+
+    #[test]
+    fn registry_lookup_roundtrips() {
+        let r = BackendRegistry::with_defaults();
+        assert_eq!(r.len(), 5);
+        // name -> backend -> device is consistent
+        for b in r.iter() {
+            let by_name = r.by_name(b.name()).expect("name lookup");
+            assert_eq!(by_name.device(), b.device());
+            assert!(r.by_device(b.device()).is_some(), "device lookup for {}", b.name());
+        }
+        // registration order wins for shared devices: x86 and arm64 both
+        // drive the Xeon model, x86 registered first
+        assert_eq!(r.by_device(DeviceId::Xeon6126).unwrap().name(), "x86");
+        assert!(r.by_name("nonexistent").is_none());
+        assert_eq!(r.devices().len(), 4);
+    }
+
+    #[test]
+    fn devices_distinct_regardless_of_registration_order() {
+        let mut r = BackendRegistry::new();
+        r.register(Box::new(x86::X86Backend));
+        r.register(Box::new(nvidia::NvidiaBackend::p4000()));
+        r.register(Box::new(arm64::Arm64Backend)); // same device as x86, non-adjacent
+        let devs = r.devices();
+        assert_eq!(devs, vec![DeviceId::Xeon6126, DeviceId::QuadroP4000]);
+    }
+
+    #[test]
+    fn hip_slot_resolves_to_aurora_only() {
+        let r = BackendRegistry::with_defaults();
+        let hip = r.by_framework_slot(DeviceType::Hip);
+        assert_eq!(hip.len(), 1);
+        assert_eq!(hip[0].name(), "sx-aurora");
+        assert_eq!(hip[0].device(), DeviceId::AuroraVE10B);
     }
 }

@@ -95,6 +95,28 @@ impl EfficiencyTable {
         self.overrides.insert((kind, class), eff);
     }
 
+    /// Deterministic one-line description of the overrides, used by the
+    /// compile cache to fold the table into its pipeline fingerprint
+    /// (HashMap iteration order is seeded per-instance, so the raw map
+    /// cannot be hashed directly).  Values are encoded via their exact
+    /// f64 bits — rounding here would let distinct calibrated tables
+    /// collide and serve each other stale artifacts.
+    pub fn fingerprint(&self) -> String {
+        let mut items: Vec<String> = self
+            .overrides
+            .iter()
+            .map(|((k, c), e)| {
+                format!(
+                    "{k:?}/{c:?}={:016x}/{:016x}",
+                    e.compute.to_bits(),
+                    e.bandwidth.to_bits()
+                )
+            })
+            .collect();
+        items.sort();
+        items.join(";")
+    }
+
     /// Roofline kernel time in µs (excluding launch overhead).
     ///
     /// `parallel_fraction` scales usable compute: the stock-VEDNN failure

@@ -51,7 +51,7 @@ impl DeviceMemory {
         // best-fit over the free list
         let mut best: Option<usize> = None;
         for (i, r) in self.free.iter().enumerate() {
-            if r.size >= size && best.is_none_or(|b| self.free[b].size > r.size) {
+            if r.size >= size && best.map_or(true, |b| self.free[b].size > r.size) {
                 best = Some(i);
             }
         }

@@ -75,7 +75,7 @@ pub fn autotune_node(
     let pool: Vec<Library> = Library::available(spec.kind)
         .iter()
         .copied()
-        .filter(|l| allow.is_none_or(|a| a.contains(l)))
+        .filter(|l| allow.map_or(true, |a| a.contains(l)))
         .filter(|l| l.supports(&n.op))
         .collect();
 
@@ -84,7 +84,7 @@ pub fn autotune_node(
         let class = lib.kernel_class(&n.op, input);
         for algo in lib.algorithms(&n.op) {
             let est = raw_cost(eff, spec, class, lib, algo, flops, hbm, batch);
-            if best.as_ref().is_none_or(|b| est < b.est_us) {
+            if best.as_ref().map_or(true, |b| est < b.est_us) {
                 best = Some(DnnPlan {
                     node,
                     library: lib,

@@ -1,12 +1,17 @@
 //! The Fig-3 harness: execution time (ms) for every network × device ×
 //! execution mode, inference (B=1) and training (B=16 CNN / B=64 MLP).
+//!
+//! All rows execute through the unified `Session::compile(...)` →
+//! `Session::run(...)` path: one compiled artifact per (net, device)
+//! serves both offload modes, and the baseline drives through the same
+//! [`Executor`](crate::session::Executor) interface as SOL.
 
-use crate::devsim::{DeviceId, EfficiencyTable, SimEngine};
-use crate::passes::{optimize, OptimizeOptions};
+use crate::devsim::{DeviceId, EfficiencyTable};
+use crate::session::{Phase, Session};
 use crate::workloads::NetId;
 
-use super::baseline::{baseline_infer_steps, baseline_train_steps, BaselineKind};
-use super::solrun::{sol_infer_steps, sol_train_steps, OffloadMode};
+use super::baseline::BaselineKind;
+use super::solrun::OffloadMode;
 
 /// Execution mode, in the paper's Fig-3 legend order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -38,51 +43,46 @@ impl Fig3Row {
     }
 }
 
-/// Compute one grid row.
+/// Compute one grid row (convenience: a fresh [`Session`] per row).
 pub fn fig3_row(net: NetId, device: DeviceId, training: bool, eff: &EfficiencyTable) -> Fig3Row {
+    let session = Session::with_eff(eff.clone());
+    fig3_row_in(&session, net, device, training)
+}
+
+/// Compute one grid row through an existing session (shared compile
+/// cache and efficiency table).
+pub fn fig3_row_in(session: &Session, net: NetId, device: DeviceId, training: bool) -> Fig3Row {
     let b = if training { net.training_batch() } else { 1 };
     let g = net.build(b);
+    let phase = if training { Phase::Train } else { Phase::infer() };
 
-    // --- baseline ---
+    // --- baseline: the framework natural to the device (§VI-B) ---
     let kind = BaselineKind::for_device(device);
     let baseline_ms = if kind == BaselineKind::TfVe && !net.supported_by_tfve() {
         None
     } else {
-        // queue semantics per framework (CUDA streams are async)
-        let eng = SimEngine::new(device.spec(), eff.clone(), kind.async_queue(device));
-        let steps = if training {
-            baseline_train_steps(&g, device, kind, eff)
-        } else {
-            baseline_infer_steps(&g, device, kind, eff)
-        };
-        Some(eng.run(&steps).total_ms())
+        let exec = session.baseline_executor(g.clone(), device);
+        Some(session.run(&exec, phase).total_ms())
     };
 
-    // --- SOL (async queue) ---
-    let mut opts = OptimizeOptions::new(device);
-    opts.eff = eff.clone();
-    let model = optimize(&g, &opts);
-    let eng = SimEngine::new(device.spec(), eff.clone(), true);
-    let sol_ms = if training {
-        eng.run(&sol_train_steps(&model, OffloadMode::Native)).total_ms()
-    } else {
-        eng.run(&sol_infer_steps(&model, OffloadMode::Native, false)).total_ms()
-    };
-    let sol_to_ms = if training {
-        eng.run(&sol_train_steps(&model, OffloadMode::Transparent)).total_ms()
-    } else {
-        eng.run(&sol_infer_steps(&model, OffloadMode::Transparent, false)).total_ms()
-    };
+    // --- SOL: one compiled artifact serves both offload modes ---
+    let model = session.compile(&g, device);
+    let sol = session.sol_executor(model.clone(), OffloadMode::Native);
+    let sol_ms = session.run(&sol, phase).total_ms();
+    let sol_to = session.sol_executor(model, OffloadMode::Transparent);
+    let sol_to_ms = session.run(&sol_to, phase).total_ms();
 
     Fig3Row { net, device, training, baseline_ms, sol_ms, sol_to_ms }
 }
 
-/// The whole grid for one phase (inference or training).
+/// The whole grid for one phase (inference or training), through one
+/// shared session.
 pub fn fig3_grid(training: bool, eff: &EfficiencyTable) -> Vec<Fig3Row> {
+    let session = Session::with_eff(eff.clone());
     let mut rows = Vec::new();
     for net in NetId::ALL {
         for dev in DeviceId::ALL {
-            rows.push(fig3_row(net, dev, training, eff));
+            rows.push(fig3_row_in(&session, net, dev, training));
         }
     }
     rows

@@ -9,6 +9,11 @@
 //!   *measured* PJRT runs of the calibration artifacts.
 //! * [`fig3`] — the harness that regenerates Fig. 3 (inference + training
 //!   grids) and the §I headline speedups.
+//!
+//! These modules build *step lists*; the stepping itself is unified
+//! behind [`crate::session::Executor`] (`BaselineExecutor` /
+//! `SolExecutor`), which `fig3`, the examples and `main.rs` drive via
+//! `Session::compile(...)` → `Session::run(...)`.
 
 pub mod baseline;
 pub mod calibrate;
@@ -16,5 +21,5 @@ pub mod fig3;
 pub mod solrun;
 
 pub use baseline::{baseline_infer_steps, baseline_train_steps, BaselineKind};
-pub use fig3::{fig3_row, Fig3Row, Mode};
+pub use fig3::{fig3_grid, fig3_row, fig3_row_in, headline_speedups, Fig3Row, Mode};
 pub use solrun::{sol_infer_steps, sol_train_steps, OffloadMode};

@@ -16,13 +16,16 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::devsim::DeviceId;
 use crate::framework::dispatcher::Attrs;
 use crate::framework::{install_default, Module, OperatorRegistry, Tensor};
 use crate::ir::{Graph, NodeId, Op};
-use crate::passes::{optimize, OptimizeOptions, OptimizedModel};
+use crate::passes::{OptimizeOptions, OptimizedModel};
+use crate::session::{PassManager, PipelineConfig, Session};
 
 use super::extract::{extract_graph, ParamBinding};
 
@@ -32,8 +35,9 @@ pub struct SolModel {
     pub graph: Graph,
     /// Framework parameter tensors, bound per IR node.
     pub params: ParamBinding,
-    /// The compiled schedule for the target device.
-    pub optimized: OptimizedModel,
+    /// The compiled schedule for the target device (shared with the
+    /// session's compile cache when built via [`SolModel::optimize_in`]).
+    pub optimized: Arc<OptimizedModel>,
     /// SOL's private kernel registry ("executed by SOL": these calls do
     /// NOT go through the framework dispatcher).
     kernels: OperatorRegistry,
@@ -42,7 +46,10 @@ pub struct SolModel {
 
 impl SolModel {
     /// `sol.optimize(py_model, ...)` (paper Listing 1): extract, compile,
-    /// inject.
+    /// inject.  Standalone form — compiles through a one-shot pipeline.
+    /// Unlike the infallible `passes::optimize` wrapper, pipeline errors
+    /// (e.g. an over-restricted library pool leaving an op
+    /// unimplementable) surface as `Err` here, not a panic.
     pub fn optimize(
         module: &Module,
         input_shape: &[usize],
@@ -50,7 +57,31 @@ impl SolModel {
         opts: &OptimizeOptions,
     ) -> Result<SolModel> {
         let (graph, params) = extract_graph(module, input_shape, name)?;
-        let optimized = optimize(&graph, opts);
+        let optimized = Arc::new(
+            PassManager::standard(PipelineConfig::from_options(opts)).compile(&graph)?,
+        );
+        Ok(SolModel {
+            graph,
+            params,
+            optimized,
+            kernels: install_default(),
+            calls: AtomicU64::new(0),
+        })
+    }
+
+    /// Session form of `sol.optimize(...)`: extraction feeds the
+    /// session's pass manager through its content-addressed compile
+    /// cache, so re-optimizing a structurally identical model is an O(1)
+    /// lookup sharing the compiled artifact.
+    pub fn optimize_in(
+        session: &Session,
+        module: &Module,
+        input_shape: &[usize],
+        name: &str,
+        device: DeviceId,
+    ) -> Result<SolModel> {
+        let (graph, params) = extract_graph(module, input_shape, name)?;
+        let optimized = session.compile(&graph, device);
         Ok(SolModel {
             graph,
             params,
@@ -269,6 +300,27 @@ mod tests {
         )
         .unwrap();
         assert!(sol.optimized.kernel_count() < sol.graph.layer_count());
+    }
+
+    #[test]
+    fn optimize_in_shares_the_session_cache() {
+        let session = Session::new();
+        let a = SolModel::optimize_in(&session, &mini(), &[1, 3, 16, 16], "a", DeviceId::Xeon6126)
+            .unwrap();
+        let b = SolModel::optimize_in(&session, &mini(), &[1, 3, 16, 16], "b", DeviceId::Xeon6126)
+            .unwrap();
+        // structurally identical modules -> one compile, shared artifact
+        assert_eq!(session.cache().misses(), 1);
+        assert_eq!(session.cache().hits(), 1);
+        assert!(Arc::ptr_eq(&a.optimized, &b.optimized));
+        // content-addressed semantics: the shared artifact keeps the
+        // first-compiled name; per-model labels live on SolModel.graph
+        assert_eq!(b.optimized.net, "a");
+        assert_eq!(b.graph.name, "b");
+        // the shared schedule still executes correctly per model
+        let x = Tensor::randn(&[1, 3, 16, 16], 9, 0.5);
+        let (ya, yb) = (a.forward(&x).unwrap(), b.forward(&x).unwrap());
+        assert_eq!(ya.to_f32().unwrap(), yb.to_f32().unwrap());
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //! [`TensorMeta`] at insertion time, so passes never re-derive shapes.
 
 
+use crate::util::fnv::Fnv64;
+
 use super::layout::Layout;
 use super::node::Op;
 use super::shape::TensorMeta;
@@ -235,6 +237,42 @@ impl Graph {
         self.nodes.iter().filter(|n| !matches!(n.op, Op::Input)).count()
     }
 
+    /// Stable structural fingerprint of the graph: topology (edges),
+    /// per-node operator parameters, shapes, dtypes and layouts.
+    ///
+    /// Node and graph *names* are deliberately excluded, so two
+    /// structurally identical graphs hash equal regardless of how they
+    /// were labelled — this is the compile-cache key ingredient
+    /// (`session::cache`): same network + same batch ⇒ same hash.
+    ///
+    /// The hash is FNV-1a over a canonical byte encoding, so it is stable
+    /// across processes and runs (unlike `std::hash::RandomState`).
+    pub fn structural_hash(&self) -> u64 {
+        use std::fmt::Write as _;
+        const SEP: &[u8] = &[0xff];
+        let mut h = Fnv64::new();
+        h.write_usize(self.nodes.len());
+        for n in &self.nodes {
+            // operator + parameters: the derived Debug encoding is
+            // canonical for these field-only enums, streamed straight
+            // into the hash (no intermediate Strings — this runs on
+            // every compile-cache lookup)
+            let _ = write!(h, "{:?}", n.op);
+            h.write(SEP);
+            h.write_usize(n.inputs.len());
+            for &i in &n.inputs {
+                h.write_usize(i);
+            }
+            for d in &n.meta.dims {
+                let _ = write!(h, "{d:?}");
+                h.write(SEP);
+            }
+            let _ = write!(h, "{:?}/{:?}", n.meta.dtype, n.meta.layout);
+            h.write(SEP);
+        }
+        h.finish()
+    }
+
     /// Batch size of the first input.
     pub fn batch(&self) -> usize {
         self.nodes
@@ -307,6 +345,49 @@ mod tests {
         let x = g.input_image(1, 8, 8, 8);
         let y = g.conv(x, 16, 3, 1, 1, 1);
         g.add(x, y);
+    }
+
+    #[test]
+    fn structural_hash_ignores_names() {
+        let a = tiny_cnn();
+        let mut b = tiny_cnn();
+        b.name = "renamed".into();
+        for n in &mut b.nodes {
+            n.name = format!("other_{}", n.id);
+        }
+        assert_eq!(a.structural_hash(), b.structural_hash());
+    }
+
+    #[test]
+    fn structural_hash_sees_structure() {
+        let a = tiny_cnn();
+        // different batch
+        let mut g = Graph::new("tiny");
+        let x = g.input_image(2, 3, 32, 32);
+        let c = g.conv(x, 16, 3, 1, 1, 1);
+        let r = g.relu(c);
+        let p = g.max_pool(r, 2, 2, 0);
+        let f = g.flatten(p);
+        let l = g.linear(f, 10);
+        g.softmax(l);
+        assert_ne!(a.structural_hash(), g.structural_hash());
+        // different op parameter (stride)
+        let mut s = Graph::new("tiny");
+        let x = s.input_image(1, 3, 32, 32);
+        let c = s.conv(x, 16, 3, 2, 1, 1);
+        let r = s.relu(c);
+        let p = s.max_pool(r, 2, 2, 0);
+        let f = s.flatten(p);
+        let l = s.linear(f, 10);
+        s.softmax(l);
+        assert_ne!(a.structural_hash(), s.structural_hash());
+    }
+
+    #[test]
+    fn structural_hash_is_deterministic() {
+        let h1 = tiny_cnn().structural_hash();
+        let h2 = tiny_cnn().structural_hash();
+        assert_eq!(h1, h2);
     }
 
     #[test]

@@ -4,31 +4,55 @@
 //! without Source Code Changes"* (Nicolas Weber & Felipe Huici, NEC
 //! Laboratories Europe, 2020) as a three-layer rust + JAX + Pallas stack.
 //!
-//! The crate is organized exactly along the paper's architecture (Fig. 2):
+//! ## Module map
 //!
+//! The crate follows the paper's architecture (Fig. 2), with the compile
+//! and dispatch path refactored through the **session subsystem** (see
+//! `docs/architecture.md` for the layering):
+//!
+//! ### Compile-and-dispatch spine
+//! * [`session`] — compilation sessions: the [`session::PassManager`]
+//!   (the compiler pipeline as named, toggleable passes with per-pass
+//!   timing), the content-addressed [`session::CompileCache`] keyed by
+//!   `(graph hash, device, pipeline fingerprint)`, the unified
+//!   [`session::Executor`] engine over baseline and SOL execution, and
+//!   the [`backends::BackendRegistry`] lookup.
 //! * [`ir`] — SOL's graph intermediate representation with purpose-tagged
-//!   dimensions and explicit memory layouts.
-//! * [`passes`] — the SOL compiler: high-level mathematical optimizations,
-//!   per-device cloning, module assignment (DFP vs DNN), layout selection,
-//!   and short auto-tuning.
+//!   dimensions, explicit memory layouts, and stable structural hashing
+//!   (the cache's content address).
+//! * [`passes`] — the classic pass implementations (elision, module
+//!   assignment, layout selection) plus `optimize()`, now a thin
+//!   compatibility wrapper over the pass manager.
+//!
+//! ### Optimizing modules and backends
 //! * [`dfp`] — the Depth-First-Parallelism codegen module (BrainSlug
 //!   lineage): fuses layer chains into single loop nests and maps them
 //!   onto each device's SIMD shape, emitting per-backend kernel plans.
 //! * [`dnn`] — the DNN module: dispatches Convolution/Linear layers to
 //!   (simulated) vendor libraries with descriptor caching and auto-tuning.
-//! * [`backends`] — thin per-device backends: X86, ARM64, NVIDIA, SX-Aurora.
+//! * [`backends`] — thin per-device backends (X86, ARM64, NVIDIA,
+//!   SX-Aurora) indexed by the `BackendRegistry`.
+//!
+//! ### Framework integration (the paper's headline claim)
 //! * [`framework`] — **Torchlet**, the PyTorch stand-in this reproduction
 //!   integrates with *without touching its sources* (enforced by test).
 //! * [`frontend`] — the SOL↔Torchlet frontend: graph extraction, model
 //!   injection, transparent & native offloading.
+//!
+//! ### Execution substrate
 //! * [`devsim`] — device simulator substrate (Table I roofline models).
-//! * [`runtime`] — PJRT runtime executing the AOT-compiled HLO artifacts,
+//! * [`runtime`] — PJRT runtime executing the AOT-compiled artifacts,
 //!   plus the paper's asynchronous execution queue with virtual pointers
 //!   and packed memcopy batching (§IV-C).
-//! * [`exec`] — end-to-end execution paths: stock-framework baseline,
-//!   TF-VE-analog baseline, and SOL native / transparent offloading.
+//! * [`exec`] — step-list builders for each execution structure (stock
+//!   baseline, SOL native/transparent) and the Fig-3 harness, all driven
+//!   through [`session::Executor`].
+//!
+//! ### Evaluation & deployment
 //! * [`workloads`] — the 13-network model zoo of the paper's evaluation.
 //! * [`deploy`] — deployment mode: framework-free inference bundles.
+//! * [`metrics`] — timers, named counters (compile-cache hit/miss,
+//!   per-pass run counts) and table formatting.
 
 pub mod backends;
 pub mod deploy;
@@ -42,11 +66,13 @@ pub mod ir;
 pub mod metrics;
 pub mod passes;
 pub mod runtime;
+pub mod session;
 pub mod util;
 pub mod workloads;
 
 pub use ir::graph::Graph;
 pub use passes::optimizer::{optimize, OptimizeOptions, OptimizedModel};
+pub use session::{PassManager, Phase, PipelineConfig, Session};
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -20,8 +20,9 @@ use sol::devsim::DeviceId;
 use sol::exec::calibrate;
 use sol::exec::fig3::{fig3_grid, headline_speedups};
 use sol::metrics::{format_table, Timer};
-use sol::passes::{optimize, KernelOrigin, OptimizeOptions, Step};
+use sol::passes::{KernelOrigin, Step};
 use sol::runtime::pjrt::{HostTensor, PjrtEngine};
+use sol::session::Session;
 use sol::util::XorShift;
 use sol::workloads::NetId;
 
@@ -96,13 +97,30 @@ fn cmd_optimize(flags: &HashMap<String, String>) -> Result<()> {
     let b: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(1);
     let t = Timer::start();
     let g = net.build(b);
-    let m = optimize(&g, &OptimizeOptions::new(dev));
+    let session = Session::new();
+    let m = session.compile(&g, dev);
     println!(
         "optimized {} for {:?} in {:.1} ms (simulated autotune: {:.1} ms)",
         net.name(),
         dev,
         t.ms(),
         m.autotune_us / 1e3
+    );
+    for r in &m.pass_records {
+        if r.skipped {
+            println!("    pass {:<22} skipped", r.name);
+        } else {
+            println!("    pass {:<22} {:>7.3} ms", r.name, r.ms);
+        }
+    }
+    // a second compile of the same graph is a content-addressed cache hit
+    let t2 = Timer::start();
+    let _ = session.compile(&g, dev);
+    println!(
+        "  recompile: {:.3} ms (cache {} hit / {} miss)",
+        t2.ms(),
+        session.cache().hits(),
+        session.cache().misses()
     );
     println!(
         "  layers: {} -> kernels: {} ({} DFP fused, {} library calls), {} elided",
@@ -143,7 +161,7 @@ fn cmd_kernels(flags: &HashMap<String, String>) -> Result<()> {
     let net = parse_net(flags.get("net").map(String::as_str).unwrap_or("resnet18"))?;
     let dev = parse_device(flags.get("device").map(String::as_str).unwrap_or("aurora"))?;
     let count: usize = flags.get("count").map(|s| s.parse()).transpose()?.unwrap_or(2);
-    let m = optimize(&net.build(1), &OptimizeOptions::new(dev));
+    let m = Session::new().compile(&net.build(1), dev);
     for k in m.kernels().filter(|k| k.source.is_some()).take(count) {
         println!("// ==== {} ({:?}) ====", k.name, k.class);
         println!("{}\n", k.source.as_deref().unwrap());
@@ -240,7 +258,7 @@ fn cmd_deploy(flags: &HashMap<String, String>) -> Result<()> {
     let manifest = sol::runtime::manifest::Manifest::load(
         sol::runtime::manifest::Manifest::default_dir(),
     )?;
-    let m = optimize(&NetId::Mlp.build(1), &OptimizeOptions::new(DeviceId::Xeon6126));
+    let m = Session::new().compile(&NetId::Mlp.build(1), DeviceId::Xeon6126);
     sol::deploy::write_bundle(&m, &["cnn_infer_sol_b1", "cnn_infer_sol_b32"], &manifest, &out)?;
     println!("wrote bundle to {out}");
     Ok(())

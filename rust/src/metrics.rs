@@ -1,7 +1,63 @@
-//! Lightweight timing + table-formatting helpers shared by the CLI,
-//! examples and benches.
+//! Lightweight timing, counters and table-formatting helpers shared by
+//! the CLI, the session subsystem, examples and benches.
+//!
+//! [`counter`] is a process-global named-counter registry; the compile
+//! cache (`session::cache`) publishes its hit/miss totals here so any
+//! layer can observe cache behaviour without holding a `Session`.
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
+
+/// A monotonically increasing named counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+fn registry() -> &'static Mutex<HashMap<String, Arc<Counter>>> {
+    static REGISTRY: OnceLock<Mutex<HashMap<String, Arc<Counter>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Fetch (creating on first use) the process-global counter `name`.
+///
+/// Naming convention: dotted paths, e.g. `compile_cache.hit`,
+/// `pass.elide.runs`.
+///
+/// Each call takes the registry lock; hot paths should resolve once and
+/// hold the returned `Arc` (see `session::CompileCache`).
+pub fn counter(name: &str) -> Arc<Counter> {
+    let mut reg = registry().lock().unwrap();
+    if let Some(c) = reg.get(name) {
+        return c.clone();
+    }
+    let c = Arc::new(Counter::default());
+    reg.insert(name.to_string(), c.clone());
+    c
+}
+
+/// Snapshot of every registered counter, sorted by name.
+pub fn counters_snapshot() -> Vec<(String, u64)> {
+    let reg = registry().lock().unwrap();
+    let mut out: Vec<(String, u64)> =
+        reg.iter().map(|(k, v)| (k.clone(), v.get())).collect();
+    out.sort();
+    out
+}
 
 /// Wall-clock timer.
 pub struct Timer(Instant);
@@ -58,6 +114,20 @@ pub fn format_table(header: &[&str], rows: &[Vec<String>]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn counters_register_and_accumulate() {
+        let c = counter("test.metrics.counter_a");
+        let before = c.get();
+        c.inc();
+        c.add(2);
+        assert_eq!(c.get(), before + 3);
+        // same name -> same counter
+        assert_eq!(counter("test.metrics.counter_a").get(), before + 3);
+        assert!(counters_snapshot()
+            .iter()
+            .any(|(k, _)| k == "test.metrics.counter_a"));
+    }
 
     #[test]
     fn timer_monotonic() {

@@ -1,5 +1,4 @@
-//! The SOL compiler pipeline (paper §III-A), triggered by
-//! `sol.optimize(...)`:
+//! The SOL compiler's pass *implementations* (paper §III-A):
 //!
 //! 1. high-level mathematical optimizations on the framework-extracted IR
 //!    ([`elide`]: the ReLU ⇄ MaxPooling elision);
@@ -8,8 +7,12 @@
 //!    depthwise convs back to DFP");
 //! 3. memory-layout selection minimizing reorders ([`layout`]);
 //! 4. per-layer library/algorithm auto-tuning (`dnn::tune`);
-//! 5. kernel-plan generation (`dfp::codegen`) and schedule assembly
-//!    ([`optimizer`]).
+//! 5. kernel-plan generation (`dfp::codegen`).
+//!
+//! The pipeline that *sequences* these lives in
+//! [`crate::session::pass`] (the `PassManager`) with one named pass per
+//! stage ([`crate::session::stages`]); [`optimizer::optimize`] remains as
+//! the paper-shaped `sol.optimize(...)` compatibility wrapper.
 
 pub mod assign;
 pub mod elide;

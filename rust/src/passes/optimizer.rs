@@ -5,15 +5,20 @@
 //! assignment → executable schedule.  "This entire optimization procedure
 //! requires usually less than 1 min (including the auto-tuning)" — the
 //! compile-time bench (E8) regenerates that claim.
+//!
+//! Since the session refactor the stage logic lives in
+//! [`crate::session::stages`] as named passes; [`optimize`] here is a
+//! thin compatibility wrapper over
+//! [`PassManager`](crate::session::PassManager) and [`OptimizeOptions`]
+//! translates 1:1 into a
+//! [`PipelineConfig`](crate::session::PipelineConfig).
 
 use crate::devsim::{DeviceId, EfficiencyTable, KernelClass};
-use crate::dfp::{self, Flavor, KernelPlan};
-use crate::dnn::{autotune_node, Algorithm, DescriptorCache, DnnPlan, Library};
-use crate::ir::{Graph, Op};
+use crate::dnn::{Algorithm, DescriptorCache, Library};
+use crate::ir::Graph;
+use crate::session::pass::{PassManager, PassRecord, PipelineConfig};
 
-use super::assign::assign_modules;
-use super::elide::elide_relu_maxpool;
-use super::layout::{assign_layouts, LayoutPlan};
+use super::layout::LayoutPlan;
 
 /// Compilation options.
 #[derive(Debug, Clone)]
@@ -85,6 +90,9 @@ pub struct OptimizedModel {
     pub param_bytes: usize,
     pub input_bytes: usize,
     pub output_bytes: usize,
+    /// Per-pass timing/metrics of the pipeline run that produced this
+    /// model (attached by the [`PassManager`]).
+    pub pass_records: Vec<PassRecord>,
 }
 
 impl OptimizedModel {
@@ -113,139 +121,25 @@ impl OptimizedModel {
     }
 }
 
-fn flavor_for(device: DeviceId) -> Flavor {
-    use crate::devsim::DeviceKind;
-    match device.spec().kind {
-        DeviceKind::Cpu => Flavor::Ispc,
-        DeviceKind::Gpu => Flavor::Cuda,
-        DeviceKind::Vpu => Flavor::Ncc,
-    }
-}
-
-/// Run the full pipeline.
+/// Run the full pipeline — a thin wrapper over the session subsystem's
+/// [`PassManager`]: the options convert to a pipeline configuration and
+/// the standard pass sequence runs.  All stage logic lives in
+/// [`crate::session::stages`].
+///
+/// # Panics
+///
+/// Panics if the pipeline cannot produce a complete schedule — a
+/// malformed (non-topological/empty) graph, or an `allow_libs` pool
+/// that leaves a library op unimplementable.  (The pre-session
+/// implementation silently emitted a schedule that *skipped* such
+/// nodes; failing loudly is deliberate.)  Fallible callers should use
+/// [`SolModel::optimize`](crate::frontend::SolModel::optimize) or
+/// [`Session::compile_with`](crate::session::Session::compile_with),
+/// which surface the error instead.
 pub fn optimize(graph: &Graph, opts: &OptimizeOptions) -> OptimizedModel {
-    let spec = opts.device.spec();
-
-    // 1. high-level mathematical optimizations
-    let (g, elided) = if opts.enable_elision {
-        elide_relu_maxpool(graph)
-    } else {
-        (graph.clone(), 0)
-    };
-
-    // 2. module assignment (per-device IR clone happens implicitly: `g`
-    //    is this device's copy)
-    let assignments = assign_modules(&g);
-
-    // 3. DNN auto-tuning per library node
-    let mut descriptor_cache = DescriptorCache::new();
-    let mut autotune_us = 0.0;
-    let mut dnn_plans: Vec<Option<DnnPlan>> = vec![None; g.nodes.len()];
-    for n in &g.nodes {
-        if !assignments[n.id] {
-            if let Some(plan) =
-                autotune_node(&g, n.id, &spec, &opts.eff, opts.allow_libs.as_deref())
-            {
-                // "very short auto-tuning workload": 3 trial runs per candidate
-                autotune_us += 3.0 * plan.est_us;
-                let sig = format!("{}#{}", n.name, plan.library.name());
-                descriptor_cache.get_or_init(&sig, plan.library, plan.algorithm);
-                dnn_plans[n.id] = Some(plan);
-            }
-        }
-    }
-
-    // 4. DFP region fusion + codegen
-    let flavor = flavor_for(opts.device);
-    let regions = if opts.enable_fusion {
-        dfp::fuse_regions(&g, &assignments)
-    } else {
-        // ablation: one region per DFP node
-        g.nodes
-            .iter()
-            .filter(|n| assignments[n.id] && !matches!(n.op, Op::Input))
-            .map(|n| dfp::FusedRegion { nodes: vec![n.id] })
-            .collect()
-    };
-    let dfp_plans: Vec<KernelPlan> =
-        regions.iter().map(|r| dfp::generate(&g, r, flavor)).collect();
-    // region start -> plan index
-    let mut region_at = vec![usize::MAX; g.nodes.len()];
-    for (i, p) in dfp_plans.iter().enumerate() {
-        region_at[p.nodes[0]] = i;
-    }
-
-    // 5. layout assignment
-    let layout = assign_layouts(&g, &spec, &assignments, false);
-    let reorder_before: std::collections::HashMap<usize, usize> =
-        layout.reorders.iter().cloned().collect();
-
-    // 6. schedule assembly in topological order
-    let mut steps = Vec::new();
-    for n in &g.nodes {
-        if let Some(&bytes) = reorder_before.get(&n.id) {
-            steps.push(Step::Reorder { bytes });
-        }
-        if let Some(plan) = &dnn_plans[n.id] {
-            steps.push(Step::Kernel(CompiledKernel {
-                name: format!("sol_dnn_{}", n.name),
-                origin: KernelOrigin::Dnn {
-                    library: plan.library,
-                    algorithm: plan.algorithm,
-                },
-                class: plan.class,
-                flops: plan.flops,
-                hbm_bytes: plan.hbm_bytes,
-                vmem_bytes: 0,
-                parallel_fraction: plan.parallel_fraction,
-                source: None,
-            }));
-        } else if region_at[n.id] != usize::MAX {
-            let p = &dfp_plans[region_at[n.id]];
-            // skip zero-work view regions (slice/flatten-only chains)
-            if p.flops == 0 && p.nodes.iter().all(|&id| {
-                matches!(
-                    g.node(id).op,
-                    Op::Slice { .. } | Op::Flatten | Op::Dropout | Op::Input
-                )
-            }) {
-                continue;
-            }
-            steps.push(Step::Kernel(CompiledKernel {
-                name: p.name.clone(),
-                origin: KernelOrigin::Dfp,
-                class: p.class,
-                flops: p.flops,
-                hbm_bytes: p.hbm_bytes,
-                vmem_bytes: p.vmem_bytes,
-                parallel_fraction: p.parallel_fraction,
-                source: Some(p.source.clone()),
-            }));
-        }
-    }
-
-    let input_bytes: usize = g
-        .nodes
-        .iter()
-        .filter(|n| matches!(n.op, Op::Input))
-        .map(|n| n.meta.bytes())
-        .sum();
-    let output_bytes = g.node(g.output()).meta.bytes();
-    let param_bytes = g.param_count() * 4;
-
-    OptimizedModel {
-        net: g.name.clone(),
-        device: opts.device,
-        graph: g,
-        layout,
-        steps,
-        descriptor_cache,
-        elided_layers: elided,
-        autotune_us,
-        param_bytes,
-        input_bytes,
-        output_bytes,
-    }
+    PassManager::standard(PipelineConfig::from_options(opts))
+        .compile(graph)
+        .expect("pipeline failed (malformed graph or over-restricted library pool)")
 }
 
 #[cfg(test)]

@@ -72,7 +72,7 @@ pub fn plan_transfers(reqs: &[Transfer]) -> Vec<TransferPlan> {
 
     for &t in reqs {
         let small = t.bytes < SMALL_TENSOR_BYTES;
-        let same_dir = run.first().is_none_or(|r| r.to_device == t.to_device);
+        let same_dir = run.first().map_or(true, |r| r.to_device == t.to_device);
         if small && same_dir {
             run.push(t);
         } else {

@@ -1,0 +1,196 @@
+//! Content-addressed compile cache.
+//!
+//! Keyed by `(graph structural hash, device, pipeline fingerprint)`:
+//! repeated `Session::compile` calls for the same network / device /
+//! configuration are O(1) lookups returning the same `Arc`'d artifact —
+//! the prerequisite for serving heavy repeated traffic where the same
+//! model is (re)deployed across many workers.
+//!
+//! Hit/miss totals are kept per-cache *and* published to the process-wide
+//! [`crate::metrics`] registry (`compile_cache.hit` / `compile_cache.miss`).
+//!
+//! Identity is structural: names are not part of the address, so a hit
+//! returns the artifact compiled under the *first* name seen for that
+//! structure (its `net` field included).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::devsim::DeviceId;
+use crate::metrics;
+use crate::passes::optimizer::OptimizedModel;
+
+/// The content address of one compiled artifact.
+///
+/// The graph is addressed by its 64-bit FNV-1a structural hash plus its
+/// node count as a cheap independent check — FNV is not
+/// collision-resistant, and the count catches the easiest accidental
+/// collisions loudly (different-size graphs can never alias).  Full
+/// collision hardening (a second independent hash or stored-input
+/// verification) is listed with the multi-tenant-serving ROADMAP item,
+/// where caches grow large enough for birthday odds to matter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// `Graph::structural_hash()` of the input graph.
+    pub graph: u64,
+    /// Node count of the input graph (collision tripwire).
+    pub nodes: u32,
+    pub device: DeviceId,
+    /// `PipelineConfig::fingerprint()` of the compile configuration.
+    pub pipeline: u64,
+}
+
+impl CacheKey {
+    /// Build the address for `graph` compiled on `device` under the
+    /// configuration with fingerprint `pipeline`.
+    pub fn of(graph: &crate::ir::Graph, device: DeviceId, pipeline: u64) -> CacheKey {
+        CacheKey {
+            graph: graph.structural_hash(),
+            nodes: graph.nodes.len() as u32,
+            device,
+            pipeline,
+        }
+    }
+}
+
+/// Thread-safe content-addressed store of compiled models.
+#[derive(Debug)]
+pub struct CompileCache {
+    map: Mutex<HashMap<CacheKey, Arc<OptimizedModel>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    /// Global metric handles, resolved once so the hit path never touches
+    /// the metrics registry lock.
+    hit_metric: std::sync::Arc<metrics::Counter>,
+    miss_metric: std::sync::Arc<metrics::Counter>,
+}
+
+impl Default for CompileCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CompileCache {
+    pub fn new() -> Self {
+        CompileCache {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            hit_metric: metrics::counter("compile_cache.hit"),
+            miss_metric: metrics::counter("compile_cache.miss"),
+        }
+    }
+
+    /// Look up `key`, compiling via `compile` on a miss.  The closure runs
+    /// outside the map lock, so a slow compile does not block readers of
+    /// other keys (a concurrent same-key miss may compile twice; last
+    /// insert wins, which is harmless for a pure compiler).
+    pub fn get_or_compile<F>(&self, key: CacheKey, compile: F) -> Arc<OptimizedModel>
+    where
+        F: FnOnce() -> OptimizedModel,
+    {
+        match self.try_get_or_compile(key, || Ok(compile())) {
+            Ok(m) => m,
+            Err(never) => unreachable!("infallible compile failed: {never}"),
+        }
+    }
+
+    /// Fallible form of [`CompileCache::get_or_compile`]: a compile error
+    /// propagates to the caller and nothing is cached.
+    pub fn try_get_or_compile<F>(&self, key: CacheKey, compile: F) -> crate::Result<Arc<OptimizedModel>>
+    where
+        F: FnOnce() -> crate::Result<OptimizedModel>,
+    {
+        if let Some(hit) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.hit_metric.inc();
+            return Ok(hit.clone());
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.miss_metric.inc();
+        let model = Arc::new(compile()?);
+        self.map.lock().unwrap().insert(key, model.clone());
+        Ok(model)
+    }
+
+    /// Peek without compiling (no counter updates).
+    pub fn peek(&self, key: &CacheKey) -> Option<Arc<OptimizedModel>> {
+        self.map.lock().unwrap().get(key).cloned()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::pass::{PassManager, PipelineConfig};
+    use crate::workloads::NetId;
+
+    fn compile_resnet() -> OptimizedModel {
+        let cfg = PipelineConfig::new(DeviceId::Xeon6126);
+        PassManager::standard(cfg).compile(&NetId::Resnet18.build(1)).unwrap()
+    }
+
+    #[test]
+    fn second_lookup_is_a_hit_returning_the_same_arc() {
+        let cache = CompileCache::new();
+        let g = NetId::Resnet18.build(1);
+        let key = CacheKey::of(
+            &g,
+            DeviceId::Xeon6126,
+            PipelineConfig::new(DeviceId::Xeon6126).fingerprint(),
+        );
+        let a = cache.get_or_compile(key, compile_resnet);
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        let b = cache.get_or_compile(key, || panic!("must not recompile"));
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_devices_are_distinct_entries() {
+        let cache = CompileCache::new();
+        let g = NetId::Squeezenet1_1.build(1);
+        for dev in [DeviceId::Xeon6126, DeviceId::TitanV] {
+            let key = CacheKey::of(&g, dev, PipelineConfig::new(dev).fingerprint());
+            cache.get_or_compile(key, || {
+                PassManager::standard(PipelineConfig::new(dev)).compile(&g).unwrap()
+            });
+        }
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.misses(), 2);
+    }
+
+    #[test]
+    fn clear_empties_but_keeps_counters() {
+        let cache = CompileCache::new();
+        let g = NetId::Mlp.build(1);
+        let key = CacheKey::of(&g, DeviceId::Xeon6126, 0);
+        cache.get_or_compile(key, compile_resnet);
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.misses(), 1);
+    }
+}

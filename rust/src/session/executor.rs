@@ -1,0 +1,193 @@
+//! The unified execution engine: one [`Executor`] interface over the
+//! stock-framework baseline and SOL's optimized schedules.
+//!
+//! `exec::{baseline, solrun}` keep owning their *step construction* (the
+//! simulation semantics of each execution structure); this module unifies
+//! the *stepping drive* — which engine, which queue semantics, which
+//! phase — so `fig3`, the examples and `main.rs` all execute through one
+//! `Session::run(...)` entry point instead of three hand-rolled loops.
+
+use std::sync::Arc;
+
+use crate::devsim::{DeviceId, EfficiencyTable, SimEngine, SimReport, SimStep};
+use crate::exec::baseline::{baseline_infer_steps, baseline_train_steps, BaselineKind};
+use crate::exec::solrun::{sol_infer_steps, sol_train_steps, OffloadMode};
+use crate::ir::Graph;
+use crate::passes::optimizer::OptimizedModel;
+
+/// What to execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// One inference step.  `first_run` matters for transparent
+    /// offloading (parameter-context upload, §V-A).
+    Infer { first_run: bool },
+    /// One training step (forward + backward + optimizer).
+    Train,
+}
+
+impl Phase {
+    /// Steady-state inference (the Fig-3 measurement point).
+    pub fn infer() -> Phase {
+        Phase::Infer { first_run: false }
+    }
+}
+
+/// A schedulable execution path on one device.
+pub trait Executor {
+    /// Human-readable identity (legend name).
+    fn name(&self) -> String;
+    fn device(&self) -> DeviceId;
+    /// Does the launch queue overlap with execution? (paper §IV-C)
+    fn async_queue(&self) -> bool;
+    /// Build the simulation step list for `phase`.
+    fn steps(&self, phase: Phase, eff: &EfficiencyTable) -> Vec<SimStep>;
+
+    /// Drive one `phase` through the device simulator.
+    fn run(&self, phase: Phase, eff: &EfficiencyTable) -> SimReport {
+        let engine = SimEngine::new(self.device().spec(), eff.clone(), self.async_queue());
+        engine.run(&self.steps(phase, eff))
+    }
+}
+
+/// The stock framework's per-op execution (PyTorch 1.4 / TF-VE 2.1).
+pub struct BaselineExecutor {
+    graph: Graph,
+    device: DeviceId,
+    kind: BaselineKind,
+}
+
+impl BaselineExecutor {
+    pub fn new(graph: Graph, device: DeviceId, kind: BaselineKind) -> Self {
+        BaselineExecutor { graph, device, kind }
+    }
+
+    /// The natural baseline for `device` (§VI-B).
+    pub fn for_device(graph: Graph, device: DeviceId) -> Self {
+        Self::new(graph, device, BaselineKind::for_device(device))
+    }
+
+    pub fn kind(&self) -> BaselineKind {
+        self.kind
+    }
+}
+
+impl Executor for BaselineExecutor {
+    fn name(&self) -> String {
+        match self.kind {
+            BaselineKind::PyTorch => format!("pytorch-1.4@{:?}", self.device),
+            BaselineKind::TfVe => format!("tf-ve-2.1@{:?}", self.device),
+        }
+    }
+
+    fn device(&self) -> DeviceId {
+        self.device
+    }
+
+    fn async_queue(&self) -> bool {
+        self.kind.async_queue(self.device)
+    }
+
+    fn steps(&self, phase: Phase, eff: &EfficiencyTable) -> Vec<SimStep> {
+        match phase {
+            Phase::Infer { .. } => {
+                baseline_infer_steps(&self.graph, self.device, self.kind, eff)
+            }
+            Phase::Train => baseline_train_steps(&self.graph, self.device, self.kind, eff),
+        }
+    }
+}
+
+/// SOL's optimized schedule through the asynchronous queue, in native or
+/// transparent offloading mode.
+pub struct SolExecutor {
+    model: Arc<OptimizedModel>,
+    mode: OffloadMode,
+}
+
+impl SolExecutor {
+    pub fn new(model: Arc<OptimizedModel>, mode: OffloadMode) -> Self {
+        SolExecutor { model, mode }
+    }
+
+    pub fn model(&self) -> &OptimizedModel {
+        &self.model
+    }
+
+    pub fn mode(&self) -> OffloadMode {
+        self.mode
+    }
+}
+
+impl Executor for SolExecutor {
+    fn name(&self) -> String {
+        let m = match self.mode {
+            OffloadMode::Native => "native",
+            OffloadMode::Transparent => "transparent",
+        };
+        format!("sol-{m}@{:?}", self.model.device)
+    }
+
+    fn device(&self) -> DeviceId {
+        self.model.device
+    }
+
+    fn async_queue(&self) -> bool {
+        // SOL always executes through its asynchronous queue (§IV-C).
+        true
+    }
+
+    fn steps(&self, phase: Phase, _eff: &EfficiencyTable) -> Vec<SimStep> {
+        match phase {
+            Phase::Infer { first_run } => sol_infer_steps(&self.model, self.mode, first_run),
+            Phase::Train => sol_train_steps(&self.model, self.mode),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::passes::{optimize, OptimizeOptions};
+    use crate::workloads::NetId;
+
+    #[test]
+    fn executors_reproduce_the_legacy_step_lists() {
+        let eff = EfficiencyTable::default();
+        let g = NetId::Resnet18.build(1);
+        let base = BaselineExecutor::for_device(g.clone(), DeviceId::Xeon6126);
+        assert_eq!(
+            base.steps(Phase::infer(), &eff).len(),
+            baseline_infer_steps(&g, DeviceId::Xeon6126, BaselineKind::PyTorch, &eff).len()
+        );
+
+        let model =
+            Arc::new(optimize(&g, &OptimizeOptions::new(DeviceId::AuroraVE10B)));
+        let sol = SolExecutor::new(model.clone(), OffloadMode::Transparent);
+        assert_eq!(
+            sol.steps(Phase::Infer { first_run: true }, &eff).len(),
+            sol_infer_steps(&model, OffloadMode::Transparent, true).len()
+        );
+    }
+
+    #[test]
+    fn queue_semantics_follow_the_paper() {
+        let g = NetId::Mlp.build(1);
+        // CUDA streams: async; CPU calls + VEoffload: sync
+        assert!(BaselineExecutor::for_device(g.clone(), DeviceId::TitanV).async_queue());
+        assert!(!BaselineExecutor::for_device(g.clone(), DeviceId::Xeon6126).async_queue());
+        assert!(!BaselineExecutor::for_device(g.clone(), DeviceId::AuroraVE10B).async_queue());
+        let model = Arc::new(optimize(&g, &OptimizeOptions::new(DeviceId::AuroraVE10B)));
+        assert!(SolExecutor::new(model, OffloadMode::Native).async_queue());
+    }
+
+    #[test]
+    fn run_produces_positive_times() {
+        let eff = EfficiencyTable::default();
+        let g = NetId::Squeezenet1_1.build(1);
+        let base = BaselineExecutor::for_device(g.clone(), DeviceId::Xeon6126);
+        assert!(base.run(Phase::infer(), &eff).total_us > 0.0);
+        let model = Arc::new(optimize(&g, &OptimizeOptions::new(DeviceId::Xeon6126)));
+        let sol = SolExecutor::new(model, OffloadMode::Native);
+        assert!(sol.run(Phase::Train, &eff).total_us > 0.0);
+    }
+}

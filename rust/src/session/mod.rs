@@ -1,0 +1,304 @@
+//! Compilation sessions — the middleware's compile-and-dispatch spine.
+//!
+//! A [`Session`] owns the three coordinated layers this subsystem adds on
+//! top of the paper's pipeline:
+//!
+//! * [`pass`] — the [`PassManager`]: `optimize()`'s stages as named,
+//!   toggleable [`Pass`] objects with per-pass timing.
+//! * [`cache`] — the [`CompileCache`]: content-addressed artifacts keyed
+//!   by `(graph hash, device, pipeline fingerprint)`; repeat compiles are
+//!   O(1) lookups with hit/miss counters in [`crate::metrics`].
+//! * [`executor`] — the unified [`Executor`] engine: baseline and SOL
+//!   execution paths behind one `compile(...)` → `run(...)` flow.
+//!
+//! The [`BackendRegistry`] (defined with the backends, re-exported here)
+//! indexes the per-device backends by device / name / framework slot.
+//!
+//! ```no_run
+//! use sol::devsim::DeviceId;
+//! use sol::exec::solrun::OffloadMode;
+//! use sol::session::{Phase, Session};
+//! use sol::workloads::NetId;
+//!
+//! let session = Session::new();
+//! let g = NetId::Resnet18.build(1);
+//! let model = session.compile(&g, DeviceId::AuroraVE10B); // miss: compiles
+//! let again = session.compile(&g, DeviceId::AuroraVE10B); // hit: same Arc
+//! let sol = session.sol_executor(model, OffloadMode::Native);
+//! let report = session.run(&sol, Phase::infer());
+//! # let _ = (again, report);
+//! ```
+
+pub mod cache;
+pub mod executor;
+pub mod pass;
+pub mod stages;
+
+use std::sync::Arc;
+
+use crate::backends::BackendRegistry;
+use crate::devsim::{DeviceId, EfficiencyTable, SimReport};
+use crate::exec::baseline::BaselineKind;
+use crate::exec::solrun::OffloadMode;
+use crate::ir::Graph;
+use crate::passes::optimizer::{OptimizeOptions, OptimizedModel};
+use crate::Result;
+
+pub use cache::{CacheKey, CompileCache};
+pub use executor::{BaselineExecutor, Executor, Phase, SolExecutor};
+pub use pass::{CompileState, Pass, PassManager, PassRecord, PipelineConfig};
+
+/// A compilation session: backend registry + compile cache + simulator
+/// efficiency table, shared by every compile and run it serves.
+pub struct Session {
+    registry: BackendRegistry,
+    cache: CompileCache,
+    eff: EfficiencyTable,
+    /// Fingerprint of the session's *default* pipeline (device-independent),
+    /// precomputed so cache hits pay only the graph hash.
+    default_pipeline_fp: u64,
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Session {
+    /// A session over the default backends and efficiency table.
+    pub fn new() -> Self {
+        Self::with_eff(EfficiencyTable::default())
+    }
+
+    /// A session with a calibrated / customized efficiency table.
+    pub fn with_eff(eff: EfficiencyTable) -> Self {
+        // the fingerprint ignores the device (it is keyed separately), so
+        // any device stands in here
+        let mut cfg = PipelineConfig::new(DeviceId::Xeon6126);
+        cfg.eff = eff.clone();
+        let default_pipeline_fp = cfg.fingerprint();
+        Session {
+            registry: BackendRegistry::with_defaults(),
+            cache: CompileCache::new(),
+            eff,
+            default_pipeline_fp,
+        }
+    }
+
+    pub fn registry(&self) -> &BackendRegistry {
+        &self.registry
+    }
+
+    pub fn cache(&self) -> &CompileCache {
+        &self.cache
+    }
+
+    pub fn eff(&self) -> &EfficiencyTable {
+        &self.eff
+    }
+
+    /// Compile `graph` for `device` under the default pipeline, through
+    /// the cache.  A hit pays only the graph hash: the pipeline
+    /// fingerprint is precomputed and the configuration is only
+    /// materialized on a miss.
+    ///
+    /// Identity is *structural*: graph and node names are not part of
+    /// the content address, so structurally identical graphs share one
+    /// artifact and the returned model's `net` field records the name
+    /// seen at first compile (like any content-addressed store, e.g.
+    /// ccache).  Callers that need the caller-side name for labelling
+    /// (deployment bundles, logs) should use their own graph's name,
+    /// not `model.net`.
+    pub fn compile(&self, graph: &Graph, device: DeviceId) -> Arc<OptimizedModel> {
+        let key = CacheKey::of(graph, device, self.default_pipeline_fp);
+        self.cache.get_or_compile(key, || {
+            let mut cfg = PipelineConfig::new(device);
+            cfg.eff = self.eff.clone();
+            PassManager::standard(cfg)
+                .compile(graph)
+                .expect("the default pipeline cannot fail on a well-formed graph")
+        })
+    }
+
+    /// A pipeline configuration for `device` seeded with this session's
+    /// efficiency table — the starting point for ablations via
+    /// [`Session::compile_with`].
+    pub fn pipeline_config(&self, device: DeviceId) -> PipelineConfig {
+        let mut cfg = PipelineConfig::new(device);
+        cfg.eff = self.eff.clone();
+        cfg
+    }
+
+    /// Compile under an explicit pipeline configuration (ablations,
+    /// library restrictions), through the cache.  Fallible: a pipeline
+    /// that cannot cover the graph (e.g. `dnn-autotune` disabled on a
+    /// net with library ops) reports an error instead of caching a
+    /// schedule that skips work.
+    ///
+    /// The session's (possibly calibrated) efficiency table is
+    /// authoritative for everything the session compiles: `cfg.eff` is
+    /// overwritten with it, so a config built via `PipelineConfig::new`
+    /// cannot silently compare an ablation under the *default* table
+    /// against a baseline under the calibrated one.  To compile under a
+    /// different table, use a `Session::with_eff` session (or drive
+    /// `PassManager` directly).
+    pub fn compile_with(
+        &self,
+        graph: &Graph,
+        mut cfg: PipelineConfig,
+    ) -> Result<Arc<OptimizedModel>> {
+        cfg.eff = self.eff.clone();
+        let key = CacheKey::of(graph, cfg.device, cfg.fingerprint());
+        self.cache
+            .try_get_or_compile(key, || PassManager::standard(cfg).compile(graph))
+    }
+
+    /// Compile under legacy flag-bag options (compatibility path).
+    ///
+    /// Unlike [`Session::compile_with`], the options' own efficiency
+    /// table is honored — exactly like `passes::optimize`, whose callers
+    /// (the old fig3 path) carry a calibrated table in `opts.eff`.  The
+    /// table is part of the pipeline fingerprint, so these artifacts
+    /// never alias session-table ones.
+    pub fn compile_with_options(
+        &self,
+        graph: &Graph,
+        opts: &OptimizeOptions,
+    ) -> Result<Arc<OptimizedModel>> {
+        let cfg = PipelineConfig::from_options(opts);
+        let key = CacheKey::of(graph, cfg.device, cfg.fingerprint());
+        self.cache
+            .try_get_or_compile(key, || PassManager::standard(cfg).compile(graph))
+    }
+
+    /// The stock-framework executor natural to `device` (§VI-B pairing).
+    pub fn baseline_executor(&self, graph: Graph, device: DeviceId) -> BaselineExecutor {
+        BaselineExecutor::for_device(graph, device)
+    }
+
+    /// A baseline executor with an explicit framework kind.
+    pub fn baseline_executor_of(
+        &self,
+        graph: Graph,
+        device: DeviceId,
+        kind: BaselineKind,
+    ) -> BaselineExecutor {
+        BaselineExecutor::new(graph, device, kind)
+    }
+
+    /// A SOL executor over a compiled artifact.
+    pub fn sol_executor(&self, model: Arc<OptimizedModel>, mode: OffloadMode) -> SolExecutor {
+        SolExecutor::new(model, mode)
+    }
+
+    /// Drive one phase of any executor through the device simulator,
+    /// using this session's efficiency table.
+    pub fn run(&self, executor: &dyn Executor, phase: Phase) -> SimReport {
+        executor.run(phase, &self.eff)
+    }
+
+    /// Compile-and-run convenience: the paper's Listing-1 shape.
+    pub fn compile_and_run(
+        &self,
+        graph: &Graph,
+        device: DeviceId,
+        mode: OffloadMode,
+        phase: Phase,
+    ) -> Result<SimReport> {
+        let model = self.compile(graph, device);
+        let exec = self.sol_executor(model, mode);
+        Ok(self.run(&exec, phase))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::NetId;
+
+    #[test]
+    fn compile_twice_hits_cache_with_same_artifact() {
+        let s = Session::new();
+        let g = NetId::Resnet18.build(1);
+        let a = s.compile(&g, DeviceId::Xeon6126);
+        assert_eq!((s.cache().hits(), s.cache().misses()), (0, 1));
+        let b = s.compile(&g, DeviceId::Xeon6126);
+        assert_eq!((s.cache().hits(), s.cache().misses()), (1, 1));
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn renamed_but_identical_graph_still_hits() {
+        let s = Session::new();
+        let mut g1 = NetId::Squeezenet1_1.build(1);
+        g1.name = "alpha".into();
+        let mut g2 = NetId::Squeezenet1_1.build(1);
+        g2.name = "beta".into();
+        s.compile(&g1, DeviceId::TitanV);
+        s.compile(&g2, DeviceId::TitanV);
+        assert_eq!((s.cache().hits(), s.cache().misses()), (1, 1));
+    }
+
+    #[test]
+    fn different_pipeline_config_misses() {
+        let s = Session::new();
+        let g = NetId::Resnet18.build(1);
+        s.compile(&g, DeviceId::Xeon6126);
+        let mut cfg = s.pipeline_config(DeviceId::Xeon6126);
+        cfg.disable_pass(stages::ELIDE);
+        s.compile_with(&g, cfg).unwrap();
+        assert_eq!((s.cache().hits(), s.cache().misses()), (0, 2));
+    }
+
+    #[test]
+    fn default_config_through_compile_with_matches_compile_key() {
+        // `compile` precomputes the default fingerprint; the explicit-cfg
+        // path must land on the same content address — even when the
+        // caller forgets the session eff (compile_with injects it)
+        let s = Session::new();
+        let g = NetId::Mlp.build(1);
+        s.compile(&g, DeviceId::Xeon6126);
+        s.compile_with(&g, PipelineConfig::new(DeviceId::Xeon6126)).unwrap();
+        assert_eq!((s.cache().hits(), s.cache().misses()), (1, 1));
+    }
+
+    #[test]
+    fn uncovered_work_is_a_compile_error_not_a_silent_skip() {
+        let s = Session::new();
+        let g = NetId::Resnet18.build(1);
+        let mut cfg = s.pipeline_config(DeviceId::Xeon6126);
+        cfg.disable_pass(stages::DNN_AUTOTUNE);
+        let err = s.compile_with(&g, cfg).unwrap_err();
+        assert!(err.to_string().contains("neither module"), "{err}");
+        // the failure was not cached
+        assert_eq!(s.cache().len(), 0);
+    }
+
+    #[test]
+    fn disabled_schedule_is_an_error_not_an_empty_model() {
+        let s = Session::new();
+        let g = NetId::Mlp.build(1);
+        let mut cfg = s.pipeline_config(DeviceId::Xeon6126);
+        cfg.disable_pass(stages::SCHEDULE);
+        let err = s.compile_with(&g, cfg).unwrap_err();
+        assert!(err.to_string().contains("schedule is empty"), "{err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown pass")]
+    fn typoed_pass_name_fails_loudly() {
+        let mut cfg = PipelineConfig::new(DeviceId::Xeon6126);
+        cfg.disable_pass("dnn_autotune"); // underscore typo
+    }
+
+    #[test]
+    fn compile_and_run_produces_a_report() {
+        let s = Session::new();
+        let g = NetId::Mlp.build(1);
+        let r = s
+            .compile_and_run(&g, DeviceId::Xeon6126, OffloadMode::Native, Phase::infer())
+            .unwrap();
+        assert!(r.total_us > 0.0);
+    }
+}

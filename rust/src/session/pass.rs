@@ -1,0 +1,456 @@
+//! The pass manager: SOL's compile pipeline as named, composable passes.
+//!
+//! The paper describes `sol.optimize(...)` as a fixed sequence of stages
+//! (§III-A): high-level math optimizations → module assignment → library
+//! auto-tuning + DFP fusion/codegen → layout assignment → schedule.  This
+//! module turns that hard-wired sequence into [`Pass`] objects run by a
+//! [`PassManager`], so that
+//!
+//! * ablations toggle passes by *name* (`cfg.disable_pass("elide")`
+//!   replaces the old `enable_elision: false`),
+//! * per-pass wall-clock timings are recorded ([`PassRecord`]) and
+//!   published to [`crate::metrics`], and
+//! * the pipeline configuration has a stable [`PipelineConfig::fingerprint`]
+//!   that keys the compile cache.
+//!
+//! `passes::optimizer::optimize()` is now a thin wrapper over
+//! [`PassManager::compile`]; no stage logic lives outside the passes.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use crate::devsim::{DeviceId, EfficiencyTable};
+use crate::dfp::KernelPlan;
+use crate::dnn::{DescriptorCache, DnnPlan, Library};
+use crate::ir::{Graph, Op};
+use crate::metrics::{self, Timer};
+use crate::passes::optimizer::{OptimizeOptions, OptimizedModel, Step};
+use crate::passes::LayoutPlan;
+use crate::util::fnv::Fnv64;
+use crate::Result;
+
+use super::stages;
+
+/// Configuration of one pipeline run — the pass-level replacement for the
+/// flag-bag `OptimizeOptions` (which converts into this).
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub device: DeviceId,
+    /// Restrict the DNN-module library pool (TF-VE baseline: stock VEDNN).
+    pub allow_libs: Option<Vec<Library>>,
+    /// DFP region fusion (false = one kernel per DFP node); a parameter of
+    /// the `dfp-fuse-codegen` pass rather than a pass of its own.
+    pub enable_fusion: bool,
+    pub eff: EfficiencyTable,
+    /// Passes disabled by name (ablation).  BTreeSet ⇒ deterministic
+    /// iteration for the fingerprint.
+    disabled: BTreeSet<String>,
+}
+
+impl PipelineConfig {
+    pub fn new(device: DeviceId) -> Self {
+        PipelineConfig {
+            device,
+            allow_libs: None,
+            enable_fusion: true,
+            eff: EfficiencyTable::default(),
+            disabled: BTreeSet::new(),
+        }
+    }
+
+    /// Translate the legacy flag-bag: `enable_elision: false` becomes the
+    /// `elide` pass toggled off.
+    pub fn from_options(opts: &OptimizeOptions) -> Self {
+        let mut cfg = PipelineConfig::new(opts.device);
+        cfg.allow_libs = opts.allow_libs.clone();
+        cfg.enable_fusion = opts.enable_fusion;
+        cfg.eff = opts.eff.clone();
+        if !opts.enable_elision {
+            cfg.disable_pass(stages::ELIDE);
+        }
+        cfg
+    }
+
+    /// Toggle a standard pass off by name.
+    ///
+    /// Panics on a name not in [`stages::ALL`]: a typo'd ablation would
+    /// otherwise silently run the full pipeline (and pollute the cache
+    /// with a redundant key).
+    pub fn disable_pass(&mut self, name: &str) -> &mut Self {
+        assert!(
+            stages::ALL.contains(&name),
+            "unknown pass '{name}' (known: {:?})",
+            stages::ALL
+        );
+        self.disabled.insert(name.to_string());
+        self
+    }
+
+    /// Re-enable a previously disabled pass (same name validation).
+    pub fn enable_pass(&mut self, name: &str) -> &mut Self {
+        assert!(
+            stages::ALL.contains(&name),
+            "unknown pass '{name}' (known: {:?})",
+            stages::ALL
+        );
+        self.disabled.remove(name);
+        self
+    }
+
+    pub fn pass_enabled(&self, name: &str) -> bool {
+        !self.disabled.contains(name)
+    }
+
+    /// Stable fingerprint of everything that changes compile *output*:
+    /// disabled passes, fusion flag, library restriction, efficiency
+    /// overrides.  Device is keyed separately by the cache.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv64::new();
+        for d in &self.disabled {
+            h.write_str(d);
+        }
+        h.write_bool(self.enable_fusion);
+        match &self.allow_libs {
+            None => h.write_str("libs:any"),
+            Some(libs) => {
+                // the tuner only tests membership, so permuted pools
+                // compile identically — sort for a canonical key
+                let mut names: Vec<&'static str> = libs.iter().map(|l| l.name()).collect();
+                names.sort_unstable();
+                for n in names {
+                    h.write_str(n);
+                }
+            }
+        }
+        h.write_str(&self.eff.fingerprint());
+        h.finish()
+    }
+}
+
+/// Per-pass execution record (timing/metrics).
+#[derive(Debug, Clone)]
+pub struct PassRecord {
+    pub name: String,
+    pub ms: f64,
+    /// True when the pass was toggled off for this run (ablation).
+    pub skipped: bool,
+}
+
+/// Mutable state threaded through the pipeline.  Each pass reads what its
+/// predecessors produced and fills in its own slice.
+#[derive(Debug)]
+pub struct CompileState {
+    /// The device-local working copy of the graph (rewritten by `elide`).
+    pub graph: Graph,
+    /// Layers removed by the math pass.
+    pub elided_layers: usize,
+    /// `true` = DFP module, `false` = DNN module, per node.  Filled by
+    /// `assign-modules`; empty until then (treated as all-DFP).
+    pub assignments: Vec<bool>,
+    /// Chosen library plan per node (DNN-module nodes only).
+    pub dnn_plans: Vec<Option<DnnPlan>>,
+    pub descriptor_cache: DescriptorCache,
+    /// Simulated auto-tuning cost so far, µs.
+    pub autotune_us: f64,
+    /// Generated DFP kernel plans.
+    pub dfp_plans: Vec<KernelPlan>,
+    /// Region start node -> index into `dfp_plans` (usize::MAX = none).
+    pub region_at: Vec<usize>,
+    pub layout: Option<LayoutPlan>,
+    /// The final executable schedule (filled by `schedule`).
+    pub steps: Vec<Step>,
+}
+
+impl CompileState {
+    pub fn new(graph: &Graph) -> Self {
+        CompileState {
+            graph: graph.clone(),
+            elided_layers: 0,
+            assignments: Vec::new(),
+            dnn_plans: Vec::new(),
+            descriptor_cache: DescriptorCache::new(),
+            autotune_us: 0.0,
+            dfp_plans: Vec::new(),
+            region_at: Vec::new(),
+            layout: None,
+            steps: Vec::new(),
+        }
+    }
+
+    /// Module assignment with the all-DFP default when the assign pass was
+    /// toggled off (or has not run yet).
+    pub fn is_dfp(&self, node: usize) -> bool {
+        self.assignments.get(node).copied().unwrap_or(true)
+    }
+
+    /// A full-length assignment vector (for callees that take `&[bool]`).
+    pub fn assignments_vec(&self) -> Vec<bool> {
+        if self.assignments.len() == self.graph.nodes.len() {
+            self.assignments.clone()
+        } else {
+            vec![true; self.graph.nodes.len()]
+        }
+    }
+
+    /// Is `op` a zero-work view that legitimately needs no kernel?
+    /// Single source of truth — the `schedule` pass's view-region skip
+    /// and the completeness verifier both use this set.
+    pub(crate) fn is_view(op: &Op) -> bool {
+        matches!(op, Op::Input | Op::Slice { .. } | Op::Flatten | Op::Dropout)
+    }
+
+    /// Pipeline invariants, enforced by the manager *after* the passes —
+    /// regardless of which passes were toggled — so no ablation can
+    /// silently produce a model that skips real work:
+    ///
+    /// 1. every work node is implemented by some module (a DNN library
+    ///    plan or membership in a DFP region);
+    /// 2. a graph containing work yields a non-empty schedule.
+    fn verify_complete(&self) -> Result<()> {
+        let g = &self.graph;
+        let mut covered = vec![false; g.nodes.len()];
+        for (id, p) in self.dnn_plans.iter().enumerate() {
+            if p.is_some() {
+                covered[id] = true;
+            }
+        }
+        for plan in &self.dfp_plans {
+            for &id in &plan.nodes {
+                covered[id] = true;
+            }
+        }
+        for n in &g.nodes {
+            if !covered[n.id] && !Self::is_view(&n.op) {
+                anyhow::bail!(
+                    "pipeline: node {} ({}) of '{}' is implemented by neither module — \
+                     was `{}` or `{}` disabled, or the library pool over-restricted?",
+                    n.id,
+                    n.name,
+                    g.name,
+                    stages::DNN_AUTOTUNE,
+                    stages::DFP_FUSE_CODEGEN
+                );
+            }
+        }
+        let has_work = g.nodes.iter().any(|n| !Self::is_view(&n.op));
+        let has_kernels = self.steps.iter().any(|s| matches!(s, Step::Kernel(_)));
+        if has_work && !has_kernels {
+            anyhow::bail!(
+                "pipeline: '{}' has work but the schedule is empty — was `{}` disabled?",
+                g.name,
+                stages::SCHEDULE
+            );
+        }
+        Ok(())
+    }
+
+    /// Assemble the final [`OptimizedModel`] from the state.
+    fn into_model(self, cfg: &PipelineConfig) -> OptimizedModel {
+        let g = self.graph;
+        let input_bytes: usize = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Input))
+            .map(|n| n.meta.bytes())
+            .sum();
+        let output_bytes = g.node(g.output()).meta.bytes();
+        let param_bytes = g.param_count() * 4;
+        OptimizedModel {
+            net: g.name.clone(),
+            device: cfg.device,
+            graph: g,
+            layout: self
+                .layout
+                .unwrap_or(LayoutPlan { per_node: Vec::new(), reorders: Vec::new() }),
+            steps: self.steps,
+            descriptor_cache: self.descriptor_cache,
+            elided_layers: self.elided_layers,
+            autotune_us: self.autotune_us,
+            param_bytes,
+            input_bytes,
+            output_bytes,
+            pass_records: Vec::new(),
+        }
+    }
+}
+
+/// One named compiler pass.
+pub trait Pass: Send + Sync {
+    /// Stable pass name (the ablation / metrics key).
+    fn name(&self) -> &'static str;
+    fn run(&self, cfg: &PipelineConfig, state: &mut CompileState) -> Result<()>;
+}
+
+/// Ordered pipeline of passes with per-pass timing.
+pub struct PassManager {
+    cfg: PipelineConfig,
+    passes: Vec<Box<dyn Pass>>,
+    /// `pass.<name>.runs` metric handles, aligned with `passes`.  For the
+    /// standard pipeline these come from a process-wide static (resolved
+    /// exactly once), so constructing a manager per compile — which
+    /// `Session::compile` does on every miss — costs 7 `Arc` clones, not
+    /// 7 registry lookups.
+    run_counters: Vec<Arc<metrics::Counter>>,
+}
+
+/// The `pass.<name>.runs` counters for the standard pipeline, resolved
+/// from the metrics registry exactly once.
+fn standard_run_counters() -> Vec<Arc<metrics::Counter>> {
+    static COUNTERS: std::sync::OnceLock<Vec<Arc<metrics::Counter>>> =
+        std::sync::OnceLock::new();
+    COUNTERS
+        .get_or_init(|| {
+            stages::ALL
+                .iter()
+                .map(|n| metrics::counter(&format!("pass.{n}.runs")))
+                .collect()
+        })
+        .clone()
+}
+
+impl PassManager {
+    /// The standard SOL pipeline (paper §III-A order).
+    pub fn standard(cfg: PipelineConfig) -> Self {
+        PassManager {
+            cfg,
+            passes: stages::standard_passes(),
+            run_counters: standard_run_counters(),
+        }
+    }
+
+    /// An empty manager for custom pipelines (tests, experiments).
+    pub fn custom(cfg: PipelineConfig) -> Self {
+        PassManager { cfg, passes: Vec::new(), run_counters: Vec::new() }
+    }
+
+    pub fn add_pass(&mut self, pass: Box<dyn Pass>) -> &mut Self {
+        self.run_counters.push(metrics::counter(&format!("pass.{}.runs", pass.name())));
+        self.passes.push(pass);
+        self
+    }
+
+    pub fn config(&self) -> &PipelineConfig {
+        &self.cfg
+    }
+
+    pub fn pass_names(&self) -> Vec<&'static str> {
+        self.passes.iter().map(|p| p.name()).collect()
+    }
+
+    /// Run the pipeline over `graph`, producing the compiled model with
+    /// per-pass records attached.
+    pub fn compile(&self, graph: &Graph) -> Result<OptimizedModel> {
+        let mut state = CompileState::new(graph);
+        let mut records = Vec::with_capacity(self.passes.len());
+        for (pass, runs) in self.passes.iter().zip(&self.run_counters) {
+            if !self.cfg.pass_enabled(pass.name()) {
+                records.push(PassRecord {
+                    name: pass.name().to_string(),
+                    ms: 0.0,
+                    skipped: true,
+                });
+                continue;
+            }
+            let t = Timer::start();
+            pass.run(&self.cfg, &mut state)?;
+            records.push(PassRecord {
+                name: pass.name().to_string(),
+                ms: t.ms(),
+                skipped: false,
+            });
+            runs.inc();
+        }
+        state.verify_complete()?;
+        let mut model = state.into_model(&self.cfg);
+        model.pass_records = records;
+        Ok(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::NetId;
+
+    #[test]
+    fn standard_pipeline_has_the_seven_paper_stages() {
+        let pm = PassManager::standard(PipelineConfig::new(DeviceId::Xeon6126));
+        assert_eq!(
+            pm.pass_names(),
+            vec![
+                "extract-canonicalize",
+                "elide",
+                "assign-modules",
+                "dnn-autotune",
+                "dfp-fuse-codegen",
+                "assign-layouts",
+                "schedule",
+            ]
+        );
+    }
+
+    #[test]
+    fn records_cover_every_pass_in_order() {
+        let pm = PassManager::standard(PipelineConfig::new(DeviceId::Xeon6126));
+        let m = pm.compile(&NetId::Resnet18.build(1)).unwrap();
+        assert_eq!(m.pass_records.len(), 7);
+        for (r, name) in m.pass_records.iter().zip(pm.pass_names()) {
+            assert_eq!(r.name, name);
+            assert!(!r.skipped);
+            assert!(r.ms >= 0.0);
+        }
+    }
+
+    #[test]
+    fn disabled_pass_is_recorded_as_skipped() {
+        let mut cfg = PipelineConfig::new(DeviceId::Xeon6126);
+        cfg.disable_pass("elide");
+        let pm = PassManager::standard(cfg);
+        let m = pm.compile(&NetId::Vgg16.build(1)).unwrap();
+        let elide = m.pass_records.iter().find(|r| r.name == "elide").unwrap();
+        assert!(elide.skipped);
+        assert_eq!(m.elided_layers, 0);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_configs() {
+        let base = PipelineConfig::new(DeviceId::Xeon6126);
+        let mut no_elide = base.clone();
+        no_elide.disable_pass("elide");
+        let mut no_fuse = base.clone();
+        no_fuse.enable_fusion = false;
+        let mut libs = base.clone();
+        libs.allow_libs = Some(vec![Library::VednnStock]);
+        let fps = [
+            base.fingerprint(),
+            no_elide.fingerprint(),
+            no_fuse.fingerprint(),
+            libs.fingerprint(),
+        ];
+        for i in 0..fps.len() {
+            for j in (i + 1)..fps.len() {
+                assert_ne!(fps[i], fps[j], "configs {i} and {j} collide");
+            }
+        }
+        // and is stable
+        assert_eq!(base.fingerprint(), PipelineConfig::new(DeviceId::Xeon6126).fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_ignores_allow_libs_order() {
+        let mut a = PipelineConfig::new(DeviceId::Xeon6126);
+        a.allow_libs = Some(vec![Library::OpenBlas, Library::Nnpack]);
+        let mut b = PipelineConfig::new(DeviceId::Xeon6126);
+        b.allow_libs = Some(vec![Library::Nnpack, Library::OpenBlas]);
+        assert_eq!(a.fingerprint(), b.fingerprint(), "permuted pools compile identically");
+    }
+
+    #[test]
+    fn options_roundtrip_to_config() {
+        let mut o = OptimizeOptions::new(DeviceId::AuroraVE10B);
+        o.enable_elision = false;
+        let cfg = PipelineConfig::from_options(&o);
+        assert!(!cfg.pass_enabled("elide"));
+        assert!(cfg.pass_enabled("schedule"));
+    }
+}

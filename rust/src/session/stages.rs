@@ -1,0 +1,273 @@
+//! The standard pipeline's passes — the stage logic that used to be
+//! hard-wired inside `passes::optimizer::optimize()`, one [`Pass`] each.
+//!
+//! Order (paper §III-A): canonicalize the extracted IR, high-level math
+//! optimizations (`elide`), optimizing-module assignment, DNN library
+//! auto-tuning, DFP region fusion + codegen, memory-layout assignment,
+//! schedule assembly.
+
+use crate::devsim::DeviceId;
+use crate::dfp::{self, Flavor, KernelPlan};
+use crate::dnn::{autotune_node, DnnPlan};
+use crate::ir::Op;
+use crate::passes::assign::assign_modules;
+use crate::passes::elide::elide_relu_maxpool;
+use crate::passes::layout::assign_layouts;
+use crate::passes::optimizer::{CompiledKernel, KernelOrigin, Step};
+use crate::Result;
+
+use super::pass::{CompileState, Pass, PipelineConfig};
+
+pub const EXTRACT_CANONICALIZE: &str = "extract-canonicalize";
+pub const ELIDE: &str = "elide";
+pub const ASSIGN_MODULES: &str = "assign-modules";
+pub const DNN_AUTOTUNE: &str = "dnn-autotune";
+pub const DFP_FUSE_CODEGEN: &str = "dfp-fuse-codegen";
+pub const ASSIGN_LAYOUTS: &str = "assign-layouts";
+pub const SCHEDULE: &str = "schedule";
+
+/// Every standard pass name, pipeline order.  Pass toggles are validated
+/// against this list so a typo'd name fails loudly instead of silently
+/// running the un-ablated pipeline.
+pub const ALL: [&str; 7] = [
+    EXTRACT_CANONICALIZE,
+    ELIDE,
+    ASSIGN_MODULES,
+    DNN_AUTOTUNE,
+    DFP_FUSE_CODEGEN,
+    ASSIGN_LAYOUTS,
+    SCHEDULE,
+];
+
+/// The standard pass sequence.
+pub fn standard_passes() -> Vec<Box<dyn Pass>> {
+    vec![
+        Box::new(ExtractCanonicalize),
+        Box::new(Elide),
+        Box::new(AssignModules),
+        Box::new(DnnAutotune),
+        Box::new(DfpFuseCodegen),
+        Box::new(AssignLayouts),
+        Box::new(Schedule),
+    ]
+}
+
+/// DFP code flavor for a device (which backend's generator runs).
+///
+/// NOTE: this derives the flavor from the device *kind*, mirroring what
+/// every shipped backend's `flavor()` reports — the compile pipeline
+/// does not consult the `BackendRegistry` (which serves dispatch-side
+/// lookups).  Routing flavor selection through a registered backend is
+/// part of the per-device pipeline-specialization ROADMAP item.
+pub fn flavor_for(device: DeviceId) -> Flavor {
+    use crate::devsim::DeviceKind;
+    match device.spec().kind {
+        DeviceKind::Cpu => Flavor::Ispc,
+        DeviceKind::Gpu => Flavor::Cuda,
+        DeviceKind::Vpu => Flavor::Ncc,
+    }
+}
+
+/// Validates the framework-extracted IR: edges must point backwards
+/// (topological insertion order) — every later pass relies on it.
+struct ExtractCanonicalize;
+
+impl Pass for ExtractCanonicalize {
+    fn name(&self) -> &'static str {
+        EXTRACT_CANONICALIZE
+    }
+
+    fn run(&self, _cfg: &PipelineConfig, state: &mut CompileState) -> Result<()> {
+        for n in &state.graph.nodes {
+            for &i in &n.inputs {
+                if i >= n.id {
+                    anyhow::bail!(
+                        "graph '{}' is not in topological order: node {} reads {}",
+                        state.graph.name,
+                        n.id,
+                        i
+                    );
+                }
+            }
+        }
+        if state.graph.nodes.is_empty() {
+            anyhow::bail!("empty graph '{}'", state.graph.name);
+        }
+        Ok(())
+    }
+}
+
+/// High-level mathematical optimizations: ReLU ⇄ MaxPool elision and
+/// inference-time Dropout removal.
+struct Elide;
+
+impl Pass for Elide {
+    fn name(&self) -> &'static str {
+        ELIDE
+    }
+
+    fn run(&self, _cfg: &PipelineConfig, state: &mut CompileState) -> Result<()> {
+        let (g, elided) = elide_relu_maxpool(&state.graph);
+        state.graph = g;
+        state.elided_layers = elided;
+        Ok(())
+    }
+}
+
+/// Heuristic optimizing-module assignment: DNN for dense Conv/Linear,
+/// DFP for everything else (depthwise convs included).
+struct AssignModules;
+
+impl Pass for AssignModules {
+    fn name(&self) -> &'static str {
+        ASSIGN_MODULES
+    }
+
+    fn run(&self, _cfg: &PipelineConfig, state: &mut CompileState) -> Result<()> {
+        state.assignments = assign_modules(&state.graph);
+        Ok(())
+    }
+}
+
+/// Per-node DNN library/algorithm auto-tuning ("a very short auto-tuning
+/// workload", 3 trial runs per candidate) + descriptor-cache population.
+struct DnnAutotune;
+
+impl Pass for DnnAutotune {
+    fn name(&self) -> &'static str {
+        DNN_AUTOTUNE
+    }
+
+    fn run(&self, cfg: &PipelineConfig, state: &mut CompileState) -> Result<()> {
+        let spec = cfg.device.spec();
+        let n_nodes = state.graph.nodes.len();
+        let mut plans: Vec<Option<DnnPlan>> = vec![None; n_nodes];
+        for id in 0..n_nodes {
+            if state.is_dfp(id) {
+                continue;
+            }
+            let plan =
+                autotune_node(&state.graph, id, &spec, &cfg.eff, cfg.allow_libs.as_deref());
+            if let Some(plan) = plan {
+                // "very short auto-tuning workload": 3 trial runs/candidate
+                state.autotune_us += 3.0 * plan.est_us;
+                let sig = format!("{}#{}", state.graph.node(id).name, plan.library.name());
+                state.descriptor_cache.get_or_init(&sig, plan.library, plan.algorithm);
+                plans[id] = Some(plan);
+            }
+        }
+        state.dnn_plans = plans;
+        Ok(())
+    }
+}
+
+/// DFP region fusion + kernel-plan generation (with the one-kernel-per-
+/// layer ablation when `cfg.enable_fusion` is off).
+struct DfpFuseCodegen;
+
+impl Pass for DfpFuseCodegen {
+    fn name(&self) -> &'static str {
+        DFP_FUSE_CODEGEN
+    }
+
+    fn run(&self, cfg: &PipelineConfig, state: &mut CompileState) -> Result<()> {
+        let g = &state.graph;
+        let assignments = state.assignments_vec();
+        let flavor = flavor_for(cfg.device);
+        let regions = if cfg.enable_fusion {
+            dfp::fuse_regions(g, &assignments)
+        } else {
+            g.nodes
+                .iter()
+                .filter(|n| assignments[n.id] && !matches!(n.op, Op::Input))
+                .map(|n| dfp::FusedRegion { nodes: vec![n.id] })
+                .collect()
+        };
+        let plans: Vec<KernelPlan> =
+            regions.iter().map(|r| dfp::generate(g, r, flavor)).collect();
+        let mut region_at = vec![usize::MAX; g.nodes.len()];
+        for (i, p) in plans.iter().enumerate() {
+            region_at[p.nodes[0]] = i;
+        }
+        state.dfp_plans = plans;
+        state.region_at = region_at;
+        Ok(())
+    }
+}
+
+/// Memory-layout selection minimizing reorders (forward-pass layouts).
+struct AssignLayouts;
+
+impl Pass for AssignLayouts {
+    fn name(&self) -> &'static str {
+        ASSIGN_LAYOUTS
+    }
+
+    fn run(&self, cfg: &PipelineConfig, state: &mut CompileState) -> Result<()> {
+        let assignments = state.assignments_vec();
+        state.layout =
+            Some(assign_layouts(&state.graph, &cfg.device.spec(), &assignments, false));
+        Ok(())
+    }
+}
+
+/// Schedule assembly: interleave layout reorders, DNN library calls and
+/// DFP kernels in topological order, dropping zero-work view regions.
+struct Schedule;
+
+impl Pass for Schedule {
+    fn name(&self) -> &'static str {
+        SCHEDULE
+    }
+
+    fn run(&self, _cfg: &PipelineConfig, state: &mut CompileState) -> Result<()> {
+        let g = &state.graph;
+        let reorder_before: std::collections::HashMap<usize, usize> = state
+            .layout
+            .as_ref()
+            .map(|l| l.reorders.iter().cloned().collect())
+            .unwrap_or_default();
+        let mut steps = Vec::new();
+        for n in &g.nodes {
+            if let Some(&bytes) = reorder_before.get(&n.id) {
+                steps.push(Step::Reorder { bytes });
+            }
+            if let Some(plan) = state.dnn_plans.get(n.id).and_then(|p| p.as_ref()) {
+                steps.push(Step::Kernel(CompiledKernel {
+                    name: format!("sol_dnn_{}", n.name),
+                    origin: KernelOrigin::Dnn {
+                        library: plan.library,
+                        algorithm: plan.algorithm,
+                    },
+                    class: plan.class,
+                    flops: plan.flops,
+                    hbm_bytes: plan.hbm_bytes,
+                    vmem_bytes: 0,
+                    parallel_fraction: plan.parallel_fraction,
+                    source: None,
+                }));
+            } else if state.region_at.get(n.id).copied().unwrap_or(usize::MAX) != usize::MAX
+            {
+                let p = &state.dfp_plans[state.region_at[n.id]];
+                // skip zero-work view regions (slice/flatten-only chains)
+                if p.flops == 0
+                    && p.nodes.iter().all(|&id| CompileState::is_view(&g.node(id).op))
+                {
+                    continue;
+                }
+                steps.push(Step::Kernel(CompiledKernel {
+                    name: p.name.clone(),
+                    origin: KernelOrigin::Dfp,
+                    class: p.class,
+                    flops: p.flops,
+                    hbm_bytes: p.hbm_bytes,
+                    vmem_bytes: p.vmem_bytes,
+                    parallel_fraction: p.parallel_fraction,
+                    source: Some(p.source.clone()),
+                }));
+            }
+        }
+        state.steps = steps;
+        Ok(())
+    }
+}

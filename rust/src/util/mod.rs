@@ -1,5 +1,6 @@
 //! In-tree utilities (offline build: no serde/clap/criterion/proptest).
 
+pub mod fnv;
 pub mod json;
 pub mod rng;
 pub mod stats;

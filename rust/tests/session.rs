@@ -1,0 +1,236 @@
+//! Cross-layer tests for the session subsystem: pass-manager ablation
+//! equivalence, graph-hash stability, compile-cache behaviour, backend
+//! registry lookups, and the `fig3_row` output contract for the default
+//! pipeline.
+
+use std::sync::Arc;
+
+use sol::backends::BackendRegistry;
+use sol::devsim::{DeviceId, EfficiencyTable, SimEngine};
+use sol::exec::baseline::{baseline_infer_steps, baseline_train_steps, BaselineKind};
+use sol::exec::fig3::fig3_row;
+use sol::exec::solrun::{sol_infer_steps, sol_train_steps, OffloadMode};
+use sol::framework::DeviceType;
+use sol::passes::{optimize, OptimizeOptions, OptimizedModel, Step};
+use sol::session::{PassManager, Phase, PipelineConfig, Session};
+use sol::workloads::NetId;
+
+/// Structural equality of two compiled schedules.
+fn assert_models_equivalent(a: &OptimizedModel, b: &OptimizedModel) {
+    assert_eq!(a.device, b.device);
+    assert_eq!(a.elided_layers, b.elided_layers);
+    assert_eq!(a.autotune_us, b.autotune_us);
+    assert_eq!(a.param_bytes, b.param_bytes);
+    assert_eq!(a.input_bytes, b.input_bytes);
+    assert_eq!(a.output_bytes, b.output_bytes);
+    assert_eq!(a.layout.reorders, b.layout.reorders);
+    assert_eq!(a.steps.len(), b.steps.len());
+    for (x, y) in a.steps.iter().zip(&b.steps) {
+        match (x, y) {
+            (Step::Kernel(k1), Step::Kernel(k2)) => {
+                assert_eq!(k1.name, k2.name);
+                assert_eq!(k1.class, k2.class);
+                assert_eq!(k1.flops, k2.flops);
+                assert_eq!(k1.hbm_bytes, k2.hbm_bytes);
+                assert_eq!(k1.parallel_fraction, k2.parallel_fraction);
+            }
+            (Step::Reorder { bytes: b1 }, Step::Reorder { bytes: b2 }) => {
+                assert_eq!(b1, b2);
+            }
+            other => panic!("step kind mismatch: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn pipeline_with_elide_off_equals_legacy_elision_flag() {
+    for dev in [DeviceId::Xeon6126, DeviceId::AuroraVE10B] {
+        let g = NetId::Vgg16.build(1);
+        // legacy flag-bag ablation
+        let mut opts = OptimizeOptions::new(dev);
+        opts.enable_elision = false;
+        let legacy = optimize(&g, &opts);
+        // pass-toggle ablation
+        let mut cfg = PipelineConfig::new(dev);
+        cfg.disable_pass("elide");
+        let toggled = PassManager::standard(cfg).compile(&g).unwrap();
+        assert_models_equivalent(&legacy, &toggled);
+        assert_eq!(toggled.elided_layers, 0);
+    }
+}
+
+#[test]
+fn fusion_config_matches_legacy_flag() {
+    let g = NetId::Resnet18.build(1);
+    let mut opts = OptimizeOptions::new(DeviceId::Xeon6126);
+    opts.enable_fusion = false;
+    let legacy = optimize(&g, &opts);
+    let mut cfg = PipelineConfig::new(DeviceId::Xeon6126);
+    cfg.enable_fusion = false;
+    let configured = PassManager::standard(cfg).compile(&g).unwrap();
+    assert_models_equivalent(&legacy, &configured);
+}
+
+#[test]
+fn optimize_is_a_pass_manager_wrapper() {
+    // identical output through the wrapper and the manager directly
+    for net in [NetId::Resnet50, NetId::ShufflenetV2X1_0, NetId::Mlp] {
+        let g = net.build(1);
+        let wrapped = optimize(&g, &OptimizeOptions::new(DeviceId::TitanV));
+        let direct = PassManager::standard(PipelineConfig::new(DeviceId::TitanV))
+            .compile(&g)
+            .unwrap();
+        assert_models_equivalent(&wrapped, &direct);
+        // and the wrapper carries the per-pass records of the 7 stages
+        assert_eq!(wrapped.pass_records.len(), 7);
+        assert!(wrapped.pass_records.iter().all(|r| !r.skipped));
+    }
+}
+
+#[test]
+fn graph_hash_stable_across_rebuilds_and_names() {
+    for net in [NetId::Resnet18, NetId::Densenet121, NetId::Mlp] {
+        let h1 = net.build(1).structural_hash();
+        let h2 = net.build(1).structural_hash();
+        assert_eq!(h1, h2, "{}: rebuild changed the hash", net.name());
+        let mut renamed = net.build(1);
+        renamed.name = "something-else".into();
+        for n in &mut renamed.nodes {
+            n.name = format!("n{}", n.id);
+        }
+        assert_eq!(h1, renamed.structural_hash(), "{}: names leaked into hash", net.name());
+        assert_ne!(h1, net.build(2).structural_hash(), "{}: batch must change hash", net.name());
+    }
+}
+
+#[test]
+fn graph_hash_collision_sanity_across_the_zoo() {
+    // all 13 nets at two batch sizes: 26 distinct structures, 0 collisions
+    let mut hashes = std::collections::HashSet::new();
+    for net in NetId::ALL {
+        for b in [1, net.training_batch()] {
+            hashes.insert(net.build(b).structural_hash());
+        }
+    }
+    assert_eq!(hashes.len(), 2 * NetId::ALL.len());
+}
+
+#[test]
+fn second_compile_is_a_cache_hit_with_counters() {
+    let session = Session::new();
+    let g = NetId::Resnet18.build(1);
+    let first = session.compile(&g, DeviceId::AuroraVE10B);
+    assert_eq!(session.cache().misses(), 1, "first compile must miss");
+    assert_eq!(session.cache().hits(), 0);
+    let second = session.compile(&g, DeviceId::AuroraVE10B);
+    assert_eq!(session.cache().misses(), 1, "second compile must not recompile");
+    assert_eq!(session.cache().hits(), 1, "second compile must hit");
+    assert!(Arc::ptr_eq(&first, &second), "hit must return the same artifact");
+    // another device is another content address
+    session.compile(&g, DeviceId::Xeon6126);
+    assert_eq!((session.cache().hits(), session.cache().misses()), (1, 2));
+    assert_eq!(session.cache().len(), 2);
+}
+
+#[test]
+fn cache_counters_reach_the_metrics_registry() {
+    let hit0 = sol::metrics::counter("compile_cache.hit").get();
+    let miss0 = sol::metrics::counter("compile_cache.miss").get();
+    let session = Session::new();
+    let g = NetId::Squeezenet1_0.build(1);
+    session.compile(&g, DeviceId::TitanV);
+    session.compile(&g, DeviceId::TitanV);
+    assert!(sol::metrics::counter("compile_cache.hit").get() >= hit0 + 1);
+    assert!(sol::metrics::counter("compile_cache.miss").get() >= miss0 + 1);
+}
+
+#[test]
+fn backend_registry_roundtrips() {
+    let r = BackendRegistry::with_defaults();
+    assert_eq!(r.len(), 5);
+    assert_eq!(r.devices().len(), 4, "arm64 shares the CPU device model");
+    for b in r.iter() {
+        // name -> backend roundtrip
+        let by_name = r.by_name(b.name()).expect("every backend resolvable by name");
+        assert_eq!(by_name.device(), b.device());
+        // device -> backend resolves to a backend of that device
+        let by_dev = r.by_device(b.device()).expect("every device resolvable");
+        assert_eq!(by_dev.device(), b.device());
+    }
+    // framework-slot lookup: only the Aurora squats on HIP (§V-B)
+    let hip = r.by_framework_slot(DeviceType::Hip);
+    assert_eq!(hip.len(), 1);
+    assert_eq!(hip[0].device(), DeviceId::AuroraVE10B);
+    // unknown lookups are clean misses
+    assert!(r.by_name("tpu-v9").is_none());
+    // session exposes the same registry
+    assert_eq!(Session::new().registry().len(), 5);
+}
+
+/// The acceptance contract: `fig3_row` through Session/Executor must equal
+/// the legacy hand-rolled computation for the default pipeline, bit for bit.
+#[test]
+fn fig3_row_output_unchanged_for_default_pipeline() {
+    let eff = EfficiencyTable::default();
+    for (net, dev, training) in [
+        (NetId::Resnet18, DeviceId::Xeon6126, false),
+        (NetId::Resnet50, DeviceId::AuroraVE10B, false),
+        (NetId::Vgg16, DeviceId::TitanV, true),
+        (NetId::Mlp, DeviceId::Xeon6126, true),
+        (NetId::ShufflenetV2X0_5, DeviceId::AuroraVE10B, false),
+    ] {
+        let row = fig3_row(net, dev, training, &eff);
+
+        // --- the legacy computation, reconstructed inline ---
+        let b = if training { net.training_batch() } else { 1 };
+        let g = net.build(b);
+        let kind = BaselineKind::for_device(dev);
+        let want_baseline = if kind == BaselineKind::TfVe && !net.supported_by_tfve() {
+            None
+        } else {
+            let eng = SimEngine::new(dev.spec(), eff.clone(), kind.async_queue(dev));
+            let steps = if training {
+                baseline_train_steps(&g, dev, kind, &eff)
+            } else {
+                baseline_infer_steps(&g, dev, kind, &eff)
+            };
+            Some(eng.run(&steps).total_ms())
+        };
+        let mut opts = OptimizeOptions::new(dev);
+        opts.eff = eff.clone();
+        let model = optimize(&g, &opts);
+        let eng = SimEngine::new(dev.spec(), eff.clone(), true);
+        let (want_sol, want_to) = if training {
+            (
+                eng.run(&sol_train_steps(&model, OffloadMode::Native)).total_ms(),
+                eng.run(&sol_train_steps(&model, OffloadMode::Transparent)).total_ms(),
+            )
+        } else {
+            (
+                eng.run(&sol_infer_steps(&model, OffloadMode::Native, false)).total_ms(),
+                eng.run(&sol_infer_steps(&model, OffloadMode::Transparent, false)).total_ms(),
+            )
+        };
+
+        assert_eq!(row.baseline_ms, want_baseline, "{} {:?} baseline", net.name(), dev);
+        assert_eq!(row.sol_ms, want_sol, "{} {:?} sol", net.name(), dev);
+        assert_eq!(row.sol_to_ms, want_to, "{} {:?} sol-TO", net.name(), dev);
+    }
+}
+
+#[test]
+fn session_run_drives_all_executors() {
+    let session = Session::new();
+    let g = NetId::Squeezenet1_1.build(1);
+    let dev = DeviceId::AuroraVE10B;
+    let base = session.baseline_executor(g.clone(), dev);
+    let model = session.compile(&g, dev);
+    let sol = session.sol_executor(model.clone(), OffloadMode::Native);
+    let to = session.sol_executor(model, OffloadMode::Transparent);
+    let b = session.run(&base, Phase::infer()).total_us;
+    let s = session.run(&sol, Phase::infer()).total_us;
+    let t = session.run(&to, Phase::Infer { first_run: true }).total_us;
+    assert!(b > 0.0 && s > 0.0 && t > 0.0);
+    assert!(s < b, "SOL must beat the TF-VE baseline on the Aurora");
+    assert!(t > s, "first TO run pays the parameter upload");
+}

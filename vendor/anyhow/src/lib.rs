@@ -1,0 +1,232 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored crate
+//! provides the subset of the real `anyhow` API the workspace uses:
+//!
+//! * [`Error`] — an erased error value with a context chain
+//! * [`Result`] — `Result<T, Error>` with a defaulted error parameter
+//! * [`anyhow!`] / [`bail!`] — format-style error construction
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`s and
+//!   `Option`s
+//! * blanket `From<E: std::error::Error>` so `?` erases concrete errors
+//!
+//! Semantics match real `anyhow` where it matters to callers: `Display`
+//! prints the outermost message, `Debug` prints the message plus a
+//! `Caused by:` chain, and attaching context pushes a new outermost layer.
+
+use std::error::Error as StdError;
+use std::fmt::{self, Debug, Display};
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An erased error: an outermost message plus the chain of causes.
+pub struct Error {
+    /// `chain[0]` is the outermost (most recently attached) message.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Erase a concrete `std::error::Error`, preserving its source chain.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        let mut chain = vec![error.to_string()];
+        let mut src = error.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+
+    /// Wrap with an additional layer of context (new outermost message).
+    pub fn context<C: Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause chain, outermost first (mirrors `anyhow::Error::chain`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root) cause message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain, colon-separated (anyhow-compatible)
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `?` on any concrete std error inside a `-> anyhow::Result<_>` function.
+// (Like real anyhow, `Error` itself does not implement `std::error::Error`,
+// which keeps this blanket impl coherent with `From<T> for T`.)
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+mod ext {
+    /// Conversion into [`crate::Error`] used by the [`crate::Context`]
+    /// blanket impl.  Mirrors real anyhow's private `ext::StdError`: the
+    /// blanket over `std::error::Error` and the concrete impl for `Error`
+    /// are coherent because `Error` can never implement the std trait.
+    pub trait IntoAnyhow {
+        fn into_anyhow(self) -> crate::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoAnyhow for E {
+        fn into_anyhow(self) -> crate::Error {
+            crate::Error::new(self)
+        }
+    }
+
+    impl IntoAnyhow for crate::Error {
+        fn into_anyhow(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// Attach context to errors (`anyhow::Context` subset).
+pub trait Context<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::IntoAnyhow> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| ext::IntoAnyhow::into_anyhow(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| ext::IntoAnyhow::into_anyhow(e).context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_erases_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_layers_stack() {
+        let e = io_fail().context("loading config").unwrap_err();
+        assert_eq!(e.to_string(), "loading config");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn with_context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("inner {}", 42));
+        let e = r.with_context(|| format!("outer {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "outer 7");
+        assert_eq!(e.root_cause(), "inner 42");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 10 {
+                bail!("x too big: {x}");
+            }
+            Ok(x)
+        }
+        assert!(f(5).is_ok());
+        assert_eq!(f(-1).unwrap_err().to_string(), "x must be positive, got -1");
+        assert_eq!(f(11).unwrap_err().to_string(), "x too big: 11");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+    }
+}

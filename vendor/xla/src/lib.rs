@@ -1,0 +1,257 @@
+//! Offline stub of the XLA/PJRT Rust bindings.
+//!
+//! The real reproduction pipeline AOT-lowers JAX/Pallas programs to HLO
+//! text and executes them through a PJRT CPU client.  This container has
+//! neither the XLA C++ runtime nor the artifacts, so this crate provides
+//! an API-compatible surface that:
+//!
+//! * type-checks everything the coordinator compiles against
+//!   ([`PjRtClient`], [`PjRtLoadedExecutable`], [`Literal`], ...),
+//! * carries real host data through [`Literal`] (so literal round-trips
+//!   work), and
+//! * fails with a clear [`XlaError`] at the points that would need the
+//!   native runtime (`compile`, `execute`).
+//!
+//! Callers already treat PJRT as optional — every integration test skips
+//! when `PjRtEngine::new()` errors — so the stub degrades gracefully.
+
+use std::fmt;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Error type for all fallible stub operations.
+#[derive(Debug, Clone)]
+pub struct XlaError {
+    message: String,
+}
+
+impl XlaError {
+    pub fn new(message: impl Into<String>) -> Self {
+        XlaError { message: message.into() }
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.message)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+const NO_RUNTIME: &str =
+    "PJRT native runtime is not available in this build (offline stub)";
+
+/// Element types a [`Literal`] can hold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    I32,
+}
+
+/// Sealed-ish conversion trait for host element types.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn to_le(self) -> [u8; 4];
+    fn from_le(b: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn to_le(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+    fn from_le(b: [u8; 4]) -> Self {
+        f32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::I32;
+    fn to_le(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+    fn from_le(b: [u8; 4]) -> Self {
+        i32::from_le_bytes(b)
+    }
+}
+
+/// A host-side literal: raw bytes + element type + dimensions.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    bytes: Vec<u8>,
+    ty: ElementType,
+    dims: Vec<i64>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le());
+        }
+        Literal { bytes, ty: T::TY, dims: vec![data.len() as i64], tuple: None }
+    }
+
+    /// Reinterpret under new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = (self.bytes.len() / 4) as i64;
+        if want != have {
+            return Err(XlaError::new(format!(
+                "reshape: {have} elements cannot view as {dims:?}"
+            )));
+        }
+        Ok(Literal {
+            bytes: self.bytes.clone(),
+            ty: self.ty,
+            dims: dims.to_vec(),
+            tuple: None,
+        })
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::TY != self.ty {
+            return Err(XlaError::new(format!(
+                "to_vec: literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        self.tuple
+            .clone()
+            .ok_or_else(|| XlaError::new("to_tuple on a non-tuple literal"))
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.bytes.len() / 4
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (stub: records the source path only).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    path: String,
+}
+
+impl HloModuleProto {
+    /// The real binding parses HLO text; the stub only verifies the file
+    /// exists so missing-artifact errors stay precise.
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let p = path.as_ref();
+        if !p.exists() {
+            return Err(XlaError::new(format!("no HLO text file at {p:?}")));
+        }
+        Ok(HloModuleProto { path: p.display().to_string() })
+    }
+}
+
+/// An XLA computation handle.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    path: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { path: proto.path.clone() }
+    }
+}
+
+/// A device buffer handle (stub: wraps a literal).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    literal: Arc<Literal>,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok((*self.literal).clone())
+    }
+}
+
+/// A compiled, loaded executable.  The stub can never be constructed via
+/// [`PjRtClient::compile`] (which errors), so its execute methods are
+/// unreachable in practice; they error defensively anyway.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::new(NO_RUNTIME))
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::new(NO_RUNTIME))
+    }
+}
+
+/// The PJRT client.  `cpu()` succeeds (the stub is a valid "platform" for
+/// literal plumbing); `compile` reports the missing native runtime.
+#[derive(Debug)]
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { platform: "stub-cpu" })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::new(NO_RUNTIME))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn reshape_validates_element_count() {
+        let l = Literal::vec1(&[1i32, 2, 3]);
+        assert!(l.reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn compile_reports_missing_runtime() {
+        let c = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { path: "x".into() };
+        let err = c.compile(&XlaComputation::from_proto(&proto)).unwrap_err();
+        assert!(err.to_string().contains("offline stub"));
+    }
+}
