@@ -18,7 +18,11 @@ use crate::dnn::Library;
 use crate::framework::DeviceType;
 
 /// The per-device backend interface.
-pub trait DeviceBackend {
+///
+/// Backends are stateless flavor/library bundles; `Send + Sync` so a
+/// registry (and the `Session`/`ServingSession` built over it) can be
+/// shared across serving threads.
+pub trait DeviceBackend: Send + Sync {
     /// Backend name (matches the paper's §IV subsections).
     fn name(&self) -> &'static str;
     /// The simulated hardware this backend drives.
@@ -107,6 +111,14 @@ impl BackendRegistry {
         self.iter().filter(|b| b.framework_slot() == slot).collect()
     }
 
+    /// The DFP code flavor the registered backend for `device` emits —
+    /// the authoritative flavor-selection path (the compile pipeline used
+    /// to re-derive it from the device kind; `Session` now asks the
+    /// registry).  `None` when no backend drives `device`.
+    pub fn flavor_for(&self, device: DeviceId) -> Option<Flavor> {
+        self.by_device(device).map(|b| b.flavor())
+    }
+
     /// The distinct devices covered by this registry (first-seen order,
     /// independent of where same-device backends were registered).
     pub fn devices(&self) -> Vec<DeviceId> {
@@ -189,6 +201,22 @@ mod tests {
         r.register(Box::new(arm64::Arm64Backend)); // same device as x86, non-adjacent
         let devs = r.devices();
         assert_eq!(devs, vec![DeviceId::Xeon6126, DeviceId::QuadroP4000]);
+    }
+
+    #[test]
+    fn registry_flavor_matches_the_kind_derived_default_for_shipped_backends() {
+        // Session only records a flavor override when the registry
+        // disagrees with the kind-derived default — for the shipped
+        // backends the two must coincide (same artifacts, same cache keys)
+        let r = BackendRegistry::with_defaults();
+        for d in DeviceId::ALL {
+            assert_eq!(
+                r.flavor_for(d),
+                Some(crate::session::stages::flavor_for(d)),
+                "{d:?}"
+            );
+        }
+        assert!(BackendRegistry::new().flavor_for(DeviceId::Xeon6126).is_none());
     }
 
     #[test]

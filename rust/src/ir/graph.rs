@@ -6,7 +6,7 @@
 //! [`TensorMeta`] at insertion time, so passes never re-derive shapes.
 
 
-use crate::util::fnv::Fnv64;
+use crate::util::fnv::{Fnv64, Mix64};
 
 use super::layout::Layout;
 use super::node::Op;
@@ -248,9 +248,47 @@ impl Graph {
     /// The hash is FNV-1a over a canonical byte encoding, so it is stable
     /// across processes and runs (unlike `std::hash::RandomState`).
     pub fn structural_hash(&self) -> u64 {
+        self.structural_hashes().0
+    }
+
+    /// Both structural digests: `(FNV-1a, Mix64)` over the *same*
+    /// canonical byte encoding, computed in one traversal.
+    ///
+    /// Compile-cache keys carry both (`session::cache::CacheKey`): 64-bit
+    /// FNV alone reaches birthday-collision odds once caches hold ~2³²
+    /// entries-worth of history, and FNV is trivially forceable by an
+    /// adversary.  A collision must now hold under two unrelated hash
+    /// families simultaneously — and the node count still catches the
+    /// easiest accidental aliasing loudly.
+    pub fn structural_hashes(&self) -> (u64, u64) {
         use std::fmt::Write as _;
+
+        /// Streams every byte of the canonical encoding into both hashers,
+        /// so the two digests cannot drift out of sync on what "structure"
+        /// means.
+        struct Dual {
+            a: Fnv64,
+            b: Mix64,
+        }
+        impl Dual {
+            fn write(&mut self, bytes: &[u8]) {
+                self.a.write(bytes);
+                self.b.write(bytes);
+            }
+            fn write_usize(&mut self, v: usize) {
+                self.a.write_usize(v);
+                self.b.write_usize(v);
+            }
+        }
+        impl std::fmt::Write for Dual {
+            fn write_str(&mut self, s: &str) -> std::fmt::Result {
+                self.write(s.as_bytes());
+                Ok(())
+            }
+        }
+
         const SEP: &[u8] = &[0xff];
-        let mut h = Fnv64::new();
+        let mut h = Dual { a: Fnv64::new(), b: Mix64::new() };
         h.write_usize(self.nodes.len());
         for n in &self.nodes {
             // operator + parameters: the derived Debug encoding is
@@ -270,7 +308,7 @@ impl Graph {
             let _ = write!(h, "{:?}/{:?}", n.meta.dtype, n.meta.layout);
             h.write(SEP);
         }
-        h.finish()
+        (h.a.finish(), h.b.finish())
     }
 
     /// Batch size of the first input.
@@ -388,6 +426,28 @@ mod tests {
         let h1 = tiny_cnn().structural_hash();
         let h2 = tiny_cnn().structural_hash();
         assert_eq!(h1, h2);
+    }
+
+    #[test]
+    fn dual_hashes_agree_on_identity_and_differ_from_each_other() {
+        let (a1, b1) = tiny_cnn().structural_hashes();
+        let (a2, b2) = tiny_cnn().structural_hashes();
+        assert_eq!((a1, b1), (a2, b2), "both digests must be deterministic");
+        assert_eq!(a1, tiny_cnn().structural_hash(), "primary digest unchanged");
+        assert_ne!(a1, b1, "the two hash families must not compute the same function");
+        // a structural change moves *both* digests
+        let mut g = tiny_cnn();
+        g.relu(g.output());
+        let (a3, b3) = g.structural_hashes();
+        assert_ne!(a1, a3);
+        assert_ne!(b1, b3);
+        // rename-only changes move neither
+        let mut renamed = tiny_cnn();
+        renamed.name = "other".into();
+        for n in &mut renamed.nodes {
+            n.name = format!("n{}", n.id);
+        }
+        assert_eq!((a1, b1), renamed.structural_hashes());
     }
 
     #[test]

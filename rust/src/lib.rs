@@ -13,10 +13,13 @@
 //! ### Compile-and-dispatch spine
 //! * [`session`] — compilation sessions: the [`session::PassManager`]
 //!   (the compiler pipeline as named, toggleable passes with per-pass
-//!   timing), the content-addressed [`session::CompileCache`] keyed by
-//!   `(graph hash, device, pipeline fingerprint)`, the unified
-//!   [`session::Executor`] engine over baseline and SOL execution, and
-//!   the [`backends::BackendRegistry`] lookup.
+//!   timing), the content-addressed bounded [`session::CompileCache`]
+//!   keyed by `(graph hashes, device, pipeline fingerprint)` with
+//!   pin-aware LRU/cost eviction, the unified [`session::Executor`]
+//!   engine over baseline and SOL execution, the
+//!   [`backends::BackendRegistry`] lookup, and the multi-tenant
+//!   [`session::ServingSession`] (admission control, per-tenant metrics,
+//!   `Arc`-shared artifacts across tenants).
 //! * [`ir`] — SOL's graph intermediate representation with purpose-tagged
 //!   dimensions, explicit memory layouts, and stable structural hashing
 //!   (the cache's content address).

@@ -10,6 +10,8 @@
 //!   through the PJRT artifacts (loss curve to stdout)
 //! * `deploy`    — write a framework-free deployment bundle
 //! * `serve`     — load a bundle and serve synthetic requests
+//! * `serve-multi` — multi-tenant serving: N tenants × M nets concurrently
+//!   across all devices through one bounded-cache `ServingSession`
 //! * `effort`    — the §VI-A programming-effort table measured on this repo
 
 use std::collections::HashMap;
@@ -21,8 +23,9 @@ use sol::exec::calibrate;
 use sol::exec::fig3::{fig3_grid, headline_speedups};
 use sol::metrics::{format_table, Timer};
 use sol::passes::{KernelOrigin, Step};
+use sol::exec::solrun::OffloadMode;
 use sol::runtime::pjrt::{HostTensor, PjrtEngine};
-use sol::session::Session;
+use sol::session::{EvictionPolicy, Phase, ServingConfig, ServingSession, Session};
 use sol::util::XorShift;
 use sol::workloads::NetId;
 
@@ -294,6 +297,52 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve_multi(flags: &HashMap<String, String>) -> Result<()> {
+    let n_tenants: usize = flags.get("tenants").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let n_nets: usize =
+        flags.get("nets").map(|s| s.parse()).transpose()?.unwrap_or(6).clamp(1, NetId::ALL.len());
+    let requests: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(64);
+    let capacity: usize = flags.get("cache").map(|s| s.parse()).transpose()?.unwrap_or(16);
+    let policy = match flags.get("policy").map(String::as_str).unwrap_or("lru") {
+        "lru" => EvictionPolicy::Lru,
+        "cost" => EvictionPolicy::MinCompileCost,
+        other => bail!("unknown eviction policy '{other}' (lru|cost)"),
+    };
+    let serving = ServingSession::new(ServingConfig {
+        cache_capacity: capacity,
+        eviction_policy: policy,
+        max_inflight_compiles: 4,
+        max_resident_per_tenant: 8,
+    });
+    let nets = &NetId::ALL[..n_nets];
+    println!(
+        "serving {requests} requests/tenant from {n_tenants} tenants over {n_nets} nets x {} devices (cache {capacity}, {policy:?})",
+        DeviceId::ALL.len()
+    );
+    let t = Timer::start();
+    std::thread::scope(|scope| {
+        for i in 0..n_tenants {
+            let tenant = serving.tenant(&format!("tenant-{i}"));
+            scope.spawn(move || {
+                let mut rng = XorShift::new(42 + i as u64);
+                for _ in 0..requests {
+                    let net = *rng.pick(nets);
+                    let dev = DeviceId::ALL[rng.below(DeviceId::ALL.len())];
+                    let g = net.build(1);
+                    // overloaded tenants are rejected, not queued: back off
+                    // by skipping the request (the admission test's contract)
+                    if let Ok(model) = tenant.compile(&g, dev) {
+                        tenant.run(&model, OffloadMode::Native, Phase::infer());
+                    }
+                }
+            });
+        }
+    });
+    println!("drove {} requests in {:.1} ms\n", n_tenants * requests, t.ms());
+    print!("{}", serving.serving_report());
+    Ok(())
+}
+
 fn cmd_effort() {
     // measured lines of code per component, like §VI-A
     let count = |dir: &str| -> usize {
@@ -333,7 +382,8 @@ USAGE: sol <devices|optimize|kernels|fig3|train-mlp|deploy|serve|effort|help> [-
   fig3      [--training] [--calibrate]
   train-mlp [--steps 20] [--batch 16]
   deploy    [--out DIR]
-  serve     [--bundle DIR] [--requests 16]";
+  serve     [--bundle DIR] [--requests 16]
+  serve-multi [--tenants 4] [--nets 6] [--requests 64] [--cache 16] [--policy lru|cost]";
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -348,6 +398,7 @@ fn main() -> Result<()> {
         "train-mlp" => cmd_train_mlp(&flags)?,
         "deploy" => cmd_deploy(&flags)?,
         "serve" => cmd_serve(&flags)?,
+        "serve-multi" => cmd_serve_multi(&flags)?,
         "effort" => cmd_effort(),
         _ => println!("{HELP}"),
     }

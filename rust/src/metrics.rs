@@ -1,9 +1,28 @@
 //! Lightweight timing, counters and table-formatting helpers shared by
 //! the CLI, the session subsystem, examples and benches.
 //!
-//! [`counter`] is a process-global named-counter registry; the compile
-//! cache (`session::cache`) publishes its hit/miss totals here so any
-//! layer can observe cache behaviour without holding a `Session`.
+//! [`counter`] is a process-global named-counter registry; any layer can
+//! observe another's behaviour through it without holding the owning
+//! object.  Registered counter families (dotted-path convention):
+//!
+//! | name | meaning |
+//! |------|---------|
+//! | `compile_cache.hit`        | compile served from the content-addressed cache |
+//! | `compile_cache.miss`       | compile that ran the full pipeline |
+//! | `compile_cache.eviction`   | cache entries dropped by capacity eviction (never `clear()`) |
+//! | `pass.<name>.runs`         | executions of one compiler pass (7 standard names, `session::stages::ALL`) |
+//! | `serve.<tenant>.compiles`  | admitted compile requests of one serving tenant (hits included) |
+//! | `serve.<tenant>.cache_hits`| the tenant's compiles served from the shared cache |
+//! | `serve.<tenant>.runs`      | executor runs the tenant drove |
+//! | `serve.<tenant>.evicted`   | artifacts unpinned from the tenant's resident set by its capacity limit |
+//!
+//! Per-tenant counters are registered on first `ServingSession::tenant()`
+//! call for that name and appear in [`counters_snapshot`] from then on —
+//! the serving acceptance tests (`rust/tests/serving.rs`) pin this.
+//! Like the compile cache's counters, the registry entries are
+//! *cumulative mirrors*: process-wide totals across every cache/serving
+//! session that used the name, while each owning object keeps its own
+//! session-local counts (`CacheStats`, `TenantCounters`).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -1,39 +1,53 @@
-//! Content-addressed compile cache.
+//! Content-addressed compile cache with bounded, pin-aware eviction.
 //!
-//! Keyed by `(graph structural hash, device, pipeline fingerprint)`:
+//! Keyed by `(graph structural hashes, device, pipeline fingerprint)`:
 //! repeated `Session::compile` calls for the same network / device /
 //! configuration are O(1) lookups returning the same `Arc`'d artifact —
 //! the prerequisite for serving heavy repeated traffic where the same
 //! model is (re)deployed across many workers.
 //!
-//! Hit/miss totals are kept per-cache *and* published to the process-wide
-//! [`crate::metrics`] registry (`compile_cache.hit` / `compile_cache.miss`).
+//! The store is **bounded**: `CompileCache::bounded(capacity, policy)`
+//! caps resident entries, evicting by LRU or by cheapest-to-recompile
+//! ([`EvictionPolicy`]).  Eviction only ever considers *unpinned* entries
+//! — an artifact whose `Arc` is still held outside the cache (a live
+//! executor, a tenant's resident set) is never dropped, so the cache may
+//! transiently exceed its capacity rather than invalidate in-flight work.
+//! `CompileCache::new()` keeps the legacy unbounded behaviour.
+//!
+//! Hit/miss/eviction totals are kept per-cache *and* published to the
+//! process-wide [`crate::metrics`] registry (`compile_cache.hit` /
+//! `compile_cache.miss` / `compile_cache.eviction`).  The per-cache
+//! counters live under the same lock as the map, so a [`CacheStats`]
+//! snapshot is consistent — `len` never disagrees with the
+//! hit/miss/eviction history it was taken with.
 //!
 //! Identity is structural: names are not part of the address, so a hit
 //! returns the artifact compiled under the *first* name seen for that
 //! structure (its `net` field included).
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::devsim::DeviceId;
-use crate::metrics;
+use crate::metrics::{self, Timer};
 use crate::passes::optimizer::OptimizedModel;
 
 /// The content address of one compiled artifact.
 ///
-/// The graph is addressed by its 64-bit FNV-1a structural hash plus its
-/// node count as a cheap independent check — FNV is not
-/// collision-resistant, and the count catches the easiest accidental
-/// collisions loudly (different-size graphs can never alias).  Full
-/// collision hardening (a second independent hash or stored-input
-/// verification) is listed with the multi-tenant-serving ROADMAP item,
-/// where caches grow large enough for birthday odds to matter.
+/// The graph is addressed by **two** independent 64-bit digests of the
+/// same canonical structural encoding ([`crate::ir::Graph::structural_hashes`]:
+/// FNV-1a + a rotate-multiply mix) plus its node count as a cheap third
+/// check.  FNV alone is not collision-resistant — a forced or
+/// birthday-odds collision in one hash is caught by the other, and
+/// different-size graphs can never alias regardless.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct CacheKey {
-    /// `Graph::structural_hash()` of the input graph.
+    /// Primary digest: `Graph::structural_hash()` (FNV-1a).
     pub graph: u64,
+    /// Second, independent digest of the same encoding (`Mix64`) —
+    /// collision hardening for caches that grow to birthday-odds scale.
+    pub graph2: u64,
     /// Node count of the input graph (collision tripwire).
     pub nodes: u32,
     pub device: DeviceId,
@@ -45,8 +59,10 @@ impl CacheKey {
     /// Build the address for `graph` compiled on `device` under the
     /// configuration with fingerprint `pipeline`.
     pub fn of(graph: &crate::ir::Graph, device: DeviceId, pipeline: u64) -> CacheKey {
+        let (h1, h2) = graph.structural_hashes();
         CacheKey {
-            graph: graph.structural_hash(),
+            graph: h1,
+            graph2: h2,
             nodes: graph.nodes.len() as u32,
             device,
             pipeline,
@@ -54,16 +70,80 @@ impl CacheKey {
     }
 }
 
+/// Which resident artifact a full cache drops first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// Least-recently-used unpinned entry.
+    Lru,
+    /// Unpinned entry cheapest to recompile (by recorded compile
+    /// wall-clock), ties broken by LRU — keeps the artifacts that would
+    /// hurt most to lose.
+    MinCompileCost,
+}
+
+impl EvictionPolicy {
+    fn encode(self) -> u8 {
+        match self {
+            EvictionPolicy::Lru => 0,
+            EvictionPolicy::MinCompileCost => 1,
+        }
+    }
+
+    fn decode(v: u8) -> EvictionPolicy {
+        match v {
+            0 => EvictionPolicy::Lru,
+            _ => EvictionPolicy::MinCompileCost,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Entry {
+    model: Arc<OptimizedModel>,
+    /// Logical clock of the last hit or insert (LRU order).
+    last_used: u64,
+    /// Wall-clock of the compile that produced this artifact, ms
+    /// (the `MinCompileCost` eviction score).
+    cost_ms: f64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    map: HashMap<CacheKey, Entry>,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Consistent point-in-time view of the cache: counters and length are
+/// read under one lock, so they never tear across a concurrent eviction
+/// or `clear()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub len: usize,
+    pub capacity: usize,
+}
+
 /// Thread-safe content-addressed store of compiled models.
 #[derive(Debug)]
 pub struct CompileCache {
-    map: Mutex<HashMap<CacheKey, Arc<OptimizedModel>>>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+    inner: Mutex<Inner>,
+    /// Max resident entries; `usize::MAX` = unbounded.  Runtime-adjustable
+    /// via [`CompileCache::set_capacity`].
+    capacity: AtomicUsize,
+    /// Encoded [`EvictionPolicy`]; runtime-adjustable via
+    /// [`CompileCache::set_policy`] (the serving layer re-points an
+    /// existing session's cache at its configured policy).
+    policy: AtomicU8,
     /// Global metric handles, resolved once so the hit path never touches
     /// the metrics registry lock.
-    hit_metric: std::sync::Arc<metrics::Counter>,
-    miss_metric: std::sync::Arc<metrics::Counter>,
+    hit_metric: Arc<metrics::Counter>,
+    miss_metric: Arc<metrics::Counter>,
+    eviction_metric: Arc<metrics::Counter>,
 }
 
 impl Default for CompileCache {
@@ -73,14 +153,84 @@ impl Default for CompileCache {
 }
 
 impl CompileCache {
+    /// The legacy unbounded cache (LRU policy is moot at `usize::MAX`).
     pub fn new() -> Self {
+        Self::bounded(usize::MAX, EvictionPolicy::Lru)
+    }
+
+    /// A cache holding at most `capacity` *unpinned* entries, evicting by
+    /// `policy` once full.
+    pub fn bounded(capacity: usize, policy: EvictionPolicy) -> Self {
         CompileCache {
-            map: Mutex::new(HashMap::new()),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
+            inner: Mutex::new(Inner::default()),
+            capacity: AtomicUsize::new(capacity),
+            policy: AtomicU8::new(policy.encode()),
             hit_metric: metrics::counter("compile_cache.hit"),
             miss_metric: metrics::counter("compile_cache.miss"),
+            eviction_metric: metrics::counter("compile_cache.eviction"),
         }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity.load(Ordering::Relaxed)
+    }
+
+    pub fn policy(&self) -> EvictionPolicy {
+        EvictionPolicy::decode(self.policy.load(Ordering::Relaxed))
+    }
+
+    /// Switch the eviction policy at runtime; applies from the next
+    /// eviction on (resident entries are untouched).
+    pub fn set_policy(&self, policy: EvictionPolicy) {
+        self.policy.store(policy.encode(), Ordering::Relaxed);
+    }
+
+    /// Adjust the capacity knob at runtime.  Shrinking evicts unpinned
+    /// surplus immediately (under the current policy).
+    pub fn set_capacity(&self, capacity: usize) {
+        self.capacity.store(capacity, Ordering::Relaxed);
+        let evicted = {
+            let mut inner = self.inner.lock().unwrap();
+            Self::enforce(&mut inner, capacity, self.policy())
+        };
+        if evicted > 0 {
+            self.eviction_metric.add(evicted);
+        }
+    }
+
+    /// Evict until `map.len() <= capacity` or only pinned entries remain.
+    /// An entry is pinned while any `Arc` to its model lives outside the
+    /// cache (executors, tenant resident sets, the caller of the insert in
+    /// progress) — `strong_count == 1` means the cache holds the sole
+    /// reference.  Returns how many entries were dropped.
+    fn enforce(inner: &mut Inner, capacity: usize, policy: EvictionPolicy) -> u64 {
+        let mut evicted = 0;
+        while inner.map.len() > capacity {
+            let victim = inner
+                .map
+                .iter()
+                .filter(|(_, e)| Arc::strong_count(&e.model) == 1)
+                .min_by(|(_, a), (_, b)| match policy {
+                    EvictionPolicy::Lru => a.last_used.cmp(&b.last_used),
+                    EvictionPolicy::MinCompileCost => a
+                        .cost_ms
+                        .partial_cmp(&b.cost_ms)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.last_used.cmp(&b.last_used)),
+                })
+                .map(|(k, _)| *k);
+            match victim {
+                Some(k) => {
+                    inner.map.remove(&k);
+                    inner.evictions += 1;
+                    evicted += 1;
+                }
+                // everything pinned: exceed capacity rather than drop an
+                // artifact still in use
+                None => break,
+            }
+        }
+        evicted
     }
 
     /// Look up `key`, compiling via `compile` on a miss.  The closure runs
@@ -99,45 +249,104 @@ impl CompileCache {
 
     /// Fallible form of [`CompileCache::get_or_compile`]: a compile error
     /// propagates to the caller and nothing is cached.
-    pub fn try_get_or_compile<F>(&self, key: CacheKey, compile: F) -> crate::Result<Arc<OptimizedModel>>
+    pub fn try_get_or_compile<F>(
+        &self,
+        key: CacheKey,
+        compile: F,
+    ) -> crate::Result<Arc<OptimizedModel>>
     where
         F: FnOnce() -> crate::Result<OptimizedModel>,
     {
-        if let Some(hit) = self.map.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            self.hit_metric.inc();
-            return Ok(hit.clone());
-        }
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        self.miss_metric.inc();
-        let model = Arc::new(compile()?);
-        self.map.lock().unwrap().insert(key, model.clone());
-        Ok(model)
+        Ok(self.try_get_or_compile_traced(key, compile)?.0)
     }
 
-    /// Peek without compiling (no counter updates).
+    /// Like [`CompileCache::try_get_or_compile`], but also reports whether
+    /// the lookup hit (`true`) or compiled fresh (`false`) — the serving
+    /// layer uses this to attribute hits and misses per tenant.
+    pub fn try_get_or_compile_traced<F>(
+        &self,
+        key: CacheKey,
+        compile: F,
+    ) -> crate::Result<(Arc<OptimizedModel>, bool)>
+    where
+        F: FnOnce() -> crate::Result<OptimizedModel>,
+    {
+        {
+            let mut guard = self.inner.lock().unwrap();
+            let inner = &mut *guard;
+            inner.clock += 1;
+            if let Some(e) = inner.map.get_mut(&key) {
+                e.last_used = inner.clock;
+                inner.hits += 1;
+                let model = e.model.clone();
+                drop(guard);
+                self.hit_metric.inc();
+                return Ok((model, true));
+            }
+            inner.misses += 1;
+        }
+        self.miss_metric.inc();
+        let t = Timer::start();
+        let model = Arc::new(compile()?);
+        let cost_ms = t.ms();
+        let evicted = {
+            let mut guard = self.inner.lock().unwrap();
+            let inner = &mut *guard;
+            inner.clock += 1;
+            let last_used = inner.clock;
+            inner.map.insert(key, Entry { model: model.clone(), last_used, cost_ms });
+            Self::enforce(inner, self.capacity.load(Ordering::Relaxed), self.policy())
+        };
+        if evicted > 0 {
+            self.eviction_metric.add(evicted);
+        }
+        Ok((model, false))
+    }
+
+    /// Peek without compiling (no counter updates, no LRU touch).
     pub fn peek(&self, key: &CacheKey) -> Option<Arc<OptimizedModel>> {
-        self.map.lock().unwrap().get(key).cloned()
+        self.inner.lock().unwrap().map.get(key).map(|e| e.model.clone())
     }
 
     pub fn hits(&self) -> u64 {
-        self.hits.load(Ordering::Relaxed)
+        self.inner.lock().unwrap().hits
     }
 
     pub fn misses(&self) -> u64 {
-        self.misses.load(Ordering::Relaxed)
+        self.inner.lock().unwrap().misses
+    }
+
+    /// Entries dropped by capacity eviction (never counts `clear()`).
+    pub fn evictions(&self) -> u64 {
+        self.inner.lock().unwrap().evictions
     }
 
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.inner.lock().unwrap().map.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// One-lock consistent snapshot of counters and length.
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            len: inner.map.len(),
+            capacity: self.capacity.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drop every entry, pinned or not (holders keep their `Arc`s alive;
+    /// only the cache's references go).  Cumulative counters survive:
+    /// `clear()` empties the store, it does not rewrite history — and an
+    /// explicit clear is not an eviction.
     pub fn clear(&self) {
-        self.map.lock().unwrap().clear();
+        self.inner.lock().unwrap().map.clear();
     }
 }
 
@@ -147,20 +356,24 @@ mod tests {
     use crate::session::pass::{PassManager, PipelineConfig};
     use crate::workloads::NetId;
 
-    fn compile_resnet() -> OptimizedModel {
+    fn compile_for(g: &crate::ir::Graph) -> OptimizedModel {
         let cfg = PipelineConfig::new(DeviceId::Xeon6126);
-        PassManager::standard(cfg).compile(&NetId::Resnet18.build(1)).unwrap()
+        PassManager::standard(cfg).compile(g).unwrap()
+    }
+
+    fn compile_resnet() -> OptimizedModel {
+        compile_for(&NetId::Resnet18.build(1))
+    }
+
+    fn key_for(g: &crate::ir::Graph) -> CacheKey {
+        CacheKey::of(g, DeviceId::Xeon6126, PipelineConfig::new(DeviceId::Xeon6126).fingerprint())
     }
 
     #[test]
     fn second_lookup_is_a_hit_returning_the_same_arc() {
         let cache = CompileCache::new();
         let g = NetId::Resnet18.build(1);
-        let key = CacheKey::of(
-            &g,
-            DeviceId::Xeon6126,
-            PipelineConfig::new(DeviceId::Xeon6126).fingerprint(),
-        );
+        let key = key_for(&g);
         let a = cache.get_or_compile(key, compile_resnet);
         assert_eq!((cache.hits(), cache.misses()), (0, 1));
         let b = cache.get_or_compile(key, || panic!("must not recompile"));
@@ -192,5 +405,124 @@ mod tests {
         cache.clear();
         assert!(cache.is_empty());
         assert_eq!(cache.misses(), 1);
+    }
+
+    #[test]
+    fn dual_hash_separates_forced_primary_collisions() {
+        // simulate a forced 64-bit FNV collision: same primary digest and
+        // node count, different structure — the second digest must still
+        // separate the keys
+        let g1 = NetId::Mlp.build(1);
+        let k1 = key_for(&g1);
+        let mut k2 = key_for(&NetId::Mlp.build(2));
+        k2.graph = k1.graph;
+        k2.nodes = k1.nodes;
+        assert_ne!(k1, k2, "graph2 must catch the forced collision");
+        assert_ne!(k1.graph2, k2.graph2);
+    }
+
+    #[test]
+    fn bounded_cache_evicts_lru_and_counters_stay_consistent() {
+        let cache = CompileCache::bounded(1, EvictionPolicy::Lru);
+        let g1 = NetId::Mlp.build(1);
+        let g2 = NetId::Mlp.build(2);
+        let (k1, k2) = (key_for(&g1), key_for(&g2));
+        drop(cache.get_or_compile(k1, || compile_for(&g1)));
+        drop(cache.get_or_compile(k2, || compile_for(&g2)));
+        // k1 (LRU, unpinned) was evicted to stay within capacity 1
+        assert_eq!(cache.len(), 1);
+        assert!(cache.peek(&k1).is_none());
+        assert!(cache.peek(&k2).is_some());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions, s.len), (0, 2, 1, 1));
+        // re-requesting the evicted key is an honest miss; len stays bounded
+        drop(cache.get_or_compile(k1, || compile_for(&g1)));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions, s.len), (0, 3, 2, 1));
+        // clear() empties but keeps the cumulative history
+        cache.clear();
+        assert!(cache.is_empty());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions, s.len), (0, 3, 2, 0));
+        assert_eq!((cache.hits(), cache.misses(), cache.evictions()), (0, 3, 2));
+    }
+
+    #[test]
+    fn pinned_entries_survive_eviction_pressure() {
+        let cache = CompileCache::bounded(1, EvictionPolicy::Lru);
+        let g1 = NetId::Mlp.build(1);
+        let g2 = NetId::Mlp.build(2);
+        let g3 = NetId::Mlp.build(4);
+        let (k1, k2, k3) = (key_for(&g1), key_for(&g2), key_for(&g3));
+        let pinned = cache.get_or_compile(k1, || compile_for(&g1));
+        drop(cache.get_or_compile(k2, || compile_for(&g2)));
+        // k1 is pinned (we hold its Arc) and k2 was pinned by its caller at
+        // insert time: the cache exceeds capacity rather than drop either
+        assert_eq!(cache.len(), 2, "pinned artifact must not be evicted");
+        assert_eq!(cache.evictions(), 0);
+        assert!(cache.peek(&k1).is_some());
+        drop(pinned);
+        // with k1 and k2 unpinned, the next insert reclaims down to capacity
+        drop(cache.get_or_compile(k3, || compile_for(&g3)));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.evictions(), 2);
+        assert!(cache.peek(&k3).is_some());
+    }
+
+    #[test]
+    fn min_compile_cost_policy_evicts_the_cheapest() {
+        let cache = CompileCache::bounded(2, EvictionPolicy::MinCompileCost);
+        let g1 = NetId::Mlp.build(1);
+        let g2 = NetId::Mlp.build(2);
+        let g3 = NetId::Mlp.build(4);
+        let (k1, k2, k3) = (key_for(&g1), key_for(&g2), key_for(&g3));
+        // k1 is made artificially expensive to recompile; k2 is cheap
+        drop(cache.get_or_compile(k1, || {
+            std::thread::sleep(std::time::Duration::from_millis(25));
+            compile_for(&g1)
+        }));
+        drop(cache.get_or_compile(k2, || compile_for(&g2)));
+        drop(cache.get_or_compile(k3, || compile_for(&g3)));
+        // the cheap artifact went first, not the LRU one
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1);
+        assert!(cache.peek(&k1).is_some(), "expensive artifact must be kept");
+        assert!(cache.peek(&k2).is_none(), "cheapest artifact must be evicted");
+    }
+
+    #[test]
+    fn policy_is_switchable_at_runtime() {
+        let cache = CompileCache::bounded(2, EvictionPolicy::Lru);
+        assert_eq!(cache.policy(), EvictionPolicy::Lru);
+        cache.set_policy(EvictionPolicy::MinCompileCost);
+        assert_eq!(cache.policy(), EvictionPolicy::MinCompileCost);
+        // the switched-to policy governs the next eviction: the cheap
+        // artifact goes, not the LRU one
+        let g1 = NetId::Mlp.build(1);
+        let g2 = NetId::Mlp.build(2);
+        let g3 = NetId::Mlp.build(4);
+        let (k1, k2, k3) = (key_for(&g1), key_for(&g2), key_for(&g3));
+        drop(cache.get_or_compile(k1, || {
+            std::thread::sleep(std::time::Duration::from_millis(25));
+            compile_for(&g1)
+        }));
+        drop(cache.get_or_compile(k2, || compile_for(&g2)));
+        drop(cache.get_or_compile(k3, || compile_for(&g3)));
+        assert!(cache.peek(&k1).is_some(), "expensive artifact kept under cost policy");
+        assert!(cache.peek(&k2).is_none(), "cheapest artifact evicted under cost policy");
+    }
+
+    #[test]
+    fn shrinking_capacity_evicts_immediately() {
+        let cache = CompileCache::bounded(8, EvictionPolicy::Lru);
+        for b in [1usize, 2, 4] {
+            let g = NetId::Mlp.build(b);
+            drop(cache.get_or_compile(key_for(&g), || compile_for(&g)));
+        }
+        assert_eq!(cache.len(), 3);
+        cache.set_capacity(1);
+        assert_eq!(cache.capacity(), 1);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.evictions(), 2);
     }
 }

@@ -10,9 +10,14 @@
 //!   O(1) lookups with hit/miss counters in [`crate::metrics`].
 //! * [`executor`] — the unified [`Executor`] engine: baseline and SOL
 //!   execution paths behind one `compile(...)` → `run(...)` flow.
+//! * [`serve`] — multi-tenant serving over one session: admission
+//!   control, bounded pin-aware eviction, per-tenant metrics
+//!   ([`ServingSession`] / [`Tenant`]).
 //!
 //! The [`BackendRegistry`] (defined with the backends, re-exported here)
-//! indexes the per-device backends by device / name / framework slot.
+//! indexes the per-device backends by device / name / framework slot and
+//! is the authoritative source for DFP flavor selection
+//! (`BackendRegistry::flavor_for` → [`PipelineConfig::flavor`]).
 //!
 //! ```no_run
 //! use sol::devsim::DeviceId;
@@ -32,21 +37,26 @@
 pub mod cache;
 pub mod executor;
 pub mod pass;
+pub mod serve;
 pub mod stages;
 
 use std::sync::Arc;
 
 use crate::backends::BackendRegistry;
 use crate::devsim::{DeviceId, EfficiencyTable, SimReport};
+use crate::dfp::Flavor;
 use crate::exec::baseline::BaselineKind;
 use crate::exec::solrun::OffloadMode;
 use crate::ir::Graph;
 use crate::passes::optimizer::{OptimizeOptions, OptimizedModel};
 use crate::Result;
 
-pub use cache::{CacheKey, CompileCache};
+pub use cache::{CacheKey, CacheStats, CompileCache, EvictionPolicy};
 pub use executor::{BaselineExecutor, Executor, Phase, SolExecutor};
 pub use pass::{CompileState, Pass, PassManager, PassRecord, PipelineConfig};
+pub use serve::{
+    AdmissionError, CompilePermit, ServingConfig, ServingSession, Tenant, TenantCounters,
+};
 
 /// A compilation session: backend registry + compile cache + simulator
 /// efficiency table, shared by every compile and run it serves.
@@ -65,6 +75,17 @@ impl Default for Session {
     }
 }
 
+/// What one cache-routed compile produced: the artifact, its content
+/// address, and whether the cache already had it.  The serving layer
+/// (`session::serve`) uses the key to pin artifacts per tenant and the
+/// hit flag to attribute cache behaviour per tenant.
+#[derive(Debug, Clone)]
+pub struct CompileOutcome {
+    pub model: Arc<OptimizedModel>,
+    pub key: CacheKey,
+    pub cache_hit: bool,
+}
+
 impl Session {
     /// A session over the default backends and efficiency table.
     pub fn new() -> Self {
@@ -73,17 +94,28 @@ impl Session {
 
     /// A session with a calibrated / customized efficiency table.
     pub fn with_eff(eff: EfficiencyTable) -> Self {
+        Self::with_parts(BackendRegistry::with_defaults(), CompileCache::new(), eff)
+    }
+
+    /// A session over a custom backend registry (default cache and table).
+    pub fn with_registry(registry: BackendRegistry) -> Self {
+        Self::with_parts(registry, CompileCache::new(), EfficiencyTable::default())
+    }
+
+    /// Fully explicit construction: registry + (possibly bounded) compile
+    /// cache + efficiency table.  `ServingSession` uses this to cap the
+    /// cache; tests use it to register exotic backends.
+    pub fn with_parts(
+        registry: BackendRegistry,
+        cache: CompileCache,
+        eff: EfficiencyTable,
+    ) -> Self {
         // the fingerprint ignores the device (it is keyed separately), so
         // any device stands in here
         let mut cfg = PipelineConfig::new(DeviceId::Xeon6126);
         cfg.eff = eff.clone();
         let default_pipeline_fp = cfg.fingerprint();
-        Session {
-            registry: BackendRegistry::with_defaults(),
-            cache: CompileCache::new(),
-            eff,
-            default_pipeline_fp,
-        }
+        Session { registry, cache, eff, default_pipeline_fp }
     }
 
     pub fn registry(&self) -> &BackendRegistry {
@@ -111,14 +143,45 @@ impl Session {
     /// (deployment bundles, logs) should use their own graph's name,
     /// not `model.net`.
     pub fn compile(&self, graph: &Graph, device: DeviceId) -> Arc<OptimizedModel> {
-        let key = CacheKey::of(graph, device, self.default_pipeline_fp);
-        self.cache.get_or_compile(key, || {
-            let mut cfg = PipelineConfig::new(device);
-            cfg.eff = self.eff.clone();
-            PassManager::standard(cfg)
-                .compile(graph)
-                .expect("the default pipeline cannot fail on a well-formed graph")
-        })
+        self.compile_traced(graph, device).model
+    }
+
+    /// [`Session::compile`] with the full [`CompileOutcome`]: artifact +
+    /// content address + hit/miss attribution (the serving layer's entry
+    /// point).
+    pub fn compile_traced(&self, graph: &Graph, device: DeviceId) -> CompileOutcome {
+        // flavor selection is routed through the backend registry; with
+        // the shipped backends the override is None and the precomputed
+        // default fingerprint applies unchanged
+        let flavor = self.flavor_override(device);
+        let fp = match flavor {
+            None => self.default_pipeline_fp,
+            Some(_) => {
+                let mut cfg = self.pipeline_config(device);
+                cfg.flavor = flavor;
+                cfg.fingerprint()
+            }
+        };
+        let key = CacheKey::of(graph, device, fp);
+        let (model, hit) = self
+            .cache
+            .try_get_or_compile_traced(key, || {
+                let mut cfg = PipelineConfig::new(device);
+                cfg.eff = self.eff.clone();
+                cfg.flavor = flavor;
+                PassManager::standard(cfg).compile(graph)
+            })
+            .expect("the default pipeline cannot fail on a well-formed graph");
+        CompileOutcome { model, key, cache_hit: hit }
+    }
+
+    /// The DFP flavor the registry's backend for `device` requests, when
+    /// it differs from the kind-derived default (`None` otherwise, so the
+    /// common case keeps the device-independent default fingerprint and
+    /// its precomputed cache-key path).
+    fn flavor_override(&self, device: DeviceId) -> Option<Flavor> {
+        let auto = stages::flavor_for(device);
+        self.registry.flavor_for(device).filter(|f| *f != auto)
     }
 
     /// A pipeline configuration for `device` seeded with this session's
@@ -149,6 +212,9 @@ impl Session {
         mut cfg: PipelineConfig,
     ) -> Result<Arc<OptimizedModel>> {
         cfg.eff = self.eff.clone();
+        if cfg.flavor.is_none() {
+            cfg.flavor = self.flavor_override(cfg.device);
+        }
         let key = CacheKey::of(graph, cfg.device, cfg.fingerprint());
         self.cache
             .try_get_or_compile(key, || PassManager::standard(cfg).compile(graph))
@@ -290,6 +356,60 @@ mod tests {
     fn typoed_pass_name_fails_loudly() {
         let mut cfg = PipelineConfig::new(DeviceId::Xeon6126);
         cfg.disable_pass("dnn_autotune"); // underscore typo
+    }
+
+    #[test]
+    fn registry_flavor_override_routes_into_compiled_kernels() {
+        // a registry that maps the Xeon to the CUDA flavor: the session
+        // must compile CUDA kernels for it (no ad-hoc kind derivation) and
+        // give the artifact a distinct content address
+        struct CudaOnXeon;
+        impl crate::backends::DeviceBackend for CudaOnXeon {
+            fn name(&self) -> &'static str {
+                "cuda-on-xeon"
+            }
+            fn device(&self) -> DeviceId {
+                DeviceId::Xeon6126
+            }
+            fn flavor(&self) -> crate::dfp::Flavor {
+                crate::dfp::Flavor::Cuda
+            }
+            fn libraries(&self) -> Vec<crate::dnn::Library> {
+                Vec::new()
+            }
+            fn framework_slot(&self) -> crate::framework::DeviceType {
+                crate::framework::DeviceType::Cpu
+            }
+        }
+        let mut r = BackendRegistry::new();
+        r.register(Box::new(CudaOnXeon));
+        let s = Session::with_registry(r);
+        let g = NetId::Squeezenet1_1.build(1);
+        let out = s.compile_traced(&g, DeviceId::Xeon6126);
+        let src = out
+            .model
+            .kernels()
+            .find_map(|k| k.source.as_deref())
+            .expect("squeezenet has DFP kernels with source");
+        assert!(src.contains("blockIdx"), "expected CUDA flavor, got:\n{src}");
+        // same graph under the default registry: ISPC flavor, different key
+        let default = Session::new().compile_traced(&g, DeviceId::Xeon6126);
+        assert_ne!(out.key, default.key, "flavor override must change the content address");
+        let default_src = default.model.kernels().find_map(|k| k.source.as_deref()).unwrap();
+        assert!(!default_src.contains("blockIdx"));
+    }
+
+    #[test]
+    fn compile_traced_reports_hits_and_keys() {
+        let s = Session::new();
+        let g = NetId::Mlp.build(1);
+        let first = s.compile_traced(&g, DeviceId::Xeon6126);
+        assert!(!first.cache_hit);
+        let second = s.compile_traced(&g, DeviceId::Xeon6126);
+        assert!(second.cache_hit);
+        assert_eq!(first.key, second.key);
+        assert!(Arc::ptr_eq(&first.model, &second.model));
+        assert!(s.cache().peek(&first.key).is_some());
     }
 
     #[test]

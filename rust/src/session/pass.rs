@@ -20,7 +20,7 @@ use std::collections::BTreeSet;
 use std::sync::Arc;
 
 use crate::devsim::{DeviceId, EfficiencyTable};
-use crate::dfp::KernelPlan;
+use crate::dfp::{Flavor, KernelPlan};
 use crate::dnn::{DescriptorCache, DnnPlan, Library};
 use crate::ir::{Graph, Op};
 use crate::metrics::{self, Timer};
@@ -41,6 +41,12 @@ pub struct PipelineConfig {
     /// DFP region fusion (false = one kernel per DFP node); a parameter of
     /// the `dfp-fuse-codegen` pass rather than a pass of its own.
     pub enable_fusion: bool,
+    /// DFP code flavor override.  `None` (the default) derives the flavor
+    /// from the device kind ([`stages::flavor_for`]); `Session` sets this
+    /// when its `BackendRegistry` maps the device to a different flavor,
+    /// so flavor selection is routed through the registered backend
+    /// instead of re-derived ad hoc.
+    pub flavor: Option<Flavor>,
     pub eff: EfficiencyTable,
     /// Passes disabled by name (ablation).  BTreeSet ⇒ deterministic
     /// iteration for the fingerprint.
@@ -53,6 +59,7 @@ impl PipelineConfig {
             device,
             allow_libs: None,
             enable_fusion: true,
+            flavor: None,
             eff: EfficiencyTable::default(),
             disabled: BTreeSet::new(),
         }
@@ -102,14 +109,20 @@ impl PipelineConfig {
     }
 
     /// Stable fingerprint of everything that changes compile *output*:
-    /// disabled passes, fusion flag, library restriction, efficiency
-    /// overrides.  Device is keyed separately by the cache.
+    /// disabled passes, fusion flag, flavor override, library restriction,
+    /// efficiency overrides.  Device is keyed separately by the cache.
     pub fn fingerprint(&self) -> u64 {
         let mut h = Fnv64::new();
         for d in &self.disabled {
             h.write_str(d);
         }
         h.write_bool(self.enable_fusion);
+        match self.flavor {
+            // `auto` rather than the resolved flavor: the flavor is then a
+            // pure function of the device, which the cache keys separately
+            None => h.write_str("flavor:auto"),
+            Some(f) => h.write_str(&format!("flavor:{f:?}")),
+        }
         match &self.allow_libs {
             None => h.write_str("libs:any"),
             Some(libs) => {
@@ -421,11 +434,14 @@ mod tests {
         no_fuse.enable_fusion = false;
         let mut libs = base.clone();
         libs.allow_libs = Some(vec![Library::VednnStock]);
+        let mut flavored = base.clone();
+        flavored.flavor = Some(crate::dfp::Flavor::Cuda);
         let fps = [
             base.fingerprint(),
             no_elide.fingerprint(),
             no_fuse.fingerprint(),
             libs.fingerprint(),
+            flavored.fingerprint(),
         ];
         for i in 0..fps.len() {
             for j in (i + 1)..fps.len() {

@@ -1,0 +1,544 @@
+//! Multi-tenant serving over one [`Session`] — the middleware serving
+//! many models for many tenants behind one hardware-abstraction layer.
+//!
+//! A [`ServingSession`] multiplexes tenants over one shared
+//! [`Session`]:
+//!
+//! * **One compile per content address** — tenants requesting the same
+//!   `(graph, device, pipeline)` share one `Arc`'d artifact; the second
+//!   tenant's compile is a cache hit, attributed to *that* tenant.
+//! * **Bounded cache** — the shared [`CompileCache`] is capped
+//!   ([`ServingConfig::cache_capacity`]) with LRU-or-cost eviction
+//!   ([`EvictionPolicy`]); artifacts pinned by a tenant's resident set or
+//!   a live executor are never evicted.
+//! * **Admission control** — per-tenant limits on in-flight compiles
+//!   (reject, never queue/deadlock: [`AdmissionError`]) and on resident
+//!   artifacts (per-tenant LRU unpin once over
+//!   [`ServingConfig::max_resident_per_tenant`]).
+//! * **Per-tenant metrics** — `compiles`, `cache_hits`, `runs`, `evicted`
+//!   counters per tenant, mirrored into the process-wide
+//!   [`crate::metrics`] registry as `serve.<tenant>.<counter>` and
+//!   rendered by [`ServingSession::serving_report`].
+//!
+//! Execution stays per-request: every [`Tenant::run`] builds a fresh
+//! [`SolExecutor`] over the shared artifact, so concurrent requests never
+//! contend on executor state.
+//!
+//! ```no_run
+//! use sol::devsim::DeviceId;
+//! use sol::exec::solrun::OffloadMode;
+//! use sol::session::{Phase, ServingConfig, ServingSession};
+//! use sol::workloads::NetId;
+//!
+//! let serving = ServingSession::new(ServingConfig::default());
+//! let alice = serving.tenant("alice");
+//! let bob = serving.tenant("bob");
+//! let g = NetId::Resnet18.build(1);
+//! let m1 = alice.compile(&g, DeviceId::TitanV).unwrap(); // miss: compiles
+//! let m2 = bob.compile(&g, DeviceId::TitanV).unwrap();   // hit: same Arc
+//! let report = bob.run(&m2, OffloadMode::Native, Phase::infer());
+//! # let _ = (m1, report);
+//! println!("{}", serving.serving_report());
+//! ```
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::devsim::{DeviceId, SimReport};
+use crate::exec::solrun::OffloadMode;
+use crate::ir::Graph;
+use crate::metrics::{self, format_table};
+use crate::passes::optimizer::OptimizedModel;
+
+use super::cache::{CacheKey, CacheStats, CompileCache, EvictionPolicy};
+use super::executor::{Phase, SolExecutor};
+use super::Session;
+
+/// Knobs of one serving deployment.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Max unpinned entries in the shared compile cache
+    /// (`usize::MAX` = unbounded).
+    pub cache_capacity: usize,
+    /// How the full cache picks its victim.
+    pub eviction_policy: EvictionPolicy,
+    /// Max concurrently admitted compiles per tenant; the excess compile
+    /// is *rejected* ([`AdmissionError::InflightLimit`]), never queued.
+    pub max_inflight_compiles: usize,
+    /// Max artifacts a tenant keeps pinned; over the limit its
+    /// least-recently-compiled artifact is unpinned (tenant `evicted`
+    /// counter) and becomes fair game for cache eviction.
+    pub max_resident_per_tenant: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            cache_capacity: 64,
+            eviction_policy: EvictionPolicy::Lru,
+            max_inflight_compiles: 4,
+            max_resident_per_tenant: 16,
+        }
+    }
+}
+
+/// Why a request was turned away at the door.  Admission failures are
+/// immediate and side-effect-free — the caller can back off and retry;
+/// nothing queues, so overload can never deadlock the serving path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// The tenant already has `limit` compiles in flight.
+    InflightLimit { tenant: String, limit: usize },
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionError::InflightLimit { tenant, limit } => write!(
+                f,
+                "tenant '{tenant}' rejected: {limit} compile(s) already in flight"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// Consistent snapshot of one tenant's counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TenantCounters {
+    /// Compile requests admitted (hits included).
+    pub compiles: u64,
+    /// Admitted compiles served straight from the shared cache.
+    pub cache_hits: u64,
+    /// Executor runs driven through [`Tenant::run`].
+    pub runs: u64,
+    /// Artifacts unpinned from this tenant's resident set by its
+    /// resident-capacity limit.
+    pub evicted: u64,
+    /// Artifacts currently pinned by this tenant.
+    pub resident: usize,
+    /// Compiles currently admitted and running.
+    pub inflight: usize,
+}
+
+/// One per-tenant counter: the session-local total (the source of truth
+/// for [`TenantCounters`] and the report) plus the process-global
+/// registry mirror — the same split the compile cache uses, so a fresh
+/// `ServingSession` reusing a tenant name starts its own counts at zero
+/// while `serve.<tenant>.*` in [`metrics::counters_snapshot`] stays
+/// cumulative process-wide.
+struct TenantCounter {
+    local: AtomicU64,
+    metric: Arc<metrics::Counter>,
+}
+
+impl TenantCounter {
+    fn new(name: &str) -> Self {
+        TenantCounter { local: AtomicU64::new(0), metric: metrics::counter(name) }
+    }
+
+    fn inc(&self) {
+        self.local.fetch_add(1, Ordering::Relaxed);
+        self.metric.inc();
+    }
+
+    fn get(&self) -> u64 {
+        self.local.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-tenant bookkeeping.  The `Arc<OptimizedModel>`s in `resident` are
+/// the tenant's pins: while an artifact sits here (or in a live
+/// executor), the shared cache will not evict it.
+struct TenantState {
+    name: String,
+    inflight: AtomicUsize,
+    /// Resident artifacts, LRU order (front = oldest).
+    resident: Mutex<Vec<(CacheKey, Arc<OptimizedModel>)>>,
+    compiles: TenantCounter,
+    cache_hits: TenantCounter,
+    runs: TenantCounter,
+    evicted: TenantCounter,
+}
+
+impl TenantState {
+    fn new(name: &str) -> Self {
+        TenantState {
+            name: name.to_string(),
+            inflight: AtomicUsize::new(0),
+            resident: Mutex::new(Vec::new()),
+            compiles: TenantCounter::new(&format!("serve.{name}.compiles")),
+            cache_hits: TenantCounter::new(&format!("serve.{name}.cache_hits")),
+            runs: TenantCounter::new(&format!("serve.{name}.runs")),
+            evicted: TenantCounter::new(&format!("serve.{name}.evicted")),
+        }
+    }
+}
+
+/// An admitted-compile token; admission is released when this drops
+/// (including on panic/unwind), so rejection is the only failure mode —
+/// a tenant can never leak its in-flight budget.
+pub struct CompilePermit {
+    state: Arc<TenantState>,
+}
+
+impl Drop for CompilePermit {
+    fn drop(&mut self) {
+        self.state.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A tenant's handle onto the serving session.  Cheap to clone; clones
+/// share the same counters, admission budget and resident set.
+#[derive(Clone)]
+pub struct Tenant {
+    session: Arc<Session>,
+    state: Arc<TenantState>,
+    cfg: ServingConfig,
+}
+
+impl Tenant {
+    pub fn name(&self) -> &str {
+        &self.state.name
+    }
+
+    /// Try to admit one compile.  Returns the token to hold for the
+    /// compile's duration, or rejects immediately when the tenant is at
+    /// its in-flight limit.
+    pub fn try_admit(&self) -> std::result::Result<CompilePermit, AdmissionError> {
+        let prev = self.state.inflight.fetch_add(1, Ordering::SeqCst);
+        if prev >= self.cfg.max_inflight_compiles {
+            self.state.inflight.fetch_sub(1, Ordering::SeqCst);
+            return Err(AdmissionError::InflightLimit {
+                tenant: self.state.name.clone(),
+                limit: self.cfg.max_inflight_compiles,
+            });
+        }
+        Ok(CompilePermit { state: self.state.clone() })
+    }
+
+    /// Compile `graph` for `device` through the shared session, under this
+    /// tenant's admission budget.  Pins the artifact in the tenant's
+    /// resident set (per-tenant LRU) and attributes the hit/miss to this
+    /// tenant.  The only error is admission rejection.
+    pub fn compile(
+        &self,
+        graph: &Graph,
+        device: DeviceId,
+    ) -> std::result::Result<Arc<OptimizedModel>, AdmissionError> {
+        let _permit = self.try_admit()?;
+        let outcome = self.session.compile_traced(graph, device);
+        self.state.compiles.inc();
+        if outcome.cache_hit {
+            self.state.cache_hits.inc();
+        }
+        self.pin(outcome.key, outcome.model.clone());
+        Ok(outcome.model)
+    }
+
+    /// Pin `model` in the resident set, refreshing LRU order; over
+    /// capacity, the oldest pin is dropped (tenant `evicted` counter) and
+    /// the shared cache becomes free to reclaim that artifact.
+    fn pin(&self, key: CacheKey, model: Arc<OptimizedModel>) {
+        let mut res = self.state.resident.lock().unwrap();
+        if let Some(pos) = res.iter().position(|(k, _)| *k == key) {
+            let entry = res.remove(pos);
+            res.push(entry);
+            return;
+        }
+        res.push((key, model));
+        while res.len() > self.cfg.max_resident_per_tenant {
+            res.remove(0);
+            self.state.evicted.inc();
+        }
+    }
+
+    /// Unpin one artifact; returns whether it was resident.
+    pub fn release(&self, key: &CacheKey) -> bool {
+        let mut res = self.state.resident.lock().unwrap();
+        match res.iter().position(|(k, _)| k == key) {
+            Some(pos) => {
+                res.remove(pos);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Unpin everything this tenant holds.
+    pub fn release_all(&self) {
+        self.state.resident.lock().unwrap().clear();
+    }
+
+    /// A fresh per-request executor over a shared artifact.
+    pub fn executor(&self, model: &Arc<OptimizedModel>, mode: OffloadMode) -> SolExecutor {
+        SolExecutor::new(model.clone(), mode)
+    }
+
+    /// Drive one phase over `model` through a per-request executor.
+    pub fn run(&self, model: &Arc<OptimizedModel>, mode: OffloadMode, phase: Phase) -> SimReport {
+        let exec = self.executor(model, mode);
+        let report = self.session.run(&exec, phase);
+        self.state.runs.inc();
+        report
+    }
+
+    /// Compile-and-run in one call (the serving fast path).
+    pub fn serve(
+        &self,
+        graph: &Graph,
+        device: DeviceId,
+        mode: OffloadMode,
+        phase: Phase,
+    ) -> std::result::Result<SimReport, AdmissionError> {
+        let model = self.compile(graph, device)?;
+        Ok(self.run(&model, mode, phase))
+    }
+
+    pub fn counters(&self) -> TenantCounters {
+        TenantCounters {
+            compiles: self.state.compiles.get(),
+            cache_hits: self.state.cache_hits.get(),
+            runs: self.state.runs.get(),
+            evicted: self.state.evicted.get(),
+            resident: self.state.resident.lock().unwrap().len(),
+            inflight: self.state.inflight.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// Many tenants over one shared [`Session`] with a bounded cache.
+pub struct ServingSession {
+    session: Arc<Session>,
+    cfg: ServingConfig,
+    /// Registration order — the report's row order.
+    tenants: Mutex<Vec<Arc<TenantState>>>,
+}
+
+impl Default for ServingSession {
+    fn default() -> Self {
+        Self::new(ServingConfig::default())
+    }
+}
+
+impl ServingSession {
+    /// A serving session over the default backends with a cache bounded
+    /// per `cfg`.
+    pub fn new(cfg: ServingConfig) -> Self {
+        let session = Session::with_parts(
+            crate::backends::BackendRegistry::with_defaults(),
+            CompileCache::bounded(cfg.cache_capacity, cfg.eviction_policy),
+            crate::devsim::EfficiencyTable::default(),
+        );
+        Self::over(session, cfg)
+    }
+
+    /// Serve over an existing session (custom registry / efficiency
+    /// table).  The session's cache is re-pointed at `cfg`: capacity is
+    /// re-bounded (evicting surplus immediately) and the eviction policy
+    /// switched.
+    pub fn over(session: Session, cfg: ServingConfig) -> Self {
+        session.cache().set_policy(cfg.eviction_policy);
+        session.cache().set_capacity(cfg.cache_capacity);
+        ServingSession {
+            session: Arc::new(session),
+            cfg,
+            tenants: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn config(&self) -> &ServingConfig {
+        &self.cfg
+    }
+
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+
+    /// The shared cache's consistent stats snapshot.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.session.cache().stats()
+    }
+
+    /// Get-or-create the handle for tenant `name`.  Handles for the same
+    /// name share state, whichever call created it.
+    pub fn tenant(&self, name: &str) -> Tenant {
+        let mut tenants = self.tenants.lock().unwrap();
+        let state = match tenants.iter().find(|t| t.name == name) {
+            Some(state) => state.clone(),
+            None => {
+                let state = Arc::new(TenantState::new(name));
+                tenants.push(state.clone());
+                state
+            }
+        };
+        Tenant { session: self.session.clone(), state, cfg: self.cfg.clone() }
+    }
+
+    /// Tenant names, registration order.
+    pub fn tenant_names(&self) -> Vec<String> {
+        self.tenants.lock().unwrap().iter().map(|t| t.name.clone()).collect()
+    }
+
+    /// Per-tenant counter table plus a shared-cache summary line.
+    pub fn serving_report(&self) -> String {
+        let rows: Vec<Vec<String>> = {
+            let tenants = self.tenants.lock().unwrap();
+            tenants
+                .iter()
+                .map(|t| {
+                    vec![
+                        t.name.clone(),
+                        t.compiles.get().to_string(),
+                        t.cache_hits.get().to_string(),
+                        t.runs.get().to_string(),
+                        t.evicted.get().to_string(),
+                        t.resident.lock().unwrap().len().to_string(),
+                    ]
+                })
+                .collect()
+        };
+        let mut out = format_table(
+            &["tenant", "compiles", "hits", "runs", "evicted", "resident"],
+            &rows,
+        );
+        let s = self.cache_stats();
+        let cap = if s.capacity == usize::MAX {
+            "∞".to_string()
+        } else {
+            s.capacity.to_string()
+        };
+        out.push_str(&format!(
+            "cache: {}/{} resident, {} hits / {} misses / {} evictions\n",
+            s.len, cap, s.hits, s.misses, s.evictions
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::NetId;
+
+    fn tiny_cfg() -> ServingConfig {
+        ServingConfig {
+            cache_capacity: 4,
+            eviction_policy: EvictionPolicy::Lru,
+            max_inflight_compiles: 2,
+            max_resident_per_tenant: 2,
+        }
+    }
+
+    #[test]
+    fn same_graph_two_tenants_one_compile() {
+        let serving = ServingSession::new(tiny_cfg());
+        let a = serving.tenant("a");
+        let b = serving.tenant("b");
+        let g = NetId::Mlp.build(1);
+        let m1 = a.compile(&g, DeviceId::Xeon6126).unwrap();
+        let m2 = b.compile(&g, DeviceId::Xeon6126).unwrap();
+        assert!(Arc::ptr_eq(&m1, &m2));
+        assert_eq!(a.counters().cache_hits, 0);
+        assert_eq!(b.counters().cache_hits, 1);
+        let s = serving.cache_stats();
+        assert_eq!((s.hits, s.misses, s.len), (1, 1, 1));
+    }
+
+    #[test]
+    fn inflight_limit_rejects_not_deadlocks() {
+        let serving = ServingSession::new(tiny_cfg());
+        let t = serving.tenant("busy");
+        let _p1 = t.try_admit().unwrap();
+        let _p2 = t.try_admit().unwrap();
+        let err = t.compile(&NetId::Mlp.build(1), DeviceId::Xeon6126).unwrap_err();
+        assert_eq!(
+            err,
+            AdmissionError::InflightLimit { tenant: "busy".into(), limit: 2 }
+        );
+        assert_eq!(t.counters().compiles, 0, "rejected request must not count as compile");
+        drop(_p1);
+        drop(_p2);
+        assert!(t.compile(&NetId::Mlp.build(1), DeviceId::Xeon6126).is_ok());
+        assert_eq!(t.counters().inflight, 0, "permits must be released");
+    }
+
+    #[test]
+    fn resident_limit_unpins_lru_and_counts_evicted() {
+        let serving = ServingSession::new(tiny_cfg());
+        let t = serving.tenant("t");
+        for b in [1usize, 2, 4] {
+            t.compile(&NetId::Mlp.build(b), DeviceId::Xeon6126).unwrap();
+        }
+        let c = t.counters();
+        assert_eq!(c.resident, 2, "resident set capped at 2");
+        assert_eq!(c.evicted, 1, "oldest pin dropped");
+        assert_eq!(c.compiles, 3);
+        // re-pinning a resident artifact refreshes LRU, no eviction
+        t.compile(&NetId::Mlp.build(4), DeviceId::Xeon6126).unwrap();
+        assert_eq!(t.counters().evicted, 1);
+        assert_eq!(t.counters().cache_hits, 1);
+    }
+
+    #[test]
+    fn tenant_handles_share_state_by_name() {
+        let serving = ServingSession::new(tiny_cfg());
+        let t1 = serving.tenant("same");
+        let t2 = serving.tenant("same");
+        t1.compile(&NetId::Mlp.build(1), DeviceId::Xeon6126).unwrap();
+        assert_eq!(t2.counters().compiles, 1);
+        assert_eq!(serving.tenant_names(), vec!["same".to_string()]);
+    }
+
+    #[test]
+    fn fresh_session_reusing_a_tenant_name_starts_from_zero() {
+        let first = ServingSession::new(tiny_cfg());
+        let t = first.tenant("reused-name");
+        t.compile(&NetId::Mlp.build(1), DeviceId::Xeon6126).unwrap();
+        assert_eq!(t.counters().compiles, 1);
+        // an independent serving session with the same tenant name: its
+        // counters are its own (the global registry mirror stays
+        // cumulative, but TenantCounters do not inherit foreign traffic)
+        let second = ServingSession::new(tiny_cfg());
+        let t2 = second.tenant("reused-name");
+        assert_eq!(t2.counters().compiles, 0);
+        t2.compile(&NetId::Mlp.build(1), DeviceId::Xeon6126).unwrap();
+        assert_eq!(t2.counters().compiles, 1);
+        assert_eq!(t.counters().compiles, 1, "first session untouched by the second");
+        assert!(
+            metrics::counter("serve.reused-name.compiles").get() >= 2,
+            "registry mirror accumulates across sessions"
+        );
+    }
+
+    #[test]
+    fn over_applies_capacity_and_policy_to_an_existing_session() {
+        let session = Session::new(); // unbounded LRU cache
+        let serving = ServingSession::over(
+            session,
+            ServingConfig {
+                cache_capacity: 2,
+                eviction_policy: EvictionPolicy::MinCompileCost,
+                ..ServingConfig::default()
+            },
+        );
+        let cache = serving.session().cache();
+        assert_eq!(cache.capacity(), 2);
+        assert_eq!(cache.policy(), EvictionPolicy::MinCompileCost);
+    }
+
+    #[test]
+    fn serving_report_lists_every_tenant_and_the_cache() {
+        let serving = ServingSession::new(tiny_cfg());
+        let a = serving.tenant("alpha");
+        let g = NetId::Mlp.build(1);
+        let m = a.compile(&g, DeviceId::Xeon6126).unwrap();
+        a.run(&m, OffloadMode::Native, Phase::infer());
+        serving.tenant("beta");
+        let report = serving.serving_report();
+        assert!(report.contains("alpha"), "{report}");
+        assert!(report.contains("beta"), "{report}");
+        assert!(report.contains("cache:"), "{report}");
+    }
+}

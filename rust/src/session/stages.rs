@@ -52,13 +52,14 @@ pub fn standard_passes() -> Vec<Box<dyn Pass>> {
     ]
 }
 
-/// DFP code flavor for a device (which backend's generator runs).
+/// Default DFP code flavor for a device *kind* — the fallback when no
+/// flavor was routed in from a registered backend.
 ///
-/// NOTE: this derives the flavor from the device *kind*, mirroring what
-/// every shipped backend's `flavor()` reports — the compile pipeline
-/// does not consult the `BackendRegistry` (which serves dispatch-side
-/// lookups).  Routing flavor selection through a registered backend is
-/// part of the per-device pipeline-specialization ROADMAP item.
+/// `Session` resolves the authoritative flavor through its
+/// `BackendRegistry` (`BackendRegistry::flavor_for`) and records any
+/// non-default choice in [`PipelineConfig::flavor`]; the
+/// `dfp-fuse-codegen` pass only falls back here when no override is set
+/// (standalone `PassManager` use, legacy `optimize()` callers).
 pub fn flavor_for(device: DeviceId) -> Flavor {
     use crate::devsim::DeviceKind;
     match device.spec().kind {
@@ -173,7 +174,7 @@ impl Pass for DfpFuseCodegen {
     fn run(&self, cfg: &PipelineConfig, state: &mut CompileState) -> Result<()> {
         let g = &state.graph;
         let assignments = state.assignments_vec();
-        let flavor = flavor_for(cfg.device);
+        let flavor = cfg.flavor.unwrap_or_else(|| flavor_for(cfg.device));
         let regions = if cfg.enable_fusion {
             dfp::fuse_regions(g, &assignments)
         } else {

@@ -2,6 +2,10 @@
 //! content-addressed keys (graph structural hashes, pipeline
 //! fingerprints).  `std`'s default hasher is randomly seeded per process,
 //! which would make cache keys unstable across runs.
+//!
+//! [`Mix64`] is the *second*, algorithmically independent hasher: compile
+//! cache keys carry both digests of the same canonical encoding, so a
+//! (birthday-odds) collision in one hash is caught by the other.
 
 /// Incremental FNV-1a hasher.
 #[derive(Debug, Clone)]
@@ -60,6 +64,71 @@ impl std::fmt::Write for Fnv64 {
     }
 }
 
+/// Second, independent 64-bit hasher: rotate-xor-multiply over the input
+/// bytes (FxHash lineage) with a splitmix-style finalizer.  Deterministic
+/// and dependency-free like [`Fnv64`], but with unrelated mixing, so an
+/// input pair that collides under FNV-1a does not collide here except
+/// with ~2⁻⁶⁴ probability.  Used for the compile cache's dual-hash
+/// content address (`session::cache::CacheKey`).
+#[derive(Debug, Clone)]
+pub struct Mix64(u64);
+
+impl Default for Mix64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Mix64 {
+    const K: u64 = 0x517c_c1b7_2722_0a95;
+
+    pub fn new() -> Self {
+        Mix64(0x9e37_79b9_7f4a_7c15)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = (self.0.rotate_left(5) ^ (b as u64)).wrapping_mul(Self::K);
+        }
+    }
+
+    pub fn write_usize(&mut self, v: usize) {
+        self.write(&(v as u64).to_le_bytes());
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn write_bool(&mut self, v: bool) {
+        self.write(&[v as u8]);
+    }
+
+    /// Write a string plus a field separator (so `"ab","c"` ≠ `"a","bc"`).
+    pub fn write_str(&mut self, s: &str) {
+        self.write(s.as_bytes());
+        self.write(&[0xff]);
+    }
+
+    pub fn finish(&self) -> u64 {
+        // finalizer spreads low-entropy tails across all 64 bits
+        let mut z = self.0;
+        z ^= z >> 30;
+        z = z.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z ^= z >> 27;
+        z = z.wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+}
+
+/// Debug-streaming, like the [`Fnv64`] impl: no separator appended.
+impl std::fmt::Write for Mix64 {
+    fn write_str(&mut self, s: &str) -> std::fmt::Result {
+        self.write(s.as_bytes());
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -78,6 +147,32 @@ mod tests {
         a.write_str("ab");
         a.write_str("c");
         let mut b = Fnv64::new();
+        b.write_str("a");
+        b.write_str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn mix64_is_deterministic_and_disagrees_with_fnv() {
+        let mut a = Mix64::new();
+        a.write(b"hello world");
+        let mut b = Mix64::new();
+        b.write(b"hello world");
+        assert_eq!(a.finish(), b.finish());
+        let mut f = Fnv64::new();
+        f.write(b"hello world");
+        assert_ne!(a.finish(), f.finish(), "the two hash families must be independent");
+        let mut c = Mix64::new();
+        c.write(b"hello worle");
+        assert_ne!(a.finish(), c.finish());
+    }
+
+    #[test]
+    fn mix64_separator_prevents_concat_collisions() {
+        let mut a = Mix64::new();
+        a.write_str("ab");
+        a.write_str("c");
+        let mut b = Mix64::new();
         b.write_str("a");
         b.write_str("bc");
         assert_ne!(a.finish(), b.finish());

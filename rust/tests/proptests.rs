@@ -9,6 +9,7 @@ use sol::ir::Graph;
 use sol::passes::{elide_relu_maxpool, optimize, OptimizeOptions};
 use sol::runtime::memcpy::{plan_transfers, Transfer, TransferPlan};
 use sol::runtime::queue::{AsyncQueue, VirtualPtr};
+use sol::session::CacheKey;
 use sol::util::{Json, XorShift};
 
 const CASES: usize = 40;
@@ -95,6 +96,69 @@ fn random_graph(rng: &mut XorShift) -> Graph {
         };
     }
     g
+}
+
+/// PROPERTY: cache keys are name-blind but structure-sighted — a
+/// rename-only mutation of any graph lands on the same content address
+/// (hit), a structural mutation always moves it (miss), and both
+/// independent digests move together.
+#[test]
+fn prop_cache_key_hits_renames_misses_structure() {
+    const FP: u64 = 0x50f7_ba11;
+    for seed in 0..CASES as u64 {
+        let mut rng = XorShift::new(seed + 4000);
+        let g = random_graph(&mut rng);
+        let key = CacheKey::of(&g, DeviceId::Xeon6126, FP);
+        assert_ne!(key.graph, key.graph2, "seed {seed}: digests must be independent");
+
+        // rename-only mutation: same content address, bit for bit
+        let mut renamed = g.clone();
+        renamed.name = format!("renamed-{seed}");
+        for n in &mut renamed.nodes {
+            n.name = format!("layer_{}_{seed}", n.id);
+        }
+        assert_eq!(key, CacheKey::of(&renamed, DeviceId::Xeon6126, FP), "seed {seed}");
+
+        // structural mutations: appending work, or rebuilding at another
+        // batch size, must move BOTH digests (a miss under either hash)
+        let mut grown = g.clone();
+        grown.relu(grown.output());
+        let grown_key = CacheKey::of(&grown, DeviceId::Xeon6126, FP);
+        assert_ne!(key, grown_key, "seed {seed}: structural change must miss");
+        assert_ne!(key.graph, grown_key.graph, "seed {seed}: FNV digest static");
+        assert_ne!(key.graph2, grown_key.graph2, "seed {seed}: second digest static");
+
+        // other key ingredients separate too
+        assert_ne!(key, CacheKey::of(&g, DeviceId::TitanV, FP), "seed {seed}");
+        assert_ne!(key, CacheKey::of(&g, DeviceId::Xeon6126, FP + 1), "seed {seed}");
+    }
+}
+
+/// PROPERTY: a forced 64-bit FNV collision (adversarially equal primary
+/// digest AND node count) is still caught by the second independent hash
+/// — structurally different graphs never share a full `CacheKey`.
+#[test]
+fn prop_second_hash_catches_forced_fnv_collisions() {
+    const FP: u64 = 0xc011_1de5;
+    let mut checked = 0;
+    for seed in 0..CASES as u64 {
+        let mut rng = XorShift::new(seed + 4400);
+        let g1 = random_graph(&mut rng);
+        let g2 = random_graph(&mut rng);
+        let k1 = CacheKey::of(&g1, DeviceId::Xeon6126, FP);
+        let mut k2 = CacheKey::of(&g2, DeviceId::Xeon6126, FP);
+        if k1.graph == k2.graph {
+            continue; // same structure drawn twice: nothing to force
+        }
+        // adversary forces the FNV half and defeats the node-count
+        // tripwire; only graph2 is left to tell the graphs apart
+        k2.graph = k1.graph;
+        k2.nodes = k1.nodes;
+        assert_ne!(k1, k2, "seed {seed}: forced FNV collision aliased the key");
+        assert_ne!(k1.graph2, k2.graph2, "seed {seed}: second digest collided too");
+        checked += 1;
+    }
+    assert!(checked >= CASES / 2, "too few distinct pairs exercised ({checked})");
 }
 
 /// PROPERTY: the optimizer's schedule covers all compute — effective FLOPs

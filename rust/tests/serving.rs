@@ -1,0 +1,238 @@
+//! Serving-layer acceptance tests: concurrent tenants over one bounded
+//! `ServingSession` — artifact sharing, pin-aware eviction, admission
+//! rejection, per-tenant metrics — plus the `#[ignore]`d deterministic
+//! soak test CI's scheduled job runs (`cargo test -- --ignored`).
+
+use std::sync::Arc;
+
+use sol::devsim::DeviceId;
+use sol::exec::solrun::OffloadMode;
+use sol::metrics;
+use sol::session::{
+    AdmissionError, EvictionPolicy, Phase, ServingConfig, ServingSession,
+};
+use sol::workloads::NetId;
+
+fn cfg(cache: usize, inflight: usize, resident: usize) -> ServingConfig {
+    ServingConfig {
+        cache_capacity: cache,
+        eviction_policy: EvictionPolicy::Lru,
+        max_inflight_compiles: inflight,
+        max_resident_per_tenant: resident,
+    }
+}
+
+/// Acceptance: two tenants compiling the same graph share one `Arc`
+/// artifact — exactly one miss, one hit, attributed to the right tenants.
+#[test]
+fn shared_graph_compiles_once_across_tenants() {
+    let serving = ServingSession::new(cfg(8, 4, 4));
+    let alice = serving.tenant("alice");
+    let bob = serving.tenant("bob");
+    let g = NetId::Resnet18.build(1);
+    let m_alice = alice.compile(&g, DeviceId::AuroraVE10B).unwrap();
+    let m_bob = bob.compile(&g, DeviceId::AuroraVE10B).unwrap();
+    assert!(Arc::ptr_eq(&m_alice, &m_bob), "tenants must share one artifact");
+    let s = serving.cache_stats();
+    assert_eq!((s.misses, s.hits, s.len), (1, 1, 1), "one miss, one hit, one entry");
+    assert_eq!(alice.counters().compiles, 1);
+    assert_eq!(alice.counters().cache_hits, 0, "first compile is the miss");
+    assert_eq!(bob.counters().cache_hits, 1, "second tenant gets the hit");
+    // both can execute over it with independent per-request executors
+    let r1 = alice.run(&m_alice, OffloadMode::Native, Phase::infer());
+    let r2 = bob.run(&m_bob, OffloadMode::Transparent, Phase::Infer { first_run: true });
+    assert!(r1.total_us > 0.0 && r2.total_us > r1.total_us);
+    assert_eq!((alice.counters().runs, bob.counters().runs), (1, 1));
+}
+
+/// Acceptance: under a tight capacity, eviction never drops an artifact
+/// still held by a live executor or tenant pin.
+#[test]
+fn eviction_never_drops_an_artifact_in_use() {
+    let serving = ServingSession::new(cfg(1, 4, 1));
+    let t = serving.tenant("pinner");
+    let g_used = NetId::Mlp.build(1);
+    let used = t.compile(&g_used, DeviceId::Xeon6126).unwrap();
+    let used_key = serving.session().compile_traced(&g_used, DeviceId::Xeon6126).key;
+    // a live executor over the artifact — an extra pin beyond the tenant's
+    let executor = t.executor(&used, OffloadMode::Native);
+    // churn 3 other single-use graphs through the 1-entry cache; the
+    // tenant's resident slot (capacity 1) moves on, the executor keeps
+    // `used` pinned
+    for b in [2usize, 4, 8] {
+        let g = NetId::Mlp.build(b);
+        t.compile(&g, DeviceId::Xeon6126).unwrap();
+    }
+    assert!(
+        serving.session().cache().peek(&used_key).is_some(),
+        "executor-held artifact must survive eviction pressure"
+    );
+    assert!(serving.cache_stats().evictions > 0, "churn must evict the unpinned ones");
+    // the executor still runs fine over the shared artifact
+    let report = serving.session().run(&executor, Phase::infer());
+    assert!(report.total_us > 0.0);
+    // once every pin is gone, the artifact becomes evictable
+    drop(executor);
+    drop(used);
+    t.release_all();
+    let evictions_before = serving.cache_stats().evictions;
+    for b in [16usize, 32] {
+        let g = NetId::Mlp.build(b);
+        t.compile(&g, DeviceId::Xeon6126).unwrap();
+    }
+    assert!(serving.cache_stats().evictions > evictions_before);
+    assert!(
+        serving.session().cache().peek(&used_key).is_none(),
+        "unpinned artifact is reclaimed under pressure"
+    );
+}
+
+/// Acceptance: admission limits reject immediately — they never queue,
+/// so overload cannot deadlock, and permits are released on drop.
+#[test]
+fn admission_rejects_excess_inflight_compiles() {
+    let serving = ServingSession::new(cfg(8, 2, 4));
+    let t = serving.tenant("greedy");
+    let g = NetId::Mlp.build(1);
+    let p1 = t.try_admit().unwrap();
+    let p2 = t.try_admit().unwrap();
+    assert_eq!(t.counters().inflight, 2);
+    let err = t.compile(&g, DeviceId::Xeon6126).unwrap_err();
+    assert_eq!(err, AdmissionError::InflightLimit { tenant: "greedy".into(), limit: 2 });
+    // a different tenant has its own budget
+    let other = serving.tenant("patient");
+    assert!(other.compile(&g, DeviceId::Xeon6126).is_ok());
+    // releasing permits restores admission
+    drop(p1);
+    drop(p2);
+    assert_eq!(t.counters().inflight, 0);
+    assert!(t.compile(&g, DeviceId::Xeon6126).is_ok());
+}
+
+/// Concurrent tenants hammering the same graph: every request either
+/// succeeds or is cleanly rejected, exactly one compile happens, and the
+/// threads always join (no deadlock under contention).
+#[test]
+fn concurrent_tenants_share_one_compile_without_deadlock() {
+    let serving = ServingSession::new(cfg(8, 8, 4));
+    let g = NetId::Squeezenet1_1.build(1);
+    // pre-warm: the one real miss happens here, so every threaded lookup
+    // below must hit the same Arc (a concurrent same-key double-miss may
+    // legitimately produce two artifacts; that nondeterminism is not what
+    // this test pins)
+    let warm = serving.tenant("warmup").compile(&g, DeviceId::TitanV).unwrap();
+    let models: Vec<Arc<sol::passes::OptimizedModel>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let tenant = serving.tenant(&format!("t{i}"));
+                let g = g.clone();
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    for _ in 0..8 {
+                        let m = tenant.compile(&g, DeviceId::TitanV).unwrap();
+                        tenant.run(&m, OffloadMode::Native, Phase::infer());
+                        out.push(m);
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    // all 32 threaded requests resolved to the pre-warmed artifact...
+    assert_eq!(models.len(), 32);
+    assert!(models.iter().all(|m| Arc::ptr_eq(m, &warm)));
+    // ...through exactly one compile: 1 miss (warm-up) + 32 hits
+    let s = serving.cache_stats();
+    assert_eq!((s.hits, s.misses, s.len), (32, 1, 1));
+    let runs: u64 = (0..4).map(|i| serving.tenant(&format!("t{i}")).counters().runs).sum();
+    assert_eq!(runs, 32);
+}
+
+/// Acceptance: per-tenant counters surface in the process-wide metrics
+/// registry under `serve.<tenant>.<counter>`.
+#[test]
+fn tenant_counters_reach_the_metrics_registry() {
+    let serving = ServingSession::new(cfg(8, 4, 4));
+    let t = serving.tenant("metered");
+    let g = NetId::Mlp.build(1);
+    let m = t.compile(&g, DeviceId::Xeon6126).unwrap();
+    t.compile(&g, DeviceId::Xeon6126).unwrap();
+    t.run(&m, OffloadMode::Native, Phase::infer());
+    let snapshot = metrics::counters_snapshot();
+    let get = |name: &str| {
+        snapshot
+            .iter()
+            .find(|(k, _)| k == name)
+            .unwrap_or_else(|| panic!("{name} missing from counters_snapshot"))
+            .1
+    };
+    assert!(get("serve.metered.compiles") >= 2);
+    assert!(get("serve.metered.cache_hits") >= 1);
+    assert!(get("serve.metered.runs") >= 1);
+    // the report renders the same numbers
+    let report = serving.serving_report();
+    assert!(report.contains("metered"), "{report}");
+}
+
+/// Deterministic serving soak: 1k requests round-robin across 4 tenants
+/// with a 16-entry cache over 32 distinct content addresses.  Ignored for
+/// tier-1 speed; CI's scheduled job runs it (`cargo test -- --ignored`).
+#[test]
+#[ignore = "soak test: ~1k compiles; run via cargo test -- --ignored"]
+fn soak_1k_requests_4_tenants_bounded_cache() {
+    use sol::util::XorShift;
+    let serving = ServingSession::new(ServingConfig {
+        cache_capacity: 16,
+        eviction_policy: EvictionPolicy::Lru,
+        max_inflight_compiles: 4,
+        max_resident_per_tenant: 4,
+    });
+    // 8 small nets x 4 devices = 32 distinct keys, double the capacity
+    let nets = [
+        NetId::Resnet18,
+        NetId::Squeezenet1_0,
+        NetId::Squeezenet1_1,
+        NetId::ShufflenetV2X0_5,
+        NetId::ShufflenetV2X1_0,
+        NetId::Mnasnet0_5,
+        NetId::Mnasnet1_0,
+        NetId::Mlp,
+    ];
+    let tenants: Vec<_> = (0..4).map(|i| serving.tenant(&format!("soak-{i}"))).collect();
+    let mut rng = XorShift::new(7);
+    const REQUESTS: usize = 1000;
+    for r in 0..REQUESTS {
+        let tenant = &tenants[r % tenants.len()];
+        let net = *rng.pick(&nets);
+        let dev = DeviceId::ALL[rng.below(DeviceId::ALL.len())];
+        let g = net.build(1);
+        // single-threaded round-robin: admission never trips, every
+        // request must succeed and execute
+        let model = tenant.compile(&g, dev).unwrap();
+        let report = tenant.run(&model, OffloadMode::Native, Phase::infer());
+        assert!(report.total_us > 0.0, "request {r} produced no work");
+    }
+    let s = serving.cache_stats();
+    // exact accounting: every request was one hit or one miss, every miss
+    // inserted, and len is what survived eviction
+    assert_eq!(s.hits + s.misses, REQUESTS as u64);
+    assert_eq!(s.len as u64, s.misses - s.evictions, "insert/evict accounting must balance");
+    assert!(s.evictions > 0, "32-key working set over a 16-entry cache must evict");
+    // hit-rate bounds: residency guarantees a floor well above cold-start,
+    // the over-capacity working set keeps it well below perfect
+    let hit_rate = s.hits as f64 / REQUESTS as f64;
+    assert!(hit_rate > 0.25, "hit rate {hit_rate:.3} implausibly low");
+    assert!(hit_rate < 0.95, "hit rate {hit_rate:.3} implausibly high for 2x working set");
+    // per-tenant accounting sums to the whole
+    let totals: u64 = tenants.iter().map(|t| t.counters().compiles).sum();
+    assert_eq!(totals, REQUESTS as u64);
+    let runs: u64 = tenants.iter().map(|t| t.counters().runs).sum();
+    assert_eq!(runs, REQUESTS as u64);
+    for t in &tenants {
+        let c = t.counters();
+        assert!(c.resident <= 4, "tenant {} resident {} over cap", t.name(), c.resident);
+        assert!(c.evicted > 0, "tenant {} never recycled its resident set", t.name());
+        assert_eq!(c.inflight, 0);
+    }
+}
