@@ -1,0 +1,47 @@
+//! Optimized-kernel / planner / arena-executor bench — CI's bench-smoke
+//! entry point (`cargo bench --bench kernels -- --test` for smoke mode).
+//!
+//! Beyond printing numbers, this binary *gates* the fast path in release
+//! builds: the im2col+GEMM conv must beat the naive reference loop on the
+//! 64×64 acceptance shape, and the steady-state arena run must perform
+//! zero heap allocations (counted by the installed allocator).
+
+use sol::exec::kernelbench::{conv_speedup, run_kernel_bench, write_bench_json};
+
+#[global_allocator]
+static ALLOC: sol::util::alloc::CountingAllocator = sol::util::alloc::CountingAllocator;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test" || a == "--smoke");
+    let rows = run_kernel_bench(smoke);
+    for r in &rows {
+        println!(
+            "{:<34} {:>12.0} ns/iter  {:>10} B  {:>3} allocs/run",
+            r.op, r.ns_per_iter, r.bytes, r.allocs_per_run
+        );
+    }
+    let speedup = conv_speedup(&rows);
+    println!("conv2d 64x64 speedup (naive -> fast.t1): {speedup:.2}x");
+
+    // perf gates (release builds drive this binary)
+    let floor = if smoke { 2.0 } else { 5.0 };
+    assert!(
+        speedup >= floor,
+        "optimized conv2d regressed: {speedup:.2}x < {floor}x over naive"
+    );
+    let steady = rows
+        .iter()
+        .find(|r| r.op == "arena_exec.fig3_cnn.steady")
+        .expect("arena row");
+    assert_eq!(
+        steady.allocs_per_run, 0,
+        "steady-state arena run must not allocate"
+    );
+
+    if let Some(pos) = std::env::args().position(|a| a == "--out") {
+        if let Some(path) = std::env::args().nth(pos + 1) {
+            write_bench_json(std::path::Path::new(&path), &rows, smoke).expect("write json");
+            println!("wrote {path}");
+        }
+    }
+}

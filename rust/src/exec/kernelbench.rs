@@ -1,0 +1,274 @@
+//! Kernel / planner / arena-executor microbenchmarks — the measurements
+//! behind `BENCH_*.json` (the repo's recorded perf trajectory).
+//!
+//! One implementation drives three frontends:
+//!
+//! * `sol bench [--json] [--smoke]` (the CLI),
+//! * `cargo bench --bench kernels [-- --test]` (CI's bench-smoke job,
+//!   which also asserts the naive→optimized conv speedup), and
+//! * the `fast_exec` tier-1 test (structure + zero-allocation checks).
+//!
+//! `allocs_per_run` is only authoritative in binaries that install
+//! [`crate::util::alloc::CountingAllocator`] — the CLI, the kernels
+//! bench and the fast_exec test all do.
+
+use std::collections::BTreeMap;
+
+use crate::framework::dispatcher::Attrs;
+use crate::framework::ops_fast::{conv2d_fast, im2col_len, linear_fast};
+use crate::framework::{install_default, DeviceType, Module, Tensor};
+use crate::frontend::{extract_graph, ArenaExec};
+use crate::metrics::Timer;
+use crate::session::planner::plan_memory;
+use crate::util::alloc::alloc_count;
+use crate::util::par::default_threads;
+use crate::util::Json;
+use crate::Result;
+
+/// One measured row of the bench report.
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    /// What was measured (`conv2d.naive`, `conv2d.fast`, ...).
+    pub op: String,
+    /// Bytes the operation touches (inputs + outputs), or the arena
+    /// footprint for planner rows.
+    pub bytes: usize,
+    /// Median wall-clock per iteration.
+    pub ns_per_iter: f64,
+    /// Heap allocations of one run (counting-allocator binaries only).
+    pub allocs_per_run: u64,
+}
+
+/// The paper-style fig3 CNN (conv32 → conv64 → fc256 → fc10 over a
+/// 32×32×3 image) as a framework module — the workload the zero-alloc
+/// acceptance check runs.
+pub fn fig3_cnn_module() -> (Module, Vec<usize>) {
+    let m = Module::Sequential(vec![
+        Module::conv2d(3, 32, 3, 1, 1, 101),
+        Module::ReLU,
+        Module::MaxPool2d { k: 2, stride: 2, pad: 0 },
+        Module::conv2d(32, 64, 3, 1, 1, 102),
+        Module::ReLU,
+        Module::MaxPool2d { k: 2, stride: 2, pad: 0 },
+        Module::Flatten,
+        Module::linear(64 * 8 * 8, 256, 103),
+        Module::ReLU,
+        Module::linear(256, 10, 104),
+        Module::Softmax,
+    ]);
+    (m, vec![1, 3, 32, 32])
+}
+
+fn median_ns(iters: usize, mut f: impl FnMut()) -> f64 {
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        samples.push(t.us() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+/// Run the microbench suite.  `smoke` shrinks iteration counts (CI / test
+/// tier); sizes stay the acceptance-relevant ones (64×64 conv).
+pub fn run_kernel_bench(smoke: bool) -> Vec<BenchRow> {
+    let iters = if smoke { 3 } else { 11 };
+    let mut rows = Vec::new();
+
+    // ---- conv2d: 64×64×32 → 64×64×32, 3×3, pad 1 (the acceptance shape) ----
+    let (c, cout, h, w, k) = (32usize, 32usize, 64usize, 64usize, 3usize);
+    let x = Tensor::randn(&[1, c, h, w], 1, 0.5);
+    let wt = Tensor::randn(&[cout, c, k, k], 2, 0.1);
+    let b = Tensor::zeros(&[cout]);
+    let attrs = Attrs::new().with_int("pad", 1);
+    let conv_bytes = (c * h * w + cout * c * k * k + cout * h * w) * 4;
+    let naive = install_default();
+    let naive_conv = || {
+        let out = naive
+            .dispatch("aten::conv2d", DeviceType::Cpu, &[x.clone(), wt.clone(), b.clone()], &attrs)
+            .unwrap();
+        std::hint::black_box(out.numel());
+    };
+    let a0 = alloc_count();
+    naive_conv();
+    let naive_conv_allocs = alloc_count() - a0;
+    rows.push(BenchRow {
+        op: "conv2d_64x64.naive".into(),
+        bytes: conv_bytes,
+        ns_per_iter: median_ns(iters, naive_conv),
+        allocs_per_run: naive_conv_allocs,
+    });
+    // fast path: slice kernel with pre-allocated scratch/output, so the
+    // row measures compute (and its alloc count is honest: zero)
+    let xv = x.to_f32().unwrap();
+    let wv = wt.to_f32().unwrap();
+    let bv = b.to_f32().unwrap();
+    let mut scratch = vec![0f32; im2col_len(c, k, k, h, w)];
+    let mut out = vec![0f32; cout * h * w];
+    for threads in [1usize, default_threads()] {
+        // single-call allocation delta first (median_ns itself allocates
+        // its sample buffer), then the timing
+        let a0 = alloc_count();
+        conv2d_fast(threads, &xv, 1, c, h, w, &wv, cout, k, k, &bv, 1, 1, 1, false, &mut scratch, &mut out);
+        let allocs = alloc_count() - a0;
+        let ns = median_ns(iters, || {
+            conv2d_fast(threads, &xv, 1, c, h, w, &wv, cout, k, k, &bv, 1, 1, 1, false, &mut scratch, &mut out);
+            std::hint::black_box(out[0]);
+        });
+        rows.push(BenchRow {
+            op: format!("conv2d_64x64.fast.t{threads}"),
+            bytes: conv_bytes,
+            ns_per_iter: ns,
+            allocs_per_run: allocs,
+        });
+        if threads == default_threads() {
+            break; // don't re-run t1 twice on single-core machines
+        }
+    }
+
+    // ---- linear / matmul: 64×1024 · 1024ᵀ ----
+    let (nb, fin, fout) = (64usize, 1024usize, 1024usize);
+    let lx = Tensor::randn(&[nb, fin], 3, 0.5);
+    let lw = Tensor::randn(&[fout, fin], 4, 0.05);
+    let lb = Tensor::zeros(&[fout]);
+    let lin_bytes = (nb * fin + fout * fin + nb * fout) * 4;
+    let naive_linear = || {
+        let out = naive
+            .dispatch(
+                "aten::linear",
+                DeviceType::Cpu,
+                &[lx.clone(), lw.clone(), lb.clone()],
+                &Attrs::new(),
+            )
+            .unwrap();
+        std::hint::black_box(out.numel());
+    };
+    let a0 = alloc_count();
+    naive_linear();
+    let naive_linear_allocs = alloc_count() - a0;
+    rows.push(BenchRow {
+        op: "linear_64x1024x1024.naive".into(),
+        bytes: lin_bytes,
+        ns_per_iter: median_ns(iters, naive_linear),
+        allocs_per_run: naive_linear_allocs,
+    });
+    let (lxv, lwv, lbv) = (lx.to_f32().unwrap(), lw.to_f32().unwrap(), lb.to_f32().unwrap());
+    let mut lout = vec![0f32; nb * fout];
+    let a0 = alloc_count();
+    linear_fast(1, &lxv, nb, fin, &lwv, fout, &lbv, false, &mut lout);
+    let fast_linear_allocs = alloc_count() - a0;
+    rows.push(BenchRow {
+        op: "linear_64x1024x1024.fast.t1".into(),
+        bytes: lin_bytes,
+        ns_per_iter: median_ns(iters, || {
+            linear_fast(1, &lxv, nb, fin, &lwv, fout, &lbv, false, &mut lout);
+            std::hint::black_box(lout[0]);
+        }),
+        allocs_per_run: fast_linear_allocs,
+    });
+
+    // ---- planner: fig3 CNN plan cost + footprint ----
+    let (module, shape) = fig3_cnn_module();
+    let (graph, binding) = extract_graph(&module, &shape, "fig3-cnn").expect("extract");
+    let a0 = alloc_count();
+    let plan = plan_memory(&graph);
+    let plan_allocs = alloc_count() - a0;
+    rows.push(BenchRow {
+        op: "planner.fig3_cnn".into(),
+        bytes: plan.arena_bytes,
+        ns_per_iter: median_ns(iters, || {
+            std::hint::black_box(plan_memory(&graph).arena_bytes);
+        }),
+        allocs_per_run: plan_allocs,
+    });
+
+    // ---- arena executor: steady-state forward, allocation-counted ----
+    let exec = ArenaExec::build(&graph, &binding, 1).expect("arena exec");
+    let input = Tensor::randn(&shape, 5, 0.5).to_f32().unwrap();
+    exec.run(&input).expect("warmup"); // cold run
+    let a0 = alloc_count();
+    exec.run(&input).expect("steady run");
+    let allocs = alloc_count() - a0;
+    let ns = median_ns(iters, || exec.run(&input).expect("steady run"));
+    rows.push(BenchRow {
+        op: "arena_exec.fig3_cnn.steady".into(),
+        bytes: plan.arena_bytes,
+        ns_per_iter: ns,
+        allocs_per_run: allocs,
+    });
+
+    rows
+}
+
+/// Speedup of the serial fast conv over the naive conv in `rows`.
+pub fn conv_speedup(rows: &[BenchRow]) -> f64 {
+    let ns = |op: &str| rows.iter().find(|r| r.op == op).map(|r| r.ns_per_iter);
+    match (ns("conv2d_64x64.naive"), ns("conv2d_64x64.fast.t1")) {
+        (Some(a), Some(b)) if b > 0.0 => a / b,
+        _ => 0.0,
+    }
+}
+
+/// Render the rows as the `BENCH_*.json` document.
+pub fn bench_json(rows: &[BenchRow], smoke: bool) -> Json {
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("fast-execution-path".into()));
+    top.insert("mode".to_string(), Json::Str(if smoke { "smoke" } else { "full" }.into()));
+    top.insert("conv2d_speedup".to_string(), Json::Num(conv_speedup(rows)));
+    top.insert(
+        "rows".to_string(),
+        Json::Arr(
+            rows.iter()
+                .map(|r| {
+                    let mut o = BTreeMap::new();
+                    o.insert("op".to_string(), Json::Str(r.op.clone()));
+                    o.insert("bytes".to_string(), Json::Num(r.bytes as f64));
+                    o.insert("ns_per_iter".to_string(), Json::Num(r.ns_per_iter));
+                    o.insert("allocs_per_run".to_string(), Json::Num(r.allocs_per_run as f64));
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(top)
+}
+
+/// Write the bench document to `path`.
+pub fn write_bench_json(path: &std::path::Path, rows: &[BenchRow], smoke: bool) -> Result<()> {
+    std::fs::write(path, bench_json(rows, smoke).to_string() + "\n")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_cnn_shapes_line_up() {
+        // the module must extract and forward (it is the acceptance workload)
+        let (m, shape) = fig3_cnn_module();
+        let reg = install_default();
+        let y = m.forward(&reg, &Tensor::randn(&shape, 9, 0.5)).unwrap();
+        assert_eq!(y.shape, vec![1, 10]);
+        let (g, _) = extract_graph(&m, &shape, "t").unwrap();
+        assert_eq!(g.node(g.output()).meta.shape(), vec![1, 10]);
+    }
+
+    #[test]
+    fn bench_json_has_the_contract_fields() {
+        let rows = vec![
+            BenchRow { op: "conv2d_64x64.naive".into(), bytes: 10, ns_per_iter: 50.0, allocs_per_run: 0 },
+            BenchRow { op: "conv2d_64x64.fast.t1".into(), bytes: 10, ns_per_iter: 5.0, allocs_per_run: 0 },
+        ];
+        let j = bench_json(&rows, true);
+        assert_eq!(j.get("mode").and_then(Json::as_str), Some("smoke"));
+        assert_eq!(j.get("conv2d_speedup").and_then(Json::as_f64), Some(10.0));
+        let arr = j.get("rows").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr.len(), 2);
+        assert!(arr[0].get("ns_per_iter").is_some());
+        assert!(arr[0].get("allocs_per_run").is_some());
+        // and the document round-trips through the parser
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+}

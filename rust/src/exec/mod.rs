@@ -9,6 +9,9 @@
 //!   *measured* PJRT runs of the calibration artifacts.
 //! * [`fig3`] — the harness that regenerates Fig. 3 (inference + training
 //!   grids) and the §I headline speedups.
+//! * [`kernelbench`] — naive-vs-optimized kernel, planner and
+//!   arena-executor microbenchmarks; source of the `BENCH_*.json`
+//!   perf-trajectory documents (`sol bench --json`).
 //!
 //! These modules build *step lists*; the stepping itself is unified
 //! behind [`crate::session::Executor`] (`BaselineExecutor` /
@@ -18,6 +21,7 @@
 pub mod baseline;
 pub mod calibrate;
 pub mod fig3;
+pub mod kernelbench;
 pub mod solrun;
 
 pub use baseline::{baseline_infer_steps, baseline_train_steps, BaselineKind};

@@ -1,0 +1,101 @@
+//! A slot arena for tensor storage reuse.
+//!
+//! An external planner (anything that knows the execution order of a model)
+//! can pre-compute how many distinct buffers a whole forward pass needs and
+//! how big each must be; a [`TensorArena`] then allocates those buffers
+//! **once**, and tensors borrow slots instead of owning fresh `Vec`s.  In
+//! steady state every run reuses the same slots, so the per-run allocation
+//! count drops to zero — the same static-allocation idea optimizing DNN
+//! compilers use for activation memory.
+//!
+//! This type deliberately knows nothing about who plans the slots: it is a
+//! plain framework facility (like the allocator interface), usable from
+//! outside through [`super::tensor::Tensor::from_arena_slot`].
+//!
+//! Locking: each slot has its own `Mutex`, so a kernel may hold one input
+//! slot and one output slot simultaneously (distinct slots — an external
+//! planner guarantees inputs and outputs of one op never share a slot).
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// A fixed set of reusable f32 buffers ("slots"), allocated up front.
+#[derive(Debug)]
+pub struct TensorArena {
+    slots: Vec<Mutex<Vec<f32>>>,
+}
+
+impl TensorArena {
+    /// Allocate an arena with one zero-filled buffer per entry of
+    /// `slot_lens` (lengths in f32 elements).  This is the *only* point
+    /// where the arena touches the heap.
+    pub fn new(slot_lens: &[usize]) -> Arc<TensorArena> {
+        Arc::new(TensorArena {
+            slots: slot_lens.iter().map(|&n| Mutex::new(vec![0.0; n])).collect(),
+        })
+    }
+
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Capacity of one slot, in f32 elements.
+    pub fn slot_len(&self, slot: usize) -> usize {
+        self.slots[slot].lock().unwrap().len()
+    }
+
+    /// Total arena footprint in bytes.
+    pub fn total_bytes(&self) -> usize {
+        self.slots.iter().map(|s| s.lock().unwrap().len() * 4).sum()
+    }
+
+    /// Lock one slot for direct access.  Holding two guards is fine as
+    /// long as the slots are distinct; locking the same slot twice from
+    /// one thread deadlocks (callers route duplicate operands through a
+    /// single guard instead).
+    pub fn lock_slot(&self, slot: usize) -> MutexGuard<'_, Vec<f32>> {
+        self.slots[slot].lock().unwrap()
+    }
+
+    /// Read access to a slot under a closure.
+    pub fn with_slot<R>(&self, slot: usize, f: impl FnOnce(&[f32]) -> R) -> R {
+        f(&self.lock_slot(slot))
+    }
+
+    /// Write access to a slot under a closure.
+    pub fn with_slot_mut<R>(&self, slot: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+        f(&mut self.lock_slot(slot))
+    }
+
+    /// Copy `src` into the head of `slot` (must fit).
+    pub fn write_slot(&self, slot: usize, src: &[f32]) {
+        let mut s = self.lock_slot(slot);
+        s[..src.len()].copy_from_slice(src);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slots_are_sized_and_independent() {
+        let a = TensorArena::new(&[4, 8]);
+        assert_eq!(a.slot_count(), 2);
+        assert_eq!(a.slot_len(0), 4);
+        assert_eq!(a.slot_len(1), 8);
+        assert_eq!(a.total_bytes(), (4 + 8) * 4);
+        a.write_slot(0, &[1.0, 2.0]);
+        a.with_slot(0, |s| assert_eq!(&s[..2], &[1.0, 2.0]));
+        a.with_slot(1, |s| assert!(s.iter().all(|&x| x == 0.0)));
+    }
+
+    #[test]
+    fn two_slots_lockable_simultaneously() {
+        let a = TensorArena::new(&[2, 2]);
+        let g0 = a.lock_slot(0);
+        let mut g1 = a.lock_slot(1);
+        g1[0] = g0[0] + 1.0;
+        drop((g0, g1));
+        a.with_slot(1, |s| assert_eq!(s[0], 1.0));
+    }
+}

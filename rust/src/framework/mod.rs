@@ -21,14 +21,17 @@
 //! framework's source code*.
 
 pub mod allocator;
+pub mod arena;
 pub mod device;
 pub mod dispatcher;
 pub mod hooks;
 pub mod module;
 pub mod ops_cpu;
+pub mod ops_fast;
 pub mod optim;
 pub mod tensor;
 
+pub use arena::TensorArena;
 pub use device::DeviceType;
 pub use dispatcher::{DispatchStub, OperatorRegistry};
 pub use module::Module;

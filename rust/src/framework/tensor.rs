@@ -13,16 +13,25 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
+use super::arena::TensorArena;
 use super::device::Device;
 
-/// Element storage: host vectors, or an opaque device allocation handle
-/// produced by the device's registered allocator.
+/// Element storage: host vectors, an opaque device allocation handle
+/// produced by the device's registered allocator, or a borrowed slot of a
+/// pre-allocated [`TensorArena`] (buffer-reuse execution: the tensor does
+/// not own a `Vec`, so steady-state reruns allocate nothing).
 #[derive(Debug)]
 pub enum Storage {
     F32(Vec<f32>),
     I32(Vec<i32>),
     /// Device-resident data: allocator handle + byte size.
     DeviceOpaque { handle: u64, bytes: usize },
+    /// A borrowed arena slot: the first `len` elements of `slot`.
+    ArenaF32 {
+        arena: Arc<TensorArena>,
+        slot: usize,
+        len: usize,
+    },
 }
 
 #[derive(Debug)]
@@ -93,6 +102,19 @@ impl Tensor {
         Tensor::wrap(Storage::DeviceOpaque { handle, bytes }, shape.to_vec(), device)
     }
 
+    /// Host f32 tensor borrowing an arena slot (buffer-reuse execution).
+    /// The tensor views the first `shape.product()` elements of `slot`;
+    /// the slot must be at least that long.
+    pub fn from_arena_slot(arena: Arc<TensorArena>, slot: usize, shape: &[usize]) -> Self {
+        let len = shape.iter().product();
+        assert!(
+            arena.slot_len(slot) >= len,
+            "arena slot {slot} too small: {} < {len}",
+            arena.slot_len(slot)
+        );
+        Tensor::wrap(Storage::ArenaF32 { arena, slot, len }, shape.to_vec(), Device::cpu())
+    }
+
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -103,6 +125,7 @@ impl Tensor {
             Storage::F32(v) => v.len() * 4,
             Storage::I32(v) => v.len() * 4,
             Storage::DeviceOpaque { bytes, .. } => *bytes,
+            Storage::ArenaF32 { len, .. } => *len * 4,
         }
     }
 
@@ -130,7 +153,44 @@ impl Tensor {
             Storage::DeviceOpaque { .. } => {
                 bail!("tensor on {} — copy to host first", self.device)
             }
+            Storage::ArenaF32 { arena, slot, len } => {
+                Ok(arena.with_slot(*slot, |b| b[..*len].to_vec()))
+            }
         }
+    }
+
+    /// Borrow the f32 contents without copying (host and arena tensors).
+    /// The kernel fast path: reading an operand costs a lock, not a clone.
+    pub fn with_f32<R>(&self, f: impl FnOnce(&[f32]) -> R) -> Result<R> {
+        let s = self.inner.storage.lock().unwrap();
+        match &*s {
+            Storage::F32(v) => Ok(f(v)),
+            Storage::ArenaF32 { arena, slot, len } => {
+                Ok(arena.with_slot(*slot, |b| f(&b[..*len])))
+            }
+            Storage::I32(_) => bail!("dtype mismatch: tensor is i32"),
+            Storage::DeviceOpaque { .. } => {
+                bail!("tensor on {} — copy to host first", self.device)
+            }
+        }
+    }
+
+    /// Mutably borrow the f32 contents in place (bumps the version).
+    pub fn with_f32_mut<R>(&self, f: impl FnOnce(&mut [f32]) -> R) -> Result<R> {
+        let mut s = self.inner.storage.lock().unwrap();
+        let r = match &mut *s {
+            Storage::F32(v) => f(v),
+            Storage::ArenaF32 { arena, slot, len } => {
+                arena.with_slot_mut(*slot, |b| f(&mut b[..*len]))
+            }
+            Storage::I32(_) => bail!("dtype mismatch: tensor is i32"),
+            Storage::DeviceOpaque { .. } => {
+                bail!("tensor on {} — copy to host first", self.device)
+            }
+        };
+        drop(s);
+        self.bump();
+        Ok(r)
     }
 
     pub fn to_i32(&self) -> Result<Vec<i32>> {
@@ -269,6 +329,34 @@ mod tests {
         let t = Tensor::from_device_handle(7, 64, &[16], Device::new(DeviceType::Hip, 0));
         assert!(t.to_f32().is_err());
         assert_eq!(t.device_handle(), Some(7));
+    }
+
+    #[test]
+    fn arena_tensor_borrows_a_slot() {
+        use super::super::arena::TensorArena;
+        let arena = TensorArena::new(&[8, 4]);
+        arena.write_slot(0, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        // the view covers only the first shape.product() elements
+        let t = Tensor::from_arena_slot(arena.clone(), 0, &[2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.byte_len(), 24);
+        assert_eq!(t.to_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        // zero-copy read and in-place write
+        let sum: f32 = t.with_f32(|v| v.iter().sum()).unwrap();
+        assert_eq!(sum, 21.0);
+        let v0 = t.version();
+        t.with_f32_mut(|v| v[0] = 10.0).unwrap();
+        assert_eq!(t.version(), v0 + 1);
+        // the write is visible through the arena itself (shared storage)
+        arena.with_slot(0, |s| assert_eq!(s[0], 10.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "too small")]
+    fn arena_tensor_rejects_oversized_view() {
+        use super::super::arena::TensorArena;
+        let arena = TensorArena::new(&[4]);
+        let _ = Tensor::from_arena_slot(arena, 0, &[5]);
     }
 
     #[test]

@@ -1,0 +1,521 @@
+//! The arena executor: SOL's real (host-executed) fast path.
+//!
+//! `SolModel::forward` used to evaluate the extracted graph one op at a
+//! time, allocating a fresh output `Vec` per op — exactly the per-layer
+//! overhead the paper attributes to stock frameworks.  [`ArenaExec`]
+//! instead threads the session's memory plan (`session::planner`) through
+//! execution:
+//!
+//! * a [`TensorArena`] is allocated **once** from the plan's slot sizes
+//!   (plus one im2col scratch buffer and one parameter snapshot);
+//! * every node writes into its planned slot through the optimized slice
+//!   kernels (`framework::ops_fast`): im2col + blocked-GEMM conv, tiled
+//!   linear, and a conv/linear+bias+ReLU fusion peephole;
+//! * steady-state [`ArenaExec::run`] performs **zero heap allocations**
+//!   (measured by `util::alloc` in instrumented binaries and recorded as
+//!   the `exec.allocs_per_run` gauge).
+//!
+//! Parameters are snapshotted out of the framework tensors at build time;
+//! [`ArenaExec::refresh_params`] re-copies them in place (no realloc) when
+//! the framework's version counters say they changed — the same
+//! staleness protocol transparent offloading uses (§V-A).
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::framework::arena::TensorArena;
+use crate::framework::ops_fast as fast;
+use crate::ir::{Graph, NodeId, Op};
+use crate::metrics;
+use crate::session::planner::{plan_memory, MemoryPlan};
+use crate::util::alloc::alloc_count;
+
+use super::extract::ParamBinding;
+
+/// Parameter snapshot of one node (e.g. conv weight + bias), refreshed in
+/// place on framework-side mutation.
+struct ParamSlab {
+    values: Vec<Vec<f32>>,
+}
+
+/// Zero-allocation steady-state executor over a planned graph.
+pub struct ArenaExec {
+    graph: Graph,
+    plan: MemoryPlan,
+    arena: Arc<TensorArena>,
+    scratch: Mutex<Vec<f32>>,
+    /// Node → parameter snapshot (locked for in-place refresh).
+    params: Vec<Option<Mutex<ParamSlab>>>,
+    /// Node → fused ReLU epilogue (producer writes its own — aliased —
+    /// slot with the activation applied; the ReLU node is skipped)?
+    fused_relu: Vec<bool>,
+    /// Node → elided at run time (inputs, aliases, fused ReLUs).
+    skip: Vec<bool>,
+    input_node: NodeId,
+    threads: usize,
+    /// Serializes whole runs: the arena's slots are shared mutable state
+    /// reused across nodes, so two interleaved runs would corrupt each
+    /// other's values (each slot mutex only protects one access).
+    run_gate: Mutex<()>,
+    allocs_gauge: Arc<metrics::Counter>,
+}
+
+fn nchw(g: &Graph, id: NodeId) -> (usize, usize, usize, usize) {
+    let m = &g.nodes[id].meta;
+    let (h, w) = m.spatial();
+    (m.batch(), m.channels(), h, w)
+}
+
+impl ArenaExec {
+    /// Plan `graph` and pre-allocate everything a run needs.  `threads`
+    /// is the kernel parallelism; `1` (the allocation-free choice) never
+    /// spawns.  Fails on graphs this executor cannot run (≠ 1 input, or
+    /// missing/odd-shaped parameter bindings).
+    pub fn build(graph: &Graph, binding: &ParamBinding, threads: usize) -> Result<ArenaExec> {
+        let inputs: Vec<NodeId> = graph
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Input))
+            .map(|n| n.id)
+            .collect();
+        if inputs.len() != 1 {
+            bail!("arena executor supports exactly one input, got {}", inputs.len());
+        }
+        let input_node = inputs[0];
+        let plan = plan_memory(graph);
+        let arena = TensorArena::new(&plan.slot_lens());
+        let scratch = Mutex::new(vec![0f32; plan.scratch_elems]);
+
+        // parameter snapshots, validated against the op's expectations
+        let mut params: Vec<Option<Mutex<ParamSlab>>> = Vec::with_capacity(graph.nodes.len());
+        params.resize_with(graph.nodes.len(), || None);
+        for (id, ps) in binding {
+            let values: Vec<Vec<f32>> =
+                ps.iter().map(|(_, t)| t.to_f32()).collect::<Result<_>>()?;
+            params[*id] = Some(Mutex::new(ParamSlab { values }));
+        }
+        for n in &graph.nodes {
+            let have = params[n.id].as_ref().map(|s| s.lock().unwrap().values.len());
+            match n.op {
+                Op::Conv2d { .. } | Op::Linear { .. } | Op::BatchNorm => {
+                    if have != Some(2) {
+                        bail!("node {} ({}) needs 2 bound params", n.id, n.op.name());
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        // ReLU-fusion peephole: a conv/linear whose sole consumer is a
+        // ReLU that the planner aliased *in place onto the producer's own
+        // buffer* (same slot) runs as one fused kernel — the producer
+        // writes its own slot with the activation applied, and the ReLU
+        // node is skipped.  A ReLU the planner did NOT alias (its input
+        // has later readers) executes as its own node.
+        let mut fused_relu = vec![false; graph.nodes.len()];
+        let mut skip = vec![false; graph.nodes.len()];
+        let consumers = graph.consumers();
+        for n in &graph.nodes {
+            match n.op {
+                Op::Input => skip[n.id] = true,
+                Op::Flatten | Op::Dropout => skip[n.id] = true, // alias: same slot
+                Op::Conv2d { .. } | Op::Linear { .. } => {
+                    if let [j] = consumers[n.id][..] {
+                        if matches!(graph.nodes[j].op, Op::ReLU)
+                            && plan.node_slot[j] == plan.node_slot[n.id]
+                        {
+                            fused_relu[n.id] = true;
+                            skip[j] = true;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        Ok(ArenaExec {
+            graph: graph.clone(),
+            plan,
+            arena,
+            scratch,
+            params,
+            fused_relu,
+            skip,
+            input_node,
+            threads,
+            run_gate: Mutex::new(()),
+            allocs_gauge: metrics::counter("exec.allocs_per_run"),
+        })
+    }
+
+    pub fn plan(&self) -> &MemoryPlan {
+        &self.plan
+    }
+
+    pub fn arena(&self) -> &Arc<TensorArena> {
+        &self.arena
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.graph.nodes[self.input_node].meta.elems()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.graph.node(self.graph.output()).meta.elems()
+    }
+
+    pub fn output_shape(&self) -> Vec<usize> {
+        self.graph.node(self.graph.output()).meta.shape()
+    }
+
+    /// Re-copy framework parameters into the snapshot, in place.
+    pub fn refresh_params(&self, binding: &ParamBinding) -> Result<()> {
+        let _gate = self.run_gate.lock().unwrap();
+        self.refresh_params_inner(binding)
+    }
+
+    fn refresh_params_inner(&self, binding: &ParamBinding) -> Result<()> {
+        for (id, ps) in binding {
+            let slab = self.params[*id]
+                .as_ref()
+                .ok_or_else(|| anyhow!("refresh: node {id} has no snapshot"))?;
+            let mut slab = slab.lock().unwrap();
+            for (dst, (_, t)) in slab.values.iter_mut().zip(ps) {
+                t.with_f32(|src| {
+                    if src.len() != dst.len() {
+                        bail!("refresh: node {id} param length changed");
+                    }
+                    dst.copy_from_slice(src);
+                    Ok(())
+                })??;
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute one forward pass: copy `input` into its slot, run every
+    /// kernel into its planned slot.  Allocation-free in steady state.
+    /// Whole runs are serialized by an internal gate; to also read the
+    /// output atomically with the run (required when the executor is
+    /// shared across threads), use [`ArenaExec::run_into`].
+    pub fn run(&self, input: &[f32]) -> Result<()> {
+        let _gate = self.run_gate.lock().unwrap();
+        self.run_inner(input)
+    }
+
+    /// Atomic refresh (optional) + run + output read under one gate, so
+    /// a concurrent run cannot overwrite the output slot (or tear the
+    /// parameter snapshot) between the kernels and the read.
+    pub fn run_into(
+        &self,
+        refresh: Option<&ParamBinding>,
+        input: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let _gate = self.run_gate.lock().unwrap();
+        if let Some(binding) = refresh {
+            self.refresh_params_inner(binding)?;
+        }
+        self.run_inner(input)?;
+        self.read_output(out);
+        Ok(())
+    }
+
+    fn run_inner(&self, input: &[f32]) -> Result<()> {
+        let allocs0 = alloc_count();
+        if input.len() != self.input_len() {
+            bail!("input length {} != expected {}", input.len(), self.input_len());
+        }
+        self.arena.write_slot(self.plan.node_slot[self.input_node], input);
+        for n in &self.graph.nodes {
+            if self.skip[n.id] {
+                continue;
+            }
+            self.exec_node(n.id)?;
+        }
+        self.allocs_gauge.set(alloc_count() - allocs0);
+        Ok(())
+    }
+
+    /// Copy the output value into `out` (allocation-free if `out` already
+    /// has the capacity).  Not gated: pair with [`ArenaExec::run_into`]
+    /// when other threads may run concurrently.
+    pub fn read_output(&self, out: &mut Vec<f32>) {
+        out.clear();
+        self.arena.with_slot(self.plan.node_slot[self.graph.output()], |s| {
+            out.extend_from_slice(&s[..self.output_len()]);
+        });
+    }
+
+    fn param_slab(&self, id: NodeId) -> Result<std::sync::MutexGuard<'_, ParamSlab>> {
+        Ok(self.params[id]
+            .as_ref()
+            .ok_or_else(|| anyhow!("node {id}: missing params"))?
+            .lock()
+            .unwrap())
+    }
+
+    fn exec_node(&self, id: NodeId) -> Result<()> {
+        let g = &self.graph;
+        let n = &g.nodes[id];
+        let in0 = *n.inputs.first().unwrap_or(&0);
+        let in_slot = |i: NodeId| self.plan.node_slot[i];
+        let out_slot = self.plan.node_slot[id];
+        match &n.op {
+            Op::Conv2d { cout, kh, kw, stride, pad, groups } => {
+                let (nb, c, h, w) = nchw(g, in0);
+                let pv = self.param_slab(id)?;
+                let mut scratch = self.scratch.lock().unwrap();
+                let xin = self.arena.lock_slot(in_slot(in0));
+                let mut out = self.arena.lock_slot(out_slot);
+                fast::conv2d_fast(
+                    self.threads,
+                    &xin,
+                    nb,
+                    c,
+                    h,
+                    w,
+                    &pv.values[0],
+                    *cout,
+                    *kh,
+                    *kw,
+                    &pv.values[1],
+                    *stride,
+                    *pad,
+                    *groups,
+                    self.fused_relu[id],
+                    &mut scratch,
+                    &mut out,
+                );
+            }
+            Op::Linear { out_features } => {
+                let m = &g.nodes[in0].meta;
+                let (nb, fin) = (m.batch(), m.features_extent());
+                let pv = self.param_slab(id)?;
+                let xin = self.arena.lock_slot(in_slot(in0));
+                let mut out = self.arena.lock_slot(out_slot);
+                fast::linear_fast(
+                    self.threads,
+                    &xin,
+                    nb,
+                    fin,
+                    &pv.values[0],
+                    *out_features,
+                    &pv.values[1],
+                    self.fused_relu[id],
+                    &mut out,
+                );
+            }
+            Op::ReLU => {
+                let len = n.meta.elems();
+                if in_slot(in0) == out_slot {
+                    // planner aliased the relu onto its input: clamp in
+                    // place under a single guard (two would deadlock)
+                    let mut buf = self.arena.lock_slot(out_slot);
+                    for v in buf[..len].iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                } else {
+                    let xin = self.arena.lock_slot(in_slot(in0));
+                    let mut out = self.arena.lock_slot(out_slot);
+                    fast::relu_fast(&xin[..len], &mut out[..len]);
+                }
+            }
+            Op::BatchNorm => {
+                let (nb, c, h, w) = nchw(g, in0);
+                let pv = self.param_slab(id)?;
+                let xin = self.arena.lock_slot(in_slot(in0));
+                let mut out = self.arena.lock_slot(out_slot);
+                fast::batch_norm_fast(&xin, &pv.values[0], &pv.values[1], nb, c, h * w, &mut out);
+            }
+            Op::MaxPool { k, stride, pad, min_value } => {
+                let (nb, c, h, w) = nchw(g, in0);
+                let xin = self.arena.lock_slot(in_slot(in0));
+                let mut out = self.arena.lock_slot(out_slot);
+                fast::pool2d_fast(
+                    &xin, nb, c, h, w, *k, *stride, *pad, true, *min_value, true, &mut out,
+                );
+            }
+            Op::AvgPool { k, stride, pad, count_include_pad } => {
+                let (nb, c, h, w) = nchw(g, in0);
+                let xin = self.arena.lock_slot(in_slot(in0));
+                let mut out = self.arena.lock_slot(out_slot);
+                fast::pool2d_fast(
+                    &xin,
+                    nb,
+                    c,
+                    h,
+                    w,
+                    *k,
+                    *stride,
+                    *pad,
+                    false,
+                    0.0,
+                    *count_include_pad,
+                    &mut out,
+                );
+            }
+            Op::GlobalAvgPool => {
+                let (nb, c, h, w) = nchw(g, in0);
+                let xin = self.arena.lock_slot(in_slot(in0));
+                let mut out = self.arena.lock_slot(out_slot);
+                fast::global_avg_pool_fast(&xin, nb, c, h * w, &mut out);
+            }
+            Op::Add => {
+                // two-phase (copy, then +=) so a duplicated operand never
+                // needs two guards on one slot
+                let len = n.meta.elems();
+                {
+                    let a = self.arena.lock_slot(in_slot(n.inputs[0]));
+                    let mut out = self.arena.lock_slot(out_slot);
+                    fast::copy_fast(&a[..len], &mut out);
+                }
+                let b = self.arena.lock_slot(in_slot(n.inputs[1]));
+                let mut out = self.arena.lock_slot(out_slot);
+                fast::add_assign_fast(&b[..len], &mut out);
+            }
+            Op::Concat => {
+                let (nb, ctot, h, w) = nchw(g, id);
+                let hw = h * w;
+                let mut out = self.arena.lock_slot(out_slot);
+                let mut coff = 0usize;
+                for &i in &n.inputs {
+                    let ci = g.nodes[i].meta.channels();
+                    let xin = self.arena.lock_slot(in_slot(i));
+                    for ni in 0..nb {
+                        let dst = (ni * ctot + coff) * hw;
+                        let src = ni * ci * hw;
+                        out[dst..dst + ci * hw].copy_from_slice(&xin[src..src + ci * hw]);
+                    }
+                    coff += ci;
+                }
+            }
+            Op::ChannelShuffle { groups } => {
+                let (nb, c, h, w) = nchw(g, in0);
+                let xin = self.arena.lock_slot(in_slot(in0));
+                let mut out = self.arena.lock_slot(out_slot);
+                fast::channel_shuffle_fast(&xin, nb, c, h * w, *groups, &mut out);
+            }
+            Op::Slice { offset, channels } => {
+                let (nb, c, h, w) = nchw(g, in0);
+                let xin = self.arena.lock_slot(in_slot(in0));
+                let mut out = self.arena.lock_slot(out_slot);
+                fast::slice_channels_fast(&xin, nb, c, h * w, *offset, *channels, &mut out);
+            }
+            Op::Softmax => {
+                let m = &g.nodes[in0].meta;
+                let (nb, k) = (m.batch(), m.features_extent());
+                let xin = self.arena.lock_slot(in_slot(in0));
+                let mut out = self.arena.lock_slot(out_slot);
+                fast::softmax_rows_fast(&xin, nb, k, &mut out);
+            }
+            Op::Input | Op::Flatten | Op::Dropout => unreachable!("skipped ops"),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::{install_default, Module, Tensor};
+    use crate::frontend::extract::extract_graph;
+
+    fn mini() -> (Module, Vec<usize>) {
+        let m = Module::Sequential(vec![
+            Module::conv2d(3, 6, 3, 1, 1, 71),
+            Module::ReLU,
+            Module::MaxPool2d { k: 2, stride: 2, pad: 0 },
+            Module::batch_norm(6),
+            Module::Flatten,
+            Module::linear(6 * 6 * 6, 4, 72),
+            Module::Softmax,
+        ]);
+        (m, vec![2, 3, 12, 12])
+    }
+
+    #[test]
+    fn arena_run_matches_framework_forward() {
+        let (m, shape) = mini();
+        let reg = install_default();
+        let (graph, binding) = extract_graph(&m, &shape, "fx").unwrap();
+        let exec = ArenaExec::build(&graph, &binding, 1).unwrap();
+        let x = Tensor::randn(&shape, 73, 0.5);
+        let want = m.forward(&reg, &x).unwrap().to_f32().unwrap();
+        x.with_f32(|xv| exec.run(xv)).unwrap().unwrap();
+        let mut got = Vec::new();
+        exec.read_output(&mut got);
+        assert_eq!(want.len(), got.len());
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn relu_fusion_skips_the_relu_node() {
+        let (m, shape) = mini();
+        let (graph, binding) = extract_graph(&m, &shape, "fx").unwrap();
+        let exec = ArenaExec::build(&graph, &binding, 1).unwrap();
+        let conv_id = graph
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Op::Conv2d { .. }))
+            .unwrap()
+            .id;
+        assert!(exec.fused_relu[conv_id]);
+        assert!(exec.skip[conv_id + 1], "fused ReLU must not re-run");
+    }
+
+    #[test]
+    fn residual_and_shuffle_graphs_execute() {
+        // exercise Add / Slice / Concat / ChannelShuffle end to end
+        let reg = install_default();
+        let m = Module::Sequential(vec![
+            Module::Residual(Box::new(Module::Sequential(vec![
+                Module::conv2d(4, 4, 3, 1, 1, 81),
+                Module::ReLU,
+            ]))),
+            Module::ChannelShuffle { groups: 2 },
+            Module::GlobalAvgPool,
+            Module::Flatten,
+            Module::linear(4, 3, 82),
+        ]);
+        let shape = [1usize, 4, 8, 8];
+        let x = Tensor::randn(&shape, 83, 0.5);
+        let want = m.forward(&reg, &x).unwrap().to_f32().unwrap();
+        let (graph, binding) = extract_graph(&m, &shape, "res").unwrap();
+        let exec = ArenaExec::build(&graph, &binding, 1).unwrap();
+        x.with_f32(|xv| exec.run(xv)).unwrap().unwrap();
+        let mut got = Vec::new();
+        exec.read_output(&mut got);
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn refresh_params_picks_up_framework_mutation() {
+        let (m, shape) = mini();
+        let reg = install_default();
+        let (graph, binding) = extract_graph(&m, &shape, "fx").unwrap();
+        let exec = ArenaExec::build(&graph, &binding, 1).unwrap();
+        let x = Tensor::randn(&shape, 74, 0.5);
+        x.with_f32(|xv| exec.run(xv)).unwrap().unwrap();
+        let mut before = Vec::new();
+        exec.read_output(&mut before);
+        // mutate a framework weight, refresh, re-run
+        m.parameters()[0].1.fill_(0.0).unwrap();
+        exec.refresh_params(&binding).unwrap();
+        x.with_f32(|xv| exec.run(xv)).unwrap().unwrap();
+        let mut after = Vec::new();
+        exec.read_output(&mut after);
+        let want = m.forward(&reg, &x).unwrap().to_f32().unwrap();
+        assert_ne!(before, after);
+        for (a, b) in want.iter().zip(&after) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+}

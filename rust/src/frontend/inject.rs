@@ -16,7 +16,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -28,6 +28,7 @@ use crate::passes::{OptimizeOptions, OptimizedModel};
 use crate::session::{PassManager, PipelineConfig, Session};
 
 use super::extract::{extract_graph, ParamBinding};
+use super::fastexec::ArenaExec;
 
 /// The injected model: optimized schedule + framework-owned parameters.
 pub struct SolModel {
@@ -39,8 +40,17 @@ pub struct SolModel {
     /// session's compile cache when built via [`SolModel::optimize_in`]).
     pub optimized: Arc<OptimizedModel>,
     /// SOL's private kernel registry ("executed by SOL": these calls do
-    /// NOT go through the framework dispatcher).
+    /// NOT go through the framework dispatcher).  Fallback path only —
+    /// host-CPU targets execute through the arena executor instead.
     kernels: OperatorRegistry,
+    /// The planned, arena-backed fast path (host-CPU targets; built
+    /// lazily on first forward).  `None` when the compile produced no
+    /// memory plan (pure-simulation devices) or the graph shape is one
+    /// the arena executor refuses.
+    fast: OnceLock<Option<ArenaExec>>,
+    /// Sum of framework param version counters the executor's snapshot
+    /// reflects (sum, not max: every mutation moves it).
+    fast_param_version: AtomicU64,
     calls: AtomicU64,
 }
 
@@ -65,6 +75,8 @@ impl SolModel {
             params,
             optimized,
             kernels: install_default(),
+            fast: OnceLock::new(),
+            fast_param_version: AtomicU64::new(0),
             calls: AtomicU64::new(0),
         })
     }
@@ -87,18 +99,59 @@ impl SolModel {
             params,
             optimized,
             kernels: install_default(),
+            fast: OnceLock::new(),
+            fast_param_version: AtomicU64::new(0),
             calls: AtomicU64::new(0),
         })
     }
 
+    /// The arena-backed fast path, built on first use.  Host-CPU targets
+    /// get one (their compile carries a memory plan); pure-simulation
+    /// devices and refused graph shapes fall back to per-op evaluation.
+    pub fn arena_exec(&self) -> Option<&ArenaExec> {
+        self.fast
+            .get_or_init(|| {
+                if self.optimized.memory_plan.is_none() {
+                    return None;
+                }
+                // the executor re-plans over `self.graph` (the raw
+                // extracted graph the params are bound to) rather than
+                // reusing `optimized.memory_plan`: elision renumbers
+                // nodes, so the compiled plan's ids don't match the
+                // binding.  The artifact's plan stays the compile-side
+                // record (metrics, reports); this one drives execution.
+                let exec = ArenaExec::build(&self.graph, &self.params, 1).ok()?;
+                self.fast_param_version.store(self.param_versions_sum(), Ordering::Release);
+                Some(exec)
+            })
+            .as_ref()
+    }
+
     /// `sol_model(input)` — one `sol.call`, executing the whole network.
     ///
-    /// Numerics: the extracted DAG is evaluated with SOL's kernel set
-    /// (numerically identical to the framework baseline by construction —
-    /// integration tests assert this); structure: a single external call
-    /// instead of one dispatcher round-trip per layer.
+    /// Host-CPU models run the planned fast path: optimized kernels over
+    /// a pre-allocated slot arena (zero steady-state heap allocations in
+    /// the kernel loop), with the parameter snapshot refreshed whenever
+    /// the framework's version counters report a mutation (§V-A).
+    /// Everything else evaluates the extracted DAG per op with SOL's
+    /// kernel set.  Both paths are numerically equivalent to the
+    /// framework baseline (integration + property tests assert this);
+    /// structurally this is a single external call instead of one
+    /// dispatcher round-trip per layer.
     pub fn forward(&self, input: &Tensor) -> Result<Tensor> {
         self.calls.fetch_add(1, Ordering::Relaxed);
+        if let Some(exec) = self.arena_exec() {
+            // sum (not max) of version counters: moves on every mutation
+            let v = self.param_versions_sum();
+            let stale = self.fast_param_version.swap(v, Ordering::AcqRel) != v;
+            let refresh = if stale { Some(&self.params) } else { None };
+            let mut out = Vec::with_capacity(exec.output_len());
+            // refresh + run + output read are atomic under the executor's
+            // run gate, so concurrent forwards serialize instead of
+            // interleaving writes into the shared slot arena
+            input.with_f32(|xv| exec.run_into(refresh, xv, &mut out))??;
+            return Ok(Tensor::from_f32(out, &exec.output_shape()));
+        }
         let pmap: HashMap<NodeId, &Vec<(String, Tensor)>> =
             self.params.iter().map(|(id, ps)| (*id, ps)).collect();
         let mut values: Vec<Option<Tensor>> = vec![None; self.graph.nodes.len()];
@@ -220,6 +273,18 @@ impl SolModel {
             .flat_map(|(_, ps)| ps.iter().map(|(_, t)| t.version()))
             .max()
             .unwrap_or(0)
+    }
+
+    /// Sum of all parameter version counters.  Unlike the max, this moves
+    /// on *every* mutation (versions only increment), so it is the
+    /// staleness signal for the fast path's parameter snapshot — a tensor
+    /// whose own version is still below the current max would be
+    /// invisible to `param_version()`.
+    fn param_versions_sum(&self) -> u64 {
+        self.params
+            .iter()
+            .flat_map(|(_, ps)| ps.iter().map(|(_, t)| t.version()))
+            .sum()
     }
 
     /// Total parameter bytes (device cache sizing).

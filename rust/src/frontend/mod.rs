@@ -14,13 +14,18 @@
 //!   hooks and the minimal kernel set for the vacant HIP dispatcher slot,
 //!   making `hip:0` a fully usable framework device without one line of
 //!   framework change.
+//! * [`fastexec`] — the arena executor: the memory-planned,
+//!   zero-allocation fast path `SolModel::forward` takes on host-CPU
+//!   targets (optimized kernels over a pre-allocated slot arena).
 
 pub mod extract;
+pub mod fastexec;
 pub mod inject;
 pub mod native;
 pub mod offload;
 
 pub use extract::extract_graph;
+pub use fastexec::ArenaExec;
 pub use inject::SolModel;
 pub use native::install_native_backend;
 pub use offload::{OffloadContext, TransparentOffload};

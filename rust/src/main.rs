@@ -18,6 +18,11 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Result};
 
+/// Count heap allocations so `sol bench` reports a real `allocs/run`
+/// (the fast path's zero-allocation claim is measured, not asserted).
+#[global_allocator]
+static ALLOC: sol::util::alloc::CountingAllocator = sol::util::alloc::CountingAllocator;
+
 use sol::devsim::DeviceId;
 use sol::exec::calibrate;
 use sol::exec::fig3::{fig3_grid, headline_speedups};
@@ -343,6 +348,28 @@ fn cmd_serve_multi(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
+    use sol::exec::kernelbench::{bench_json, conv_speedup, run_kernel_bench, write_bench_json};
+    let smoke = flags.contains_key("smoke");
+    let rows = run_kernel_bench(smoke);
+    for r in &rows {
+        println!(
+            "{:<34} {:>12.0} ns/iter  {:>10} B  {:>3} allocs/run",
+            r.op, r.ns_per_iter, r.bytes, r.allocs_per_run
+        );
+    }
+    println!("conv2d 64x64 speedup (naive -> fast.t1): {:.2}x", conv_speedup(&rows));
+    if flags.contains_key("json") {
+        let default = "BENCH_4.json".to_string();
+        let out = flags.get("out").unwrap_or(&default);
+        write_bench_json(std::path::Path::new(out), &rows, smoke)?;
+        println!("wrote {out}");
+    } else {
+        let _ = bench_json(&rows, smoke); // exercised either way
+    }
+    Ok(())
+}
+
 fn cmd_effort() {
     // measured lines of code per component, like §VI-A
     let count = |dir: &str| -> usize {
@@ -376,14 +403,15 @@ fn cmd_effort() {
 }
 
 const HELP: &str = "sol — SOL middleware reproduction
-USAGE: sol <devices|optimize|kernels|fig3|train-mlp|deploy|serve|effort|help> [--flags]
+USAGE: sol <devices|optimize|kernels|fig3|train-mlp|deploy|serve|bench|effort|help> [--flags]
   optimize  --net resnet18 --device cpu [--batch 1]
   kernels   --net resnet18 --device aurora [--count 2]
   fig3      [--training] [--calibrate]
   train-mlp [--steps 20] [--batch 16]
   deploy    [--out DIR]
   serve     [--bundle DIR] [--requests 16]
-  serve-multi [--tenants 4] [--nets 6] [--requests 64] [--cache 16] [--policy lru|cost]";
+  serve-multi [--tenants 4] [--nets 6] [--requests 64] [--cache 16] [--policy lru|cost]
+  bench     [--json] [--out BENCH_4.json] [--smoke]   kernel/planner microbenches";
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -399,6 +427,7 @@ fn main() -> Result<()> {
         "deploy" => cmd_deploy(&flags)?,
         "serve" => cmd_serve(&flags)?,
         "serve-multi" => cmd_serve_multi(&flags)?,
+        "bench" => cmd_bench(&flags)?,
         "effort" => cmd_effort(),
         _ => println!("{HELP}"),
     }

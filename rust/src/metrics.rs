@@ -10,11 +10,15 @@
 //! | `compile_cache.hit`        | compile served from the content-addressed cache |
 //! | `compile_cache.miss`       | compile that ran the full pipeline |
 //! | `compile_cache.eviction`   | cache entries dropped by capacity eviction (never `clear()`) |
-//! | `pass.<name>.runs`         | executions of one compiler pass (7 standard names, `session::stages::ALL`) |
+//! | `pass.<name>.runs`         | executions of one compiler pass (8 standard names, `session::stages::ALL`) |
 //! | `serve.<tenant>.compiles`  | admitted compile requests of one serving tenant (hits included) |
 //! | `serve.<tenant>.cache_hits`| the tenant's compiles served from the shared cache |
 //! | `serve.<tenant>.runs`      | executor runs the tenant drove |
 //! | `serve.<tenant>.evicted`   | artifacts unpinned from the tenant's resident set by its capacity limit |
+//! | `arena.bytes_peak`         | largest planned activation arena (gauge: high-water mark) |
+//! | `arena.slots`              | most slots any memory plan needed (gauge: high-water mark) |
+//! | `arena.reuse_hits`         | planner slot assignments served by reusing a freed slot |
+//! | `exec.allocs_per_run`      | heap allocations of the last arena-executor run (gauge; 0 unless a counting allocator is installed — see `util::alloc`) |
 //!
 //! Per-tenant counters are registered on first `ServingSession::tenant()`
 //! call for that name and appear in [`counters_snapshot`] from then on —
@@ -40,6 +44,17 @@ impl Counter {
 
     pub fn add(&self, n: u64) {
         self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Gauge write: overwrite the value (last-observation-wins counters
+    /// like `exec.allocs_per_run`).
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Gauge write: keep the high-water mark (e.g. `arena.bytes_peak`).
+    pub fn set_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
     }
 
     pub fn get(&self) -> u64 {
@@ -146,6 +161,19 @@ mod tests {
         assert!(counters_snapshot()
             .iter()
             .any(|(k, _)| k == "test.metrics.counter_a"));
+    }
+
+    #[test]
+    fn gauge_set_and_high_water_mark() {
+        let c = counter("test.metrics.gauge_a");
+        c.set(42);
+        assert_eq!(c.get(), 42);
+        c.set(7);
+        assert_eq!(c.get(), 7, "set overwrites");
+        c.set_max(3);
+        assert_eq!(c.get(), 7, "set_max keeps the high-water mark");
+        c.set_max(11);
+        assert_eq!(c.get(), 11);
     }
 
     #[test]

@@ -90,6 +90,9 @@ pub struct OptimizedModel {
     pub param_bytes: usize,
     pub input_bytes: usize,
     pub output_bytes: usize,
+    /// Static buffer-reuse plan from the `plan-memory` pass (host-CPU
+    /// targets only; pure-simulation devices skip the planner).
+    pub memory_plan: Option<crate::session::planner::MemoryPlan>,
     /// Per-pass timing/metrics of the pipeline run that produced this
     /// model (attached by the [`PassManager`]).
     pub pass_records: Vec<PassRecord>,

@@ -43,8 +43,24 @@ impl VirtualPtr {
 
     /// Plain pointer arithmetic ("removes the need to synchronize malloc
     /// and free operations").
+    ///
+    /// The offset lives in the low 32 bits only.  The old `self.0 +
+    /// delta` let an offset overflow carry into the reference-id half,
+    /// silently aliasing a *different* allocation; now the addition is
+    /// checked within the offset field and panics loudly instead.
     pub fn add(self, delta: u32) -> Self {
-        VirtualPtr(self.0 + delta as u64)
+        let off = self
+            .offset()
+            .checked_add(delta)
+            .unwrap_or_else(|| {
+                panic!(
+                    "VirtualPtr::add overflow: id {} offset {} + {delta} exceeds 32 bits \
+                     (would alias another allocation)",
+                    self.id(),
+                    self.offset()
+                )
+            });
+        VirtualPtr(((self.id() as u64) << 32) | off as u64)
     }
 }
 
@@ -282,6 +298,24 @@ mod tests {
         assert_eq!(q.id(), 7);
         assert_eq!(q.offset(), 4096);
         assert_eq!(q.0, (7u64 << 32) | 4096);
+    }
+
+    #[test]
+    fn vptr_add_stays_within_the_offset_field() {
+        // regression: a large-but-legal offset must not touch the id half
+        let p = VirtualPtr::new(7);
+        let q = p + u32::MAX;
+        assert_eq!(q.id(), 7, "offset carry corrupted the reference id");
+        assert_eq!(q.offset(), u32::MAX);
+        // and id 8 (what the old carry bug aliased) is a different pointer
+        assert_ne!(q, VirtualPtr::new(8));
+    }
+
+    #[test]
+    #[should_panic(expected = "VirtualPtr::add overflow")]
+    fn vptr_add_overflow_panics_instead_of_aliasing() {
+        let p = VirtualPtr::new(7) + u32::MAX;
+        let _ = p + 1; // old behaviour: silently became id 8, offset 0
     }
 
     #[test]

@@ -37,6 +37,7 @@
 pub mod cache;
 pub mod executor;
 pub mod pass;
+pub mod planner;
 pub mod serve;
 pub mod stages;
 
@@ -54,6 +55,7 @@ use crate::Result;
 pub use cache::{CacheKey, CacheStats, CompileCache, EvictionPolicy};
 pub use executor::{BaselineExecutor, Executor, Phase, SolExecutor};
 pub use pass::{CompileState, Pass, PassManager, PassRecord, PipelineConfig};
+pub use planner::{plan_memory, MemoryPlan};
 pub use serve::{
     AdmissionError, CompilePermit, ServingConfig, ServingSession, Tenant, TenantCounters,
 };

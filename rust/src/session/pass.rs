@@ -172,6 +172,9 @@ pub struct CompileState {
     pub layout: Option<LayoutPlan>,
     /// The final executable schedule (filled by `schedule`).
     pub steps: Vec<Step>,
+    /// Static buffer-reuse plan (filled by `plan-memory` on host-CPU
+    /// targets; `None` for pure-simulation devices and ablated runs).
+    pub memory_plan: Option<crate::session::planner::MemoryPlan>,
 }
 
 impl CompileState {
@@ -187,6 +190,7 @@ impl CompileState {
             region_at: Vec::new(),
             layout: None,
             steps: Vec::new(),
+            memory_plan: None,
         }
     }
 
@@ -282,6 +286,7 @@ impl CompileState {
             param_bytes,
             input_bytes,
             output_bytes,
+            memory_plan: self.memory_plan,
             pass_records: Vec::new(),
         }
     }
@@ -386,7 +391,7 @@ mod tests {
     use crate::workloads::NetId;
 
     #[test]
-    fn standard_pipeline_has_the_seven_paper_stages() {
+    fn standard_pipeline_has_the_paper_stages_plus_planner() {
         let pm = PassManager::standard(PipelineConfig::new(DeviceId::Xeon6126));
         assert_eq!(
             pm.pass_names(),
@@ -398,6 +403,7 @@ mod tests {
                 "dfp-fuse-codegen",
                 "assign-layouts",
                 "schedule",
+                "plan-memory",
             ]
         );
     }
@@ -406,7 +412,7 @@ mod tests {
     fn records_cover_every_pass_in_order() {
         let pm = PassManager::standard(PipelineConfig::new(DeviceId::Xeon6126));
         let m = pm.compile(&NetId::Resnet18.build(1)).unwrap();
-        assert_eq!(m.pass_records.len(), 7);
+        assert_eq!(m.pass_records.len(), 8);
         for (r, name) in m.pass_records.iter().zip(pm.pass_names()) {
             assert_eq!(r.name, name);
             assert!(!r.skipped);

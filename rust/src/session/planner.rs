@@ -1,0 +1,349 @@
+//! The memory planner: liveness-based static buffer reuse (paper §IV-C's
+//! "asynchronous malloc/free" taken to its static conclusion — when the
+//! middleware owns the schedule, it can pre-plan every activation buffer
+//! like an optimizing DNN compiler and allocate the whole arena once).
+//!
+//! [`plan_memory`] computes, over a topologically ordered [`Graph`]:
+//!
+//! 1. **Liveness** — each value is live from its defining node until its
+//!    last consumer.  Pure view ops (`Flatten`, `Dropout`) *alias* their
+//!    input (same buffer, extended live range) instead of consuming a
+//!    slot, and a `ReLU` that is the final reader of its input's buffer
+//!    aliases it too (in-place clamp — which is also what lets an
+//!    executor fuse conv/linear+bias+ReLU into one kernel, one buffer).
+//! 2. **Slot assignment** — a greedy best-fit allocator walks the nodes in
+//!    execution order, reusing the smallest freed slot that fits (growing
+//!    the largest freed slot when none fits, which keeps the arena total
+//!    minimal), and creating a fresh slot only when nothing is free.
+//! 3. **Accounting** — arena footprint, peak concurrently-live bytes,
+//!    reuse hits, and the im2col scratch high-water mark for the fast
+//!    conv kernels.
+//!
+//! The [`PlanMemory`] pass attaches the plan to the compiled model for
+//! devices whose kernels actually execute on the host CPU; pure-simulation
+//! accelerator targets skip it (their "execution" is a roofline model — a
+//! buffer plan would be dead weight on the compile path).  This is the
+//! per-device pipeline-specialization point the roadmap calls for: the
+//! pass list is shared, the pass itself is device-gated, and ablations can
+//! still force it off by name (`cfg.disable_pass(stages::PLAN_MEMORY)`).
+//!
+//! Invariants (pinned by `rust/tests/proptests.rs`): two values whose
+//! live ranges overlap never share a slot, and every slot is at least as
+//! large as every value assigned to it.
+
+use crate::devsim::DeviceKind;
+use crate::ir::{Graph, NodeId, Op};
+use crate::metrics;
+use crate::Result;
+
+use super::pass::{CompileState, Pass, PipelineConfig};
+use super::stages;
+
+/// A value with no further reads (output / dangling values use the
+/// sentinel so their slot is never recycled).
+const LIVE_FOREVER: usize = usize::MAX;
+
+/// The static buffer-reuse plan for one graph.
+#[derive(Debug, Clone, Default)]
+pub struct MemoryPlan {
+    /// Node → arena slot.  Alias nodes (`Flatten`/`Dropout`) share their
+    /// input's slot.
+    pub node_slot: Vec<usize>,
+    /// Node → representative node whose buffer this node shares (itself
+    /// for non-alias nodes; fully resolved — never a chain).  Views
+    /// (`Flatten`/`Dropout`) alias unconditionally; a `ReLU` aliases when
+    /// it is the final reader of its input's buffer (in-place clamp).
+    pub alias_of: Vec<NodeId>,
+    /// Slot → capacity in bytes (max over every value assigned to it).
+    pub slot_bytes: Vec<usize>,
+    /// Total arena footprint: `sum(slot_bytes)` — what one allocation up
+    /// front costs.
+    pub arena_bytes: usize,
+    /// Peak bytes simultaneously live during execution (≤ `arena_bytes`).
+    pub live_peak_bytes: usize,
+    /// How many slot assignments were served by reusing a freed slot.
+    pub reuse_hits: usize,
+    /// High-water im2col scratch requirement (f32 elements) over all conv
+    /// nodes — the fast conv kernels' side buffer.
+    pub scratch_elems: usize,
+}
+
+impl MemoryPlan {
+    /// Slot capacities in f32 elements (arena construction input).
+    pub fn slot_lens(&self) -> Vec<usize> {
+        self.slot_bytes.iter().map(|b| b / 4).collect()
+    }
+}
+
+/// Is this op a pure view whose output shares its input's buffer
+/// unconditionally?  (`Slice` copies — channel extents differ — so it is
+/// *not* here; `ReLU` aliases conditionally, see [`plan_memory`].)
+fn is_view_alias(op: &Op) -> bool {
+    matches!(op, Op::Flatten | Op::Dropout)
+}
+
+/// Compute the static buffer-reuse plan for `graph` (topological order).
+pub fn plan_memory(graph: &Graph) -> MemoryPlan {
+    let n = graph.nodes.len();
+    // ---- phase 1: structural aliases (Flatten/Dropout view chains) ----
+    let mut alias_of = vec![0usize; n];
+    for node in &graph.nodes {
+        alias_of[node.id] = if is_view_alias(&node.op) {
+            alias_of[node.inputs[0]]
+        } else {
+            node.id
+        };
+    }
+    // last reader per alias class (root-indexed): a class is live from its
+    // root's definition until the max consumer id over all its members
+    let mut last_use = vec![0usize; n];
+    for (id, lu) in last_use.iter_mut().enumerate() {
+        *lu = id; // defined ⇒ live at least through its own step
+    }
+    for node in &graph.nodes {
+        for &i in &node.inputs {
+            let r = alias_of[i];
+            if last_use[r] < node.id {
+                last_use[r] = node.id;
+            }
+        }
+    }
+    // ---- phase 2: in-place ReLU aliasing ----
+    // A ReLU that is the *final* reader of its input's buffer may clamp it
+    // in place (same element count, index-aligned) — this is what lets a
+    // producer fuse conv/linear+bias+ReLU into one kernel writing one
+    // buffer.  Processing in topological order resolves ReLU-after-ReLU
+    // chains; merging folds the ReLU's own readers into the root's range.
+    for id in 0..n {
+        if !matches!(graph.nodes[id].op, Op::ReLU) {
+            continue;
+        }
+        let r = alias_of[graph.nodes[id].inputs[0]];
+        if last_use[r] == id {
+            alias_of[id] = r;
+            if last_use[id] > last_use[r] {
+                last_use[r] = last_use[id];
+            }
+        }
+    }
+    // re-root views that pointed at a ReLU which just became an alias
+    // (targets have smaller ids, so one forward pass fully resolves)
+    for id in 0..n {
+        alias_of[id] = alias_of[alias_of[id]];
+    }
+    last_use[alias_of[graph.output()]] = LIVE_FOREVER;
+
+    // ---- greedy best-fit slot assignment in execution order ----
+    let mut node_slot = vec![usize::MAX; n];
+    let mut slot_bytes: Vec<usize> = Vec::new();
+    let mut free: Vec<usize> = Vec::new(); // indices into slot_bytes
+    let mut reuse_hits = 0usize;
+    let mut live_now = 0usize;
+    let mut live_peak = 0usize;
+    let mut scratch_elems = 0usize;
+
+    for node in &graph.nodes {
+        let id = node.id;
+        if alias_of[id] != id {
+            node_slot[id] = node_slot[alias_of[id]];
+        } else {
+            let need = node.meta.bytes();
+            // best fit: smallest free slot that holds `need`; fallback:
+            // grow the largest freed slot (keeps the arena total minimal)
+            let mut fit: Option<usize> = None; // position in `free`
+            let mut largest: Option<usize> = None;
+            for pos in 0..free.len() {
+                let cap = slot_bytes[free[pos]];
+                if cap >= need && fit.map_or(true, |p| cap < slot_bytes[free[p]]) {
+                    fit = Some(pos);
+                }
+                if largest.map_or(true, |p| cap > slot_bytes[free[p]]) {
+                    largest = Some(pos);
+                }
+            }
+            let slot = if let Some(pos) = fit {
+                reuse_hits += 1;
+                free.swap_remove(pos)
+            } else if let Some(pos) = largest {
+                reuse_hits += 1;
+                let s = free.swap_remove(pos);
+                slot_bytes[s] = need;
+                s
+            } else {
+                slot_bytes.push(need);
+                slot_bytes.len() - 1
+            };
+            node_slot[id] = slot;
+            live_now += slot_bytes[slot];
+            live_peak = live_peak.max(live_now);
+        }
+        if let Op::Conv2d { kh, kw, groups, .. } = &node.op {
+            let input = &graph.nodes[node.inputs[0]].meta;
+            let cing = input.channels() / *groups;
+            let (oh, ow) = node.meta.spatial();
+            scratch_elems = scratch_elems.max(cing * *kh * *kw * oh * ow);
+        }
+        // free every representative whose last read was this node
+        // (inputs are released only *after* the node's own slot was
+        // claimed, so an output can never alias a live input)
+        for r in 0..=id {
+            if alias_of[r] == r && last_use[r] == id && node_slot[r] != usize::MAX {
+                free.push(node_slot[r]);
+                live_now -= slot_bytes[node_slot[r]];
+            }
+        }
+    }
+
+    let arena_bytes = slot_bytes.iter().sum();
+    MemoryPlan {
+        node_slot,
+        alias_of,
+        slot_bytes,
+        arena_bytes,
+        live_peak_bytes: live_peak,
+        reuse_hits,
+        scratch_elems,
+    }
+}
+
+/// The `plan-memory` pass: device-gated wiring of [`plan_memory`] into
+/// the standard pipeline, with `arena.*` metrics.
+pub struct PlanMemory;
+
+impl Pass for PlanMemory {
+    fn name(&self) -> &'static str {
+        stages::PLAN_MEMORY
+    }
+
+    fn run(&self, cfg: &PipelineConfig, state: &mut CompileState) -> Result<()> {
+        if cfg.device.spec().kind != DeviceKind::Cpu {
+            // pure-simulation accelerator target: keep the cheap path
+            return Ok(());
+        }
+        let plan = plan_memory(&state.graph);
+        metrics::counter("arena.bytes_peak").set_max(plan.arena_bytes as u64);
+        metrics::counter("arena.slots").set_max(plan.slot_bytes.len() as u64);
+        metrics::counter("arena.reuse_hits").add(plan.reuse_hits as u64);
+        state.memory_plan = Some(plan);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::NetId;
+
+    fn chain_graph() -> Graph {
+        let mut g = Graph::new("chain");
+        let x = g.input_image(1, 4, 8, 8); // 1 KiB
+        let c = g.conv(x, 4, 3, 1, 1, 1); // 1 KiB
+        let r = g.relu(c); // 1 KiB
+        let p = g.max_pool(r, 2, 2, 0); // 256 B
+        let f = g.flatten(p); // alias of p
+        g.linear(f, 10);
+        g
+    }
+
+    #[test]
+    fn chain_reuses_buffers() {
+        let g = chain_graph();
+        let plan = plan_memory(&g);
+        assert_eq!(plan.node_slot.len(), g.nodes.len());
+        // flatten aliases the pool buffer
+        assert_eq!(plan.alias_of[4], 3);
+        assert_eq!(plan.node_slot[4], plan.node_slot[3]);
+        // the relu is the conv buffer's final reader: in-place alias
+        assert_eq!(plan.alias_of[2], 1);
+        assert_eq!(plan.node_slot[2], plan.node_slot[1]);
+        // the pool output reuses the long-dead input slot
+        assert_eq!(plan.node_slot[3], plan.node_slot[0]);
+        assert!(plan.reuse_hits >= 1);
+        // arena beats the sum of all per-node buffers
+        let naive: usize = g.nodes.iter().map(|n| n.meta.bytes()).sum();
+        assert!(plan.arena_bytes < naive, "{} !< {naive}", plan.arena_bytes);
+        assert!(plan.live_peak_bytes <= plan.arena_bytes);
+        assert!(plan.scratch_elems >= 4 * 9 * 64);
+    }
+
+    #[test]
+    fn relu_with_a_later_reader_is_not_inplace() {
+        // add(relu(c), c): c is read again AFTER the relu, so the relu
+        // must not clamp c's buffer in place
+        let mut g = Graph::new("shared");
+        let x = g.input_image(1, 4, 8, 8);
+        let c = g.conv(x, 4, 3, 1, 1, 1);
+        let r = g.relu(c);
+        let a = g.add(r, c);
+        let _ = a;
+        let plan = plan_memory(&g);
+        assert_eq!(plan.alias_of[r], r, "relu must not clobber a live value");
+        assert_ne!(plan.node_slot[r], plan.node_slot[c]);
+    }
+
+    #[test]
+    fn view_after_inplace_relu_reroots_to_the_shared_buffer() {
+        // conv -> relu (in-place) -> flatten: the flatten's alias chain
+        // must resolve to the conv's buffer, not dangle on the relu
+        let mut g = Graph::new("chain2");
+        let x = g.input_image(1, 2, 4, 4);
+        let c = g.conv(x, 2, 3, 1, 1, 1);
+        let r = g.relu(c);
+        let f = g.flatten(r);
+        g.linear(f, 3);
+        let plan = plan_memory(&g);
+        assert_eq!(plan.alias_of[r], c);
+        assert_eq!(plan.alias_of[f], c, "alias chains must be fully resolved");
+        assert_eq!(plan.node_slot[f], plan.node_slot[c]);
+    }
+
+    #[test]
+    fn residual_keeps_skip_connection_live() {
+        let mut g = Graph::new("res");
+        let x = g.input_image(1, 4, 8, 8);
+        let c1 = g.conv(x, 4, 3, 1, 1, 1);
+        let c2 = g.conv(c1, 4, 3, 1, 1, 1);
+        let a = g.add(c2, x); // x must survive past both convs
+        let _ = a;
+        let plan = plan_memory(&g);
+        // x is live until the add: neither conv output may take its slot
+        assert_ne!(plan.node_slot[c1], plan.node_slot[x]);
+        assert_ne!(plan.node_slot[c2], plan.node_slot[x]);
+        // add's inputs are distinct slots from its own output
+        assert_ne!(plan.node_slot[a], plan.node_slot[c2]);
+        assert_ne!(plan.node_slot[a], plan.node_slot[x]);
+    }
+
+    #[test]
+    fn output_slot_is_never_recycled() {
+        let g = chain_graph();
+        let plan = plan_memory(&g);
+        let out_slot = plan.node_slot[g.output()];
+        // no later node exists, but the slot must also be unique among
+        // values still live at the end
+        assert!(out_slot < plan.slot_bytes.len());
+        assert!(plan.slot_bytes[out_slot] >= g.node(g.output()).meta.bytes());
+    }
+
+    #[test]
+    fn zoo_plans_are_consistent() {
+        for net in [NetId::Resnet18, NetId::Densenet121, NetId::ShufflenetV2X1_0] {
+            let g = net.build(1);
+            let plan = plan_memory(&g);
+            let naive: usize = g.nodes.iter().map(|n| n.meta.bytes()).sum();
+            assert!(
+                plan.arena_bytes < naive,
+                "{}: reuse must shrink activation memory ({} vs {naive})",
+                net.name(),
+                plan.arena_bytes
+            );
+            if net == NetId::Resnet18 {
+                // chain-with-skip topology: reuse at least halves it
+                assert!(plan.arena_bytes < naive / 2, "{} vs {naive}", plan.arena_bytes);
+            }
+            for (id, &slot) in plan.node_slot.iter().enumerate() {
+                assert!(plan.slot_bytes[slot] >= g.nodes[id].meta.bytes(), "{}:{id}", net.name());
+            }
+        }
+    }
+}

@@ -413,6 +413,17 @@ impl ServingSession {
             "cache: {}/{} resident, {} hits / {} misses / {} evictions\n",
             s.len, cap, s.hits, s.misses, s.evictions
         ));
+        // memory-planner / fast-executor behaviour of the process (the
+        // `arena.*` gauges are high-water marks across every compile the
+        // tenants drove; `exec.allocs_per_run` is the last measured run)
+        let mem: Vec<String> = metrics::counters_snapshot()
+            .into_iter()
+            .filter(|(k, _)| k.starts_with("arena.") || k.starts_with("exec."))
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        if !mem.is_empty() {
+            out.push_str(&format!("memory: {}\n", mem.join(", ")));
+        }
         out
     }
 }
@@ -540,5 +551,9 @@ mod tests {
         assert!(report.contains("alpha"), "{report}");
         assert!(report.contains("beta"), "{report}");
         assert!(report.contains("cache:"), "{report}");
+        // a CPU compile ran above, so the planner gauges are non-empty
+        // and the report surfaces allocation/arena behaviour
+        assert!(report.contains("arena.bytes_peak"), "{report}");
+        assert!(report.contains("exec.") || report.contains("arena."), "{report}");
     }
 }

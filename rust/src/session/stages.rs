@@ -25,11 +25,12 @@ pub const DNN_AUTOTUNE: &str = "dnn-autotune";
 pub const DFP_FUSE_CODEGEN: &str = "dfp-fuse-codegen";
 pub const ASSIGN_LAYOUTS: &str = "assign-layouts";
 pub const SCHEDULE: &str = "schedule";
+pub const PLAN_MEMORY: &str = "plan-memory";
 
 /// Every standard pass name, pipeline order.  Pass toggles are validated
 /// against this list so a typo'd name fails loudly instead of silently
 /// running the un-ablated pipeline.
-pub const ALL: [&str; 7] = [
+pub const ALL: [&str; 8] = [
     EXTRACT_CANONICALIZE,
     ELIDE,
     ASSIGN_MODULES,
@@ -37,9 +38,12 @@ pub const ALL: [&str; 7] = [
     DFP_FUSE_CODEGEN,
     ASSIGN_LAYOUTS,
     SCHEDULE,
+    PLAN_MEMORY,
 ];
 
-/// The standard pass sequence.
+/// The standard pass sequence: the paper's seven §III-A stages plus the
+/// liveness-based memory planner (`plan-memory`, device-gated inside the
+/// pass — see [`super::planner`]).
 pub fn standard_passes() -> Vec<Box<dyn Pass>> {
     vec![
         Box::new(ExtractCanonicalize),
@@ -49,6 +53,7 @@ pub fn standard_passes() -> Vec<Box<dyn Pass>> {
         Box::new(DfpFuseCodegen),
         Box::new(AssignLayouts),
         Box::new(Schedule),
+        Box::new(super::planner::PlanMemory),
     ]
 }
 

@@ -1,0 +1,58 @@
+//! A counting global allocator for allocation-freedom tests and benches.
+//!
+//! The fast execution path claims **zero heap allocations per steady-state
+//! run**.  That claim is only worth something if it is measured at the
+//! allocator, not inferred from code reading — so binaries that want the
+//! measurement install [`CountingAllocator`] as their `#[global_allocator]`:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: sol::util::alloc::CountingAllocator = sol::util::alloc::CountingAllocator;
+//! ```
+//!
+//! [`alloc_count`] then reports the process-wide number of allocations.
+//! In binaries that do *not* install the allocator the counter stays 0 and
+//! deltas are meaningless — `exec.allocs_per_run` is only authoritative in
+//! instrumented binaries (the `kernels` bench, the `fast_exec` test, the
+//! `sol` CLI).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// `std::alloc::System`, plus one relaxed atomic increment per allocation
+/// (`alloc`, `alloc_zeroed` and growing `realloc` all count; `dealloc`
+/// does not — the contract under test is "no new allocations").
+pub struct CountingAllocator;
+
+// SAFETY: defers every operation to `System`, which upholds the
+// `GlobalAlloc` contract; the counter is a side effect only.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if new_size > layout.size() {
+            ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Total allocations since process start (0 unless [`CountingAllocator`]
+/// is installed as the global allocator).
+pub fn alloc_count() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}

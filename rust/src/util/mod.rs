@@ -1,7 +1,9 @@
-//! In-tree utilities (offline build: no serde/clap/criterion/proptest).
+//! In-tree utilities (offline build: no serde/clap/criterion/proptest/rayon).
 
+pub mod alloc;
 pub mod fnv;
 pub mod json;
+pub mod par;
 pub mod rng;
 pub mod stats;
 

@@ -1,0 +1,91 @@
+//! Minimal scoped-thread data parallelism (the offline build has no rayon).
+//!
+//! One primitive covers every kernel in this repo:
+//! [`parallel_chunks_mut`] — a parallel-for over a mutable slice, split
+//! into contiguous per-thread sub-slices aligned to a `unit` stride
+//! (e.g. one GEMM output row), so each thread owns its rows exclusively —
+//! no locks, no unsafe.
+//!
+//! Thread count is always an **explicit argument**: callers that must be
+//! allocation-free in steady state (the arena executor) pass `1` and the
+//! function degrades to a plain loop without spawning (spawning threads
+//! heap-allocates, so implicit parallelism would silently break the
+//! zero-allocation contract).  [`default_threads`] is the convenience
+//! policy for throughput-oriented callers (benches, registry kernels).
+
+/// Suggested thread count for throughput-oriented callers: available
+/// parallelism capped at 8 (the kernels here stop scaling past that).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+/// Split `data` into up to `threads` contiguous pieces, each a whole
+/// multiple of `unit` elements, and run `f(first_unit_index, piece)` on a
+/// scoped thread per piece.  The split is exclusive (`split_at_mut`), so
+/// each worker owns its rows outright.  `threads <= 1` runs inline.
+///
+/// # Panics
+/// Panics if `data.len()` is not a multiple of `unit` (a caller bug: the
+/// unit is the row stride of the matrix being partitioned).
+pub fn parallel_chunks_mut<T, F>(threads: usize, data: &mut [T], unit: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(unit > 0 && data.len() % unit == 0, "unit must divide the slice length");
+    let n_units = data.len() / unit;
+    let t = threads.min(n_units);
+    if t <= 1 {
+        if !data.is_empty() {
+            f(0, data);
+        }
+        return;
+    }
+    let per = n_units.div_ceil(t);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut first = 0usize;
+        while !rest.is_empty() {
+            let take = (per * unit).min(rest.len());
+            // `mem::take` detaches the remainder so the split's halves can
+            // outlive this iteration (plain `rest.split_at_mut` would
+            // re-borrow `rest` and could not be re-assigned from its tail)
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            rest = tail;
+            let f = &f;
+            let start = first;
+            s.spawn(move || f(start, head));
+            first += take / unit;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_mut_partitions_on_unit_boundaries() {
+        for threads in [1, 2, 4, 16] {
+            let mut data = vec![0usize; 6 * 5]; // 6 rows of 5
+            parallel_chunks_mut(threads, &mut data, 5, |first_row, piece| {
+                assert_eq!(piece.len() % 5, 0);
+                for (r, row) in piece.chunks_mut(5).enumerate() {
+                    for x in row.iter_mut() {
+                        *x = first_row + r;
+                    }
+                }
+            });
+            for (r, row) in data.chunks(5).enumerate() {
+                assert!(row.iter().all(|&x| x == r), "t={threads} row {r}: {row:?}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unit must divide")]
+    fn chunks_mut_rejects_ragged_unit() {
+        let mut data = vec![0u8; 7];
+        parallel_chunks_mut(2, &mut data, 3, |_, _| {});
+    }
+}

@@ -1,0 +1,182 @@
+//! Acceptance tests for the fast execution path: memory planner + arena
+//! executor + optimized kernels.
+//!
+//! This binary installs the counting allocator, so the zero-allocation
+//! claim is measured at the allocator, not inferred.  (The test harness
+//! runs tests on several threads; the alloc-delta check therefore retries
+//! — a single clean run proves the path itself allocates nothing, while a
+//! real allocation inside `run` would taint *every* attempt.)
+
+use sol::devsim::DeviceId;
+use sol::exec::kernelbench::{fig3_cnn_module, run_kernel_bench, write_bench_json};
+use sol::framework::{install_default, Tensor};
+use sol::frontend::{extract_graph, ArenaExec, SolModel};
+use sol::passes::OptimizeOptions;
+use sol::session::{stages, Session};
+use sol::util::alloc::alloc_count;
+use sol::util::Json;
+
+#[global_allocator]
+static ALLOC: sol::util::alloc::CountingAllocator = sol::util::alloc::CountingAllocator;
+
+/// Acceptance: steady-state runs on the fig3 CNN perform 0 heap
+/// allocations in the kernel loop.
+#[test]
+fn steady_state_run_performs_zero_heap_allocations() {
+    let (module, shape) = fig3_cnn_module();
+    let (graph, binding) = extract_graph(&module, &shape, "fig3-cnn").unwrap();
+    let exec = ArenaExec::build(&graph, &binding, 1).unwrap();
+    let input = Tensor::randn(&shape, 7, 0.5).to_f32().unwrap();
+    exec.run(&input).unwrap(); // cold run: counters resolve lazily nowhere, but be fair
+    let mut clean = false;
+    let mut deltas = Vec::new();
+    for _ in 0..20 {
+        let a0 = alloc_count();
+        exec.run(&input).unwrap();
+        let delta = alloc_count() - a0;
+        deltas.push(delta);
+        if delta == 0 {
+            clean = true;
+            break;
+        }
+    }
+    assert!(
+        clean,
+        "no allocation-free steady-state run in 20 attempts (deltas {deltas:?}) — \
+         the arena executor allocates on the hot path"
+    );
+}
+
+/// The planned fast path and the framework's own per-op execution agree.
+#[test]
+fn fast_forward_matches_framework_numerics() {
+    let (module, shape) = fig3_cnn_module();
+    let reg = install_default();
+    let x = Tensor::randn(&shape, 11, 0.5);
+    let want = module.forward(&reg, &x).unwrap().to_f32().unwrap();
+    let sol = SolModel::optimize(
+        &module,
+        &shape,
+        "fig3-cnn",
+        &OptimizeOptions::new(DeviceId::Xeon6126),
+    )
+    .unwrap();
+    assert!(sol.arena_exec().is_some(), "CPU target must take the fast path");
+    let got = sol.forward(&x).unwrap().to_f32().unwrap();
+    assert_eq!(want.len(), got.len());
+    for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-4 * (1.0 + a.abs().max(b.abs())),
+            "elem {i}: {a} vs {b}"
+        );
+    }
+}
+
+/// Framework-side parameter mutation reaches the fast path (the §V-A
+/// version-counter staleness protocol).
+#[test]
+fn param_mutation_invalidates_the_snapshot() {
+    let (module, shape) = fig3_cnn_module();
+    let reg = install_default();
+    let sol = SolModel::optimize(
+        &module,
+        &shape,
+        "fig3-cnn",
+        &OptimizeOptions::new(DeviceId::Xeon6126),
+    )
+    .unwrap();
+    let x = Tensor::randn(&shape, 13, 0.5);
+    let before = sol.forward(&x).unwrap().to_f32().unwrap();
+    module.parameters()[0].1.fill_(0.01).unwrap();
+    let after = sol.forward(&x).unwrap().to_f32().unwrap();
+    assert_ne!(before, after, "stale parameter snapshot");
+    let want = module.forward(&reg, &x).unwrap().to_f32().unwrap();
+    for (a, b) in want.iter().zip(&after) {
+        assert!((a - b).abs() <= 1e-4 * (1.0 + a.abs().max(b.abs())), "{a} vs {b}");
+    }
+}
+
+/// Regression: a mutation to a parameter whose own version counter stays
+/// below the max over all parameters must still invalidate the snapshot
+/// (the staleness signal is the version *sum*, not the max).
+#[test]
+fn low_version_param_mutation_still_invalidates() {
+    let (module, shape) = fig3_cnn_module();
+    let reg = install_default();
+    let sol = SolModel::optimize(
+        &module,
+        &shape,
+        "fig3-cnn",
+        &OptimizeOptions::new(DeviceId::Xeon6126),
+    )
+    .unwrap();
+    let x = Tensor::randn(&shape, 17, 0.5);
+    let params = module.parameters();
+    // push one tensor's version to 2, refresh via a forward...
+    params[0].1.fill_(0.02).unwrap();
+    params[0].1.fill_(0.03).unwrap();
+    let _ = sol.forward(&x).unwrap();
+    // ...then mutate a *different* tensor once: its version (1) is below
+    // the max (2), so a max-based check would miss it
+    params[2].1.fill_(0.04).unwrap();
+    let got = sol.forward(&x).unwrap().to_f32().unwrap();
+    let want = module.forward(&reg, &x).unwrap().to_f32().unwrap();
+    for (a, b) in want.iter().zip(&got) {
+        assert!((a - b).abs() <= 1e-4 * (1.0 + a.abs().max(b.abs())), "{a} vs {b}");
+    }
+}
+
+/// Pure-simulation devices skip the planner (cheap path) but CPU compiles
+/// carry a plan; the ablation toggle works by name.
+#[test]
+fn planner_is_device_gated_and_ablatable() {
+    let session = Session::new();
+    let g = sol::workloads::NetId::Squeezenet1_1.build(1);
+    let cpu = session.compile(&g, DeviceId::Xeon6126);
+    assert!(cpu.memory_plan.is_some(), "CPU compile must plan memory");
+    let plan = cpu.memory_plan.as_ref().unwrap();
+    assert!(plan.arena_bytes > 0 && plan.reuse_hits > 0);
+    assert!(plan.live_peak_bytes <= plan.arena_bytes);
+    let ve = session.compile(&g, DeviceId::AuroraVE10B);
+    assert!(ve.memory_plan.is_none(), "pure-sim device must keep the cheap path");
+    // explicit ablation: same device, no plan, distinct content address
+    let mut cfg = session.pipeline_config(DeviceId::Xeon6126);
+    cfg.disable_pass(stages::PLAN_MEMORY);
+    let ablated = session.compile_with(&g, cfg).unwrap();
+    assert!(ablated.memory_plan.is_none());
+}
+
+/// Planner metrics reach the process-global registry.
+#[test]
+fn arena_metrics_are_published() {
+    let session = Session::new();
+    let g = sol::workloads::NetId::Resnet18.build(1);
+    let m = session.compile(&g, DeviceId::Xeon6126);
+    let plan = m.memory_plan.as_ref().unwrap();
+    assert!(sol::metrics::counter("arena.bytes_peak").get() >= plan.arena_bytes as u64);
+    assert!(sol::metrics::counter("arena.slots").get() >= plan.slot_bytes.len() as u64);
+    assert!(sol::metrics::counter("arena.reuse_hits").get() >= plan.reuse_hits as u64);
+}
+
+/// The smoke bench runs end to end and records the perf trajectory
+/// (BENCH_4.json) with the contract fields.
+#[test]
+fn bench_smoke_writes_bench_4_json() {
+    let rows = run_kernel_bench(true);
+    assert!(rows.iter().any(|r| r.op == "conv2d_64x64.naive"));
+    assert!(rows.iter().any(|r| r.op == "conv2d_64x64.fast.t1"));
+    assert!(rows.iter().any(|r| r.op == "arena_exec.fig3_cnn.steady"));
+    assert!(rows.iter().all(|r| r.ns_per_iter > 0.0));
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_4.json");
+    write_bench_json(&path, &rows, true).unwrap();
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(doc.get("mode").and_then(Json::as_str), Some("smoke"));
+    assert!(doc.get("conv2d_speedup").and_then(Json::as_f64).unwrap() > 0.0);
+    let rows_json = doc.get("rows").and_then(Json::as_arr).unwrap();
+    assert_eq!(rows_json.len(), rows.len());
+    for r in rows_json {
+        for field in ["op", "bytes", "ns_per_iter", "allocs_per_run"] {
+            assert!(r.get(field).is_some(), "missing {field}");
+        }
+    }
+}

@@ -81,8 +81,9 @@ fn optimize_is_a_pass_manager_wrapper() {
             .compile(&g)
             .unwrap();
         assert_models_equivalent(&wrapped, &direct);
-        // and the wrapper carries the per-pass records of the 7 stages
-        assert_eq!(wrapped.pass_records.len(), 7);
+        // and the wrapper carries the per-pass records of the 7 paper
+        // stages plus the memory planner
+        assert_eq!(wrapped.pass_records.len(), 8);
         assert!(wrapped.pass_records.iter().all(|r| !r.skipped));
     }
 }
