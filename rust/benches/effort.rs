@@ -9,6 +9,7 @@
 
 use std::path::Path;
 
+use sol::backends::default_registry;
 use sol::metrics::format_table;
 
 fn loc(rel: &str) -> usize {
@@ -32,11 +33,34 @@ fn loc(rel: &str) -> usize {
     walk(&Path::new(env!("CARGO_MANIFEST_DIR")).join(rel))
 }
 
+/// Source file of one registered backend — the registry (not a hardcoded
+/// list) names what exists; only the name→file mapping lives here.
+fn backend_file(name: &str) -> &'static str {
+    match name {
+        "x86" => "rust/src/backends/x86.rs",
+        "arm64" => "rust/src/backends/arm64.rs",
+        "nvidia" => "rust/src/backends/nvidia.rs",
+        "sx-aurora" => "rust/src/backends/aurora.rs",
+        other => panic!("no source mapping for backend '{other}' — extend backend_file()"),
+    }
+}
+
 fn main() {
-    let x86 = loc("rust/src/backends/x86.rs");
-    let arm = loc("rust/src/backends/arm64.rs");
-    let nv = loc("rust/src/backends/nvidia.rs");
-    let ve = loc("rust/src/backends/aurora.rs");
+    // enumerate the shipped backends through the registry so a newly
+    // registered device shows up here (or fails loudly) instead of being
+    // silently missing from the effort table
+    let registry = default_registry();
+    let backend_loc = |name: &str| -> usize {
+        registry.by_name(name).expect("registered backend");
+        loc(backend_file(name))
+    };
+    for b in registry.iter() {
+        let _ = backend_file(b.name()); // every backend must be mapped
+    }
+    let x86 = backend_loc("x86");
+    let arm = backend_loc("arm64");
+    let nv = backend_loc("nvidia");
+    let ve = backend_loc("sx-aurora");
     let native = loc("rust/src/frontend/native.rs");
     let frontend = loc("rust/src/frontend/extract.rs")
         + loc("rust/src/frontend/inject.rs")

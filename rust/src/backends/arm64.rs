@@ -3,11 +3,13 @@
 //! backend" — it shares the ISPC flavor and differs only in its library
 //! inventory (no DNNL on ARM; NNPACK + OpenBLAS).
 
-use super::{x86::X86Backend, DeviceBackend};
+use super::{x86::X86Backend, Capabilities, DeviceBackend};
 use crate::devsim::DeviceId;
 use crate::dfp::Flavor;
 use crate::dnn::Library;
 use crate::framework::DeviceType;
+use crate::ir::Layout;
+use crate::session::pipeline::{Pipeline, PipelineBuilder};
 
 pub struct Arm64Backend;
 
@@ -34,6 +36,22 @@ impl DeviceBackend for Arm64Backend {
         DeviceType::Cpu
     }
 
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            // NEON is 4 f32 lanes; blocked-8 channels match it better
+            // than the x86 backend's AVX-512-width blocking
+            preferred_layout: Layout::BlockedC8,
+            vector_width: 4,
+            ..X86Backend.capabilities()
+        }
+    }
+
+    /// Inherited host-CPU pipeline ("inherits most of its functionality
+    /// from the X86 backend", §VI-A) — core stages + `plan-memory`.
+    fn pipeline(&self, base: &PipelineBuilder) -> Pipeline {
+        X86Backend.pipeline(base)
+    }
+
     fn main_thread_on_device(&self) -> bool {
         true
     }
@@ -49,5 +67,15 @@ mod tests {
         assert_eq!(a.flavor(), X86Backend.flavor());
         assert!(!a.libraries().contains(&Library::Dnnl));
         assert!(a.libraries().contains(&Library::Nnpack));
+    }
+
+    #[test]
+    fn inherits_the_x86_pipeline_with_neon_width_caps() {
+        let b = PipelineBuilder::new();
+        assert_eq!(Arm64Backend.pipeline(&b).names(), X86Backend.pipeline(&b).names());
+        let caps = Arm64Backend.capabilities();
+        assert!(caps.arena_exec);
+        assert_eq!(caps.vector_width, 4);
+        assert_eq!(caps.preferred_layout, Layout::BlockedC8);
     }
 }

@@ -3,12 +3,68 @@
 //! VEoffload-style launching hidden behind the async execution queue
 //! (`runtime::queue`), and the HIP dispatcher squat for native offloading
 //! (§V-B).
+//!
+//! This backend owns a pipeline pass of its own ([`VeVectorize`]), defined
+//! right here — the API-v2 proof that a device plugin can extend the
+//! compile pipeline without touching the shared session code.
 
-use super::DeviceBackend;
+use super::{Capabilities, DeviceBackend};
 use crate::devsim::DeviceId;
 use crate::dfp::Flavor;
 use crate::dnn::Library;
 use crate::framework::DeviceType;
+use crate::metrics;
+use crate::session::pass::{CompileState, Pass, PipelineConfig};
+use crate::session::pipeline::{Pipeline, PipelineBuilder};
+use crate::session::stages;
+use crate::Result;
+
+/// Name of the Aurora's vector-length audit pass (ablatable like any
+/// standard pass: `cfg.disable_pass(aurora::VE_VECTORIZE)`).
+pub const VE_VECTORIZE: &str = "ve-vectorize";
+
+/// `ve-vectorize` — the Aurora's vector-length-aware codegen audit,
+/// inserted after `dfp-fuse-codegen` (paper §IV-C: the VE's 256-lane
+/// vector pipeline is only saturated by long unit-stride loops; NCC
+/// otherwise emits scalar remainder code).
+///
+/// The pass walks the generated DFP kernel plans and records, per
+/// compile:
+///
+/// * `ve.kernels` — NCC-flavored kernels audited;
+/// * `ve.vmem_bytes_peak` — high-water vector-memory footprint over the
+///   kernel plans (the VE's LLC/vector-register pressure signal);
+/// * `ve.scalar_tail_kernels` — kernels whose parallel fraction leaves a
+///   scalar tail (`parallel_fraction < 1`), i.e. candidates for the
+///   §VI-C "only 1 of 8 cores active" failure mode.
+///
+/// The audit is artifact-neutral: it verifies and accounts, it does not
+/// rewrite kernels — the simulated schedule stays bit-identical to the
+/// paper-calibrated pipeline so Fig. 3 reproductions are unaffected.
+pub struct VeVectorize;
+
+impl Pass for VeVectorize {
+    fn name(&self) -> &'static str {
+        VE_VECTORIZE
+    }
+
+    fn run(&self, cfg: &PipelineConfig, state: &mut CompileState) -> Result<()> {
+        let lanes = cfg.device.spec().vector_lanes as u64;
+        let mut vmem_peak = 0u64;
+        let mut scalar_tails = 0u64;
+        for plan in &state.dfp_plans {
+            vmem_peak = vmem_peak.max(plan.vmem_bytes as u64);
+            if plan.parallel_fraction < 1.0 {
+                scalar_tails += 1;
+            }
+        }
+        metrics::counter("ve.kernels").add(state.dfp_plans.len() as u64);
+        metrics::counter("ve.vmem_bytes_peak").set_max(vmem_peak);
+        metrics::counter("ve.scalar_tail_kernels").add(scalar_tails);
+        metrics::counter("ve.vector_lanes").set_max(lanes);
+        Ok(())
+    }
+}
 
 pub struct AuroraBackend;
 
@@ -34,6 +90,23 @@ impl DeviceBackend for AuroraBackend {
         DeviceType::Hip
     }
 
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            offload: true,     // PCIe card: explicit H2D/D2H
+            arena_exec: false, // pure-simulation target, no host fast path
+            vector_width: 256, // VE f32 lanes
+            ..Capabilities::for_device(DeviceId::AuroraVE10B)
+        }
+    }
+
+    /// Aurora pipeline: the seven core stages with the VE vector audit
+    /// inserted after codegen.  No `plan-memory` — the VE is a
+    /// pure-simulation target, a host buffer plan would be dead weight on
+    /// the compile path.
+    fn pipeline(&self, base: &PipelineBuilder) -> Pipeline {
+        base.core().insert_after(stages::DFP_FUSE_CODEGEN, Box::new(VeVectorize))
+    }
+
     fn main_thread_on_device(&self) -> bool {
         // §IV: "the device backend can determine if the main thread shall
         // run on the host system or the device" — the Aurora keeps the
@@ -55,5 +128,20 @@ mod tests {
         assert!(!b.libraries().contains(&Library::VednnStock));
         assert!(b.needs_transfers());
         assert_eq!(b.framework_slot(), DeviceType::Hip);
+    }
+
+    #[test]
+    fn pipeline_inserts_the_vector_audit_after_codegen() {
+        let names = AuroraBackend.pipeline(&PipelineBuilder::new()).names();
+        let at = names.iter().position(|n| *n == VE_VECTORIZE).expect("ve pass present");
+        assert_eq!(names[at - 1], stages::DFP_FUSE_CODEGEN);
+        assert!(!names.contains(&stages::PLAN_MEMORY), "no host planner on the VE");
+    }
+
+    #[test]
+    fn capabilities_claim_offload_not_arena() {
+        let caps = AuroraBackend.capabilities();
+        assert!(caps.offload && !caps.arena_exec);
+        assert_eq!(caps.vector_width, 256);
     }
 }

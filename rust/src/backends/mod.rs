@@ -1,39 +1,115 @@
 //! SOL device backends (paper §IV): "very compact and easy to maintain".
 //!
-//! Each backend is a thin bundle of flavor hooks over the shared DFP/DNN
-//! modules: which code flavor the DFP generator emits, which vendor
-//! libraries the DNN module may dispatch to, how the framework reaches the
-//! device (native public API vs dispatcher squat), and whether the main
-//! thread runs on the host or the device.  The effort bench (E1) counts
-//! these files to regenerate the paper's §VI-A lines-of-code table.
+//! **Backend API v2 — capability-driven plugins that own their compile
+//! pipeline.**  A backend is no longer a flat flavor/library bundle: it
+//! advertises what its device can do ([`Capabilities`]) and composes its
+//! own ordered pass list ([`DeviceBackend::pipeline`]) from the standard
+//! building blocks ([`PipelineBuilder`]).  Everything device-specific —
+//! which passes run, whether the arena fast path applies, which kernels
+//! register, which DFP flavor the codegen emits — is answered by the
+//! backend, so adding a device is one trait impl in one file (see
+//! `docs/architecture.md`, "how to add a device in one file").  The effort
+//! bench (E1) counts these files to regenerate the paper's §VI-A
+//! lines-of-code table.
 
 pub mod arm64;
 pub mod aurora;
 pub mod nvidia;
 pub mod x86;
 
-use crate::devsim::DeviceId;
+use std::collections::HashMap;
+use std::sync::OnceLock;
+
+use crate::devsim::{DeviceId, DeviceKind};
 use crate::dfp::Flavor;
 use crate::dnn::Library;
 use crate::framework::DeviceType;
+use crate::ir::Layout;
+use crate::session::pipeline::{Pipeline, PipelineBuilder};
 
-/// The per-device backend interface.
+/// What a device can do — the capability sheet a backend advertises so the
+/// rest of the stack never matches on [`DeviceId`] or device *kind*.
 ///
-/// Backends are stateless flavor/library bundles; `Send + Sync` so a
-/// registry (and the `Session`/`ServingSession` built over it) can be
-/// shared across serving threads.
+/// Consumers: the backend's own default [`DeviceBackend::pipeline`], the
+/// frontend's executor selection (`SolModel` takes the arena fast path and
+/// registers the optimized CPU kernels only when `arena_exec` says so),
+/// the layout pass (`preferred_layout`), and the offload machinery
+/// (`offload`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Capabilities {
+    /// Does offloading require explicit H2D/D2H transfers?
+    pub offload: bool,
+    /// Can compiled artifacts execute on the host through the arena-backed
+    /// fast path (zero-allocation steady state)?  Host-CPU backends only;
+    /// pure-simulation accelerator targets run the roofline model instead.
+    pub arena_exec: bool,
+    /// Activation layout the device's DNN libraries prefer (§III-A:
+    /// "DNNL prefers blocked memory layouts").
+    pub preferred_layout: Layout,
+    /// SIMD width in f32 lanes (AVX-512: 16, warp: 32, Aurora VE: 256).
+    pub vector_width: usize,
+}
+
+impl Capabilities {
+    /// The capability sheet derived from the simulated device spec — the
+    /// default for backends that do not override [`DeviceBackend::capabilities`].
+    pub fn for_device(device: DeviceId) -> Capabilities {
+        let spec = device.spec();
+        Capabilities {
+            offload: spec.is_offload_device(),
+            arena_exec: spec.kind == DeviceKind::Cpu,
+            preferred_layout: crate::passes::layout::dnn_preferred_layout(&spec),
+            vector_width: spec.vector_lanes,
+        }
+    }
+}
+
+/// The per-device backend interface (v2).
+///
+/// Backends are stateless plugins; `Send + Sync` so a registry (and the
+/// `Session`/`ServingSession` built over it) can be shared across serving
+/// threads.  The two v2 entry points — [`DeviceBackend::capabilities`] and
+/// [`DeviceBackend::pipeline`] — have working defaults, so a minimal
+/// backend still only implements the five inventory methods.
 pub trait DeviceBackend: Send + Sync {
     /// Backend name (matches the paper's §IV subsections).
     fn name(&self) -> &'static str;
     /// The simulated hardware this backend drives.
     fn device(&self) -> DeviceId;
-    /// DFP code flavor.
+    /// DFP code flavor.  This is the *single* flavor-selection source of
+    /// truth: the compile pipeline resolves flavors only through
+    /// registered backends (`BackendRegistry::flavor_for` /
+    /// [`default_flavor_for`]); no kind-derived fallback exists elsewhere.
     fn flavor(&self) -> Flavor;
     /// DNN-module library inventory.
     fn libraries(&self) -> Vec<Library>;
     /// Framework device slot used for *native offloading*: CPU/CUDA are
     /// public API; the Aurora squats on HIP (§V-B).
     fn framework_slot(&self) -> DeviceType;
+    /// What the device can do.  Defaults to the spec-derived sheet;
+    /// backends override to claim more or less than their device class.
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::for_device(self.device())
+    }
+    /// The compile pipeline this backend's artifacts are built by.
+    ///
+    /// Default: the paper's seven core stages, untouched.  Backends
+    /// append/insert/skip passes — host-CPU backends append `plan-memory`,
+    /// the Aurora inserts `ve-vectorize` — and the realized list is hashed
+    /// into the compile-cache key, so per-device pipelines never alias.
+    ///
+    /// `Session::compile` treats this pipeline as infallible for
+    /// well-formed graphs (it panics otherwise); a backend composing a
+    /// pipeline that can legitimately fail (e.g. dropping a coverage
+    /// stage) must be driven through the fallible `Session::compile_with`.
+    fn pipeline(&self, base: &PipelineBuilder) -> Pipeline {
+        base.core()
+    }
+    /// Pass names of this backend's realized pipeline (convenience over
+    /// [`DeviceBackend::pipeline`] for listings and tests).
+    fn pipeline_names(&self) -> Vec<&'static str> {
+        self.pipeline(&PipelineBuilder::new()).names()
+    }
     /// "the device backend can determine if the main thread shall run on
     /// the host system or the device" (§IV).
     fn main_thread_on_device(&self) -> bool {
@@ -41,16 +117,17 @@ pub trait DeviceBackend: Send + Sync {
     }
     /// Does offloading require explicit H2D/D2H transfers?
     fn needs_transfers(&self) -> bool {
-        self.device().spec().is_offload_device()
+        self.capabilities().offload
     }
 }
 
 /// Lookup-capable backend registry — the session subsystem's index over
-/// the per-device backends (by [`DeviceId`], by name, by framework slot).
+/// the per-device backends (by [`DeviceId`], by name, by framework slot),
+/// and the resolver for everything a backend owns: flavor, capabilities,
+/// and the compile pipeline.
 ///
-/// Replaces the old flat `all_backends()` vector: adding a device means
-/// registering one more thin backend here, nothing else changes
-/// (the paper's maintainability argument, §IV / SOL 2022).
+/// Adding a device means registering one more backend here; nothing else
+/// changes (the paper's maintainability argument, §IV / SOL 2022).
 pub struct BackendRegistry {
     backends: Vec<Box<dyn DeviceBackend>>,
 }
@@ -112,11 +189,34 @@ impl BackendRegistry {
     }
 
     /// The DFP code flavor the registered backend for `device` emits —
-    /// the authoritative flavor-selection path (the compile pipeline used
-    /// to re-derive it from the device kind; `Session` now asks the
-    /// registry).  `None` when no backend drives `device`.
+    /// the authoritative flavor-selection path.  `None` when no backend
+    /// drives `device`.
     pub fn flavor_for(&self, device: DeviceId) -> Option<Flavor> {
         self.by_device(device).map(|b| b.flavor())
+    }
+
+    /// The capability sheet for `device`: the registered backend's claim,
+    /// or the spec-derived default when no backend drives `device`.
+    pub fn capabilities_for(&self, device: DeviceId) -> Capabilities {
+        self.by_device(device)
+            .map(|b| b.capabilities())
+            .unwrap_or_else(|| Capabilities::for_device(device))
+    }
+
+    /// The realized compile pipeline for `device`: the registered
+    /// backend's composition, or the bare core stages when no backend
+    /// drives `device`.
+    pub fn pipeline_for(&self, device: DeviceId) -> Pipeline {
+        let base = PipelineBuilder::new();
+        match self.by_device(device) {
+            Some(b) => b.pipeline(&base),
+            None => base.core(),
+        }
+    }
+
+    /// Pass names of [`BackendRegistry::pipeline_for`], pipeline order.
+    pub fn pipeline_names_for(&self, device: DeviceId) -> Vec<&'static str> {
+        self.pipeline_for(device).names()
     }
 
     /// The distinct devices covered by this registry (first-seen order,
@@ -132,34 +232,59 @@ impl BackendRegistry {
         devs
     }
 
-    /// Consume into the flat backend list (legacy shape).
+    /// Consume into the flat backend list.
     pub fn into_backends(self) -> Vec<Box<dyn DeviceBackend>> {
         self.backends
     }
 }
 
-/// All registered backends (legacy accessor; thin wrapper over
-/// [`BackendRegistry::with_defaults`]).
-pub fn all_backends() -> Vec<Box<dyn DeviceBackend>> {
-    BackendRegistry::with_defaults().into_backends()
+/// The process-wide default registry (the five shipped backends) — what
+/// `PassManager::standard`, `PipelineConfig::new` and the legacy
+/// `optimize()` wrapper resolve backend-owned decisions through when no
+/// explicit registry is in play.
+pub fn default_registry() -> &'static BackendRegistry {
+    static DEFAULT: OnceLock<BackendRegistry> = OnceLock::new();
+    DEFAULT.get_or_init(BackendRegistry::with_defaults)
+}
+
+/// Flavor resolution through the default registry.  Every shipped
+/// [`DeviceId`] has a backend, so this is total over them.
+pub fn default_flavor_for(device: DeviceId) -> Flavor {
+    default_registry()
+        .flavor_for(device)
+        .unwrap_or_else(|| panic!("no shipped backend drives {device:?}"))
+}
+
+/// Realized default-registry pass names per device, resolved once.
+pub fn default_pipeline_names(device: DeviceId) -> Vec<&'static str> {
+    static NAMES: OnceLock<HashMap<DeviceId, Vec<&'static str>>> = OnceLock::new();
+    NAMES
+        .get_or_init(|| {
+            DeviceId::ALL
+                .iter()
+                .map(|&d| (d, default_registry().pipeline_names_for(d)))
+                .collect()
+        })
+        .get(&device)
+        .cloned()
+        .unwrap_or_else(|| default_registry().pipeline_names_for(device))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::session::stages;
 
     #[test]
     fn five_backends_cover_four_devices() {
-        let b = all_backends();
-        assert_eq!(b.len(), 5);
-        let mut devs: Vec<DeviceId> = b.iter().map(|x| x.device()).collect();
-        devs.dedup();
-        assert_eq!(devs.len(), 4, "arm64 shares the CPU device model");
+        let r = BackendRegistry::with_defaults();
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.devices().len(), 4, "arm64 shares the CPU device model");
     }
 
     #[test]
     fn only_aurora_squats_on_hip() {
-        for b in all_backends() {
+        for b in BackendRegistry::with_defaults().iter() {
             if b.name() == "sx-aurora" {
                 assert_eq!(b.framework_slot(), DeviceType::Hip);
             } else {
@@ -169,11 +294,35 @@ mod tests {
     }
 
     #[test]
-    fn offload_devices_need_transfers() {
-        for b in all_backends() {
+    fn offload_capability_matches_the_device_spec() {
+        for b in BackendRegistry::with_defaults().iter() {
             let expect = b.device().spec().is_offload_device();
+            assert_eq!(b.capabilities().offload, expect, "{}", b.name());
             assert_eq!(b.needs_transfers(), expect, "{}", b.name());
         }
+    }
+
+    #[test]
+    fn arena_exec_capability_is_host_cpu_only() {
+        let r = BackendRegistry::with_defaults();
+        for b in r.iter() {
+            let host = b.device().spec().kind == DeviceKind::Cpu;
+            assert_eq!(b.capabilities().arena_exec, host, "{}", b.name());
+        }
+        // and the capability matches which pipelines plan memory
+        for d in DeviceId::ALL {
+            let caps = r.capabilities_for(d);
+            let plans = r.pipeline_for(d).contains(stages::PLAN_MEMORY);
+            assert_eq!(caps.arena_exec, plans, "{d:?}");
+        }
+    }
+
+    #[test]
+    fn vector_width_comes_from_the_spec() {
+        let r = BackendRegistry::with_defaults();
+        assert_eq!(r.capabilities_for(DeviceId::Xeon6126).vector_width, 16);
+        assert_eq!(r.capabilities_for(DeviceId::AuroraVE10B).vector_width, 256);
+        assert_eq!(r.capabilities_for(DeviceId::TitanV).vector_width, 32);
     }
 
     #[test]
@@ -204,17 +353,21 @@ mod tests {
     }
 
     #[test]
-    fn registry_flavor_matches_the_kind_derived_default_for_shipped_backends() {
-        // Session only records a flavor override when the registry
-        // disagrees with the kind-derived default — for the shipped
-        // backends the two must coincide (same artifacts, same cache keys)
+    fn shipped_flavors_match_the_historic_kind_derived_defaults() {
+        // regression for the flavor-selection collapse: the registry (the
+        // single source of truth since API v2) must keep resolving every
+        // shipped device to the flavor the old kind-derived
+        // `stages::flavor_for` produced — same kernels, same cache keys.
+        let want = [
+            (DeviceId::Xeon6126, Flavor::Ispc),
+            (DeviceId::AuroraVE10B, Flavor::Ncc),
+            (DeviceId::QuadroP4000, Flavor::Cuda),
+            (DeviceId::TitanV, Flavor::Cuda),
+        ];
         let r = BackendRegistry::with_defaults();
-        for d in DeviceId::ALL {
-            assert_eq!(
-                r.flavor_for(d),
-                Some(crate::session::stages::flavor_for(d)),
-                "{d:?}"
-            );
+        for (d, f) in want {
+            assert_eq!(r.flavor_for(d), Some(f), "{d:?}");
+            assert_eq!(default_flavor_for(d), f, "{d:?}");
         }
         assert!(BackendRegistry::new().flavor_for(DeviceId::Xeon6126).is_none());
     }
@@ -226,5 +379,15 @@ mod tests {
         assert_eq!(hip.len(), 1);
         assert_eq!(hip[0].name(), "sx-aurora");
         assert_eq!(hip[0].device(), DeviceId::AuroraVE10B);
+    }
+
+    #[test]
+    fn unregistered_device_falls_back_to_core_pipeline_and_spec_caps() {
+        let r = BackendRegistry::new();
+        assert_eq!(r.pipeline_names_for(DeviceId::TitanV), stages::CORE.to_vec());
+        assert_eq!(
+            r.capabilities_for(DeviceId::TitanV),
+            Capabilities::for_device(DeviceId::TitanV)
+        );
     }
 }

@@ -58,4 +58,20 @@ mod tests {
     fn gpu_needs_transfers() {
         assert!(NvidiaBackend::titan_v().needs_transfers());
     }
+
+    #[test]
+    fn default_capabilities_and_core_pipeline() {
+        // the GPU backends lean entirely on the v2 defaults: spec-derived
+        // capabilities (offload, no arena path, warp-width vectors) and
+        // the untouched core pipeline
+        use crate::session::pipeline::PipelineBuilder;
+        let b = NvidiaBackend::titan_v();
+        let caps = b.capabilities();
+        assert!(caps.offload && !caps.arena_exec);
+        assert_eq!(caps.vector_width, 32);
+        assert_eq!(
+            b.pipeline(&PipelineBuilder::new()).names(),
+            crate::session::stages::CORE.to_vec()
+        );
+    }
 }

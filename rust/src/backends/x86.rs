@@ -1,11 +1,14 @@
 //! X86 backend (paper §IV-A): ISPC-flavored DFP codegen; DNN module over
 //! OpenBLAS, DNNL and NNPACK.
 
-use super::DeviceBackend;
+use super::{Capabilities, DeviceBackend};
 use crate::devsim::DeviceId;
 use crate::dfp::Flavor;
 use crate::dnn::Library;
 use crate::framework::DeviceType;
+use crate::ir::Layout;
+use crate::session::pipeline::{Pipeline, PipelineBuilder};
+use crate::session::stages;
 
 pub struct X86Backend;
 
@@ -30,6 +33,22 @@ impl DeviceBackend for X86Backend {
         DeviceType::Cpu // natively supported: public API suffices (§V-B)
     }
 
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            offload: false,   // host IS the device
+            arena_exec: true, // kernels run on the host
+            preferred_layout: Layout::BlockedC16, // DNNL blocked, AVX-512 width
+            vector_width: 16, // AVX-512 f32 lanes
+        }
+    }
+
+    /// Host-CPU pipeline: the seven core stages plus the memory planner —
+    /// kernels execute on the host, so compiled artifacts carry the
+    /// arena buffer plan (the pass no longer gates itself on device kind).
+    fn pipeline(&self, base: &PipelineBuilder) -> Pipeline {
+        base.core().append(base.standard(stages::PLAN_MEMORY))
+    }
+
     fn main_thread_on_device(&self) -> bool {
         true // host IS the device
     }
@@ -46,5 +65,16 @@ mod tests {
         assert!(b.libraries().contains(&Library::Dnnl));
         assert!(!b.needs_transfers());
         assert!(b.main_thread_on_device());
+    }
+
+    #[test]
+    fn host_cpu_pipeline_appends_the_memory_planner() {
+        let names = X86Backend.pipeline(&PipelineBuilder::new()).names();
+        assert_eq!(names.len(), stages::CORE.len() + 1);
+        assert_eq!(*names.last().unwrap(), stages::PLAN_MEMORY);
+        let caps = X86Backend.capabilities();
+        assert!(caps.arena_exec && !caps.offload);
+        assert_eq!(caps.preferred_layout, Layout::BlockedC16);
+        assert_eq!(caps.vector_width, 16);
     }
 }

@@ -20,8 +20,10 @@ use std::sync::{Arc, OnceLock};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::backends::{self, Capabilities};
 use crate::devsim::DeviceId;
 use crate::framework::dispatcher::Attrs;
+use crate::framework::ops_fast::register_cpu_fast_kernels;
 use crate::framework::{install_default, Module, OperatorRegistry, Tensor};
 use crate::ir::{Graph, NodeId, Op};
 use crate::passes::{OptimizeOptions, OptimizedModel};
@@ -39,13 +41,19 @@ pub struct SolModel {
     /// The compiled schedule for the target device (shared with the
     /// session's compile cache when built via [`SolModel::optimize_in`]).
     pub optimized: Arc<OptimizedModel>,
+    /// What the target device's backend says it can do — execution
+    /// routing (arena path, kernel registration) keys off this sheet, not
+    /// off `DeviceId` matches.
+    caps: Capabilities,
     /// SOL's private kernel registry ("executed by SOL": these calls do
     /// NOT go through the framework dispatcher).  Fallback path only —
-    /// host-CPU targets execute through the arena executor instead.
+    /// arena-capable targets execute through the arena executor instead;
+    /// when they do fall back, their capability sheet routed the
+    /// optimized CPU kernels in here at construction.
     kernels: OperatorRegistry,
-    /// The planned, arena-backed fast path (host-CPU targets; built
-    /// lazily on first forward).  `None` when the compile produced no
-    /// memory plan (pure-simulation devices) or the graph shape is one
+    /// The planned, arena-backed fast path (built lazily on first
+    /// forward).  `None` when the backend does not claim `arena_exec`,
+    /// the compile produced no memory plan, or the graph shape is one
     /// the arena executor refuses.
     fast: OnceLock<Option<ArenaExec>>,
     /// Sum of framework param version counters the executor's snapshot
@@ -70,21 +78,16 @@ impl SolModel {
         let optimized = Arc::new(
             PassManager::standard(PipelineConfig::from_options(opts)).compile(&graph)?,
         );
-        Ok(SolModel {
-            graph,
-            params,
-            optimized,
-            kernels: install_default(),
-            fast: OnceLock::new(),
-            fast_param_version: AtomicU64::new(0),
-            calls: AtomicU64::new(0),
-        })
+        let caps = backends::default_registry().capabilities_for(opts.device);
+        Ok(Self::inject(graph, params, optimized, caps))
     }
 
     /// Session form of `sol.optimize(...)`: extraction feeds the
     /// session's pass manager through its content-addressed compile
     /// cache, so re-optimizing a structurally identical model is an O(1)
-    /// lookup sharing the compiled artifact.
+    /// lookup sharing the compiled artifact.  Capabilities resolve
+    /// through the *session's* registry, so a custom backend's claims
+    /// govern execution routing.
     pub fn optimize_in(
         session: &Session,
         module: &Module,
@@ -94,24 +97,49 @@ impl SolModel {
     ) -> Result<SolModel> {
         let (graph, params) = extract_graph(module, input_shape, name)?;
         let optimized = session.compile(&graph, device);
-        Ok(SolModel {
+        let caps = session.registry().capabilities_for(device);
+        Ok(Self::inject(graph, params, optimized, caps))
+    }
+
+    /// Assemble the injected model, routing kernel registration through
+    /// the backend's capability sheet: arena-capable (host-executed)
+    /// targets get the optimized CPU kernels in their fallback registry
+    /// too, so even arena-refused graph shapes run the fast kernel set.
+    fn inject(
+        graph: Graph,
+        params: ParamBinding,
+        optimized: Arc<OptimizedModel>,
+        caps: Capabilities,
+    ) -> SolModel {
+        let mut kernels = install_default();
+        if caps.arena_exec {
+            register_cpu_fast_kernels(&mut kernels, 1);
+        }
+        SolModel {
             graph,
             params,
             optimized,
-            kernels: install_default(),
+            caps,
+            kernels,
             fast: OnceLock::new(),
             fast_param_version: AtomicU64::new(0),
             calls: AtomicU64::new(0),
-        })
+        }
     }
 
-    /// The arena-backed fast path, built on first use.  Host-CPU targets
-    /// get one (their compile carries a memory plan); pure-simulation
-    /// devices and refused graph shapes fall back to per-op evaluation.
+    /// The backend capability sheet execution was routed by.
+    pub fn capabilities(&self) -> &Capabilities {
+        &self.caps
+    }
+
+    /// The arena-backed fast path, built on first use.  Backends claiming
+    /// `arena_exec` get one (their pipelines carry the memory planner);
+    /// pure-simulation devices and refused graph shapes fall back to
+    /// per-op evaluation.
     pub fn arena_exec(&self) -> Option<&ArenaExec> {
         self.fast
             .get_or_init(|| {
-                if self.optimized.memory_plan.is_none() {
+                if !self.caps.arena_exec || self.optimized.memory_plan.is_none() {
                     return None;
                 }
                 // the executor re-plans over `self.graph` (the raw

@@ -97,6 +97,37 @@ fn cmd_devices() {
             &rows
         )
     );
+    print!("{}", backend_listing());
+}
+
+/// The registered-backend plugin listing: per backend, its device, DFP
+/// flavor, framework slot, capability sheet, library inventory and the
+/// realized compile pipeline it owns (API v2).  Plain fixed format —
+/// pinned by the golden-file test `rust/tests/cli_devices.rs`.
+fn backend_listing() -> String {
+    use std::fmt::Write as _;
+    let registry = sol::backends::default_registry();
+    let mut out = String::new();
+    let _ = writeln!(out, "registered backends ({}):", registry.len());
+    for b in registry.iter() {
+        let caps = b.capabilities();
+        let _ = writeln!(
+            out,
+            "  {} device={:?} flavor={:?} slot={:?} offload={} arena={} layout={:?} lanes={}",
+            b.name(),
+            b.device(),
+            b.flavor(),
+            b.framework_slot(),
+            caps.offload,
+            caps.arena_exec,
+            caps.preferred_layout,
+            caps.vector_width,
+        );
+        let libs: Vec<&str> = b.libraries().iter().map(|l| l.name()).collect();
+        let _ = writeln!(out, "    libraries: {}", libs.join(", "));
+        let _ = writeln!(out, "    pipeline: {}", b.pipeline_names().join(" -> "));
+    }
+    out
 }
 
 fn cmd_optimize(flags: &HashMap<String, String>) -> Result<()> {

@@ -10,7 +10,7 @@
 //! | `compile_cache.hit`        | compile served from the content-addressed cache |
 //! | `compile_cache.miss`       | compile that ran the full pipeline |
 //! | `compile_cache.eviction`   | cache entries dropped by capacity eviction (never `clear()`) |
-//! | `pass.<name>.runs`         | executions of one compiler pass (8 standard names, `session::stages::ALL`) |
+//! | `pass.<name>.runs`         | executions of one compiler pass (standard names in `session::stages::ALL`, plus backend-defined passes like `ve-vectorize`) |
 //! | `serve.<tenant>.compiles`  | admitted compile requests of one serving tenant (hits included) |
 //! | `serve.<tenant>.cache_hits`| the tenant's compiles served from the shared cache |
 //! | `serve.<tenant>.runs`      | executor runs the tenant drove |

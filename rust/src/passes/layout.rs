@@ -26,7 +26,10 @@ impl LayoutPlan {
 }
 
 /// Library-preferred activation layout for a DNN node on `spec`
-/// (e.g. "DNNL prefers blocked memory layouts", §III-A).
+/// (e.g. "DNNL prefers blocked memory layouts", §III-A).  This is the
+/// spec-derived *default*; backends advertise their authoritative choice
+/// via `Capabilities::preferred_layout`, which the `assign-layouts` pass
+/// routes in through [`assign_layouts_with`].
 pub fn dnn_preferred_layout(spec: &DeviceSpec) -> Layout {
     match spec.kind {
         DeviceKind::Cpu => Layout::BlockedC16, // DNNL blocked, AVX-512 width
@@ -35,12 +38,25 @@ pub fn dnn_preferred_layout(spec: &DeviceSpec) -> Layout {
     }
 }
 
-/// Assign layouts for a forward (or backward) pass.  The backward pass may
-/// legitimately pick different layouts (§II-C discussion of Barham&Isard);
-/// here the backward prefers the framework-native NCHW so gradient tensors
-/// interchange with the host optimizer without an extra transform.
+/// [`assign_layouts_with`] under the spec-derived preferred layout
+/// (standalone callers without a backend capability sheet in hand).
 pub fn assign_layouts(g: &Graph, spec: &DeviceSpec, assignments: &[bool], backward: bool) -> LayoutPlan {
-    let lib_layout = if backward { Layout::Nchw } else { dnn_preferred_layout(spec) };
+    assign_layouts_with(g, assignments, backward, dnn_preferred_layout(spec))
+}
+
+/// Assign layouts for a forward (or backward) pass, demanding
+/// `preferred` — the backend-advertised library layout — on DNN nodes.
+/// The backward pass may legitimately pick different layouts (§II-C
+/// discussion of Barham&Isard); here the backward prefers the
+/// framework-native NCHW so gradient tensors interchange with the host
+/// optimizer without an extra transform.
+pub fn assign_layouts_with(
+    g: &Graph,
+    assignments: &[bool],
+    backward: bool,
+    preferred: Layout,
+) -> LayoutPlan {
+    let lib_layout = if backward { Layout::Nchw } else { preferred };
     let mut per_node: Vec<Layout> = Vec::with_capacity(g.nodes.len());
     let mut reorders = Vec::new();
 

@@ -21,5 +21,5 @@ pub mod optimizer;
 
 pub use assign::assign_modules;
 pub use elide::elide_relu_maxpool;
-pub use layout::{assign_layouts, LayoutPlan};
+pub use layout::{assign_layouts, assign_layouts_with, dnn_preferred_layout, LayoutPlan};
 pub use optimizer::{optimize, CompiledKernel, KernelOrigin, OptimizeOptions, OptimizedModel, Step};

@@ -5,6 +5,8 @@
 //!
 //! * [`pass`] — the [`PassManager`]: `optimize()`'s stages as named,
 //!   toggleable [`Pass`] objects with per-pass timing.
+//! * [`pipeline`] — the [`Pipeline`]/[`PipelineBuilder`] composition API
+//!   each device backend uses to own its pass list (API v2).
 //! * [`cache`] — the [`CompileCache`]: content-addressed artifacts keyed
 //!   by `(graph hash, device, pipeline fingerprint)`; repeat compiles are
 //!   O(1) lookups with hit/miss counters in [`crate::metrics`].
@@ -16,8 +18,10 @@
 //!
 //! The [`BackendRegistry`] (defined with the backends, re-exported here)
 //! indexes the per-device backends by device / name / framework slot and
-//! is the authoritative source for DFP flavor selection
-//! (`BackendRegistry::flavor_for` → [`PipelineConfig::flavor`]).
+//! resolves everything a backend owns: DFP flavor
+//! (`BackendRegistry::flavor_for` → [`PipelineConfig::flavor`]),
+//! capabilities (`capabilities_for`), and the realized compile pipeline
+//! (`pipeline_for` — hashed into every cache key).
 //!
 //! ```no_run
 //! use sol::devsim::DeviceId;
@@ -37,15 +41,16 @@
 pub mod cache;
 pub mod executor;
 pub mod pass;
+pub mod pipeline;
 pub mod planner;
 pub mod serve;
 pub mod stages;
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::backends::BackendRegistry;
 use crate::devsim::{DeviceId, EfficiencyTable, SimReport};
-use crate::dfp::Flavor;
 use crate::exec::baseline::BaselineKind;
 use crate::exec::solrun::OffloadMode;
 use crate::ir::Graph;
@@ -55,6 +60,7 @@ use crate::Result;
 pub use cache::{CacheKey, CacheStats, CompileCache, EvictionPolicy};
 pub use executor::{BaselineExecutor, Executor, Phase, SolExecutor};
 pub use pass::{CompileState, Pass, PassManager, PassRecord, PipelineConfig};
+pub use pipeline::{Pipeline, PipelineBuilder};
 pub use planner::{plan_memory, MemoryPlan};
 pub use serve::{
     AdmissionError, CompilePermit, ServingConfig, ServingSession, Tenant, TenantCounters,
@@ -66,9 +72,10 @@ pub struct Session {
     registry: BackendRegistry,
     cache: CompileCache,
     eff: EfficiencyTable,
-    /// Fingerprint of the session's *default* pipeline (device-independent),
-    /// precomputed so cache hits pay only the graph hash.
-    default_pipeline_fp: u64,
+    /// Per-device fingerprints of the registry's *default* pipelines
+    /// (each backend owns its pass list, so the fingerprint is per
+    /// device), precomputed so cache hits pay only the graph hash.
+    device_fps: HashMap<DeviceId, u64>,
 }
 
 impl Default for Session {
@@ -112,12 +119,17 @@ impl Session {
         cache: CompileCache,
         eff: EfficiencyTable,
     ) -> Self {
-        // the fingerprint ignores the device (it is keyed separately), so
-        // any device stands in here
-        let mut cfg = PipelineConfig::new(DeviceId::Xeon6126);
-        cfg.eff = eff.clone();
-        let default_pipeline_fp = cfg.fingerprint();
-        Session { registry, cache, eff, default_pipeline_fp }
+        let mut session = Session { registry, cache, eff, device_fps: HashMap::new() };
+        // precompute the default-pipeline fingerprint per registered
+        // device, so the compile hit path pays a map lookup + graph hash
+        let fps: HashMap<DeviceId, u64> = session
+            .registry
+            .devices()
+            .into_iter()
+            .map(|d| (d, session.pipeline_config(d).fingerprint()))
+            .collect();
+        session.device_fps = fps;
+        session
     }
 
     pub fn registry(&self) -> &BackendRegistry {
@@ -151,48 +163,72 @@ impl Session {
     /// [`Session::compile`] with the full [`CompileOutcome`]: artifact +
     /// content address + hit/miss attribution (the serving layer's entry
     /// point).
+    ///
+    /// # Panics
+    ///
+    /// Panics when the backend's pipeline cannot produce a complete
+    /// schedule for `graph`.  The shipped pipelines cover every
+    /// well-formed graph; a *custom* backend composing a pipeline that
+    /// can fail (e.g. `core().without(DNN_AUTOTUNE)`) must be driven
+    /// through the fallible [`Session::compile_with`] instead.
     pub fn compile_traced(&self, graph: &Graph, device: DeviceId) -> CompileOutcome {
-        // flavor selection is routed through the backend registry; with
-        // the shipped backends the override is None and the precomputed
-        // default fingerprint applies unchanged
-        let flavor = self.flavor_override(device);
-        let fp = match flavor {
-            None => self.default_pipeline_fp,
-            Some(_) => {
-                let mut cfg = self.pipeline_config(device);
-                cfg.flavor = flavor;
-                cfg.fingerprint()
-            }
-        };
+        // the registry's backend owns flavor + pass list for its device;
+        // registered devices use the precomputed per-device fingerprint
+        let fp = self
+            .device_fps
+            .get(&device)
+            .copied()
+            .unwrap_or_else(|| self.pipeline_config(device).fingerprint());
         let key = CacheKey::of(graph, device, fp);
         let (model, hit) = self
             .cache
-            .try_get_or_compile_traced(key, || {
-                let mut cfg = PipelineConfig::new(device);
-                cfg.eff = self.eff.clone();
-                cfg.flavor = flavor;
-                PassManager::standard(cfg).compile(graph)
-            })
-            .expect("the default pipeline cannot fail on a well-formed graph");
+            .try_get_or_compile_traced(key, || self.pass_manager(device).compile(graph))
+            .unwrap_or_else(|e| {
+                panic!(
+                    "backend pipeline {:?} failed to compile '{}' for {device:?}: {e} — \
+                     use Session::compile_with for pipelines that can fail",
+                    self.registry.pipeline_names_for(device),
+                    graph.name
+                )
+            });
         CompileOutcome { model, key, cache_hit: hit }
     }
 
-    /// The DFP flavor the registry's backend for `device` requests, when
-    /// it differs from the kind-derived default (`None` otherwise, so the
-    /// common case keeps the device-independent default fingerprint and
-    /// its precomputed cache-key path).
-    fn flavor_override(&self, device: DeviceId) -> Option<Flavor> {
-        let auto = stages::flavor_for(device);
-        self.registry.flavor_for(device).filter(|f| *f != auto)
+    /// The pass manager running this registry's realized pipeline for
+    /// `device` under the session's default configuration.  The pipeline
+    /// is constructed once: `Pipeline::manager` pins its names into the
+    /// config, so the fingerprint always matches what runs.
+    fn pass_manager(&self, device: DeviceId) -> PassManager {
+        let pipeline = self.registry.pipeline_for(device);
+        let mut cfg = PipelineConfig::new(device);
+        cfg.eff = self.eff.clone();
+        self.canonicalize_knobs(&mut cfg);
+        pipeline.manager(cfg)
     }
 
     /// A pipeline configuration for `device` seeded with this session's
-    /// efficiency table — the starting point for ablations via
-    /// [`Session::compile_with`].
+    /// efficiency table and canonicalized to its registry (backend
+    /// flavor, capability layout, realized pass list) — the starting
+    /// point for ablations via [`Session::compile_with`].
     pub fn pipeline_config(&self, device: DeviceId) -> PipelineConfig {
         let mut cfg = PipelineConfig::new(device);
         cfg.eff = self.eff.clone();
+        self.canonicalize_knobs(&mut cfg);
+        cfg.set_pipeline(self.registry.pipeline_names_for(device));
         cfg
+    }
+
+    /// Route this registry's backend-owned knobs into `cfg`: the
+    /// authoritative DFP flavor and the capability-advertised preferred
+    /// layout.  Explicitly set values are respected.
+    fn canonicalize_knobs(&self, cfg: &mut PipelineConfig) {
+        if cfg.flavor.is_none() {
+            cfg.flavor = self.registry.flavor_for(cfg.device);
+        }
+        if cfg.preferred_layout.is_none() {
+            cfg.preferred_layout =
+                Some(self.registry.capabilities_for(cfg.device).preferred_layout);
+        }
     }
 
     /// Compile under an explicit pipeline configuration (ablations,
@@ -205,21 +241,36 @@ impl Session {
     /// authoritative for everything the session compiles: `cfg.eff` is
     /// overwritten with it, so a config built via `PipelineConfig::new`
     /// cannot silently compare an ablation under the *default* table
-    /// against a baseline under the calibrated one.  To compile under a
-    /// different table, use a `Session::with_eff` session (or drive
-    /// `PassManager` directly).
+    /// against a baseline under the calibrated one.  Likewise the *pass
+    /// list* is the registry's — the device's backend owns its pipeline;
+    /// ablations toggle passes within it by name.  A config pinned to a
+    /// *different* pass list is an error (the session would otherwise
+    /// key one pipeline and run another); to run a bespoke pass
+    /// sequence, drive a [`Pipeline`]/[`PassManager`] directly.
     pub fn compile_with(
         &self,
         graph: &Graph,
         mut cfg: PipelineConfig,
     ) -> Result<Arc<OptimizedModel>> {
         cfg.eff = self.eff.clone();
-        if cfg.flavor.is_none() {
-            cfg.flavor = self.flavor_override(cfg.device);
+        self.canonicalize_knobs(&mut cfg);
+        let pipeline = self.registry.pipeline_for(cfg.device);
+        let names = pipeline.names();
+        if let Some(pinned) = cfg.pinned_pipeline() {
+            if pinned != names {
+                anyhow::bail!(
+                    "compile_with: config pins pass list {pinned:?} but this session's \
+                     backend for {:?} composes {names:?} — sessions always run the \
+                     registry pipeline; drive a Pipeline/PassManager directly for \
+                     bespoke pass sequences",
+                    cfg.device
+                );
+            }
+        } else {
+            cfg.set_pipeline(names);
         }
         let key = CacheKey::of(graph, cfg.device, cfg.fingerprint());
-        self.cache
-            .try_get_or_compile(key, || PassManager::standard(cfg).compile(graph))
+        self.cache.try_get_or_compile(key, || pipeline.manager(cfg).compile(graph))
     }
 
     /// Compile under legacy flag-bag options (compatibility path).

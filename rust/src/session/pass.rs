@@ -6,23 +6,31 @@
 //! module turns that hard-wired sequence into [`Pass`] objects run by a
 //! [`PassManager`], so that
 //!
+//! * each *backend* composes the pipeline its device compiles under
+//!   ([`crate::backends::DeviceBackend::pipeline`]) —
+//!   [`PassManager::standard`] is a thin wrapper over
+//!   `BackendRegistry::pipeline_for(device)`;
 //! * ablations toggle passes by *name* (`cfg.disable_pass("elide")`
-//!   replaces the old `enable_elision: false`),
+//!   replaces the old `enable_elision: false`), validated against the
+//!   config's realized pipeline so custom backend passes toggle too;
 //! * per-pass wall-clock timings are recorded ([`PassRecord`]) and
-//!   published to [`crate::metrics`], and
-//! * the pipeline configuration has a stable [`PipelineConfig::fingerprint`]
-//!   that keys the compile cache.
+//!   published to [`crate::metrics`]; and
+//! * [`PipelineConfig::fingerprint`] hashes the *realized pass list*
+//!   (plus flavor, layout, toggles, libraries and efficiency table), so
+//!   the compile cache can never serve an artifact compiled under another
+//!   device's pipeline.
 //!
 //! `passes::optimizer::optimize()` is now a thin wrapper over
 //! [`PassManager::compile`]; no stage logic lives outside the passes.
 
 use std::collections::BTreeSet;
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::devsim::{DeviceId, EfficiencyTable};
 use crate::dfp::{Flavor, KernelPlan};
 use crate::dnn::{DescriptorCache, DnnPlan, Library};
-use crate::ir::{Graph, Op};
+use crate::ir::{Graph, Layout, Op};
 use crate::metrics::{self, Timer};
 use crate::passes::optimizer::{OptimizeOptions, OptimizedModel, Step};
 use crate::passes::LayoutPlan;
@@ -41,16 +49,25 @@ pub struct PipelineConfig {
     /// DFP region fusion (false = one kernel per DFP node); a parameter of
     /// the `dfp-fuse-codegen` pass rather than a pass of its own.
     pub enable_fusion: bool,
-    /// DFP code flavor override.  `None` (the default) derives the flavor
-    /// from the device kind ([`stages::flavor_for`]); `Session` sets this
-    /// when its `BackendRegistry` maps the device to a different flavor,
-    /// so flavor selection is routed through the registered backend
-    /// instead of re-derived ad hoc.
+    /// DFP code flavor override.  `None` (the default) resolves through
+    /// the device's registered backend — the single flavor-selection
+    /// source of truth ([`crate::backends::default_flavor_for`]); a
+    /// `Session` over a custom registry routes that registry's flavor in
+    /// here.
     pub flavor: Option<Flavor>,
+    /// Library-preferred activation layout override.  `None` resolves
+    /// through the backend capability sheet
+    /// (`Capabilities::preferred_layout`).
+    pub preferred_layout: Option<Layout>,
     pub eff: EfficiencyTable,
     /// Passes disabled by name (ablation).  BTreeSet ⇒ deterministic
     /// iteration for the fingerprint.
     disabled: BTreeSet<String>,
+    /// The realized pass list this config compiles under (names, pipeline
+    /// order).  `None` = the device's default-registry pipeline, resolved
+    /// lazily; set explicitly by `Pipeline::manager` /
+    /// `Session::pipeline_config` so custom registries key correctly.
+    passes: Option<Vec<&'static str>>,
 }
 
 impl PipelineConfig {
@@ -60,8 +77,10 @@ impl PipelineConfig {
             allow_libs: None,
             enable_fusion: true,
             flavor: None,
+            preferred_layout: None,
             eff: EfficiencyTable::default(),
             disabled: BTreeSet::new(),
+            passes: None,
         }
     }
 
@@ -78,16 +97,56 @@ impl PipelineConfig {
         cfg
     }
 
-    /// Toggle a standard pass off by name.
+    /// Pin the realized pass list this config is keyed (and validated)
+    /// against.  Called by `Pipeline::manager`; callers building custom
+    /// pipelines set this *before* toggling passes so `disable_pass`
+    /// accepts their custom pass names.
+    pub fn set_pipeline(&mut self, names: Vec<&'static str>) -> &mut Self {
+        self.passes = Some(names);
+        self
+    }
+
+    /// The pass list this config compiles under: the explicitly pinned
+    /// list, or the device's default-registry pipeline.
+    pub fn realized_passes(&self) -> Vec<&'static str> {
+        match &self.passes {
+            Some(names) => names.clone(),
+            None => crate::backends::default_pipeline_names(self.device),
+        }
+    }
+
+    /// The explicitly pinned pass list, if any (`None` = the device's
+    /// default-registry pipeline applies).
+    pub fn pinned_pipeline(&self) -> Option<&[&'static str]> {
+        self.passes.as_deref()
+    }
+
+    /// The DFP flavor this config compiles under (explicit override or
+    /// the device's registered-backend default).
+    pub fn resolved_flavor(&self) -> Flavor {
+        self.flavor.unwrap_or_else(|| crate::backends::default_flavor_for(self.device))
+    }
+
+    /// The library-preferred layout this config compiles under (explicit
+    /// override or the backend capability default).
+    pub fn resolved_layout(&self) -> Layout {
+        self.preferred_layout.unwrap_or_else(|| {
+            crate::backends::default_registry().capabilities_for(self.device).preferred_layout
+        })
+    }
+
+    /// Toggle a pass off by name.
     ///
-    /// Panics on a name not in [`stages::ALL`]: a typo'd ablation would
-    /// otherwise silently run the full pipeline (and pollute the cache
-    /// with a redundant key).
+    /// Panics on a name not in this config's realized pipeline: a typo'd
+    /// ablation would otherwise silently run the full pipeline (and
+    /// pollute the cache with a redundant key).  Custom pipelines pin
+    /// their pass list first ([`PipelineConfig::set_pipeline`]) so their
+    /// own pass names validate.
     pub fn disable_pass(&mut self, name: &str) -> &mut Self {
         assert!(
-            stages::ALL.contains(&name),
-            "unknown pass '{name}' (known: {:?})",
-            stages::ALL
+            self.realized_passes().contains(&name),
+            "unknown pass '{name}' (this pipeline: {:?})",
+            self.realized_passes()
         );
         self.disabled.insert(name.to_string());
         self
@@ -96,9 +155,9 @@ impl PipelineConfig {
     /// Re-enable a previously disabled pass (same name validation).
     pub fn enable_pass(&mut self, name: &str) -> &mut Self {
         assert!(
-            stages::ALL.contains(&name),
-            "unknown pass '{name}' (known: {:?})",
-            stages::ALL
+            self.realized_passes().contains(&name),
+            "unknown pass '{name}' (this pipeline: {:?})",
+            self.realized_passes()
         );
         self.disabled.remove(name);
         self
@@ -109,20 +168,26 @@ impl PipelineConfig {
     }
 
     /// Stable fingerprint of everything that changes compile *output*:
-    /// disabled passes, fusion flag, flavor override, library restriction,
-    /// efficiency overrides.  Device is keyed separately by the cache.
+    /// the realized pass list, disabled passes, fusion flag, resolved
+    /// flavor and preferred layout, library restriction, efficiency
+    /// overrides.  Device is keyed separately by the cache — but since
+    /// backends own their pipelines, the pass list (and flavor/layout)
+    /// already diverge per device, so two devices with different
+    /// pipelines can never alias even under a device-blind lookup.
     pub fn fingerprint(&self) -> u64 {
         let mut h = Fnv64::new();
+        for name in self.realized_passes() {
+            h.write_str("pass:");
+            h.write_str(name);
+        }
         for d in &self.disabled {
             h.write_str(d);
         }
         h.write_bool(self.enable_fusion);
-        match self.flavor {
-            // `auto` rather than the resolved flavor: the flavor is then a
-            // pure function of the device, which the cache keys separately
-            None => h.write_str("flavor:auto"),
-            Some(f) => h.write_str(&format!("flavor:{f:?}")),
-        }
+        // resolved (not raw-Option) values: `None` and an explicit
+        // override equal to the backend default hash identically
+        h.write_str(&format!("flavor:{:?}", self.resolved_flavor()));
+        h.write_str(&format!("layout:{:?}", self.resolved_layout()));
         match &self.allow_libs {
             None => h.write_str("libs:any"),
             Some(libs) => {
@@ -303,46 +368,54 @@ pub trait Pass: Send + Sync {
 pub struct PassManager {
     cfg: PipelineConfig,
     passes: Vec<Box<dyn Pass>>,
-    /// `pass.<name>.runs` metric handles, aligned with `passes`.  For the
-    /// standard pipeline these come from a process-wide static (resolved
-    /// exactly once), so constructing a manager per compile — which
-    /// `Session::compile` does on every miss — costs 7 `Arc` clones, not
-    /// 7 registry lookups.
+    /// `pass.<name>.runs` metric handles, aligned with `passes`.  Handles
+    /// are resolved through a process-wide per-name cache, so constructing
+    /// a manager per compile — which `Session::compile` does on every
+    /// miss — costs one `Arc` clone per pass, not a metrics-registry
+    /// lookup per pass.
     run_counters: Vec<Arc<metrics::Counter>>,
 }
 
-/// The `pass.<name>.runs` counters for the standard pipeline, resolved
-/// from the metrics registry exactly once.
-fn standard_run_counters() -> Vec<Arc<metrics::Counter>> {
-    static COUNTERS: std::sync::OnceLock<Vec<Arc<metrics::Counter>>> =
-        std::sync::OnceLock::new();
-    COUNTERS
-        .get_or_init(|| {
-            stages::ALL
-                .iter()
-                .map(|n| metrics::counter(&format!("pass.{n}.runs")))
-                .collect()
-        })
-        .clone()
+/// The `pass.<name>.runs` counter for one pass, resolved from the metrics
+/// registry once per distinct pass name (backend-defined passes included).
+fn pass_run_counter(name: &'static str) -> Arc<metrics::Counter> {
+    static COUNTERS: OnceLock<Mutex<HashMap<&'static str, Arc<metrics::Counter>>>> =
+        OnceLock::new();
+    let mut map = COUNTERS.get_or_init(|| Mutex::new(HashMap::new())).lock().unwrap();
+    map.entry(name).or_insert_with(|| metrics::counter(&format!("pass.{name}.runs"))).clone()
 }
 
 impl PassManager {
-    /// The standard SOL pipeline (paper §III-A order).
+    /// The standard pipeline for `cfg.device` — a thin wrapper over the
+    /// default registry's backend-owned composition
+    /// (`BackendRegistry::pipeline_for`): x86/arm64 get the seven core
+    /// stages plus `plan-memory`, the Aurora gets its `ve-vectorize`
+    /// audit, GPUs get the bare core stages.
     pub fn standard(cfg: PipelineConfig) -> Self {
-        PassManager {
-            cfg,
-            passes: stages::standard_passes(),
-            run_counters: standard_run_counters(),
-        }
+        crate::backends::default_registry().pipeline_for(cfg.device).manager(cfg)
     }
 
-    /// An empty manager for custom pipelines (tests, experiments).
-    pub fn custom(cfg: PipelineConfig) -> Self {
+    /// An empty manager for custom pipelines (tests, experiments).  The
+    /// config's realized pass list starts empty and follows `add_pass`,
+    /// so the fingerprint always reflects what actually runs.
+    pub fn custom(mut cfg: PipelineConfig) -> Self {
+        cfg.set_pipeline(Vec::new());
         PassManager { cfg, passes: Vec::new(), run_counters: Vec::new() }
     }
 
+    /// A manager over an already-realized pass list (the
+    /// `Pipeline::manager` entry point; `cfg`'s pass list must already
+    /// name exactly these passes).
+    pub(crate) fn from_pipeline(cfg: PipelineConfig, passes: Vec<Box<dyn Pass>>) -> Self {
+        let run_counters = passes.iter().map(|p| pass_run_counter(p.name())).collect();
+        PassManager { cfg, passes, run_counters }
+    }
+
     pub fn add_pass(&mut self, pass: Box<dyn Pass>) -> &mut Self {
-        self.run_counters.push(metrics::counter(&format!("pass.{}.runs", pass.name())));
+        self.run_counters.push(pass_run_counter(pass.name()));
+        let mut names = self.cfg.realized_passes();
+        names.push(pass.name());
+        self.cfg.set_pipeline(names);
         self.passes.push(pass);
         self
     }
@@ -474,5 +547,32 @@ mod tests {
         let cfg = PipelineConfig::from_options(&o);
         assert!(!cfg.pass_enabled("elide"));
         assert!(cfg.pass_enabled("schedule"));
+    }
+
+    #[test]
+    fn custom_manager_fingerprint_tracks_added_passes() {
+        let empty = PassManager::custom(PipelineConfig::new(DeviceId::Xeon6126));
+        let empty_fp = empty.config().fingerprint();
+        let mut pm = PassManager::custom(PipelineConfig::new(DeviceId::Xeon6126));
+        pm.add_pass(stages::make_pass(stages::ELIDE).unwrap());
+        assert_eq!(pm.pass_names(), vec![stages::ELIDE]);
+        assert_eq!(pm.config().realized_passes(), vec![stages::ELIDE]);
+        assert_ne!(
+            pm.config().fingerprint(),
+            empty_fp,
+            "the realized pass list must be part of the fingerprint"
+        );
+        // and differs from the device's standard pipeline key
+        assert_ne!(pm.config().fingerprint(), PipelineConfig::new(DeviceId::Xeon6126).fingerprint());
+    }
+
+    #[test]
+    fn standard_pipelines_differ_per_device() {
+        let cpu = PassManager::standard(PipelineConfig::new(DeviceId::Xeon6126));
+        let ve = PassManager::standard(PipelineConfig::new(DeviceId::AuroraVE10B));
+        let gpu = PassManager::standard(PipelineConfig::new(DeviceId::TitanV));
+        assert_ne!(cpu.pass_names(), ve.pass_names());
+        assert_eq!(gpu.pass_names(), stages::CORE.to_vec());
+        assert!(ve.pass_names().contains(&"ve-vectorize"));
     }
 }

@@ -1,0 +1,174 @@
+//! Backend-composed pass pipelines — the device plugin's side of the
+//! compile path.
+//!
+//! The paper's maintainability claim (§IV: backends are "very compact and
+//! easy to maintain") only holds if adding a device never requires editing
+//! the shared pipeline.  [`PipelineBuilder`] hands each
+//! [`DeviceBackend`](crate::backends::DeviceBackend) the standard building
+//! blocks (the seven §III-A core stages plus any standard pass by name) and
+//! the backend composes its own ordered [`Pipeline`]:
+//!
+//! * host-CPU backends append `plan-memory` (the arena planner only makes
+//!   sense where kernels actually execute on the host);
+//! * the SX-Aurora inserts its vector-length-aware `ve-vectorize` pass
+//!   after codegen — a pass *defined in the backend's own file*;
+//! * GPU backends run the core stages unmodified.
+//!
+//! `PassManager::standard(cfg)` is a thin wrapper over
+//! `BackendRegistry::pipeline_for(device)`, and the realized pass list is
+//! part of [`PipelineConfig::fingerprint`](super::PipelineConfig), so two
+//! devices with different pipelines can never share a cache entry.
+
+use super::pass::{Pass, PassManager, PipelineConfig};
+use super::stages;
+
+/// The standard building blocks a backend composes its pipeline from.
+///
+/// Passed (by reference) to `DeviceBackend::pipeline`; backends call
+/// [`PipelineBuilder::core`] for the paper's seven §III-A stages and
+/// [`PipelineBuilder::standard`] for any standard pass by name, then
+/// rearrange with the [`Pipeline`] combinators or append passes of their
+/// own.
+#[derive(Debug, Default)]
+pub struct PipelineBuilder {
+    _private: (),
+}
+
+impl PipelineBuilder {
+    pub fn new() -> Self {
+        PipelineBuilder { _private: () }
+    }
+
+    /// The paper's seven core §III-A stages, in order:
+    /// `extract-canonicalize`, `elide`, `assign-modules`, `dnn-autotune`,
+    /// `dfp-fuse-codegen`, `assign-layouts`, `schedule`.  No
+    /// device-specific passes — those are the backend's to add.
+    pub fn core(&self) -> Pipeline {
+        Pipeline { passes: stages::core_passes() }
+    }
+
+    /// One standard pass by name (e.g. `stages::PLAN_MEMORY`).
+    ///
+    /// # Panics
+    ///
+    /// Panics on a name not in [`stages::ALL`] — a backend wiring a
+    /// misspelled pass should fail at composition, not compile, time.
+    pub fn standard(&self, name: &str) -> Box<dyn Pass> {
+        stages::make_pass(name)
+            .unwrap_or_else(|| panic!("unknown standard pass '{name}' (known: {:?})", stages::ALL))
+    }
+}
+
+/// An ordered, realized pass list — what one backend's compile path runs.
+pub struct Pipeline {
+    passes: Vec<Box<dyn Pass>>,
+}
+
+impl Pipeline {
+    /// An empty pipeline (compose from scratch).
+    pub fn empty() -> Self {
+        Pipeline { passes: Vec::new() }
+    }
+
+    /// Append `pass` at the end.
+    pub fn append(mut self, pass: Box<dyn Pass>) -> Self {
+        self.passes.push(pass);
+        self
+    }
+
+    /// Insert `pass` immediately after the pass named `anchor`.
+    ///
+    /// # Panics
+    ///
+    /// Panics when `anchor` is not in the pipeline — a backend asking for
+    /// an impossible position is a wiring bug, not a runtime condition.
+    pub fn insert_after(mut self, anchor: &str, pass: Box<dyn Pass>) -> Self {
+        let at = self
+            .passes
+            .iter()
+            .position(|p| p.name() == anchor)
+            .unwrap_or_else(|| panic!("no pass named '{anchor}' to insert after"));
+        self.passes.insert(at + 1, pass);
+        self
+    }
+
+    /// Remove the pass named `name` (no-op when absent) — for backends
+    /// whose devices skip a standard stage entirely rather than ablate it.
+    pub fn without(mut self, name: &str) -> Self {
+        self.passes.retain(|p| p.name() != name);
+        self
+    }
+
+    /// Pass names, pipeline order — the list hashed into
+    /// `PipelineConfig::fingerprint`.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.passes.iter().map(|p| p.name()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.passes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.passes.is_empty()
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.passes.iter().any(|p| p.name() == name)
+    }
+
+    /// Build the [`PassManager`] that runs this pipeline under `cfg`.
+    /// The config's realized pass list is set from this pipeline, so the
+    /// fingerprint (and therefore the cache key) always matches what runs.
+    pub fn manager(self, mut cfg: PipelineConfig) -> PassManager {
+        cfg.set_pipeline(self.names());
+        PassManager::from_pipeline(cfg, self.passes)
+    }
+
+    /// Consume into the raw pass list.
+    pub fn into_passes(self) -> Vec<Box<dyn Pass>> {
+        self.passes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn core_is_the_seven_paper_stages() {
+        let p = PipelineBuilder::new().core();
+        assert_eq!(p.names(), stages::CORE.to_vec());
+        assert_eq!(p.len(), 7);
+        assert!(!p.contains(stages::PLAN_MEMORY));
+    }
+
+    #[test]
+    fn combinators_compose() {
+        let b = PipelineBuilder::new();
+        let p = b
+            .core()
+            .append(b.standard(stages::PLAN_MEMORY))
+            .without(stages::ELIDE)
+            .insert_after(stages::SCHEDULE, b.standard(stages::ELIDE));
+        let names = p.names();
+        assert_eq!(names.len(), 8);
+        assert_eq!(names[0], stages::EXTRACT_CANONICALIZE);
+        let sched = names.iter().position(|n| *n == stages::SCHEDULE).unwrap();
+        assert_eq!(names[sched + 1], stages::ELIDE, "re-inserted after schedule");
+        assert_eq!(*names.last().unwrap(), stages::PLAN_MEMORY);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown standard pass")]
+    fn unknown_standard_pass_fails_at_composition_time() {
+        let _ = PipelineBuilder::new().standard("does-not-exist");
+    }
+
+    #[test]
+    #[should_panic(expected = "no pass named")]
+    fn missing_anchor_fails_loudly() {
+        let b = PipelineBuilder::new();
+        let _ = Pipeline::empty().insert_after("ghost", b.standard(stages::ELIDE));
+    }
+}

@@ -19,19 +19,19 @@
 //!    reuse hits, and the im2col scratch high-water mark for the fast
 //!    conv kernels.
 //!
-//! The [`PlanMemory`] pass attaches the plan to the compiled model for
-//! devices whose kernels actually execute on the host CPU; pure-simulation
-//! accelerator targets skip it (their "execution" is a roofline model — a
-//! buffer plan would be dead weight on the compile path).  This is the
-//! per-device pipeline-specialization point the roadmap calls for: the
-//! pass list is shared, the pass itself is device-gated, and ablations can
-//! still force it off by name (`cfg.disable_pass(stages::PLAN_MEMORY)`).
+//! The [`PlanMemory`] pass attaches the plan to the compiled model.  Which
+//! devices run it is the *backend's* call, not this pass's: host-CPU
+//! backends append it to their pipeline
+//! (`DeviceBackend::pipeline`, API v2), pure-simulation accelerator
+//! targets simply never schedule it (their "execution" is a roofline
+//! model — a buffer plan would be dead weight on the compile path).  The
+//! pass itself contains no device-kind check; ablations can still force
+//! it off by name (`cfg.disable_pass(stages::PLAN_MEMORY)`).
 //!
 //! Invariants (pinned by `rust/tests/proptests.rs`): two values whose
 //! live ranges overlap never share a slot, and every slot is at least as
 //! large as every value assigned to it.
 
-use crate::devsim::DeviceKind;
 use crate::ir::{Graph, NodeId, Op};
 use crate::metrics;
 use crate::Result;
@@ -206,8 +206,9 @@ pub fn plan_memory(graph: &Graph) -> MemoryPlan {
     }
 }
 
-/// The `plan-memory` pass: device-gated wiring of [`plan_memory`] into
-/// the standard pipeline, with `arena.*` metrics.
+/// The `plan-memory` pass: wiring of [`plan_memory`] into a backend's
+/// pipeline, with `arena.*` metrics.  Scheduled only by backends whose
+/// artifacts execute on the host (no device-kind check here — API v2).
 pub struct PlanMemory;
 
 impl Pass for PlanMemory {
@@ -215,11 +216,7 @@ impl Pass for PlanMemory {
         stages::PLAN_MEMORY
     }
 
-    fn run(&self, cfg: &PipelineConfig, state: &mut CompileState) -> Result<()> {
-        if cfg.device.spec().kind != DeviceKind::Cpu {
-            // pure-simulation accelerator target: keep the cheap path
-            return Ok(());
-        }
+    fn run(&self, _cfg: &PipelineConfig, state: &mut CompileState) -> Result<()> {
         let plan = plan_memory(&state.graph);
         metrics::counter("arena.bytes_peak").set_max(plan.arena_bytes as u64);
         metrics::counter("arena.slots").set_max(plan.slot_bytes.len() as u64);

@@ -6,13 +6,12 @@
 //! auto-tuning, DFP region fusion + codegen, memory-layout assignment,
 //! schedule assembly.
 
-use crate::devsim::DeviceId;
-use crate::dfp::{self, Flavor, KernelPlan};
+use crate::dfp::{self, KernelPlan};
 use crate::dnn::{autotune_node, DnnPlan};
 use crate::ir::Op;
 use crate::passes::assign::assign_modules;
 use crate::passes::elide::elide_relu_maxpool;
-use crate::passes::layout::assign_layouts;
+use crate::passes::layout::assign_layouts_with;
 use crate::passes::optimizer::{CompiledKernel, KernelOrigin, Step};
 use crate::Result;
 
@@ -27,9 +26,22 @@ pub const ASSIGN_LAYOUTS: &str = "assign-layouts";
 pub const SCHEDULE: &str = "schedule";
 pub const PLAN_MEMORY: &str = "plan-memory";
 
-/// Every standard pass name, pipeline order.  Pass toggles are validated
-/// against this list so a typo'd name fails loudly instead of silently
-/// running the un-ablated pipeline.
+/// The paper's seven §III-A core stages, pipeline order — what every
+/// backend's [`crate::session::pipeline::PipelineBuilder::core`] yields.
+pub const CORE: [&str; 7] = [
+    EXTRACT_CANONICALIZE,
+    ELIDE,
+    ASSIGN_MODULES,
+    DNN_AUTOTUNE,
+    DFP_FUSE_CODEGEN,
+    ASSIGN_LAYOUTS,
+    SCHEDULE,
+];
+
+/// Every *standard* pass name (the core stages plus the memory planner).
+/// Device plugins may define further passes of their own (e.g. the
+/// Aurora's `ve-vectorize`); pass toggles are validated against the
+/// config's realized pipeline, not this list.
 pub const ALL: [&str; 8] = [
     EXTRACT_CANONICALIZE,
     ELIDE,
@@ -41,10 +53,8 @@ pub const ALL: [&str; 8] = [
     PLAN_MEMORY,
 ];
 
-/// The standard pass sequence: the paper's seven §III-A stages plus the
-/// liveness-based memory planner (`plan-memory`, device-gated inside the
-/// pass — see [`super::planner`]).
-pub fn standard_passes() -> Vec<Box<dyn Pass>> {
+/// The seven core stages as fresh pass objects.
+pub(crate) fn core_passes() -> Vec<Box<dyn Pass>> {
     vec![
         Box::new(ExtractCanonicalize),
         Box::new(Elide),
@@ -53,25 +63,22 @@ pub fn standard_passes() -> Vec<Box<dyn Pass>> {
         Box::new(DfpFuseCodegen),
         Box::new(AssignLayouts),
         Box::new(Schedule),
-        Box::new(super::planner::PlanMemory),
     ]
 }
 
-/// Default DFP code flavor for a device *kind* — the fallback when no
-/// flavor was routed in from a registered backend.
-///
-/// `Session` resolves the authoritative flavor through its
-/// `BackendRegistry` (`BackendRegistry::flavor_for`) and records any
-/// non-default choice in [`PipelineConfig::flavor`]; the
-/// `dfp-fuse-codegen` pass only falls back here when no override is set
-/// (standalone `PassManager` use, legacy `optimize()` callers).
-pub fn flavor_for(device: DeviceId) -> Flavor {
-    use crate::devsim::DeviceKind;
-    match device.spec().kind {
-        DeviceKind::Cpu => Flavor::Ispc,
-        DeviceKind::Gpu => Flavor::Cuda,
-        DeviceKind::Vpu => Flavor::Ncc,
-    }
+/// One standard pass by name (`None` for names not in [`ALL`]).
+pub(crate) fn make_pass(name: &str) -> Option<Box<dyn Pass>> {
+    Some(match name {
+        EXTRACT_CANONICALIZE => Box::new(ExtractCanonicalize) as Box<dyn Pass>,
+        ELIDE => Box::new(Elide),
+        ASSIGN_MODULES => Box::new(AssignModules),
+        DNN_AUTOTUNE => Box::new(DnnAutotune),
+        DFP_FUSE_CODEGEN => Box::new(DfpFuseCodegen),
+        ASSIGN_LAYOUTS => Box::new(AssignLayouts),
+        SCHEDULE => Box::new(Schedule),
+        PLAN_MEMORY => Box::new(super::planner::PlanMemory),
+        _ => return None,
+    })
 }
 
 /// Validates the framework-extracted IR: edges must point backwards
@@ -179,7 +186,9 @@ impl Pass for DfpFuseCodegen {
     fn run(&self, cfg: &PipelineConfig, state: &mut CompileState) -> Result<()> {
         let g = &state.graph;
         let assignments = state.assignments_vec();
-        let flavor = cfg.flavor.unwrap_or_else(|| flavor_for(cfg.device));
+        // flavor selection is backend-owned: an explicit routed flavor, or
+        // the device's registered default (no kind-derived table exists)
+        let flavor = cfg.resolved_flavor();
         let regions = if cfg.enable_fusion {
             dfp::fuse_regions(g, &assignments)
         } else {
@@ -211,8 +220,14 @@ impl Pass for AssignLayouts {
 
     fn run(&self, cfg: &PipelineConfig, state: &mut CompileState) -> Result<()> {
         let assignments = state.assignments_vec();
-        state.layout =
-            Some(assign_layouts(&state.graph, &cfg.device.spec(), &assignments, false));
+        // the library-preferred layout is a backend capability
+        // (`Capabilities::preferred_layout`), routed in via the config
+        state.layout = Some(assign_layouts_with(
+            &state.graph,
+            &assignments,
+            false,
+            cfg.resolved_layout(),
+        ));
         Ok(())
     }
 }

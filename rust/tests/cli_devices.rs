@@ -1,0 +1,74 @@
+//! Golden-file test for `sol devices`: the registered-backend plugin
+//! listing (name, device, flavor, framework slot, capability sheet,
+//! libraries, realized pipeline) is part of the backend API v2 surface —
+//! adding/changing a backend must show up here deliberately.
+//!
+//! To bless a new golden after an intentional change:
+//! `BLESS=1 cargo test --test cli_devices`.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/sol_devices.txt")
+}
+
+/// The backend-listing section of `sol devices` stdout (from the
+/// "registered backends" header to the end; the spec table above it is
+/// pinned by `benches/specs.rs`).
+fn backend_section(stdout: &str) -> String {
+    let start = stdout
+        .find("registered backends")
+        .expect("`sol devices` must print the backend listing");
+    stdout[start..].to_string()
+}
+
+#[test]
+fn sol_devices_backend_listing_matches_golden() {
+    let out = Command::new(env!("CARGO_BIN_EXE_sol"))
+        .arg("devices")
+        .output()
+        .expect("run sol devices");
+    assert!(out.status.success(), "sol devices failed: {:?}", out);
+    let stdout = String::from_utf8(out.stdout).expect("utf8 stdout");
+    let got = backend_section(&stdout);
+
+    if std::env::var_os("BLESS").is_some() {
+        std::fs::write(golden_path(), &got).expect("bless golden");
+        return;
+    }
+    let want = std::fs::read_to_string(golden_path()).expect("read golden file");
+    assert_eq!(
+        got, want,
+        "`sol devices` backend listing drifted from the golden file \
+         (rust/tests/golden/sol_devices.txt) — re-bless with BLESS=1 if intentional"
+    );
+}
+
+#[test]
+fn sol_devices_lists_every_registered_backend_and_device() {
+    // structural sanity independent of the golden text: every backend in
+    // the default registry appears with its device and pipeline line
+    let out = Command::new(env!("CARGO_BIN_EXE_sol"))
+        .arg("devices")
+        .output()
+        .expect("run sol devices");
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    let section = backend_section(&stdout);
+    let registry = sol::backends::default_registry();
+    for b in registry.iter() {
+        assert!(section.contains(b.name()), "missing backend {}", b.name());
+        assert!(
+            section.contains(&format!("device={:?}", b.device())),
+            "missing device for {}",
+            b.name()
+        );
+        let pipeline = b.pipeline_names().join(" -> ");
+        assert!(section.contains(&pipeline), "missing pipeline for {}", b.name());
+    }
+    assert_eq!(
+        section.matches("pipeline:").count(),
+        registry.len(),
+        "one pipeline line per backend"
+    );
+}

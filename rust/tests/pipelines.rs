@@ -1,0 +1,316 @@
+//! Backend API v2 acceptance tests: capability-driven plugins that own
+//! their compile pipeline.
+//!
+//! Pins the tentpole contracts:
+//! * per-device pass lists (host-CPU backends append `plan-memory`, the
+//!   Aurora inserts `ve-vectorize`) produce distinct
+//!   `PipelineConfig` fingerprints;
+//! * the `CompileCache` never serves an artifact compiled under another
+//!   device's (or another registry's) pipeline;
+//! * ablation toggles still address passes by name in custom pipelines —
+//!   backend-defined passes included;
+//! * the flavor-selection collapse kept shipped-backend flavors (and the
+//!   fingerprint canonicalization) stable.
+
+use std::sync::Arc;
+
+use sol::backends::{aurora, default_registry, BackendRegistry, Capabilities, DeviceBackend};
+use sol::devsim::DeviceId;
+use sol::dfp::Flavor;
+use sol::dnn::Library;
+use sol::framework::DeviceType;
+use sol::ir::Layout;
+use sol::session::{
+    stages, CacheKey, CompileCache, PassManager, Pipeline, PipelineBuilder, PipelineConfig,
+    Session,
+};
+use sol::workloads::NetId;
+
+// ---------------------------------------------------------------------
+// pipeline divergence
+// ---------------------------------------------------------------------
+
+#[test]
+fn aurora_pipeline_differs_from_x86_by_at_least_one_pass() {
+    let r = default_registry();
+    let x86 = r.pipeline_names_for(DeviceId::Xeon6126);
+    let ve = r.pipeline_names_for(DeviceId::AuroraVE10B);
+    assert_ne!(x86, ve);
+    // by *which* passes: the planner is host-CPU-only, the vector audit
+    // is Aurora-only
+    assert!(x86.contains(&stages::PLAN_MEMORY));
+    assert!(!ve.contains(&stages::PLAN_MEMORY));
+    assert!(ve.contains(&aurora::VE_VECTORIZE));
+    assert!(!x86.contains(&aurora::VE_VECTORIZE));
+    // GPUs run the bare core stages
+    assert_eq!(r.pipeline_names_for(DeviceId::TitanV), stages::CORE.to_vec());
+    assert_eq!(r.pipeline_names_for(DeviceId::QuadroP4000), stages::CORE.to_vec());
+}
+
+#[test]
+fn per_device_pipelines_have_distinct_fingerprints() {
+    let s = Session::new();
+    let cpu = s.pipeline_config(DeviceId::Xeon6126).fingerprint();
+    let ve = s.pipeline_config(DeviceId::AuroraVE10B).fingerprint();
+    let gpu = s.pipeline_config(DeviceId::TitanV).fingerprint();
+    assert_ne!(cpu, ve);
+    assert_ne!(cpu, gpu);
+    assert_ne!(ve, gpu);
+    // the pass list alone separates configs: same device, same flavor,
+    // same layout — only the pipeline differs
+    let mut a = PipelineConfig::new(DeviceId::Xeon6126);
+    let mut b = a.clone();
+    a.set_pipeline(default_registry().pipeline_names_for(DeviceId::Xeon6126));
+    b.set_pipeline(stages::CORE.to_vec());
+    assert_ne!(a.fingerprint(), b.fingerprint(), "pass list must be keyed");
+}
+
+#[test]
+fn plan_memory_runs_exactly_where_the_backend_put_it() {
+    let s = Session::new();
+    let g = NetId::Squeezenet1_1.build(1);
+    // host CPU: the backend appended plan-memory; the pass itself has no
+    // device check, so the plan comes from pipeline membership alone
+    let cpu = s.compile(&g, DeviceId::Xeon6126);
+    assert!(cpu.memory_plan.is_some());
+    let names: Vec<&str> = cpu.pass_records.iter().map(|r| r.name.as_str()).collect();
+    assert_eq!(*names.last().unwrap(), stages::PLAN_MEMORY);
+    // Aurora: no plan-memory record at all (not a skipped record — the
+    // pass simply is not in the pipeline), but the ve audit ran
+    let ve = s.compile(&g, DeviceId::AuroraVE10B);
+    assert!(ve.memory_plan.is_none());
+    let ve_names: Vec<&str> = ve.pass_records.iter().map(|r| r.name.as_str()).collect();
+    assert!(!ve_names.contains(&stages::PLAN_MEMORY));
+    let audit = ve
+        .pass_records
+        .iter()
+        .find(|r| r.name == aurora::VE_VECTORIZE)
+        .expect("ve audit in records");
+    assert!(!audit.skipped);
+}
+
+// ---------------------------------------------------------------------
+// cache isolation across pipelines
+// ---------------------------------------------------------------------
+
+/// A second backend driving the Xeon under a *different* pipeline (no
+/// memory planner) — used to prove same-device/different-pipeline keys
+/// never alias.
+struct LeanXeon;
+
+impl DeviceBackend for LeanXeon {
+    fn name(&self) -> &'static str {
+        "lean-xeon"
+    }
+    fn device(&self) -> DeviceId {
+        DeviceId::Xeon6126
+    }
+    fn flavor(&self) -> Flavor {
+        Flavor::Ispc
+    }
+    fn libraries(&self) -> Vec<Library> {
+        vec![Library::OpenBlas]
+    }
+    fn framework_slot(&self) -> DeviceType {
+        DeviceType::Cpu
+    }
+    fn pipeline(&self, base: &PipelineBuilder) -> Pipeline {
+        base.core() // no plan-memory: bare paper stages
+    }
+}
+
+#[test]
+fn cache_never_serves_an_artifact_from_another_pipeline() {
+    // one shared cache, two registries driving the *same device* under
+    // different pipelines: the realized pass list is part of the
+    // fingerprint, so the second compile must miss, not alias
+    let g = NetId::Mlp.build(1);
+    let cache = CompileCache::new();
+
+    let full = Session::new().pipeline_config(DeviceId::Xeon6126);
+    let mut lean_registry = BackendRegistry::new();
+    lean_registry.register(Box::new(LeanXeon));
+    let lean = Session::with_registry(lean_registry).pipeline_config(DeviceId::Xeon6126);
+    assert_ne!(full.fingerprint(), lean.fingerprint());
+
+    let k_full = CacheKey::of(&g, DeviceId::Xeon6126, full.fingerprint());
+    let k_lean = CacheKey::of(&g, DeviceId::Xeon6126, lean.fingerprint());
+    assert_ne!(k_full, k_lean);
+    let a = cache.get_or_compile(k_full, || {
+        PassManager::standard(full.clone()).compile(&g).unwrap()
+    });
+    let b = cache.get_or_compile(k_lean, || {
+        LeanXeon.pipeline(&PipelineBuilder::new()).manager(lean.clone()).compile(&g).unwrap()
+    });
+    assert_eq!(cache.misses(), 2, "different pipelines must both miss");
+    assert_eq!(cache.hits(), 0);
+    assert!(!Arc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn cross_device_compiles_never_share_cache_entries() {
+    let s = Session::new();
+    let g = NetId::Resnet18.build(1);
+    let cpu = s.compile_traced(&g, DeviceId::Xeon6126);
+    let ve = s.compile_traced(&g, DeviceId::AuroraVE10B);
+    assert_ne!(cpu.key, ve.key);
+    assert!(!cpu.cache_hit && !ve.cache_hit);
+    assert_eq!(s.cache().misses(), 2);
+    // the artifacts really came from different pipelines
+    assert!(cpu.model.memory_plan.is_some());
+    assert!(ve.model.memory_plan.is_none());
+}
+
+// ---------------------------------------------------------------------
+// ablation by name in custom / backend-extended pipelines
+// ---------------------------------------------------------------------
+
+#[test]
+fn backend_defined_pass_toggles_by_name() {
+    let s = Session::new();
+    let g = NetId::Squeezenet1_1.build(1);
+    let mut cfg = s.pipeline_config(DeviceId::AuroraVE10B);
+    cfg.disable_pass(aurora::VE_VECTORIZE);
+    let m = s.compile_with(&g, cfg).unwrap();
+    let audit = m.pass_records.iter().find(|r| r.name == aurora::VE_VECTORIZE).unwrap();
+    assert!(audit.skipped, "backend pass must be ablatable by name");
+    // and the ablation is its own content address
+    let base = s.compile_traced(&g, DeviceId::AuroraVE10B);
+    assert!(!base.cache_hit, "ablated compile must not have polluted the default key");
+}
+
+#[test]
+fn custom_pipeline_ablation_addresses_passes_by_name() {
+    // a hand-built pipeline (core stages + plan-memory up front after
+    // schedule) still honors name toggles once the config pins its list
+    let b = PipelineBuilder::new();
+    let pipeline = b.core().append(b.standard(stages::PLAN_MEMORY));
+    let mut cfg = PipelineConfig::new(DeviceId::Xeon6126);
+    cfg.set_pipeline(pipeline.names());
+    cfg.disable_pass(stages::PLAN_MEMORY);
+    let m = pipeline.manager(cfg).compile(&NetId::Mlp.build(1)).unwrap();
+    let rec = m.pass_records.iter().find(|r| r.name == stages::PLAN_MEMORY).unwrap();
+    assert!(rec.skipped);
+    assert!(m.memory_plan.is_none());
+}
+
+#[test]
+fn session_rejects_a_foreign_pinned_pipeline() {
+    // a config pinned to a pass list that is not the registry's must be
+    // an error, not a silent overwrite (the key would say one pipeline
+    // while the session ran another)
+    let s = Session::new();
+    let mut cfg = s.pipeline_config(DeviceId::Xeon6126);
+    cfg.set_pipeline(stages::CORE.to_vec()); // drops plan-memory: foreign
+    let err = s.compile_with(&NetId::Mlp.build(1), cfg).unwrap_err();
+    assert!(err.to_string().contains("pins pass list"), "{err}");
+    assert_eq!(s.cache().len(), 0, "nothing may be cached under a mismatched key");
+}
+
+#[test]
+#[should_panic(expected = "unknown pass")]
+fn pass_missing_from_this_pipeline_fails_loudly() {
+    // plan-memory exists as a standard pass, but the TitanV pipeline does
+    // not run it — toggling it there is a bug, not a silent no-op
+    let mut cfg = PipelineConfig::new(DeviceId::TitanV);
+    cfg.disable_pass(stages::PLAN_MEMORY);
+}
+
+// ---------------------------------------------------------------------
+// flavor-collapse / fingerprint regressions
+// ---------------------------------------------------------------------
+
+#[test]
+fn explicit_backend_defaults_hash_like_the_implicit_ones() {
+    // fingerprints canonicalize: an explicit flavor/layout equal to the
+    // backend's default must produce the same key as leaving them unset —
+    // the regression guard for the flavor-selection collapse (shipped
+    // cache keys depend only on what actually compiles)
+    for dev in DeviceId::ALL {
+        let implicit = PipelineConfig::new(dev);
+        let mut explicit = PipelineConfig::new(dev);
+        explicit.flavor = Some(implicit.resolved_flavor());
+        explicit.preferred_layout = Some(implicit.resolved_layout());
+        explicit.set_pipeline(implicit.realized_passes());
+        assert_eq!(implicit.fingerprint(), explicit.fingerprint(), "{dev:?}");
+    }
+}
+
+#[test]
+fn session_and_raw_config_agree_on_shipped_keys() {
+    // Session::compile's precomputed per-device fingerprint equals the
+    // raw PipelineConfig fingerprint for every shipped device (both
+    // resolve through the same default registry)
+    let s = Session::new();
+    let g = NetId::Mlp.build(1);
+    for dev in DeviceId::ALL {
+        let out = s.compile_traced(&g, dev);
+        let want = CacheKey::of(&g, dev, PipelineConfig::new(dev).fingerprint());
+        assert_eq!(out.key, want, "{dev:?}");
+    }
+}
+
+#[test]
+fn capability_sheet_reaches_the_compiled_layout() {
+    // preferred_layout is routed from the backend capability sheet into
+    // the assign-layouts pass: the x86 backend's BlockedC16 shows up in
+    // the compiled plan, a CUDA device's Nchw produces zero reorders
+    let s = Session::new();
+    let g = NetId::Vgg16.build(1);
+    let cpu = s.compile(&g, DeviceId::Xeon6126);
+    assert!(cpu.layout.per_node.contains(&Layout::BlockedC16));
+    let gpu = s.compile(&g, DeviceId::TitanV);
+    assert!(gpu.layout.reorders.is_empty());
+    // and the registry surfaces the same sheets
+    let caps = default_registry().capabilities_for(DeviceId::Xeon6126);
+    assert_eq!(caps.preferred_layout, Layout::BlockedC16);
+    assert!(caps.arena_exec && !caps.offload);
+    assert_eq!(
+        default_registry().capabilities_for(DeviceId::AuroraVE10B),
+        Capabilities {
+            offload: true,
+            arena_exec: false,
+            preferred_layout: Layout::Nchw,
+            vector_width: 256,
+        }
+    );
+}
+
+#[test]
+fn custom_layout_capability_changes_artifact_and_key() {
+    // a backend that prefers NHWC on the Xeon: the layout pass must
+    // follow the capability sheet and the cache key must diverge
+    struct NhwcXeon;
+    impl DeviceBackend for NhwcXeon {
+        fn name(&self) -> &'static str {
+            "nhwc-xeon"
+        }
+        fn device(&self) -> DeviceId {
+            DeviceId::Xeon6126
+        }
+        fn flavor(&self) -> Flavor {
+            Flavor::Ispc
+        }
+        fn libraries(&self) -> Vec<Library> {
+            Vec::new()
+        }
+        fn framework_slot(&self) -> DeviceType {
+            DeviceType::Cpu
+        }
+        fn capabilities(&self) -> Capabilities {
+            Capabilities {
+                preferred_layout: Layout::Nhwc,
+                ..Capabilities::for_device(DeviceId::Xeon6126)
+            }
+        }
+    }
+    let mut r = BackendRegistry::new();
+    r.register(Box::new(NhwcXeon));
+    let s = Session::with_registry(r);
+    let g = NetId::Vgg16.build(1);
+    let out = s.compile_traced(&g, DeviceId::Xeon6126);
+    assert!(out.model.layout.per_node.contains(&Layout::Nhwc));
+    assert!(!out.model.layout.per_node.contains(&Layout::BlockedC16));
+    let default = Session::new().compile_traced(&g, DeviceId::Xeon6126);
+    assert_ne!(out.key, default.key, "capability layout must be keyed");
+}

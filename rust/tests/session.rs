@@ -81,9 +81,14 @@ fn optimize_is_a_pass_manager_wrapper() {
             .compile(&g)
             .unwrap();
         assert_models_equivalent(&wrapped, &direct);
-        // and the wrapper carries the per-pass records of the 7 paper
-        // stages plus the memory planner
-        assert_eq!(wrapped.pass_records.len(), 8);
+        // and the wrapper carries per-pass records of exactly the pass
+        // list the device's backend composed (API v2: the GPU backends
+        // run the seven core stages, host-CPU adds plan-memory)
+        let want: Vec<&str> =
+            sol::backends::default_registry().pipeline_names_for(DeviceId::TitanV);
+        let got: Vec<&str> = wrapped.pass_records.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(got, want);
+        assert_eq!(wrapped.pass_records.len(), 7);
         assert!(wrapped.pass_records.iter().all(|r| !r.skipped));
     }
 }
