@@ -1,0 +1,524 @@
+//! Cross-backend consistency audit — differential testing of every
+//! registered backend × execution path against the framework reference.
+//!
+//! SOL's headline promise is that one framework model runs transparently
+//! on heterogeneous devices (paper §III); that is only true if every
+//! backend's pipeline produces numerically consistent results.  The
+//! [`AuditEngine`] makes the gap measurable instead of anecdotal: it
+//! takes a workload set (fixed examples + seeded random modules from
+//! [`crate::util::gen`]), compiles each through **every** device in the
+//! session's registry ([`crate::session::Session::compile_all_devices`]),
+//! executes every capability-advertised path — naive per-op kernels,
+//! the arena/fast path, transparent offload — and compares all outputs
+//! pairwise (including against the framework's own forward, the
+//! reference) under per-`(dtype, op class)` [`TolerancePolicy`] budgets.
+//!
+//! Out-of-tolerance pairs become structured [`AuditFinding`]s carrying
+//! the workload seed, the device pair, both pipeline fingerprints and
+//! the worst-element drift — enough to reproduce the divergence from
+//! the report alone.  Aggregate `audit.*` counters land in
+//! [`crate::metrics`] (surfaced by `serving_report()`), and the `sol
+//! audit` subcommand exits nonzero on any finding, which is the CI gate.
+
+pub mod tolerance;
+pub mod workload;
+
+pub use tolerance::{compare, ulp_distance, Divergence, OpClass, TolerancePolicy, ToleranceTable};
+pub use workload::{fixed_workloads, random_workloads, Workload};
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use crate::devsim::DeviceId;
+use crate::framework::{install_default, Tensor};
+use crate::frontend::{extract_graph, SolModel, TransparentOffload};
+use crate::ir::{DType, Layout};
+use crate::metrics;
+use crate::session::Session;
+use crate::util::Json;
+
+/// Which execution route produced an output under audit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecPath {
+    /// The framework's own per-op forward — the uncompiled reference.
+    Framework,
+    /// Per-op evaluation of the extracted graph with naive kernels
+    /// ([`SolModel::forward_on`] over `install_default()`).
+    Naive,
+    /// The planned arena executor with optimized kernels (fast path).
+    Arena,
+    /// Transparent offload through the device simulator
+    /// ([`TransparentOffload`]).
+    Offload,
+}
+
+impl ExecPath {
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecPath::Framework => "framework",
+            ExecPath::Naive => "naive",
+            ExecPath::Arena => "arena",
+            ExecPath::Offload => "offload",
+        }
+    }
+
+    /// Parse a CLI path name (`naive|arena|offload`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "naive" => ExecPath::Naive,
+            "arena" => ExecPath::Arena,
+            "offload" => ExecPath::Offload,
+            other => bail!("unknown execution path '{other}' (naive|arena|offload)"),
+        })
+    }
+}
+
+/// One executed (device × path) variant of a workload — the audit's unit
+/// of comparison.  The framework reference is the variant with no
+/// device (and fingerprint 0: it never went through a pipeline).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Variant {
+    pub device: Option<DeviceId>,
+    pub path: ExecPath,
+    /// Fingerprint of the pipeline that compiled this variant's
+    /// artifact (what `sol devices` calls the realized pipeline).
+    pub fingerprint: u64,
+    /// The backend's capability-advertised activation layout.
+    pub layout: Layout,
+}
+
+impl Variant {
+    fn reference() -> Variant {
+        Variant { device: None, path: ExecPath::Framework, fingerprint: 0, layout: Layout::Nchw }
+    }
+
+    /// Compact human/report label: `Xeon6126/arena@3f9c...` or
+    /// `framework@host`.
+    pub fn label(&self) -> String {
+        match self.device {
+            None => "framework@host".to_string(),
+            Some(d) => format!("{:?}/{}@{:016x}", d, self.path.name(), self.fingerprint),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert(
+            "device".to_string(),
+            match self.device {
+                Some(d) => Json::Str(format!("{d:?}")),
+                None => Json::Null,
+            },
+        );
+        o.insert("path".to_string(), Json::Str(self.path.name().into()));
+        o.insert("fingerprint".to_string(), Json::Str(format!("{:016x}", self.fingerprint)));
+        o.insert("layout".to_string(), Json::Str(format!("{:?}", self.layout)));
+        Json::Obj(o)
+    }
+}
+
+/// One out-of-tolerance comparison: which workload, which pair of
+/// execution variants, and how far apart they were.
+#[derive(Debug, Clone)]
+pub struct AuditFinding {
+    pub workload: String,
+    /// Generator seed for random workloads (reproduction handle).
+    pub seed: Option<u64>,
+    pub left: Variant,
+    pub right: Variant,
+    pub op_class: OpClass,
+    /// The policy the pair was judged under.
+    pub policy: TolerancePolicy,
+    pub worst_index: usize,
+    pub max_abs: f64,
+    pub max_rel: f64,
+    pub max_ulp: u64,
+}
+
+impl AuditFinding {
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("workload".to_string(), Json::Str(self.workload.clone()));
+        o.insert(
+            "seed".to_string(),
+            match self.seed {
+                Some(s) => Json::Num(s as f64),
+                None => Json::Null,
+            },
+        );
+        o.insert("left".to_string(), self.left.to_json());
+        o.insert("right".to_string(), self.right.to_json());
+        o.insert("op_class".to_string(), Json::Str(self.op_class.name().into()));
+        o.insert("policy".to_string(), Json::Str(self.policy.to_string()));
+        o.insert("worst_index".to_string(), Json::Num(self.worst_index as f64));
+        o.insert("max_abs".to_string(), Json::Num(self.max_abs));
+        o.insert("max_rel".to_string(), Json::Num(self.max_rel));
+        o.insert("max_ulp".to_string(), Json::Num(self.max_ulp.min(1 << 52) as f64));
+        Json::Obj(o)
+    }
+}
+
+impl fmt::Display for AuditFinding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} (seed {}): {} vs {} diverge: worst elem {} abs {:.3e} rel {:.3e} ulp {} \
+             (class {}, policy {})",
+            self.workload,
+            self.seed.map_or("-".to_string(), |s| s.to_string()),
+            self.left.label(),
+            self.right.label(),
+            self.worst_index,
+            self.max_abs,
+            self.max_rel,
+            self.max_ulp,
+            self.op_class.name(),
+            self.policy,
+        )
+    }
+}
+
+/// Test-only fault injection: add `offset` to element 0 of the chosen
+/// (device, path) variant's output before comparison.  This is the
+/// audit's self-test hook — an intentionally perturbed kernel that
+/// proves the net catches real divergence (`rust/tests/audit.rs` and
+/// the hidden `sol audit --fault` flag drive it); it has no place in a
+/// production sweep.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    pub device: DeviceId,
+    pub path: ExecPath,
+    pub offset: f32,
+}
+
+/// Audit engine configuration.
+pub struct AuditConfig {
+    /// Number of generated random workloads on top of the fixed set.
+    pub seeds: u64,
+    /// Tolerance policies per `(dtype, op class)`.
+    pub table: ToleranceTable,
+    /// Optional test-only perturbation (see [`FaultSpec`]).
+    pub fault: Option<FaultSpec>,
+}
+
+impl Default for AuditConfig {
+    fn default() -> Self {
+        AuditConfig { seeds: 8, table: ToleranceTable::new(), fault: None }
+    }
+}
+
+/// What one audit sweep did and found.
+#[derive(Debug)]
+pub struct AuditReport {
+    pub seeds: u64,
+    /// Devices swept (registry order).
+    pub devices: Vec<DeviceId>,
+    /// Workload names, sweep order.
+    pub workloads: Vec<String>,
+    /// The (device × path) grid every workload executes.
+    pub grid: Vec<Variant>,
+    /// f32 policies the sweep judged under, per op class.
+    pub policies: Vec<(OpClass, TolerancePolicy)>,
+    /// Executed variant runs (grid × workloads, minus refusals).
+    pub variants: usize,
+    /// Grid slots skipped because the executor refused the workload
+    /// (e.g. an arena-refused graph shape) — 0 on the shipped backends.
+    pub skipped: usize,
+    pub comparisons: usize,
+    pub findings: Vec<AuditFinding>,
+}
+
+impl AuditReport {
+    /// Zero above-tolerance findings?  (The CI gate.)
+    pub fn passed(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Machine-readable report (`sol audit --json`).  Deterministic for
+    /// a given seed count and registry — pinned by the golden test
+    /// `rust/tests/cli_audit.rs`.
+    pub fn to_json(&self) -> Json {
+        let mut top = BTreeMap::new();
+        top.insert("audit".to_string(), Json::Str("cross-backend-consistency".into()));
+        top.insert("seeds".to_string(), Json::Num(self.seeds as f64));
+        top.insert(
+            "devices".to_string(),
+            Json::Arr(self.devices.iter().map(|d| Json::Str(format!("{d:?}"))).collect()),
+        );
+        top.insert(
+            "workloads".to_string(),
+            Json::Arr(self.workloads.iter().map(|w| Json::Str(w.clone())).collect()),
+        );
+        top.insert(
+            "grid".to_string(),
+            Json::Arr(
+                self.grid
+                    .iter()
+                    .map(|v| {
+                        Json::Str(format!(
+                            "{}/{}/{:?}",
+                            v.device.map_or("host".to_string(), |d| format!("{d:?}")),
+                            v.path.name(),
+                            v.layout
+                        ))
+                    })
+                    .collect(),
+            ),
+        );
+        let mut pol = BTreeMap::new();
+        for (class, p) in &self.policies {
+            pol.insert(format!("f32.{}", class.name()), Json::Str(p.to_string()));
+        }
+        top.insert("policies".to_string(), Json::Obj(pol));
+        top.insert("variants".to_string(), Json::Num(self.variants as f64));
+        top.insert("skipped".to_string(), Json::Num(self.skipped as f64));
+        top.insert("comparisons".to_string(), Json::Num(self.comparisons as f64));
+        top.insert(
+            "findings".to_string(),
+            Json::Arr(self.findings.iter().map(AuditFinding::to_json).collect()),
+        );
+        top.insert(
+            "status".to_string(),
+            Json::Str(if self.passed() { "pass" } else { "fail" }.into()),
+        );
+        Json::Obj(top)
+    }
+
+    /// Human summary (`sol audit` without `--json`).
+    pub fn summary(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "audited {} workloads ({} fixed + {} seeded) across {} devices, {} variant runs",
+            self.workloads.len(),
+            self.workloads.len() as u64 - self.seeds,
+            self.seeds,
+            self.devices.len(),
+            self.variants,
+        );
+        let _ = writeln!(
+            s,
+            "{} pairwise comparisons, {} skipped grid slots, {} findings",
+            self.comparisons, self.skipped, self.findings.len()
+        );
+        for f in &self.findings {
+            let _ = writeln!(s, "  FINDING {f}");
+        }
+        let _ = writeln!(s, "status: {}", if self.passed() { "PASS" } else { "FAIL" });
+        s
+    }
+}
+
+/// The differential-testing engine: one [`Session`] (compile sweeps go
+/// through its content-addressed cache) + one [`AuditConfig`].
+pub struct AuditEngine {
+    session: Session,
+    cfg: AuditConfig,
+}
+
+impl AuditEngine {
+    /// An engine over a fresh default session.
+    pub fn new(cfg: AuditConfig) -> Self {
+        Self::over(Session::new(), cfg)
+    }
+
+    /// An engine over an existing session — custom registries (exotic
+    /// backends) audit exactly like the shipped ones, and repeat sweeps
+    /// reuse the session's compile cache.
+    pub fn over(session: Session, cfg: AuditConfig) -> Self {
+        AuditEngine { session, cfg }
+    }
+
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+
+    /// The (device × path) grid one workload executes: every registry
+    /// device runs the naive path, plus the arena path where the
+    /// backend claims `arena_exec` and the offload path where it claims
+    /// `offload`.  Layouts ride along from each backend's capability
+    /// sheet, and the fingerprint is the device's default-pipeline
+    /// fingerprint (workload-independent by construction).
+    pub fn variant_grid(&self) -> Vec<Variant> {
+        let mut grid = Vec::new();
+        for device in self.session.registry().devices() {
+            let caps = self.session.registry().capabilities_for(device);
+            let fingerprint = self.session.pipeline_config(device).fingerprint();
+            let mk = |path| Variant {
+                device: Some(device),
+                path,
+                fingerprint,
+                layout: caps.preferred_layout,
+            };
+            grid.push(mk(ExecPath::Naive));
+            if caps.arena_exec {
+                grid.push(mk(ExecPath::Arena));
+            }
+            if caps.offload {
+                grid.push(mk(ExecPath::Offload));
+            }
+        }
+        grid
+    }
+
+    /// Run the full sweep: fixed workloads + `cfg.seeds` generated ones,
+    /// each compiled for every device and executed through every grid
+    /// variant, all outputs compared pairwise.  Publishes cumulative
+    /// `audit.*` counters on completion.
+    pub fn run(&self) -> Result<AuditReport> {
+        let mut workloads = workload::fixed_workloads();
+        workloads.extend(workload::random_workloads(self.cfg.seeds));
+        let grid = self.variant_grid();
+        let mut report = AuditReport {
+            seeds: self.cfg.seeds,
+            devices: self.session.registry().devices(),
+            workloads: Vec::new(),
+            grid: grid.clone(),
+            policies: [OpClass::Elementwise, OpClass::Reduction, OpClass::Gemm]
+                .iter()
+                .map(|&c| (c, self.cfg.table.policy(DType::F32, c)))
+                .collect(),
+            variants: 0,
+            skipped: 0,
+            comparisons: 0,
+            findings: Vec::new(),
+        };
+        for w in &workloads {
+            self.audit_workload(w, &grid, &mut report)?;
+        }
+        metrics::counter("audit.workloads").add(report.workloads.len() as u64);
+        metrics::counter("audit.variants").add(report.variants as u64);
+        metrics::counter("audit.comparisons").add(report.comparisons as u64);
+        metrics::counter("audit.findings").add(report.findings.len() as u64);
+        Ok(report)
+    }
+
+    fn audit_workload(
+        &self,
+        w: &Workload,
+        grid: &[Variant],
+        report: &mut AuditReport,
+    ) -> Result<()> {
+        let naive = install_default();
+        let x = Tensor::randn(&w.input_shape, w.input_seed(), 0.5);
+        // the framework's own execution is the reference output
+        let reference = w.module.forward(&naive, &x)?.to_f32()?;
+        // compile sweep: every registered device through the session's
+        // content-addressed cache (repeat sweeps are all hits)
+        let (graph, _) = extract_graph(&w.module, &w.input_shape, &w.name)?;
+        let class = OpClass::of_graph(&graph);
+        let policy = self.cfg.table.policy(DType::F32, class);
+        let _ = self.session.compile_all_devices(&graph);
+
+        let mut outputs: Vec<(Variant, Vec<f32>)> = vec![(Variant::reference(), reference)];
+        let devices = report.devices.clone();
+        for device in devices {
+            // cache hit from the sweep above; caps resolve per registry
+            let model =
+                SolModel::optimize_in(&self.session, &w.module, &w.input_shape, &w.name, device)?;
+            for v in grid.iter().filter(|v| v.device == Some(device)) {
+                let out = match v.path {
+                    ExecPath::Framework => unreachable!("the reference is not a grid variant"),
+                    ExecPath::Naive => model.forward_on(&x, &naive)?,
+                    ExecPath::Arena => {
+                        if model.arena_exec().is_none() {
+                            // arena-refused graph shape: nothing runs here
+                            report.skipped += 1;
+                            continue;
+                        }
+                        model.forward(&x)?
+                    }
+                    ExecPath::Offload => {
+                        TransparentOffload::set_device(device).forward(&model, &x)?
+                    }
+                };
+                let mut out = out.to_f32()?;
+                if let Some(fault) = self.cfg.fault {
+                    if Some(fault.device) == v.device && fault.path == v.path && !out.is_empty() {
+                        out[0] += fault.offset;
+                    }
+                }
+                outputs.push((v.clone(), out));
+            }
+        }
+        report.variants += outputs.len() - 1; // reference is not a variant run
+        for i in 0..outputs.len() {
+            for j in (i + 1)..outputs.len() {
+                report.comparisons += 1;
+                if let Some(d) = compare(&outputs[i].1, &outputs[j].1, policy) {
+                    report.findings.push(AuditFinding {
+                        workload: w.name.clone(),
+                        seed: w.seed,
+                        left: outputs[i].0.clone(),
+                        right: outputs[j].0.clone(),
+                        op_class: class,
+                        policy,
+                        worst_index: d.worst_index,
+                        max_abs: d.max_abs,
+                        max_rel: d.max_rel,
+                        max_ulp: d.max_ulp,
+                    });
+                }
+            }
+        }
+        report.workloads.push(w.name.clone());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_every_device_with_naive_plus_capability_paths() {
+        let engine = AuditEngine::new(AuditConfig::default());
+        let grid = engine.variant_grid();
+        for device in engine.session().registry().devices() {
+            let caps = engine.session().registry().capabilities_for(device);
+            let paths: Vec<ExecPath> = grid
+                .iter()
+                .filter(|v| v.device == Some(device))
+                .map(|v| v.path)
+                .collect();
+            assert!(paths.contains(&ExecPath::Naive), "{device:?} missing naive");
+            assert_eq!(paths.contains(&ExecPath::Arena), caps.arena_exec, "{device:?}");
+            assert_eq!(paths.contains(&ExecPath::Offload), caps.offload, "{device:?}");
+            // fingerprints are the device's real default-pipeline ones
+            for v in grid.iter().filter(|v| v.device == Some(device)) {
+                assert_eq!(
+                    v.fingerprint,
+                    engine.session().pipeline_config(device).fingerprint()
+                );
+                assert_ne!(v.fingerprint, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn exec_path_parse_round_trips() {
+        for p in [ExecPath::Naive, ExecPath::Arena, ExecPath::Offload] {
+            assert_eq!(ExecPath::parse(p.name()).unwrap(), p);
+        }
+        assert!(ExecPath::parse("framework").is_err(), "the reference is not requestable");
+        assert!(ExecPath::parse("warp").is_err());
+    }
+
+    #[test]
+    fn variant_labels_and_json_are_stable() {
+        let v = Variant {
+            device: Some(DeviceId::TitanV),
+            path: ExecPath::Offload,
+            fingerprint: 0xabcd,
+            layout: Layout::Nchw,
+        };
+        assert_eq!(v.label(), "TitanV/offload@000000000000abcd");
+        assert_eq!(Variant::reference().label(), "framework@host");
+        let j = v.to_json();
+        assert_eq!(j.get("device").and_then(Json::as_str), Some("TitanV"));
+        assert_eq!(j.get("fingerprint").and_then(Json::as_str), Some("000000000000abcd"));
+    }
+}

@@ -1,0 +1,373 @@
+//! Tolerance policies for differential testing — how far two execution
+//! paths may drift before the audit calls it a divergence.
+//!
+//! A [`TolerancePolicy`] carries three independent allowances (`abs`,
+//! `rel`, `ulp`); a pair of elements *agrees* when **any** of the three
+//! accepts it.  `abs` covers near-zero values where relative error blows
+//! up, `rel` covers accumulated rounding on large magnitudes, and `ulp`
+//! is the bit-level backstop that stays meaningful across the whole
+//! float range.  Policies are resolved per `(dtype, op class)` through a
+//! [`ToleranceTable`]: reductions and GEMM accumulate rounding error in
+//! data-dependent orders, so they get looser budgets than elementwise
+//! chains, and integer dtypes compare bit-exact.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use crate::ir::{DType, Graph, Op};
+
+/// Per-comparison drift budget.  A pair of elements agrees when any of
+/// the three allowances accepts it (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TolerancePolicy {
+    /// Max absolute difference.
+    pub abs: f64,
+    /// Max difference relative to `max(|a|, |b|)`.
+    pub rel: f64,
+    /// Max units-in-the-last-place distance (f32 lattice steps).
+    pub ulp: u32,
+}
+
+impl TolerancePolicy {
+    pub const fn new(abs: f64, rel: f64, ulp: u32) -> Self {
+        TolerancePolicy { abs, rel, ulp }
+    }
+
+    /// Bit-exact: any difference is a divergence (integer dtypes).
+    pub const fn exact() -> Self {
+        TolerancePolicy::new(0.0, 0.0, 0)
+    }
+
+    /// Does this policy accept the pair `(a, b)` as equal-enough?
+    /// NaN agrees only with NaN; `+0.0` and `-0.0` always agree.
+    pub fn accepts(&self, a: f32, b: f32) -> bool {
+        if a == b || (a.is_nan() && b.is_nan()) {
+            return true;
+        }
+        if a.is_nan() != b.is_nan() {
+            return false;
+        }
+        let d = (a as f64 - b as f64).abs();
+        if d <= self.abs {
+            return true;
+        }
+        if d <= self.rel * (a.abs() as f64).max(b.abs() as f64) {
+            return true;
+        }
+        ulp_distance(a, b) <= self.ulp as u64
+    }
+
+    /// Parse the CLI form `abs=A,rel=R,ulp=U` (fields in any order;
+    /// omitted fields are strict, i.e. 0).  Round-trips with
+    /// [`fmt::Display`]: `TolerancePolicy::parse(&p.to_string()) == p`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut p = TolerancePolicy::exact();
+        for field in s.split(',').filter(|f| !f.trim().is_empty()) {
+            let (key, value) = field
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("tolerance field '{field}' is not key=value"))?;
+            match key.trim() {
+                "abs" => p.abs = value.trim().parse()?,
+                "rel" => p.rel = value.trim().parse()?,
+                "ulp" => p.ulp = value.trim().parse()?,
+                other => bail!("unknown tolerance field '{other}' (abs|rel|ulp)"),
+            }
+        }
+        Ok(p)
+    }
+}
+
+impl fmt::Display for TolerancePolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // f64 Display is shortest-round-trip, so parse(to_string) == self
+        write!(f, "abs={},rel={},ulp={}", self.abs, self.rel, self.ulp)
+    }
+}
+
+/// Units-in-the-last-place distance between two f32 values: how many
+/// representable floats lie between them (0 for equal values, counting
+/// through zero for opposite signs).  NaN against anything is
+/// `u64::MAX`.
+pub fn ulp_distance(a: f32, b: f32) -> u64 {
+    if a == b {
+        return 0; // covers +0.0 vs -0.0
+    }
+    if a.is_nan() || b.is_nan() {
+        return u64::MAX;
+    }
+    // map the float lattice onto a monotone integer line centred on zero
+    fn ordered(x: f32) -> i64 {
+        let bits = x.to_bits();
+        if bits & 0x8000_0000 != 0 {
+            -((bits & 0x7fff_ffff) as i64)
+        } else {
+            bits as i64
+        }
+    }
+    (ordered(a) - ordered(b)).unsigned_abs()
+}
+
+/// Numeric character of a workload, ordered by how much rounding its
+/// execution order can accumulate (the tolerance lookup key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum OpClass {
+    /// Pointwise chains: one rounding per element, order-independent.
+    Elementwise,
+    /// Windowed/normalizing reductions (pooling, batch-norm, softmax).
+    Reduction,
+    /// Matmul-backed ops (conv, linear): long dot-product accumulations
+    /// whose summation order differs per kernel (im2col, blocking,
+    /// fusion), the dominant divergence source.
+    Gemm,
+}
+
+impl OpClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::Elementwise => "elementwise",
+            OpClass::Reduction => "reduction",
+            OpClass::Gemm => "gemm",
+        }
+    }
+
+    /// The class of one IR op.
+    pub fn of_op(op: &Op) -> OpClass {
+        match op {
+            Op::Conv2d { .. } | Op::Linear { .. } => OpClass::Gemm,
+            Op::MaxPool { .. }
+            | Op::AvgPool { .. }
+            | Op::GlobalAvgPool
+            | Op::BatchNorm
+            | Op::Softmax => OpClass::Reduction,
+            _ => OpClass::Elementwise,
+        }
+    }
+
+    /// The class governing a whole graph: its loosest member, since end
+    /// outputs inherit the accumulated error of every layer upstream.
+    pub fn of_graph(g: &Graph) -> OpClass {
+        g.nodes.iter().map(|n| OpClass::of_op(&n.op)).max().unwrap_or(OpClass::Elementwise)
+    }
+}
+
+/// Per-`(dtype, op class)` policy table: built-in defaults plus explicit
+/// overrides (how a new backend with a looser kernel set is accommodated
+/// — see `docs/architecture.md`, "Audit layer").
+#[derive(Debug, Clone, Default)]
+pub struct ToleranceTable {
+    overrides: Vec<((DType, OpClass), TolerancePolicy)>,
+}
+
+impl ToleranceTable {
+    /// The built-in defaults with no overrides.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One policy for every dtype and op class (the CLI `--tol` path).
+    pub fn uniform(policy: TolerancePolicy) -> Self {
+        let mut t = Self::new();
+        for dt in [DType::F32, DType::BF16, DType::I32, DType::I64, DType::U8] {
+            for class in [OpClass::Elementwise, OpClass::Reduction, OpClass::Gemm] {
+                t.set(dt, class, policy);
+            }
+        }
+        t
+    }
+
+    /// Install an override for one `(dtype, op class)` cell.
+    pub fn set(&mut self, dtype: DType, class: OpClass, policy: TolerancePolicy) {
+        if let Some(slot) =
+            self.overrides.iter_mut().find(|((d, c), _)| *d == dtype && *c == class)
+        {
+            slot.1 = policy;
+        } else {
+            self.overrides.push(((dtype, class), policy));
+        }
+    }
+
+    /// Resolve the policy for a `(dtype, op class)` pair: explicit
+    /// override first, then the built-in default.
+    pub fn policy(&self, dtype: DType, class: OpClass) -> TolerancePolicy {
+        self.overrides
+            .iter()
+            .find(|((d, c), _)| *d == dtype && *c == class)
+            .map(|(_, p)| *p)
+            .unwrap_or_else(|| Self::builtin(dtype, class))
+    }
+
+    /// The built-in defaults.  f32 budgets widen with accumulation depth
+    /// (the GEMM row matches the crate's long-standing 1e-4-relative
+    /// fast-vs-naive kernel contract in `rust/tests/proptests.rs`);
+    /// bf16 scales them by its ~3 decimal digits; integers are exact.
+    fn builtin(dtype: DType, class: OpClass) -> TolerancePolicy {
+        match dtype {
+            DType::F32 => match class {
+                OpClass::Elementwise => TolerancePolicy::new(1e-6, 1e-6, 8),
+                OpClass::Reduction => TolerancePolicy::new(1e-5, 1e-5, 128),
+                OpClass::Gemm => TolerancePolicy::new(1e-4, 1e-4, 1024),
+            },
+            DType::BF16 => match class {
+                OpClass::Elementwise => TolerancePolicy::new(1e-2, 1e-2, 8),
+                OpClass::Reduction => TolerancePolicy::new(3e-2, 3e-2, 16),
+                OpClass::Gemm => TolerancePolicy::new(5e-2, 5e-2, 32),
+            },
+            DType::I32 | DType::I64 | DType::U8 => TolerancePolicy::exact(),
+        }
+    }
+}
+
+/// What one out-of-tolerance comparison measured.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Divergence {
+    /// Index of the worst out-of-tolerance element.
+    pub worst_index: usize,
+    /// Largest absolute difference over the whole vector.
+    pub max_abs: f64,
+    /// Largest relative difference over the whole vector.
+    pub max_rel: f64,
+    /// Largest ULP distance over the whole vector (saturating).
+    pub max_ulp: u64,
+    /// Set when the two outputs disagree on element count (compared up
+    /// to the shorter length; the mismatch itself is the divergence).
+    pub len_mismatch: Option<(usize, usize)>,
+}
+
+/// Compare two output vectors element-wise under `policy`.  Returns
+/// `None` when every element agrees (and the lengths match), otherwise
+/// the measured [`Divergence`].
+pub fn compare(a: &[f32], b: &[f32], policy: TolerancePolicy) -> Option<Divergence> {
+    let len_mismatch = (a.len() != b.len()).then_some((a.len(), b.len()));
+    let (mut max_abs, mut max_rel, mut max_ulp) = (0.0f64, 0.0f64, 0u64);
+    let mut worst: Option<(usize, f64)> = None;
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let d = (x as f64 - y as f64).abs();
+        let scale = (x.abs() as f64).max(y.abs() as f64);
+        max_abs = max_abs.max(d);
+        if scale > 0.0 {
+            max_rel = max_rel.max(d / scale);
+        }
+        max_ulp = max_ulp.max(ulp_distance(x, y));
+        if !policy.accepts(x, y) {
+            let replace = match worst {
+                Some((_, w)) => d > w,
+                None => true,
+            };
+            if replace {
+                worst = Some((i, d));
+            }
+        }
+    }
+    match (worst, len_mismatch) {
+        (None, None) => None,
+        _ => Some(Divergence {
+            worst_index: worst.map(|(i, _)| i).unwrap_or(0),
+            max_abs,
+            max_rel,
+            max_ulp,
+            len_mismatch,
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The canonical divergent pair: reordered f32 summation.  Summing
+    /// `[2^24, 1, 1, 1, 1]` forward loses every `+1` (2^24 absorbs
+    /// them); summing in reverse keeps all four.  Deterministic — no RNG.
+    fn reordered_sums() -> (f32, f32) {
+        let xs = [16_777_216.0f32, 1.0, 1.0, 1.0, 1.0];
+        let fwd = xs.iter().fold(0.0f32, |s, &x| s + x);
+        let rev = xs.iter().rev().fold(0.0f32, |s, &x| s + x);
+        (fwd, rev)
+    }
+
+    #[test]
+    fn reordered_summation_caught_by_ulp_and_rel_passes_loose_abs() {
+        let (fwd, rev) = reordered_sums();
+        assert_ne!(fwd, rev, "the pair must actually diverge");
+        // a loose absolute budget hides it...
+        assert!(TolerancePolicy::new(10.0, 0.0, 0).accepts(fwd, rev));
+        // ...but a tight ULP or relative budget catches it
+        assert!(!TolerancePolicy::new(0.0, 0.0, 1).accepts(fwd, rev));
+        assert!(!TolerancePolicy::new(0.0, 1e-8, 0).accepts(fwd, rev));
+        // and compare() reports the measured drift
+        let d = compare(&[fwd], &[rev], TolerancePolicy::exact()).unwrap();
+        assert_eq!(d.worst_index, 0);
+        assert_eq!(d.max_abs, 4.0);
+        assert_eq!(d.max_ulp, 2);
+        assert!(d.max_rel > 0.0 && d.max_rel < 1e-6);
+    }
+
+    #[test]
+    fn policy_parsing_round_trips() {
+        for p in [
+            TolerancePolicy::new(1e-4, 1e-4, 1024),
+            TolerancePolicy::new(0.000001, 0.25, 0),
+            TolerancePolicy::exact(),
+        ] {
+            let round = TolerancePolicy::parse(&p.to_string()).unwrap();
+            assert_eq!(round, p, "round-trip through '{p}'");
+        }
+        // any field order, omitted fields strict
+        let p = TolerancePolicy::parse("ulp=8,abs=0.5").unwrap();
+        assert_eq!(p, TolerancePolicy::new(0.5, 0.0, 8));
+        assert!(TolerancePolicy::parse("abs=1e-3,sigma=2").is_err());
+        assert!(TolerancePolicy::parse("abs").is_err());
+    }
+
+    #[test]
+    fn ulp_distance_basics() {
+        assert_eq!(ulp_distance(1.0, 1.0), 0);
+        assert_eq!(ulp_distance(0.0, -0.0), 0);
+        assert_eq!(ulp_distance(1.0, f32::from_bits(1.0f32.to_bits() + 1)), 1);
+        // counts through zero for opposite signs
+        assert!(ulp_distance(-1.0, 1.0) > 1_000_000);
+        assert_eq!(ulp_distance(f32::NAN, 1.0), u64::MAX);
+    }
+
+    #[test]
+    fn nan_and_zero_semantics() {
+        let p = TolerancePolicy::new(1e-6, 1e-6, 4);
+        assert!(p.accepts(f32::NAN, f32::NAN));
+        assert!(!p.accepts(f32::NAN, 0.0));
+        assert!(p.accepts(0.0, -0.0));
+    }
+
+    #[test]
+    fn table_overrides_beat_builtins_and_integers_are_exact() {
+        let mut t = ToleranceTable::new();
+        let builtin = t.policy(DType::F32, OpClass::Gemm);
+        assert!(builtin.rel > 0.0);
+        t.set(DType::F32, OpClass::Gemm, TolerancePolicy::exact());
+        assert_eq!(t.policy(DType::F32, OpClass::Gemm), TolerancePolicy::exact());
+        // untouched cells keep their defaults
+        assert_eq!(t.policy(DType::F32, OpClass::Reduction), TolerancePolicy::new(1e-5, 1e-5, 128));
+        assert_eq!(t.policy(DType::I32, OpClass::Gemm), TolerancePolicy::exact());
+        // uniform tables answer the same policy everywhere
+        let u = ToleranceTable::uniform(TolerancePolicy::new(0.5, 0.0, 0));
+        assert_eq!(u.policy(DType::U8, OpClass::Elementwise).abs, 0.5);
+        assert_eq!(u.policy(DType::F32, OpClass::Gemm).abs, 0.5);
+    }
+
+    #[test]
+    fn op_class_classification() {
+        use crate::util::gen::random_graph;
+        use crate::util::XorShift;
+        let mut g = Graph::new("t");
+        let x = g.input_image(1, 3, 8, 8);
+        let r = g.relu(x);
+        assert_eq!(OpClass::of_graph(&g), OpClass::Elementwise);
+        let m = g.max_pool(r, 2, 2, 0);
+        assert_eq!(OpClass::of_graph(&g), OpClass::Reduction);
+        g.conv(m, 4, 3, 1, 1, 1);
+        assert_eq!(OpClass::of_graph(&g), OpClass::Gemm);
+        // generated graphs always classify (no panic, total over ops)
+        for seed in 0..20u64 {
+            let _ = OpClass::of_graph(&random_graph(&mut XorShift::new(seed)));
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Audit workloads: the fixed example networks every sweep always runs,
+//! plus seeded random modules drawn from the shared generator
+//! ([`crate::util::gen`]) — the same stream the property tests use, so a
+//! seed printed by an [`super::AuditFinding`] reproduces under
+//! `proptests`-style debugging too.
+
+use crate::exec::kernelbench::fig3_cnn_module;
+use crate::framework::Module;
+use crate::util::gen::random_module;
+use crate::util::XorShift;
+
+/// Offset folded into generated-workload seeds so the audit's stream
+/// never aliases a proptest stream drawn from the same small integers.
+const AUDIT_SEED_SALT: u64 = 0xA0D1_7000;
+
+/// One network under audit.
+pub struct Workload {
+    /// Stable name (`mini-cnn`, `rand-3`, ...) — finding/report key.
+    pub name: String,
+    /// Generator seed for random workloads (`None` for fixed examples);
+    /// the reproduction handle recorded on every finding.
+    pub seed: Option<u64>,
+    /// The framework module to extract and sweep.
+    pub module: Module,
+    /// Input shape the module was built for.
+    pub input_shape: Vec<usize>,
+}
+
+impl Workload {
+    /// Seed for this workload's input tensor: derived from the workload
+    /// seed so inputs are deterministic but distinct per workload.
+    pub fn input_seed(&self) -> u64 {
+        self.seed.unwrap_or(0).wrapping_mul(31).wrapping_add(999)
+    }
+}
+
+/// The fixed examples: hand-picked shapes that pin the op classes the
+/// tolerance table distinguishes (elementwise chains, reductions, GEMM)
+/// without depending on any generator drift.
+pub fn fixed_workloads() -> Vec<Workload> {
+    let (fig3, fig3_shape) = fig3_cnn_module();
+    vec![
+        Workload {
+            name: "mini-cnn".into(),
+            seed: None,
+            module: Module::Sequential(vec![
+                Module::conv2d(3, 8, 3, 1, 1, 41),
+                Module::batch_norm(8),
+                Module::ReLU,
+                Module::MaxPool2d { k: 2, stride: 2, pad: 0 },
+                Module::Flatten,
+                Module::linear(8 * 8 * 8, 10, 42),
+                Module::Softmax,
+            ]),
+            input_shape: vec![1, 3, 16, 16],
+        },
+        Workload { name: "fig3-cnn".into(), seed: None, module: fig3, input_shape: fig3_shape },
+        Workload {
+            name: "mlp".into(),
+            seed: None,
+            module: Module::Sequential(vec![
+                Module::Flatten,
+                Module::linear(64, 32, 3),
+                Module::ReLU,
+                Module::linear(32, 10, 4),
+            ]),
+            input_shape: vec![2, 1, 8, 8],
+        },
+    ]
+}
+
+/// `seeds` generated workloads (`rand-0` .. `rand-{seeds-1}`), one per
+/// seed, drawn through [`random_module`].
+pub fn random_workloads(seeds: u64) -> Vec<Workload> {
+    (0..seeds)
+        .map(|seed| {
+            let mut rng = XorShift::new(seed ^ AUDIT_SEED_SALT);
+            let (module, input_shape) = random_module(&mut rng);
+            Workload { name: format!("rand-{seed}"), seed: Some(seed), module, input_shape }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::{install_default, Tensor};
+
+    #[test]
+    fn fixed_workloads_forward_cleanly() {
+        let reg = install_default();
+        for w in fixed_workloads() {
+            let x = Tensor::randn(&w.input_shape, w.input_seed(), 0.5);
+            let y = w.module.forward(&reg, &x).unwrap();
+            assert!(!y.shape.is_empty(), "{}", w.name);
+        }
+    }
+
+    #[test]
+    fn random_workloads_are_deterministic_and_named() {
+        let a = random_workloads(3);
+        let b = random_workloads(3);
+        assert_eq!(a.len(), 3);
+        for (wa, wb) in a.iter().zip(&b) {
+            assert_eq!(wa.name, wb.name);
+            assert_eq!(wa.input_shape, wb.input_shape);
+            assert_eq!(wa.input_seed(), wb.input_seed());
+        }
+        assert_eq!(a[2].name, "rand-2");
+        assert_eq!(a[2].seed, Some(2));
+    }
+}

@@ -14,6 +14,8 @@
 
 use std::collections::BTreeMap;
 
+use anyhow::bail;
+
 use crate::framework::dispatcher::Attrs;
 use crate::framework::ops_fast::{conv2d_fast, im2col_len, linear_fast};
 use crate::framework::{install_default, DeviceType, Module, Tensor};
@@ -234,9 +236,58 @@ pub fn bench_json(rows: &[BenchRow], smoke: bool) -> Json {
     Json::Obj(top)
 }
 
-/// Write the bench document to `path`.
+/// Validate a `BENCH_*.json` document against the schema the perf
+/// trajectory depends on: the contract keys exist, the mode is one the
+/// suite can produce, and every row carries a real (non-zero) timing.
+///
+/// `write_bench_json` runs this before writing, so a stale or truncated
+/// recording can never be (re)committed silently — the trap that left
+/// earlier `BENCH_*.json` files with zeroed timings after a schema drift.
+pub fn validate_bench_json(doc: &Json) -> Result<()> {
+    if doc.get("bench").and_then(Json::as_str).is_none() {
+        bail!("bench json: missing string key 'bench'");
+    }
+    match doc.get("mode").and_then(Json::as_str) {
+        Some("smoke") | Some("full") => {}
+        other => bail!("bench json: 'mode' must be smoke|full, got {other:?}"),
+    }
+    let speedup = doc
+        .get("conv2d_speedup")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("bench json: missing numeric 'conv2d_speedup'"))?;
+    if speedup.is_nan() || speedup <= 0.0 {
+        bail!("bench json: conv2d_speedup must be > 0, got {speedup}");
+    }
+    let rows = doc
+        .get("rows")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("bench json: missing array 'rows'"))?;
+    if rows.is_empty() {
+        bail!("bench json: 'rows' is empty");
+    }
+    for (i, row) in rows.iter().enumerate() {
+        let op = row.get("op").and_then(Json::as_str).unwrap_or("");
+        if op.is_empty() {
+            bail!("bench json: row {i} has no 'op' name");
+        }
+        for key in ["bytes", "allocs_per_run"] {
+            if row.get(key).and_then(Json::as_f64).is_none() {
+                bail!("bench json: row '{op}' missing numeric '{key}'");
+            }
+        }
+        match row.get("ns_per_iter").and_then(Json::as_f64) {
+            Some(ns) if ns > 0.0 => {}
+            got => bail!("bench json: row '{op}' has stale/zero ns_per_iter ({got:?})"),
+        }
+    }
+    Ok(())
+}
+
+/// Write the bench document to `path` (schema-validated first).
 pub fn write_bench_json(path: &std::path::Path, rows: &[BenchRow], smoke: bool) -> Result<()> {
-    std::fs::write(path, bench_json(rows, smoke).to_string() + "\n")?;
+    let doc = bench_json(rows, smoke);
+    validate_bench_json(&doc)?;
+    std::fs::write(path, doc.to_string() + "\n")?;
     Ok(())
 }
 
@@ -270,5 +321,48 @@ mod tests {
         assert!(arr[0].get("allocs_per_run").is_some());
         // and the document round-trips through the parser
         assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn validation_accepts_live_rows_and_rejects_stale_ones() {
+        let good = vec![
+            BenchRow { op: "conv2d_64x64.naive".into(), bytes: 10, ns_per_iter: 50.0, allocs_per_run: 3 },
+            BenchRow { op: "conv2d_64x64.fast.t1".into(), bytes: 10, ns_per_iter: 5.0, allocs_per_run: 0 },
+        ];
+        validate_bench_json(&bench_json(&good, true)).expect("live rows validate");
+
+        // a zeroed timing is the stale-seed signature: rejected (the conv
+        // rows stay live so the speedup check passes and the row check fires)
+        let mut stale = good.clone();
+        stale.push(BenchRow {
+            op: "planner.fig3_cnn".into(),
+            bytes: 128,
+            ns_per_iter: 0.0,
+            allocs_per_run: 0,
+        });
+        let err = validate_bench_json(&bench_json(&stale, true)).unwrap_err();
+        assert!(err.to_string().contains("ns_per_iter"), "{err}");
+
+        // missing rows / wrong mode are schema errors too
+        assert!(validate_bench_json(&bench_json(&[], true)).is_err());
+        let mut doc = bench_json(&good, true);
+        if let Json::Obj(o) = &mut doc {
+            o.insert("mode".into(), Json::Str("warp".into()));
+        }
+        assert!(validate_bench_json(&doc).is_err());
+    }
+
+    #[test]
+    fn write_bench_json_refuses_a_stale_document() {
+        let stale = vec![BenchRow {
+            op: "planner.fig3_cnn".into(),
+            bytes: 0,
+            ns_per_iter: 0.0,
+            allocs_per_run: 0,
+        }];
+        let path = std::env::temp_dir().join("sol_bench_validate_test.json");
+        let _ = std::fs::remove_file(&path);
+        assert!(write_bench_json(&path, &stale, true).is_err());
+        assert!(!path.exists(), "nothing must be written on validation failure");
     }
 }

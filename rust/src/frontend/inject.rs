@@ -180,6 +180,17 @@ impl SolModel {
             input.with_f32(|xv| exec.run_into(refresh, xv, &mut out))??;
             return Ok(Tensor::from_f32(out, &exec.output_shape()));
         }
+        self.forward_on(input, &self.kernels)
+    }
+
+    /// Per-op evaluation of the extracted DAG through an *explicit*
+    /// kernel registry, always bypassing the arena fast path.  This is
+    /// `forward`'s fallback made steerable: the audit engine
+    /// ([`crate::audit`]) drives it with a pure naive registry
+    /// (`install_default()`) to pin the naive execution path even on
+    /// arena-capable targets, whose `forward` would otherwise route
+    /// through the fused executor or the fast kernel set.
+    pub fn forward_on(&self, input: &Tensor, kernels: &OperatorRegistry) -> Result<Tensor> {
         let pmap: HashMap<NodeId, &Vec<(String, Tensor)>> =
             self.params.iter().map(|(id, ps)| (*id, ps)).collect();
         let mut values: Vec<Option<Tensor>> = vec![None; self.graph.nodes.len()];
@@ -192,7 +203,7 @@ impl SolModel {
                         .iter()
                         .map(|&i| values[i].clone().ok_or_else(|| anyhow!("missing value")))
                         .collect::<Result<_>>()?;
-                    self.eval(op, n.id, &ins, &pmap)?
+                    self.eval(op, n.id, &ins, &pmap, kernels)?
                 }
             };
             values[n.id] = Some(val);
@@ -208,6 +219,7 @@ impl SolModel {
         id: NodeId,
         ins: &[Tensor],
         pmap: &HashMap<NodeId, &Vec<(String, Tensor)>>,
+        r: &OperatorRegistry,
     ) -> Result<Tensor> {
         let dev = crate::framework::device::DeviceType::Cpu;
         let param = |k: &str| -> Result<Tensor> {
@@ -216,7 +228,6 @@ impl SolModel {
                 .map(|(_, t)| t.clone())
                 .ok_or_else(|| anyhow!("node {id}: missing param {k}"))
         };
-        let r = &self.kernels;
         match op {
             Op::Conv2d { stride, pad, groups, .. } => {
                 let a = Attrs::new()

@@ -56,7 +56,12 @@
 //! * [`deploy`] — deployment mode: framework-free inference bundles.
 //! * [`metrics`] — timers, named counters (compile-cache hit/miss,
 //!   per-pass run counts) and table formatting.
+//! * [`audit`] — the cross-backend consistency audit: differential
+//!   testing of every backend × execution path against the framework
+//!   reference under per-op-class tolerance policies (`sol audit`, the
+//!   CI divergence gate).
 
+pub mod audit;
 pub mod backends;
 pub mod deploy;
 pub mod devsim;

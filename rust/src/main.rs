@@ -13,6 +13,9 @@
 //! * `serve-multi` — multi-tenant serving: N tenants × M nets concurrently
 //!   across all devices through one bounded-cache `ServingSession`
 //! * `effort`    — the §VI-A programming-effort table measured on this repo
+//! * `audit`     — cross-backend consistency sweep: every backend ×
+//!   execution path differentially tested against the framework reference
+//!   (exit code 2 on any above-tolerance divergence — the CI gate)
 
 use std::collections::HashMap;
 
@@ -26,9 +29,9 @@ static ALLOC: sol::util::alloc::CountingAllocator = sol::util::alloc::CountingAl
 use sol::devsim::DeviceId;
 use sol::exec::calibrate;
 use sol::exec::fig3::{fig3_grid, headline_speedups};
+use sol::exec::solrun::OffloadMode;
 use sol::metrics::{format_table, Timer};
 use sol::passes::{KernelOrigin, Step};
-use sol::exec::solrun::OffloadMode;
 use sol::runtime::pjrt::{HostTensor, PjrtEngine};
 use sol::session::{EvictionPolicy, Phase, ServingConfig, ServingSession, Session};
 use sol::util::XorShift;
@@ -401,6 +404,47 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `sol audit` — the cross-backend consistency sweep: every registered
+/// backend × execution path over fixed + seeded workloads, all outputs
+/// compared pairwise against the framework reference.  Exits with code 2
+/// on any above-tolerance finding (the CI divergence gate).
+fn cmd_audit(flags: &HashMap<String, String>) -> Result<()> {
+    use sol::audit::{
+        AuditConfig, AuditEngine, ExecPath, FaultSpec, TolerancePolicy, ToleranceTable,
+    };
+    let mut cfg = AuditConfig::default();
+    if let Some(s) = flags.get("seeds") {
+        cfg.seeds = s.parse()?;
+    }
+    if let Some(t) = flags.get("tol") {
+        // one uniform policy for every dtype × op class
+        cfg.table = ToleranceTable::uniform(TolerancePolicy::parse(t)?);
+    }
+    if let Some(f) = flags.get("fault") {
+        // test-only self-check hook: `--fault DEVICE:PATH:OFFSET`
+        // perturbs one variant's output so the gate demonstrably trips
+        let parts: Vec<&str> = f.split(':').collect();
+        let &[dev, path, offset] = parts.as_slice() else {
+            bail!("--fault wants DEVICE:PATH:OFFSET, got '{f}'");
+        };
+        cfg.fault = Some(FaultSpec {
+            device: parse_device(dev)?,
+            path: ExecPath::parse(path)?,
+            offset: offset.parse()?,
+        });
+    }
+    let report = AuditEngine::new(cfg).run()?;
+    if flags.contains_key("json") {
+        println!("{}", report.to_json().to_string());
+    } else {
+        print!("{}", report.summary());
+    }
+    if !report.passed() {
+        std::process::exit(2);
+    }
+    Ok(())
+}
+
 fn cmd_effort() {
     // measured lines of code per component, like §VI-A
     let count = |dir: &str| -> usize {
@@ -434,7 +478,7 @@ fn cmd_effort() {
 }
 
 const HELP: &str = "sol — SOL middleware reproduction
-USAGE: sol <devices|optimize|kernels|fig3|train-mlp|deploy|serve|bench|effort|help> [--flags]
+USAGE: sol <devices|optimize|kernels|fig3|train-mlp|deploy|serve|bench|audit|effort|help> [--flags]
   optimize  --net resnet18 --device cpu [--batch 1]
   kernels   --net resnet18 --device aurora [--count 2]
   fig3      [--training] [--calibrate]
@@ -442,7 +486,9 @@ USAGE: sol <devices|optimize|kernels|fig3|train-mlp|deploy|serve|bench|effort|he
   deploy    [--out DIR]
   serve     [--bundle DIR] [--requests 16]
   serve-multi [--tenants 4] [--nets 6] [--requests 64] [--cache 16] [--policy lru|cost]
-  bench     [--json] [--out BENCH_4.json] [--smoke]   kernel/planner microbenches";
+  bench     [--json] [--out BENCH_4.json] [--smoke]   kernel/planner microbenches
+  audit     [--seeds 8] [--json] [--tol abs=A,rel=R,ulp=U]   cross-backend differential
+            consistency sweep; exits 2 on any finding (the CI divergence gate)";
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -459,6 +505,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&flags)?,
         "serve-multi" => cmd_serve_multi(&flags)?,
         "bench" => cmd_bench(&flags)?,
+        "audit" => cmd_audit(&flags)?,
         "effort" => cmd_effort(),
         _ => println!("{HELP}"),
     }

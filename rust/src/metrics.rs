@@ -19,6 +19,10 @@
 //! | `arena.slots`              | most slots any memory plan needed (gauge: high-water mark) |
 //! | `arena.reuse_hits`         | planner slot assignments served by reusing a freed slot |
 //! | `exec.allocs_per_run`      | heap allocations of the last arena-executor run (gauge; 0 unless a counting allocator is installed — see `util::alloc`) |
+//! | `audit.workloads`          | workloads swept by the cross-backend audit (`crate::audit`, cumulative) |
+//! | `audit.variants`           | executed (device × path) variant runs across audit sweeps |
+//! | `audit.comparisons`        | pairwise output comparisons the audits performed |
+//! | `audit.findings`           | above-tolerance divergences recorded (0 on healthy backends) |
 //!
 //! Per-tenant counters are registered on first `ServingSession::tenant()`
 //! call for that name and appear in [`counters_snapshot`] from then on —

@@ -194,6 +194,22 @@ impl Session {
         CompileOutcome { model, key, cache_hit: hit }
     }
 
+    /// Compile `graph` for **every** device in the registry through the
+    /// compile cache — the audit engine's sweep ([`crate::audit`]).
+    /// Each device's artifact is keyed by its own precomputed
+    /// default-pipeline fingerprint, so two devices never alias (their
+    /// backends' pipelines fingerprint differently even when the pass
+    /// lists agree: flavor, layout and pass set are all hashed) and
+    /// repeating the sweep over a warm session is all cache hits.
+    /// Results come back in registry device order.
+    pub fn compile_all_devices(&self, graph: &Graph) -> Vec<(DeviceId, CompileOutcome)> {
+        self.registry
+            .devices()
+            .into_iter()
+            .map(|device| (device, self.compile_traced(graph, device)))
+            .collect()
+    }
+
     /// The pass manager running this registry's realized pipeline for
     /// `device` under the session's default configuration.  The pipeline
     /// is constructed once: `Pipeline::manager` pins its names into the
@@ -463,6 +479,28 @@ mod tests {
         assert_eq!(first.key, second.key);
         assert!(Arc::ptr_eq(&first.model, &second.model));
         assert!(s.cache().peek(&first.key).is_some());
+    }
+
+    #[test]
+    fn compile_all_devices_sweeps_the_registry_and_reuses_the_cache() {
+        let s = Session::new();
+        let g = NetId::Squeezenet1_1.build(1);
+        let first = s.compile_all_devices(&g);
+        assert_eq!(first.len(), s.registry().devices().len());
+        assert!(first.iter().all(|(_, o)| !o.cache_hit));
+        // per-device fingerprints keep the content addresses apart
+        for (i, (da, a)) in first.iter().enumerate() {
+            for (db, b) in first.iter().skip(i + 1) {
+                assert_ne!(a.key, b.key, "{da:?} aliased {db:?}");
+            }
+        }
+        // a repeat sweep over the warm session is all hits, same Arcs
+        let second = s.compile_all_devices(&g);
+        assert!(second.iter().all(|(_, o)| o.cache_hit));
+        for ((_, a), (_, b)) in first.iter().zip(&second) {
+            assert!(Arc::ptr_eq(&a.model, &b.model));
+        }
+        assert_eq!(s.cache().misses() as usize, first.len());
     }
 
     #[test]

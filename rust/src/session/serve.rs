@@ -413,12 +413,16 @@ impl ServingSession {
             "cache: {}/{} resident, {} hits / {} misses / {} evictions\n",
             s.len, cap, s.hits, s.misses, s.evictions
         ));
-        // memory-planner / fast-executor behaviour of the process (the
-        // `arena.*` gauges are high-water marks across every compile the
-        // tenants drove; `exec.allocs_per_run` is the last measured run)
+        // memory-planner / fast-executor / consistency-audit behaviour of
+        // the process (the `arena.*` gauges are high-water marks across
+        // every compile the tenants drove; `exec.allocs_per_run` is the
+        // last measured run; `audit.*` are cumulative sweep totals — a
+        // nonzero `audit.findings` means some backend pair diverged)
         let mem: Vec<String> = metrics::counters_snapshot()
             .into_iter()
-            .filter(|(k, _)| k.starts_with("arena.") || k.starts_with("exec."))
+            .filter(|(k, _)| {
+                k.starts_with("arena.") || k.starts_with("exec.") || k.starts_with("audit.")
+            })
             .map(|(k, v)| format!("{k}={v}"))
             .collect();
         if !mem.is_empty() {

@@ -1,0 +1,94 @@
+//! Seeded random workload generators shared by the property tests, the
+//! cross-backend audit engine ([`crate::audit`]) and future fuzzing.
+//!
+//! Extracted from `rust/tests/proptests.rs` (which re-imports them): one
+//! generator, one RNG call sequence, so a failing seed printed by any
+//! consumer reproduces the exact same workload everywhere.  Generation is
+//! deterministic in the [`XorShift`] state alone — no global state, no
+//! time, no thread identity.
+
+use crate::framework::Module;
+use crate::ir::Graph;
+use crate::util::XorShift;
+
+/// Random small CNN as both a framework module and its input shape.
+///
+/// Draws 1–4 conv blocks (optionally batch-norm/ReLU-capped, optionally
+/// pooled) over a 1–3 channel image, closed by Flatten + Linear — small
+/// enough to evaluate naively in a debug-build test loop, varied enough
+/// to exercise elision, fusion, pooling and shape propagation.
+pub fn random_module(rng: &mut XorShift) -> (Module, Vec<usize>) {
+    let c0 = *rng.pick(&[1usize, 2, 3]);
+    let hw = *rng.pick(&[8usize, 12, 16]);
+    let mut layers = Vec::new();
+    let mut c = c0;
+    let mut size = hw;
+    let depth = rng.range(1, 4);
+    for li in 0..depth {
+        let cout = *rng.pick(&[4usize, 6, 8]);
+        layers.push(Module::conv2d(c, cout, 3, 1, 1, 100 + li as u64));
+        c = cout;
+        match rng.below(3) {
+            0 => layers.push(Module::ReLU),
+            1 => {
+                layers.push(Module::batch_norm(c));
+                layers.push(Module::ReLU);
+            }
+            _ => {}
+        }
+        if size >= 8 && rng.below(2) == 0 {
+            layers.push(Module::MaxPool2d { k: 2, stride: 2, pad: 0 });
+            size /= 2;
+        }
+    }
+    layers.push(Module::Flatten);
+    layers.push(Module::linear(c * size * size, 5, 7));
+    (Module::Sequential(layers), vec![1, c0, hw, hw])
+}
+
+/// Random IR graph (2–8 nodes over a 16×16 input image) — the pass-level
+/// counterpart of [`random_module`] for consumers that operate on the IR
+/// directly (elision/planner/cache-key property tests).
+pub fn random_graph(rng: &mut XorShift) -> Graph {
+    let mut g = Graph::new("prop");
+    let mut x = g.input_image(*rng.pick(&[1usize, 2]), *rng.pick(&[3usize, 8]), 16, 16);
+    for _ in 0..rng.range(2, 8) {
+        x = match rng.below(6) {
+            0 => g.conv(x, *rng.pick(&[4usize, 8, 16]), 3, 1, 1, 1),
+            1 => g.relu(x),
+            2 => g.batch_norm(x),
+            3 if g.node(x).meta.spatial().0 >= 4 => g.max_pool(x, 2, 2, 0),
+            4 => g.dropout(x),
+            _ => g.relu(x),
+        };
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic_in_the_seed() {
+        for seed in 0..10u64 {
+            let (ga, gb) =
+                (random_graph(&mut XorShift::new(seed)), random_graph(&mut XorShift::new(seed)));
+            assert_eq!(ga.nodes.len(), gb.nodes.len(), "seed {seed}");
+            assert_eq!(ga.flops(), gb.flops(), "seed {seed}");
+            let (ma, sa) = random_module(&mut XorShift::new(seed));
+            let (mb, sb) = random_module(&mut XorShift::new(seed));
+            assert_eq!(sa, sb, "seed {seed}");
+            assert_eq!(ma.parameters().len(), mb.parameters().len(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn random_modules_extract_and_shape_check() {
+        for seed in 0..10u64 {
+            let (m, shape) = random_module(&mut XorShift::new(seed));
+            let (g, _) = crate::frontend::extract_graph(&m, &shape, "gen").unwrap();
+            assert_eq!(g.node(g.output()).meta.shape()[1], 5, "seed {seed}: linear(_, 5)");
+        }
+    }
+}

@@ -2,6 +2,7 @@
 
 pub mod alloc;
 pub mod fnv;
+pub mod gen;
 pub mod json;
 pub mod par;
 pub mod rng;

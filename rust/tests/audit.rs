@@ -1,0 +1,118 @@
+//! Tier-1 acceptance tests for the cross-backend consistency audit
+//! (`sol::audit`): the differential sweep is clean on the shipped
+//! backends, covers every registered device × capability path, reuses
+//! the session's compile cache across sweeps, publishes `audit.*`
+//! metrics into the serving report — and, crucially, an intentionally
+//! perturbed kernel output IS caught, with a finding that names the
+//! device pair and both pipeline fingerprints.
+
+use sol::audit::{AuditConfig, AuditEngine, ExecPath, FaultSpec};
+use sol::devsim::DeviceId;
+use sol::session::{ServingConfig, ServingSession};
+
+/// The full sweep (fixed workloads + a few seeds) reports zero findings
+/// on the shipped backends, and its grid runs every registry device
+/// through the naive path plus each capability-advertised path.
+#[test]
+fn full_sweep_is_clean_and_covers_every_device() {
+    let engine = AuditEngine::new(AuditConfig { seeds: 4, ..AuditConfig::default() });
+    let report = engine.run().expect("sweep runs");
+    assert!(report.passed(), "unexpected findings:\n{}", report.summary());
+
+    assert_eq!(report.devices, engine.session().registry().devices());
+    for device in &report.devices {
+        let caps = engine.session().registry().capabilities_for(*device);
+        let paths: Vec<ExecPath> = report
+            .grid
+            .iter()
+            .filter(|v| v.device == Some(*device))
+            .map(|v| v.path)
+            .collect();
+        assert!(paths.contains(&ExecPath::Naive), "{device:?} must run naive");
+        assert_eq!(paths.contains(&ExecPath::Arena), caps.arena_exec, "{device:?} arena");
+        assert_eq!(paths.contains(&ExecPath::Offload), caps.offload, "{device:?} offload");
+    }
+
+    // 3 fixed workloads + 4 seeded ones, every grid slot executed
+    assert_eq!(report.workloads.len(), 7);
+    assert_eq!(report.skipped, 0, "no grid slot may silently skip on shipped backends");
+    let runs_per_workload = report.grid.len();
+    assert_eq!(report.variants, runs_per_workload * report.workloads.len());
+    // all outputs (variants + the framework reference) compared pairwise
+    let outputs = runs_per_workload + 1;
+    assert_eq!(report.comparisons, report.workloads.len() * outputs * (outputs - 1) / 2);
+}
+
+/// The acceptance self-test: perturb one (device, path) variant's output
+/// and the audit must fail, with findings that name the diverging device
+/// pair and carry both real pipeline fingerprints.
+#[test]
+fn injected_fault_is_caught_and_findings_name_the_device_pair() {
+    let fault = FaultSpec { device: DeviceId::TitanV, path: ExecPath::Offload, offset: 0.25 };
+    let engine =
+        AuditEngine::new(AuditConfig { seeds: 0, fault: Some(fault), ..Default::default() });
+    let report = engine.run().expect("sweep runs");
+    assert!(!report.passed(), "the perturbed kernel must be caught");
+
+    let faulted = |v: &sol::audit::Variant| {
+        v.device == Some(DeviceId::TitanV) && v.path == ExecPath::Offload
+    };
+    for f in &report.findings {
+        // only the faulted variant diverges; every finding involves it
+        assert!(faulted(&f.left) || faulted(&f.right), "stray finding: {f}");
+        // and the drift is the injected offset, not generator noise
+        assert!(f.max_abs > 0.2 && f.max_abs < 0.3, "unexpected drift in {f}");
+        assert_eq!(f.worst_index, 0, "the fault hits element 0");
+    }
+    // the faulted device diverges from the framework reference...
+    assert!(report.findings.iter().any(|f| f.left.device.is_none()));
+    // ...and from a concrete second device (a device *pair*)
+    let pair = report
+        .findings
+        .iter()
+        .find(|f| f.left.device.is_some() && f.right.device.is_some())
+        .expect("a device-pair finding");
+    assert_ne!(pair.left.device, pair.right.device);
+    // both sides carry their real (nonzero) pipeline fingerprints, and
+    // the human rendering names the pair
+    assert_ne!(pair.left.fingerprint, 0);
+    assert_ne!(pair.right.fingerprint, 0);
+    let rendered = pair.to_json().to_string();
+    assert!(rendered.contains("TitanV"), "{rendered}");
+    let text = pair.to_string();
+    assert!(text.contains("TitanV/offload@"), "{text}");
+
+    // the report JSON flips to fail and serializes the findings
+    let json = report.to_json();
+    assert_eq!(json.get("status").and_then(sol::util::Json::as_str), Some("fail"));
+    assert!(!json.get("findings").and_then(sol::util::Json::as_arr).unwrap().is_empty());
+}
+
+/// Repeat sweeps over one engine hit the session's content-addressed
+/// compile cache instead of recompiling the workload set.
+#[test]
+fn repeat_sweeps_reuse_the_compile_cache() {
+    let engine = AuditEngine::new(AuditConfig { seeds: 1, ..Default::default() });
+    engine.run().expect("first sweep");
+    let (hits0, misses0) = (engine.session().cache().hits(), engine.session().cache().misses());
+    assert!(misses0 > 0, "the first sweep compiles");
+    engine.run().expect("second sweep");
+    assert_eq!(engine.session().cache().misses(), misses0, "second sweep recompiles nothing");
+    assert!(engine.session().cache().hits() > hits0, "second sweep is served from cache");
+}
+
+/// Audit sweeps publish cumulative `audit.*` counters, and the serving
+/// report surfaces them next to the `arena.*` / `exec.*` gauges.
+#[test]
+fn audit_metrics_flow_into_the_serving_report() {
+    let engine = AuditEngine::new(AuditConfig { seeds: 0, ..Default::default() });
+    let report = engine.run().expect("sweep runs");
+    assert!(sol::metrics::counter("audit.workloads").get() >= report.workloads.len() as u64);
+    assert!(sol::metrics::counter("audit.variants").get() >= report.variants as u64);
+    assert!(sol::metrics::counter("audit.comparisons").get() >= report.comparisons as u64);
+
+    let serving = ServingSession::new(ServingConfig::default());
+    let out = serving.serving_report();
+    assert!(out.contains("audit.workloads="), "serving report must surface audit metrics:\n{out}");
+    assert!(out.contains("audit.findings="), "{out}");
+}

@@ -1,0 +1,95 @@
+//! Golden-file test for `sol audit --json`: the machine-readable audit
+//! report is the CI divergence gate's interface, so its shape (keys,
+//! device list, variant grid, tolerance policies, deterministic
+//! counts) must change deliberately.  Golden comparison is over *parsed*
+//! JSON, not raw text — formatting is free to evolve, values are not.
+//!
+//! To bless a new golden after an intentional change:
+//! `BLESS=1 cargo test --test cli_audit`.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use sol::util::Json;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/sol_audit.json")
+}
+
+fn run_audit(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_sol"))
+        .arg("audit")
+        .args(args)
+        .output()
+        .expect("run sol audit")
+}
+
+#[test]
+fn sol_audit_json_matches_golden() {
+    let out = run_audit(&["--seeds", "2", "--json"]);
+    assert!(out.status.success(), "sol audit failed: {out:?}");
+    let stdout = String::from_utf8(out.stdout).expect("utf8 stdout");
+    if std::env::var_os("BLESS").is_some() {
+        std::fs::write(golden_path(), &stdout).expect("bless golden");
+        return;
+    }
+    let got = Json::parse(&stdout).expect("audit stdout parses as JSON");
+    let want = Json::parse(&std::fs::read_to_string(golden_path()).expect("read golden"))
+        .expect("golden parses as JSON");
+    assert_eq!(
+        got, want,
+        "`sol audit --seeds 2 --json` drifted from the golden report \
+         (rust/tests/golden/sol_audit.json) — re-bless with BLESS=1 if intentional"
+    );
+}
+
+#[test]
+fn sol_audit_json_has_the_gate_contract_shape() {
+    // structural sanity independent of the golden values
+    let out = run_audit(&["--seeds", "1", "--json"]);
+    assert!(out.status.success(), "clean sweep must exit 0");
+    let doc = Json::parse(&String::from_utf8(out.stdout).unwrap()).unwrap();
+    let keys = [
+        "audit", "seeds", "devices", "workloads", "grid", "policies", "variants", "skipped",
+        "comparisons", "findings", "status",
+    ];
+    for key in keys {
+        assert!(doc.get(key).is_some(), "missing report key '{key}'");
+    }
+    assert_eq!(doc.get("status").and_then(Json::as_str), Some("pass"));
+    assert_eq!(doc.get("seeds").and_then(Json::as_f64), Some(1.0));
+    let devices = doc.get("devices").and_then(Json::as_arr).unwrap();
+    let grid = doc.get("grid").and_then(Json::as_arr).unwrap();
+    assert!(grid.len() >= devices.len(), "every device runs at least its naive slot");
+    // 3 fixed workloads + 1 seeded
+    assert_eq!(doc.get("workloads").and_then(Json::as_arr).unwrap().len(), 4);
+    assert!(doc.get("findings").and_then(Json::as_arr).unwrap().is_empty());
+}
+
+#[test]
+fn sol_audit_fault_injection_trips_the_gate_with_exit_code_2() {
+    let out = run_audit(&["--seeds", "0", "--json", "--fault", "titanv:offload:0.5"]);
+    assert_eq!(out.status.code(), Some(2), "findings must exit 2 (the CI gate): {out:?}");
+    let doc = Json::parse(&String::from_utf8(out.stdout).unwrap()).unwrap();
+    assert_eq!(doc.get("status").and_then(Json::as_str), Some("fail"));
+    let findings = doc.get("findings").and_then(Json::as_arr).unwrap();
+    assert!(!findings.is_empty());
+    // findings carry the reproduction handle: the device pair with both
+    // pipeline fingerprints, the policy, and the worst-element drift
+    let f = &findings[0];
+    for key in ["workload", "left", "right", "op_class", "policy", "worst_index", "max_abs"] {
+        assert!(f.get(key).is_some(), "finding missing '{key}'");
+    }
+    let sides = [f.get("left").unwrap(), f.get("right").unwrap()];
+    assert!(sides.iter().any(|s| {
+        s.get("device").and_then(Json::as_str) == Some("TitanV")
+            && s.get("path").and_then(Json::as_str) == Some("offload")
+    }));
+    for s in sides {
+        let fp = s.get("fingerprint").and_then(Json::as_str).unwrap();
+        assert_eq!(fp.len(), 16, "fingerprints render as 16 hex digits");
+        if s.get("device").and_then(Json::as_str).is_some() {
+            assert_ne!(fp, "0000000000000000", "device variants carry real fingerprints");
+        }
+    }
+}

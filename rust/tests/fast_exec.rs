@@ -8,7 +8,9 @@
 //! real allocation inside `run` would taint *every* attempt.)
 
 use sol::devsim::DeviceId;
-use sol::exec::kernelbench::{fig3_cnn_module, run_kernel_bench, write_bench_json};
+use sol::exec::kernelbench::{
+    fig3_cnn_module, run_kernel_bench, validate_bench_json, write_bench_json,
+};
 use sol::framework::{install_default, Tensor};
 use sol::frontend::{extract_graph, ArenaExec, SolModel};
 use sol::passes::OptimizeOptions;
@@ -170,6 +172,9 @@ fn bench_smoke_writes_bench_4_json() {
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_4.json");
     write_bench_json(&path, &rows, true).unwrap();
     let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    // the written file must satisfy the recorded-trajectory schema — a
+    // stale seed (zeroed timings, dropped keys) fails here, not in CI diffs
+    validate_bench_json(&doc).expect("written BENCH_4.json validates");
     assert_eq!(doc.get("mode").and_then(Json::as_str), Some("smoke"));
     assert!(doc.get("conv2d_speedup").and_then(Json::as_f64).unwrap() > 0.0);
     let rows_json = doc.get("rows").and_then(Json::as_arr).unwrap();
@@ -178,5 +183,7 @@ fn bench_smoke_writes_bench_4_json() {
         for field in ["op", "bytes", "ns_per_iter", "allocs_per_run"] {
             assert!(r.get(field).is_some(), "missing {field}");
         }
+        let ns = r.get("ns_per_iter").and_then(Json::as_f64).unwrap();
+        assert!(ns > 0.0, "stale row with zero timing: {r:?}");
     }
 }

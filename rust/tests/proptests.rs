@@ -5,46 +5,17 @@
 use sol::devsim::{DeviceId, DeviceMemory, EfficiencyTable};
 use sol::framework::dispatcher::Attrs;
 use sol::framework::ops_fast::register_cpu_fast_kernels;
-use sol::framework::{install_default, DeviceType, Module, Tensor};
+use sol::framework::{install_default, DeviceType, Tensor};
 use sol::frontend::SolModel;
 use sol::ir::{Graph, Op};
 use sol::passes::{elide_relu_maxpool, optimize, OptimizeOptions};
 use sol::runtime::memcpy::{plan_transfers, Transfer, TransferPlan};
 use sol::runtime::queue::{AsyncQueue, VirtualPtr};
 use sol::session::{plan_memory, CacheKey};
+use sol::util::gen::{random_graph, random_module};
 use sol::util::{Json, XorShift};
 
 const CASES: usize = 40;
-
-/// Random small CNN as both a framework module and its input shape.
-fn random_module(rng: &mut XorShift) -> (Module, Vec<usize>) {
-    let c0 = *rng.pick(&[1usize, 2, 3]);
-    let hw = *rng.pick(&[8usize, 12, 16]);
-    let mut layers = Vec::new();
-    let mut c = c0;
-    let mut size = hw;
-    let depth = rng.range(1, 4);
-    for li in 0..depth {
-        let cout = *rng.pick(&[4usize, 6, 8]);
-        layers.push(Module::conv2d(c, cout, 3, 1, 1, 100 + li as u64));
-        c = cout;
-        match rng.below(3) {
-            0 => layers.push(Module::ReLU),
-            1 => {
-                layers.push(Module::batch_norm(c));
-                layers.push(Module::ReLU);
-            }
-            _ => {}
-        }
-        if size >= 8 && rng.below(2) == 0 {
-            layers.push(Module::MaxPool2d { k: 2, stride: 2, pad: 0 });
-            size /= 2;
-        }
-    }
-    layers.push(Module::Flatten);
-    layers.push(Module::linear(c * size * size, 5, 7));
-    (Module::Sequential(layers), vec![1, c0, hw, hw])
-}
 
 /// PROPERTY: for any architecture, SolModel::forward == framework forward.
 #[test]
@@ -82,22 +53,6 @@ fn prop_elision_invariants() {
             "seed {seed}"
         );
     }
-}
-
-fn random_graph(rng: &mut XorShift) -> Graph {
-    let mut g = Graph::new("prop");
-    let mut x = g.input_image(*rng.pick(&[1usize, 2]), *rng.pick(&[3usize, 8]), 16, 16);
-    for _ in 0..rng.range(2, 8) {
-        x = match rng.below(6) {
-            0 => g.conv(x, *rng.pick(&[4usize, 8, 16]), 3, 1, 1, 1),
-            1 => g.relu(x),
-            2 => g.batch_norm(x),
-            3 if g.node(x).meta.spatial().0 >= 4 => g.max_pool(x, 2, 2, 0),
-            4 => g.dropout(x),
-            _ => g.relu(x),
-        };
-    }
-    g
 }
 
 /// PROPERTY: cache keys are name-blind but structure-sighted — a
