@@ -251,12 +251,25 @@ pub fn validate_bench_json(doc: &Json) -> Result<()> {
         Some("smoke") | Some("full") => {}
         other => bail!("bench json: 'mode' must be smoke|full, got {other:?}"),
     }
-    let speedup = doc
-        .get("conv2d_speedup")
-        .and_then(Json::as_f64)
-        .ok_or_else(|| anyhow::anyhow!("bench json: missing numeric 'conv2d_speedup'"))?;
-    if speedup.is_nan() || speedup <= 0.0 {
-        bail!("bench json: conv2d_speedup must be > 0, got {speedup}");
+    // every recorded suite carries at least one headline `*_speedup`
+    // figure (BENCH_4: conv2d_speedup, BENCH_7: batch_speedup), and a
+    // zeroed/NaN one is the stale-seed signature
+    let speedups: Vec<(&str, Option<f64>)> = match doc {
+        Json::Obj(o) => o
+            .iter()
+            .filter(|(k, _)| k.ends_with("_speedup"))
+            .map(|(k, v)| (k.as_str(), v.as_f64()))
+            .collect(),
+        _ => bail!("bench json: document is not an object"),
+    };
+    if speedups.is_empty() {
+        bail!("bench json: no '*_speedup' key (every suite records a headline speedup)");
+    }
+    for (key, v) in speedups {
+        match v {
+            Some(s) if s.is_finite() && s > 0.0 => {}
+            got => bail!("bench json: '{key}' must be a finite number > 0, got {got:?}"),
+        }
     }
     let rows = doc
         .get("rows")
@@ -348,6 +361,36 @@ mod tests {
         let mut doc = bench_json(&good, true);
         if let Json::Obj(o) = &mut doc {
             o.insert("mode".into(), Json::Str("warp".into()));
+        }
+        assert!(validate_bench_json(&doc).is_err());
+    }
+
+    #[test]
+    fn validation_requires_a_positive_headline_speedup() {
+        let good = vec![BenchRow {
+            op: "x".into(),
+            bytes: 1,
+            ns_per_iter: 1.0,
+            allocs_per_run: 0,
+        }];
+        // a document with no *_speedup key at all is rejected...
+        let mut doc = bench_json(&good, true);
+        if let Json::Obj(o) = &mut doc {
+            o.remove("conv2d_speedup");
+        }
+        let err = validate_bench_json(&doc).unwrap_err();
+        assert!(err.to_string().contains("_speedup"), "{err}");
+        // ...a differently named one is accepted (BENCH_7's batch_speedup)...
+        let mut doc = bench_json(&good, true);
+        if let Json::Obj(o) = &mut doc {
+            o.remove("conv2d_speedup");
+            o.insert("batch_speedup".into(), Json::Num(3.5));
+        }
+        validate_bench_json(&doc).expect("batch_speedup validates");
+        // ...and a zeroed one is the stale signature, rejected
+        let mut doc = bench_json(&good, true);
+        if let Json::Obj(o) = &mut doc {
+            o.insert("conv2d_speedup".into(), Json::Num(0.0));
         }
         assert!(validate_bench_json(&doc).is_err());
     }

@@ -12,6 +12,10 @@
 //! * [`kernelbench`] — naive-vs-optimized kernel, planner and
 //!   arena-executor microbenchmarks; source of the `BENCH_*.json`
 //!   perf-trajectory documents (`sol bench --json`).
+//! * [`servebench`] — the serving-spine soak driver: thousands of
+//!   simulated tenants submitting through the batching queue, reported
+//!   as throughput + p50/p95/p99 latency (`sol serve-bench --json`,
+//!   `BENCH_7.json`).
 //!
 //! These modules build *step lists*; the stepping itself is unified
 //! behind [`crate::session::Executor`] (`BaselineExecutor` /
@@ -22,6 +26,7 @@ pub mod baseline;
 pub mod calibrate;
 pub mod fig3;
 pub mod kernelbench;
+pub mod servebench;
 pub mod solrun;
 
 pub use baseline::{baseline_infer_steps, baseline_train_steps, BaselineKind};

@@ -1,0 +1,392 @@
+//! `sol serve-bench` — the serving-spine throughput/latency soak behind
+//! `BENCH_7.json`.
+//!
+//! The bench drives the same artifact two ways and reports the ratio:
+//!
+//! * **sequential baseline** — one thread, one request at a time through
+//!   [`ServedArtifact::run_blocking`] (no queue, no batching): the cost
+//!   model of a naive serving loop.
+//! * **spine** — many logical tenants submitting concurrently through
+//!   [`Tenant::submit`]; the worker pool coalesces same-artifact
+//!   requests into dynamic batches ([`SpineConfig::max_batch`]).
+//!
+//! The headline `batch_speedup` is batched/sequential *throughput*
+//! (requests per second over wall-clock), latency percentiles are exact
+//! driver-side figures over every completed request's end-to-end
+//! latency (not histogram-bucket approximations), and the steady-state
+//! allocation count is measured quiesced — after the soak, over a warm
+//! executor, because [`crate::util::alloc::alloc_count`] is
+//! process-global and concurrent threads would taint a mid-soak delta.
+//!
+//! `--smoke` shrinks tenant/request counts for CI; the full run also
+//! enforces the acceptance bar (batched ≥ 2× sequential on mini-cnn).
+//!
+//! [`ServedArtifact::run_blocking`]: crate::session::ServedArtifact::run_blocking
+//! [`Tenant::submit`]: crate::session::Tenant::submit
+//! [`SpineConfig::max_batch`]: crate::session::SpineConfig::max_batch
+
+use std::collections::BTreeMap;
+
+use anyhow::bail;
+
+use crate::audit::fixed_workloads;
+use crate::devsim::DeviceId;
+use crate::exec::kernelbench::{validate_bench_json, BenchRow};
+use crate::frontend::extract_graph;
+use crate::metrics::Timer;
+use crate::session::{AdmissionError, ServingConfig, ServingSession, SpineConfig};
+use crate::util::alloc::alloc_count;
+use crate::util::par::default_threads;
+use crate::util::{Json, XorShift};
+use crate::Result;
+
+/// Knobs of one serve-bench run.
+#[derive(Debug, Clone)]
+pub struct ServeBenchConfig {
+    /// CI tier: small counts, same structure.
+    pub smoke: bool,
+    /// Logical tenants (distinct [`crate::session::Tenant`] identities)
+    /// the soak multiplexes over the submitter threads.
+    pub tenants: usize,
+    /// Total requests per phase (sequential and batched drive the same
+    /// count, so the throughput ratio compares equal work).
+    pub requests: usize,
+    /// Spine worker threads.
+    pub workers: usize,
+    /// Dynamic-batch bound the spine plans its executors for.
+    pub max_batch: usize,
+}
+
+impl ServeBenchConfig {
+    pub fn new(smoke: bool) -> ServeBenchConfig {
+        if smoke {
+            ServeBenchConfig {
+                smoke,
+                tenants: 64,
+                requests: 512,
+                workers: default_threads(),
+                max_batch: 8,
+            }
+        } else {
+            ServeBenchConfig {
+                smoke,
+                tenants: 2000,
+                requests: 6000,
+                workers: default_threads(),
+                max_batch: 8,
+            }
+        }
+    }
+}
+
+/// What one serve-bench run measured.
+#[derive(Debug, Clone)]
+pub struct ServeBenchReport {
+    pub cfg: ServeBenchConfig,
+    /// The `BENCH_7.json` rows (sequential / batched / steady-batch).
+    pub rows: Vec<BenchRow>,
+    /// Sequential-baseline throughput, requests/s.
+    pub sequential_rps: f64,
+    /// Spine throughput, requests/s.
+    pub batched_rps: f64,
+    /// The headline: batched / sequential throughput.
+    pub batch_speedup: f64,
+    /// Exact end-to-end latency percentiles over every completed spine
+    /// request, µs.
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    /// Largest dynamic batch the spine coalesced.
+    pub batch_max: u64,
+    /// Arena executions the soak's requests were folded into.
+    pub batches: u64,
+    /// Submissions that hit [`AdmissionError::QueueFull`] and were
+    /// retried by the driver (backpressure observed, not an error).
+    pub queue_rejects: u64,
+    /// Heap allocations of one warm batched execution, measured
+    /// quiesced (authoritative only under the counting allocator).
+    pub steady_allocs_per_batch: u64,
+}
+
+/// Exact quantile over an ascending-sorted sample (ceil-rank).
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Minimum allocation delta of `f` over a few attempts — the retry
+/// absorbs unrelated background allocations (the counter is
+/// process-global), and the *minimum* is the honest steady-state figure.
+fn min_allocs(attempts: usize, mut f: impl FnMut() -> Result<()>) -> Result<u64> {
+    let mut best = u64::MAX;
+    for _ in 0..attempts.max(1) {
+        let a0 = alloc_count();
+        f()?;
+        best = best.min(alloc_count() - a0);
+        if best == 0 {
+            break;
+        }
+    }
+    Ok(best)
+}
+
+/// Run the soak: sequential baseline, then the spine under concurrent
+/// submitters, then the quiesced steady-state allocation check.  The
+/// full (non-smoke) run enforces the acceptance bar: batched throughput
+/// ≥ 2× sequential on mini-cnn.
+pub fn run_serve_bench(cfg: &ServeBenchConfig) -> Result<ServeBenchReport> {
+    let device = DeviceId::Xeon6126;
+    let wl = fixed_workloads().into_iter().next().expect("mini-cnn is the first fixed workload");
+    assert_eq!(wl.name, "mini-cnn");
+    let (graph, binding) = extract_graph(&wl.module, &wl.input_shape, &wl.name)?;
+
+    let serving = ServingSession::new(ServingConfig::default());
+    serving.spine_with(SpineConfig {
+        workers: cfg.workers,
+        queue_depth: 1024,
+        max_batch: cfg.max_batch,
+        default_deadline: None,
+    });
+    let tenants: Vec<_> = (0..cfg.tenants.max(1))
+        .map(|i| serving.tenant(&format!("soak-{i}")))
+        .collect();
+    let artifact = tenants[0].load_artifact(&graph, &binding, device).map_err(anyhow::Error::new)?;
+
+    let mut rng = XorShift::new(11);
+    let input = rng.normal_vec(artifact.input_len(), 0.5);
+    let req_bytes = (artifact.input_len() + artifact.output_len()) * 4;
+
+    // ---- sequential baseline: one thread, one request at a time ----
+    let mut out = Vec::with_capacity(artifact.output_len());
+    artifact.run_blocking(&input, &mut out)?; // warm the executor pool
+    let seq_allocs = min_allocs(5, || artifact.run_blocking(&input, &mut out))?;
+    let t = Timer::start();
+    for _ in 0..cfg.requests {
+        artifact.run_blocking(&input, &mut out)?;
+    }
+    let seq_us = t.us().max(1e-9);
+    let sequential_rps = cfg.requests as f64 / (seq_us / 1e6);
+
+    // ---- spine: concurrent submitters over the logical tenants ----
+    // each submitter keeps a bounded window of outstanding handles so
+    // the queue sees sustained concurrent pressure without the driver
+    // holding every handle at once
+    let submitters = cfg.workers.clamp(2, 8).min(cfg.requests.max(1));
+    let window = 64usize;
+    let t = Timer::start();
+    let per_thread: Vec<Result<(Vec<f64>, u64)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..submitters)
+            .map(|s| {
+                let tenants = &tenants;
+                let artifact = &artifact;
+                let input = &input;
+                let n = cfg.requests / submitters
+                    + usize::from(s < cfg.requests % submitters);
+                scope.spawn(move || -> Result<(Vec<f64>, u64)> {
+                    let mut lat = Vec::with_capacity(n);
+                    let mut rejects = 0u64;
+                    let mut pending = Vec::with_capacity(window);
+                    for k in 0..n {
+                        let tenant = &tenants[(s + k * submitters) % tenants.len()];
+                        loop {
+                            match tenant.submit(artifact, input.clone(), None) {
+                                Ok(h) => {
+                                    pending.push(h);
+                                    break;
+                                }
+                                Err(AdmissionError::QueueFull { .. }) => {
+                                    // backpressure: back off and retry
+                                    rejects += 1;
+                                    std::thread::yield_now();
+                                }
+                                Err(e) => return Err(anyhow::Error::new(e)),
+                            }
+                        }
+                        if pending.len() >= window {
+                            for h in pending.drain(..) {
+                                lat.push(h.wait().map_err(anyhow::Error::new)?.total_us);
+                            }
+                        }
+                    }
+                    for h in pending.drain(..) {
+                        lat.push(h.wait().map_err(anyhow::Error::new)?.total_us);
+                    }
+                    Ok((lat, rejects))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("submitter panicked")).collect()
+    });
+    let soak_us = t.us().max(1e-9);
+    let mut latencies = Vec::with_capacity(cfg.requests);
+    let mut queue_rejects = 0u64;
+    for r in per_thread {
+        let (lat, rejects) = r?;
+        latencies.extend(lat);
+        queue_rejects += rejects;
+    }
+    let completed = latencies.len();
+    let batched_rps = completed as f64 / (soak_us / 1e6);
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (p50_us, p95_us, p99_us) =
+        (pct(&latencies, 0.50), pct(&latencies, 0.95), pct(&latencies, 0.99));
+
+    // ---- quiesced steady state: one warm batch, allocation-counted ----
+    let k = artifact.max_batch();
+    let ins: Vec<Vec<f32>> = (0..k).map(|_| input.clone()).collect();
+    let in_refs: Vec<&[f32]> = ins.iter().map(|v| v.as_slice()).collect();
+    let mut outs: Vec<Vec<f32>> =
+        (0..k).map(|_| Vec::with_capacity(artifact.output_len())).collect();
+    artifact.run_batch_blocking(&in_refs, &mut outs)?; // warm
+    let steady_allocs_per_batch =
+        min_allocs(5, || artifact.run_batch_blocking(&in_refs, &mut outs))?;
+    let batch_t = Timer::start();
+    artifact.run_batch_blocking(&in_refs, &mut outs)?;
+    let batch_us = batch_t.us();
+
+    let stats = serving.spine().stats();
+    let batch_speedup = if sequential_rps > 0.0 { batched_rps / sequential_rps } else { 0.0 };
+    let rows = vec![
+        BenchRow {
+            op: "serve.sequential.mini_cnn".into(),
+            bytes: req_bytes,
+            ns_per_iter: seq_us * 1e3 / cfg.requests as f64,
+            allocs_per_run: seq_allocs,
+        },
+        BenchRow {
+            op: "serve.spine.mini_cnn".into(),
+            bytes: req_bytes,
+            ns_per_iter: soak_us * 1e3 / completed.max(1) as f64,
+            allocs_per_run: steady_allocs_per_batch,
+        },
+        BenchRow {
+            op: format!("serve.steady_batch{k}.mini_cnn"),
+            bytes: req_bytes * k,
+            ns_per_iter: batch_us * 1e3,
+            allocs_per_run: steady_allocs_per_batch,
+        },
+    ];
+    let report = ServeBenchReport {
+        cfg: cfg.clone(),
+        rows,
+        sequential_rps,
+        batched_rps,
+        batch_speedup,
+        p50_us,
+        p95_us,
+        p99_us,
+        batch_max: stats.batch_max,
+        batches: stats.batches,
+        queue_rejects,
+        steady_allocs_per_batch,
+    };
+    if !cfg.smoke && report.batch_speedup < 2.0 {
+        bail!(
+            "serve-bench acceptance: batched throughput {:.2}x sequential, need >= 2.0x \
+             ({:.0} vs {:.0} req/s)",
+            report.batch_speedup,
+            report.batched_rps,
+            report.sequential_rps
+        );
+    }
+    Ok(report)
+}
+
+/// Render the report as the `BENCH_7.json` document (same row schema as
+/// `BENCH_4.json`; the headline key is `batch_speedup`).
+pub fn serve_bench_json(r: &ServeBenchReport) -> Json {
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("serving-spine".into()));
+    top.insert(
+        "mode".to_string(),
+        Json::Str(if r.cfg.smoke { "smoke" } else { "full" }.into()),
+    );
+    top.insert("batch_speedup".to_string(), Json::Num(r.batch_speedup));
+    top.insert("sequential_rps".to_string(), Json::Num(r.sequential_rps));
+    top.insert("batched_rps".to_string(), Json::Num(r.batched_rps));
+    top.insert("p50_us".to_string(), Json::Num(r.p50_us));
+    top.insert("p95_us".to_string(), Json::Num(r.p95_us));
+    top.insert("p99_us".to_string(), Json::Num(r.p99_us));
+    top.insert("tenants".to_string(), Json::Num(r.cfg.tenants as f64));
+    top.insert("requests".to_string(), Json::Num(r.cfg.requests as f64));
+    top.insert("workers".to_string(), Json::Num(r.cfg.workers as f64));
+    top.insert("max_batch".to_string(), Json::Num(r.cfg.max_batch as f64));
+    top.insert("batch_max".to_string(), Json::Num(r.batch_max as f64));
+    top.insert("batches".to_string(), Json::Num(r.batches as f64));
+    top.insert("queue_rejects".to_string(), Json::Num(r.queue_rejects as f64));
+    top.insert(
+        "steady_allocs_per_batch".to_string(),
+        Json::Num(r.steady_allocs_per_batch as f64),
+    );
+    top.insert(
+        "rows".to_string(),
+        Json::Arr(
+            r.rows
+                .iter()
+                .map(|row| {
+                    let mut o = BTreeMap::new();
+                    o.insert("op".to_string(), Json::Str(row.op.clone()));
+                    o.insert("bytes".to_string(), Json::Num(row.bytes as f64));
+                    o.insert("ns_per_iter".to_string(), Json::Num(row.ns_per_iter));
+                    o.insert(
+                        "allocs_per_run".to_string(),
+                        Json::Num(row.allocs_per_run as f64),
+                    );
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(top)
+}
+
+/// Write the report to `path`, schema-validated by the same gate as
+/// every other `BENCH_*.json` ([`validate_bench_json`]).
+pub fn write_serve_bench_json(path: &std::path::Path, r: &ServeBenchReport) -> Result<()> {
+    let doc = serve_bench_json(r);
+    validate_bench_json(&doc)?;
+    std::fs::write(path, doc.to_string() + "\n")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_soak_completes_and_validates() {
+        let cfg = ServeBenchConfig {
+            smoke: true,
+            tenants: 4,
+            requests: 24,
+            workers: 2,
+            max_batch: 4,
+        };
+        let r = run_serve_bench(&cfg).expect("tiny soak");
+        assert_eq!(r.rows.len(), 3);
+        assert!(r.sequential_rps > 0.0);
+        assert!(r.batched_rps > 0.0);
+        assert!(r.batch_speedup > 0.0);
+        assert!(r.batches >= 1, "at least one arena execution ran");
+        assert!(r.batch_max >= 1);
+        assert!(r.p99_us >= r.p50_us);
+        let doc = serve_bench_json(&r);
+        validate_bench_json(&doc).expect("BENCH_7 schema");
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("serving-spine"));
+        assert!(doc.get("batch_speedup").and_then(Json::as_f64).unwrap() > 0.0);
+        assert_eq!(Json::parse(&doc.to_string()).unwrap(), doc);
+    }
+
+    #[test]
+    fn pct_is_exact_on_small_samples() {
+        let s = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+        assert_eq!(pct(&s, 0.50), 5.0);
+        assert_eq!(pct(&s, 0.95), 10.0);
+        assert_eq!(pct(&s, 0.99), 10.0);
+        assert_eq!(pct(&s, 1.0), 10.0);
+        assert_eq!(pct(&[], 0.5), 0.0);
+    }
+}

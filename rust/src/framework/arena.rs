@@ -68,8 +68,15 @@ impl TensorArena {
 
     /// Copy `src` into the head of `slot` (must fit).
     pub fn write_slot(&self, slot: usize, src: &[f32]) {
+        self.write_slot_at(slot, 0, src);
+    }
+
+    /// Copy `src` into `slot` starting at element `offset` (must fit) —
+    /// how a batched executor stacks per-request inputs into one slot at
+    /// stride `offset = i * request_len`.
+    pub fn write_slot_at(&self, slot: usize, offset: usize, src: &[f32]) {
         let mut s = self.lock_slot(slot);
-        s[..src.len()].copy_from_slice(src);
+        s[offset..offset + src.len()].copy_from_slice(src);
     }
 }
 
@@ -87,6 +94,15 @@ mod tests {
         a.write_slot(0, &[1.0, 2.0]);
         a.with_slot(0, |s| assert_eq!(&s[..2], &[1.0, 2.0]));
         a.with_slot(1, |s| assert!(s.iter().all(|&x| x == 0.0)));
+    }
+
+    #[test]
+    fn write_slot_at_stacks_batch_entries() {
+        let a = TensorArena::new(&[6]);
+        a.write_slot_at(0, 0, &[1.0, 2.0]);
+        a.write_slot_at(0, 2, &[3.0, 4.0]);
+        a.write_slot_at(0, 4, &[5.0, 6.0]);
+        a.with_slot(0, |s| assert_eq!(s, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
     }
 
     #[test]

@@ -19,6 +19,16 @@
 //! [`ArenaExec::refresh_params`] re-copies them in place (no realloc) when
 //! the framework's version counters say they changed — the same
 //! staleness protocol transparent offloading uses (§V-A).
+//!
+//! **Dynamic batching** (the serving spine): [`ArenaExec::build_batched`]
+//! plans every slot with a leading batch dimension
+//! (`session::planner::plan_memory_batched`), and [`ArenaExec::run_batch`]
+//! stacks up to `max_batch` request inputs into the input slot and runs
+//! the whole graph **once** — each kernel sees the batch as a larger
+//! leading dimension (the fast kernels are all batch-outer), so a batch
+//! of k requests costs one pass over the slots instead of k.  The
+//! zero-allocation steady-state contract is unchanged: a batched run
+//! touches only the pre-sized arena.
 
 use std::sync::{Arc, Mutex};
 
@@ -28,7 +38,7 @@ use crate::framework::arena::TensorArena;
 use crate::framework::ops_fast as fast;
 use crate::ir::{Graph, NodeId, Op};
 use crate::metrics;
-use crate::session::planner::{plan_memory, MemoryPlan};
+use crate::session::planner::{plan_memory_batched, MemoryPlan};
 use crate::util::alloc::alloc_count;
 
 use super::extract::ParamBinding;
@@ -73,6 +83,23 @@ impl ArenaExec {
     /// spawns.  Fails on graphs this executor cannot run (≠ 1 input, or
     /// missing/odd-shaped parameter bindings).
     pub fn build(graph: &Graph, binding: &ParamBinding, threads: usize) -> Result<ArenaExec> {
+        Self::build_batched(graph, binding, threads, 1)
+    }
+
+    /// [`ArenaExec::build`] with slots planned for up to `max_batch`
+    /// stacked requests ([`plan_memory_batched`]) — the serving spine's
+    /// dynamic batcher runs coalesced requests through
+    /// [`ArenaExec::run_batch`] on such an executor.  `max_batch = 1` is
+    /// exactly `build`.
+    pub fn build_batched(
+        graph: &Graph,
+        binding: &ParamBinding,
+        threads: usize,
+        max_batch: usize,
+    ) -> Result<ArenaExec> {
+        if max_batch == 0 {
+            bail!("max_batch must be >= 1");
+        }
         let inputs: Vec<NodeId> = graph
             .nodes
             .iter()
@@ -83,7 +110,7 @@ impl ArenaExec {
             bail!("arena executor supports exactly one input, got {}", inputs.len());
         }
         let input_node = inputs[0];
-        let plan = plan_memory(graph);
+        let plan = plan_memory_batched(graph, max_batch);
         let arena = TensorArena::new(&plan.slot_lens());
         let scratch = Mutex::new(vec![0f32; plan.scratch_elems]);
 
@@ -157,12 +184,20 @@ impl ArenaExec {
         &self.arena
     }
 
+    /// Input length **per request** (one batch entry).
     pub fn input_len(&self) -> usize {
         self.graph.nodes[self.input_node].meta.elems()
     }
 
+    /// Output length **per request** (one batch entry).
     pub fn output_len(&self) -> usize {
         self.graph.node(self.graph.output()).meta.elems()
+    }
+
+    /// Largest batch one [`ArenaExec::run_batch`] call may carry (what
+    /// the slots were planned for).
+    pub fn max_batch(&self) -> usize {
+        self.plan.batch
     }
 
     pub fn output_shape(&self) -> Vec<usize> {
@@ -201,7 +236,29 @@ impl ArenaExec {
     /// shared across threads), use [`ArenaExec::run_into`].
     pub fn run(&self, input: &[f32]) -> Result<()> {
         let _gate = self.run_gate.lock().unwrap();
-        self.run_inner(input)
+        self.run_batch_inner(&[input])
+    }
+
+    /// Execute `inputs.len()` requests as **one** pass over the slot
+    /// buffers (dynamic batching): inputs are stacked into the input slot
+    /// at stride [`ArenaExec::input_len`], every kernel runs with the
+    /// batch as a larger leading dimension, and each request's output is
+    /// copied into its `outs` entry (allocation-free once each entry has
+    /// the capacity).  Atomic: run + reads happen under the run gate.
+    ///
+    /// Fails when the batch is empty, exceeds
+    /// [`ArenaExec::max_batch`], `outs` disagrees with `inputs`, or any
+    /// input has the wrong length.
+    pub fn run_batch(&self, inputs: &[&[f32]], outs: &mut [Vec<f32>]) -> Result<()> {
+        if outs.len() != inputs.len() {
+            bail!("run_batch: {} inputs but {} output buffers", inputs.len(), outs.len());
+        }
+        let _gate = self.run_gate.lock().unwrap();
+        self.run_batch_inner(inputs)?;
+        for (i, out) in outs.iter_mut().enumerate() {
+            self.read_output_at(i, out);
+        }
+        Ok(())
     }
 
     /// Atomic refresh (optional) + run + output read under one gate, so
@@ -217,22 +274,33 @@ impl ArenaExec {
         if let Some(binding) = refresh {
             self.refresh_params_inner(binding)?;
         }
-        self.run_inner(input)?;
+        self.run_batch_inner(&[input])?;
         self.read_output(out);
         Ok(())
     }
 
-    fn run_inner(&self, input: &[f32]) -> Result<()> {
+    fn run_batch_inner(&self, inputs: &[&[f32]]) -> Result<()> {
         let allocs0 = alloc_count();
-        if input.len() != self.input_len() {
-            bail!("input length {} != expected {}", input.len(), self.input_len());
+        let bm = inputs.len();
+        if bm == 0 {
+            bail!("run_batch: empty batch");
         }
-        self.arena.write_slot(self.plan.node_slot[self.input_node], input);
+        if bm > self.plan.batch {
+            bail!("run_batch: batch {bm} exceeds planned max {}", self.plan.batch);
+        }
+        let per = self.input_len();
+        let in_slot = self.plan.node_slot[self.input_node];
+        for (i, input) in inputs.iter().enumerate() {
+            if input.len() != per {
+                bail!("input {i} length {} != expected {per}", input.len());
+            }
+            self.arena.write_slot_at(in_slot, i * per, input);
+        }
         for n in &self.graph.nodes {
             if self.skip[n.id] {
                 continue;
             }
-            self.exec_node(n.id)?;
+            self.exec_node(n.id, bm)?;
         }
         self.allocs_gauge.set(alloc_count() - allocs0);
         Ok(())
@@ -242,9 +310,17 @@ impl ArenaExec {
     /// has the capacity).  Not gated: pair with [`ArenaExec::run_into`]
     /// when other threads may run concurrently.
     pub fn read_output(&self, out: &mut Vec<f32>) {
+        self.read_output_at(0, out);
+    }
+
+    /// Copy batch entry `i`'s output value into `out` (stride
+    /// [`ArenaExec::output_len`]).  Not gated — [`ArenaExec::run_batch`]
+    /// reads all entries under its own gate.
+    pub fn read_output_at(&self, i: usize, out: &mut Vec<f32>) {
+        let len = self.output_len();
         out.clear();
         self.arena.with_slot(self.plan.node_slot[self.graph.output()], |s| {
-            out.extend_from_slice(&s[..self.output_len()]);
+            out.extend_from_slice(&s[i * len..(i + 1) * len]);
         });
     }
 
@@ -256,7 +332,11 @@ impl ArenaExec {
             .unwrap())
     }
 
-    fn exec_node(&self, id: NodeId) -> Result<()> {
+    /// Execute one node over `bm` stacked requests: every kernel here is
+    /// batch-outer (contiguous NCHW / row-major), so a batch of `bm`
+    /// requests is exactly the unit graph with its leading dimension
+    /// multiplied by `bm` — same kernels, larger `n`.
+    fn exec_node(&self, id: NodeId, bm: usize) -> Result<()> {
         let g = &self.graph;
         let n = &g.nodes[id];
         let in0 = *n.inputs.first().unwrap_or(&0);
@@ -265,6 +345,7 @@ impl ArenaExec {
         match &n.op {
             Op::Conv2d { cout, kh, kw, stride, pad, groups } => {
                 let (nb, c, h, w) = nchw(g, in0);
+                let nb = nb * bm;
                 let pv = self.param_slab(id)?;
                 let mut scratch = self.scratch.lock().unwrap();
                 let xin = self.arena.lock_slot(in_slot(in0));
@@ -291,7 +372,7 @@ impl ArenaExec {
             }
             Op::Linear { out_features } => {
                 let m = &g.nodes[in0].meta;
-                let (nb, fin) = (m.batch(), m.features_extent());
+                let (nb, fin) = (m.batch() * bm, m.features_extent());
                 let pv = self.param_slab(id)?;
                 let xin = self.arena.lock_slot(in_slot(in0));
                 let mut out = self.arena.lock_slot(out_slot);
@@ -308,7 +389,7 @@ impl ArenaExec {
                 );
             }
             Op::ReLU => {
-                let len = n.meta.elems();
+                let len = n.meta.elems() * bm;
                 if in_slot(in0) == out_slot {
                     // planner aliased the relu onto its input: clamp in
                     // place under a single guard (two would deadlock)
@@ -326,6 +407,7 @@ impl ArenaExec {
             }
             Op::BatchNorm => {
                 let (nb, c, h, w) = nchw(g, in0);
+                let nb = nb * bm;
                 let pv = self.param_slab(id)?;
                 let xin = self.arena.lock_slot(in_slot(in0));
                 let mut out = self.arena.lock_slot(out_slot);
@@ -333,6 +415,7 @@ impl ArenaExec {
             }
             Op::MaxPool { k, stride, pad, min_value } => {
                 let (nb, c, h, w) = nchw(g, in0);
+                let nb = nb * bm;
                 let xin = self.arena.lock_slot(in_slot(in0));
                 let mut out = self.arena.lock_slot(out_slot);
                 fast::pool2d_fast(
@@ -341,6 +424,7 @@ impl ArenaExec {
             }
             Op::AvgPool { k, stride, pad, count_include_pad } => {
                 let (nb, c, h, w) = nchw(g, in0);
+                let nb = nb * bm;
                 let xin = self.arena.lock_slot(in_slot(in0));
                 let mut out = self.arena.lock_slot(out_slot);
                 fast::pool2d_fast(
@@ -360,6 +444,7 @@ impl ArenaExec {
             }
             Op::GlobalAvgPool => {
                 let (nb, c, h, w) = nchw(g, in0);
+                let nb = nb * bm;
                 let xin = self.arena.lock_slot(in_slot(in0));
                 let mut out = self.arena.lock_slot(out_slot);
                 fast::global_avg_pool_fast(&xin, nb, c, h * w, &mut out);
@@ -367,7 +452,7 @@ impl ArenaExec {
             Op::Add => {
                 // two-phase (copy, then +=) so a duplicated operand never
                 // needs two guards on one slot
-                let len = n.meta.elems();
+                let len = n.meta.elems() * bm;
                 {
                     let a = self.arena.lock_slot(in_slot(n.inputs[0]));
                     let mut out = self.arena.lock_slot(out_slot);
@@ -379,6 +464,7 @@ impl ArenaExec {
             }
             Op::Concat => {
                 let (nb, ctot, h, w) = nchw(g, id);
+                let nb = nb * bm;
                 let hw = h * w;
                 let mut out = self.arena.lock_slot(out_slot);
                 let mut coff = 0usize;
@@ -395,19 +481,21 @@ impl ArenaExec {
             }
             Op::ChannelShuffle { groups } => {
                 let (nb, c, h, w) = nchw(g, in0);
+                let nb = nb * bm;
                 let xin = self.arena.lock_slot(in_slot(in0));
                 let mut out = self.arena.lock_slot(out_slot);
                 fast::channel_shuffle_fast(&xin, nb, c, h * w, *groups, &mut out);
             }
             Op::Slice { offset, channels } => {
                 let (nb, c, h, w) = nchw(g, in0);
+                let nb = nb * bm;
                 let xin = self.arena.lock_slot(in_slot(in0));
                 let mut out = self.arena.lock_slot(out_slot);
                 fast::slice_channels_fast(&xin, nb, c, h * w, *offset, *channels, &mut out);
             }
             Op::Softmax => {
                 let m = &g.nodes[in0].meta;
-                let (nb, k) = (m.batch(), m.features_extent());
+                let (nb, k) = (m.batch() * bm, m.features_extent());
                 let xin = self.arena.lock_slot(in_slot(in0));
                 let mut out = self.arena.lock_slot(out_slot);
                 fast::softmax_rows_fast(&xin, nb, k, &mut out);
@@ -494,6 +582,56 @@ mod tests {
         for (a, b) in want.iter().zip(&got) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn batched_run_matches_per_request_runs() {
+        let (m, shape) = mini();
+        let (graph, binding) = extract_graph(&m, &shape, "fx").unwrap();
+        let unit = ArenaExec::build(&graph, &binding, 1).unwrap();
+        let batched = ArenaExec::build_batched(&graph, &binding, 1, 4).unwrap();
+        assert_eq!(batched.max_batch(), 4);
+        assert_eq!(batched.input_len(), unit.input_len(), "per-request lengths unchanged");
+        assert_eq!(batched.output_len(), unit.output_len());
+        for k in 1..=4usize {
+            let inputs: Vec<Vec<f32>> = (0..k)
+                .map(|i| {
+                    Tensor::randn(&shape, 90 + i as u64, 0.5).to_f32().unwrap()
+                })
+                .collect();
+            let in_refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+            let mut outs: Vec<Vec<f32>> = vec![Vec::new(); k];
+            batched.run_batch(&in_refs, &mut outs).unwrap();
+            for (i, input) in inputs.iter().enumerate() {
+                unit.run(input).unwrap();
+                let mut want = Vec::new();
+                unit.read_output(&mut want);
+                assert_eq!(want.len(), outs[i].len());
+                for (a, b) in want.iter().zip(&outs[i]) {
+                    let rel = (a - b).abs() / a.abs().max(1.0);
+                    assert!(rel < 1e-4, "k={k} req={i}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_overflow_and_shape_errors_are_reported() {
+        let (m, shape) = mini();
+        let (graph, binding) = extract_graph(&m, &shape, "fx").unwrap();
+        let exec = ArenaExec::build_batched(&graph, &binding, 1, 2).unwrap();
+        let x = Tensor::randn(&shape, 95, 0.5).to_f32().unwrap();
+        let refs = vec![x.as_slice(), x.as_slice(), x.as_slice()];
+        let mut outs = vec![Vec::new(); 3];
+        let err = exec.run_batch(&refs, &mut outs).unwrap_err();
+        assert!(err.to_string().contains("exceeds planned max"), "{err}");
+        let mut outs = vec![Vec::new(); 1];
+        let short = &x[..x.len() - 1];
+        let err = exec.run_batch(&[short], &mut outs).unwrap_err();
+        assert!(err.to_string().contains("length"), "{err}");
+        let mut mismatched = vec![Vec::new(); 2];
+        let err = exec.run_batch(&[x.as_slice()], &mut mismatched).unwrap_err();
+        assert!(err.to_string().contains("output buffers"), "{err}");
     }
 
     #[test]

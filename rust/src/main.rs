@@ -12,6 +12,8 @@
 //! * `serve`     — load a bundle and serve synthetic requests
 //! * `serve-multi` — multi-tenant serving: N tenants × M nets concurrently
 //!   across all devices through one bounded-cache `ServingSession`
+//! * `serve-bench` — serving-spine soak: thousands of logical tenants
+//!   submitting concurrently, dynamically batched; writes `BENCH_7.json`
 //! * `effort`    — the §VI-A programming-effort table measured on this repo
 //! * `audit`     — cross-backend consistency sweep: every backend ×
 //!   execution path differentially tested against the framework reference
@@ -404,6 +406,60 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
+    use sol::exec::servebench::{run_serve_bench, write_serve_bench_json, ServeBenchConfig};
+    let mut cfg = ServeBenchConfig::new(flags.contains_key("smoke"));
+    if let Some(v) = flags.get("tenants") {
+        cfg.tenants = v.parse()?;
+    }
+    if let Some(v) = flags.get("requests") {
+        cfg.requests = v.parse()?;
+    }
+    if let Some(v) = flags.get("workers") {
+        cfg.workers = v.parse()?;
+    }
+    if let Some(v) = flags.get("batch") {
+        cfg.max_batch = v.parse()?;
+    }
+    println!(
+        "serve-bench: {} logical tenants, {} requests, {} workers, max batch {} ({})",
+        cfg.tenants,
+        cfg.requests,
+        cfg.workers,
+        cfg.max_batch,
+        if cfg.smoke { "smoke" } else { "full" }
+    );
+    let r = run_serve_bench(&cfg)?;
+    for row in &r.rows {
+        println!(
+            "{:<34} {:>12.0} ns/iter  {:>10} B  {:>3} allocs/run",
+            row.op, row.ns_per_iter, row.bytes, row.allocs_per_run
+        );
+    }
+    println!(
+        "sequential: {:>9.0} req/s | spine: {:>9.0} req/s | speedup {:.2}x",
+        r.sequential_rps, r.batched_rps, r.batch_speedup
+    );
+    println!(
+        "latency p50 {:.0} µs / p95 {:.0} µs / p99 {:.0} µs | {} batches (max {}) | \
+         {} queue rejects | {} allocs/steady-batch",
+        r.p50_us,
+        r.p95_us,
+        r.p99_us,
+        r.batches,
+        r.batch_max,
+        r.queue_rejects,
+        r.steady_allocs_per_batch
+    );
+    if flags.contains_key("json") {
+        let default = "BENCH_7.json".to_string();
+        let out = flags.get("out").unwrap_or(&default);
+        write_serve_bench_json(std::path::Path::new(out), &r)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
 /// `sol audit` — the cross-backend consistency sweep: every registered
 /// backend × execution path over fixed + seeded workloads, all outputs
 /// compared pairwise against the framework reference.  Exits with code 2
@@ -478,7 +534,7 @@ fn cmd_effort() {
 }
 
 const HELP: &str = "sol — SOL middleware reproduction
-USAGE: sol <devices|optimize|kernels|fig3|train-mlp|deploy|serve|bench|audit|effort|help> [--flags]
+USAGE: sol <devices|optimize|kernels|fig3|train-mlp|deploy|serve|bench|serve-bench|audit|effort|help> [--flags]
   optimize  --net resnet18 --device cpu [--batch 1]
   kernels   --net resnet18 --device aurora [--count 2]
   fig3      [--training] [--calibrate]
@@ -487,6 +543,8 @@ USAGE: sol <devices|optimize|kernels|fig3|train-mlp|deploy|serve|bench|audit|eff
   serve     [--bundle DIR] [--requests 16]
   serve-multi [--tenants 4] [--nets 6] [--requests 64] [--cache 16] [--policy lru|cost]
   bench     [--json] [--out BENCH_4.json] [--smoke]   kernel/planner microbenches
+  serve-bench [--json] [--out BENCH_7.json] [--smoke] [--tenants N] [--requests N]
+            [--workers N] [--batch N]   serving-spine throughput/latency soak
   audit     [--seeds 8] [--json] [--tol abs=A,rel=R,ulp=U]   cross-backend differential
             consistency sweep; exits 2 on any finding (the CI divergence gate)";
 
@@ -505,6 +563,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&flags)?,
         "serve-multi" => cmd_serve_multi(&flags)?,
         "bench" => cmd_bench(&flags)?,
+        "serve-bench" => cmd_serve_bench(&flags)?,
         "audit" => cmd_audit(&flags)?,
         "effort" => cmd_effort(),
         _ => println!("{HELP}"),

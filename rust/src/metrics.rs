@@ -13,8 +13,18 @@
 //! | `pass.<name>.runs`         | executions of one compiler pass (standard names in `session::stages::ALL`, plus backend-defined passes like `ve-vectorize`) |
 //! | `serve.<tenant>.compiles`  | admitted compile requests of one serving tenant (hits included) |
 //! | `serve.<tenant>.cache_hits`| the tenant's compiles served from the shared cache |
-//! | `serve.<tenant>.runs`      | executor runs the tenant drove |
+//! | `serve.<tenant>.runs`      | executor runs the tenant drove (blocking `run` and spine-completed submissions) |
 //! | `serve.<tenant>.evicted`   | artifacts unpinned from the tenant's resident set by its capacity limit |
+//! | `serve.<tenant>.exec_reuse`| `Tenant::run` calls served by a pooled `SolExecutor` instead of a fresh construction |
+//! | `serve.spine.submitted`    | requests accepted into the serving spine's device queues |
+//! | `serve.spine.completed`    | spine requests fulfilled with an output |
+//! | `serve.spine.rejected_full`| submissions rejected at the bounded queue (`QueueFull`, reject-not-queue) |
+//! | `serve.spine.expired`      | queued requests rejected at drain time because their deadline passed (`DeadlineExceeded`, never silently dropped) |
+//! | `serve.spine.batches`      | dynamic batches executed (same-artifact coalescing) |
+//! | `serve.spine.batch_max`    | largest coalesced batch so far (gauge: high-water mark) |
+//! | `serve.spine.exec_builds`  | batched arena executors constructed (cold path; steady state reuses the idle pool) |
+//! | `serve.latency.p50_us` / `p95_us` / `p99_us` | spine end-to-end latency percentiles (gauges, refreshed by `serving_report`) |
+//! | `exec.threads`             | resolved worker-thread count (gauge: spine workers once started, else `util::par::default_threads`) |
 //! | `arena.bytes_peak`         | largest planned activation arena (gauge: high-water mark) |
 //! | `arena.slots`              | most slots any memory plan needed (gauge: high-water mark) |
 //! | `arena.reuse_hits`         | planner slot assignments served by reusing a freed slot |
@@ -95,6 +105,114 @@ pub fn counters_snapshot() -> Vec<(String, u64)> {
         reg.iter().map(|(k, v)| (k.clone(), v.get())).collect();
     out.sort();
     out
+}
+
+/// Bucket count of [`LatencyHistogram`]: power-of-two µs buckets up to
+/// `2^31 µs` (~36 min), far past any serving latency this repo produces.
+const HIST_BUCKETS: usize = 32;
+
+/// A fixed-bucket latency histogram: lock-free, **allocation-free on the
+/// record path** (two relaxed atomic adds), with approximate quantile
+/// extraction for p50/p95/p99 reporting.
+///
+/// Buckets are powers of two in microseconds: bucket `0` holds `0 µs`
+/// (sub-microsecond), bucket `b ≥ 1` holds `[2^(b-1), 2^b) µs`.
+/// [`LatencyHistogram::quantile`] interpolates linearly inside the
+/// bucket containing the requested rank, so the estimate is within a
+/// factor of two of the true order statistic (the serving spine's
+/// percentile gauges; exact percentiles, when needed, are computed by
+/// the bench driver from its own recorded samples).
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Index of the bucket holding `v` µs: `0` for `0`, else
+    /// `floor(log2(v)) + 1`, clamped to the last bucket.
+    fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+        }
+    }
+
+    /// Record one latency sample.  No allocation, no lock: safe on the
+    /// serving hot path.
+    pub fn record_us(&self, us: f64) {
+        let v = if us.is_finite() && us > 0.0 { us as u64 } else { 0 };
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in µs (`0` when empty).
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// The `q`-quantile (`0.0..=1.0`) in µs: walk the buckets to the one
+    /// containing the rank, interpolate linearly inside it.  `0` when no
+    /// samples were recorded.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        // rank in 1..=n (ceil), so q=1.0 lands on the last sample
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for (b, c) in self.buckets.iter().enumerate() {
+            let c = c.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= rank {
+                let (lo, hi) = if b == 0 {
+                    (0.0, 1.0)
+                } else {
+                    (2f64.powi(b as i32 - 1), 2f64.powi(b as i32))
+                };
+                let frac = (rank - seen) as f64 / c as f64;
+                return lo + (hi - lo) * frac;
+            }
+            seen += c;
+        }
+        // unreachable with consistent counts; be conservative
+        2f64.powi(HIST_BUCKETS as i32 - 1)
+    }
+
+    /// `(p50, p95, p99)` in µs — the serving report's summary triple.
+    pub fn percentiles(&self) -> (f64, f64, f64) {
+        (self.quantile(0.50), self.quantile(0.95), self.quantile(0.99))
+    }
 }
 
 /// Wall-clock timer.
@@ -178,6 +296,73 @@ mod tests {
         assert_eq!(c.get(), 7, "set_max keeps the high-water mark");
         c.set_max(11);
         assert_eq!(c.get(), 11);
+    }
+
+    /// Exact quantile from a sorted slice, same ceil-rank convention the
+    /// histogram uses — the reference the bucketed estimate is checked
+    /// against.
+    fn sorted_quantile(sorted: &[u64], q: f64) -> f64 {
+        let n = sorted.len() as f64;
+        let rank = ((q * n).ceil() as usize).clamp(1, sorted.len());
+        sorted[rank - 1] as f64
+    }
+
+    #[test]
+    fn histogram_quantiles_match_sorted_reference_within_a_bucket() {
+        // deterministic xorshift samples spanning several orders of
+        // magnitude (the realistic serving-latency shape)
+        let mut s = 0x9E37_79B9_7F4A_7C15u64;
+        let mut samples: Vec<u64> = Vec::with_capacity(10_000);
+        let h = LatencyHistogram::new();
+        for _ in 0..10_000 {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            let v = s % 200_000; // 0 .. 200 ms in µs
+            samples.push(v);
+            h.record_us(v as f64);
+        }
+        assert_eq!(h.count(), 10_000);
+        samples.sort_unstable();
+        for q in [0.5, 0.95, 0.99] {
+            let want = sorted_quantile(&samples, q);
+            let got = h.quantile(q);
+            // power-of-two buckets: the estimate lives in the same bucket
+            // as the true order statistic, i.e. within a factor of two
+            assert!(
+                got >= want / 2.0 && got <= want * 2.0 + 1.0,
+                "q={q}: histogram {got} vs exact {want}"
+            );
+        }
+        let mean = samples.iter().sum::<u64>() as f64 / samples.len() as f64;
+        assert!((h.mean_us() - mean).abs() <= 1.0, "{} vs {mean}", h.mean_us());
+    }
+
+    #[test]
+    fn histogram_identical_samples_land_in_one_bucket() {
+        let h = LatencyHistogram::new();
+        for _ in 0..100 {
+            h.record_us(10.0);
+        }
+        // 10 µs lives in bucket [8, 16): every quantile must answer there
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            let v = h.quantile(q);
+            assert!((8.0..=16.0).contains(&v), "q={q}: {v}");
+        }
+        let (p50, p95, p99) = h.percentiles();
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+    }
+
+    #[test]
+    fn histogram_empty_and_edge_values() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+        h.record_us(0.0);
+        h.record_us(-3.0); // clamped, not a panic
+        h.record_us(f64::INFINITY); // clamped, not a panic
+        assert_eq!(h.count(), 3);
+        assert!(h.quantile(0.5) <= 1.0, "degenerate samples stay in bucket 0");
     }
 
     #[test]

@@ -15,6 +15,10 @@
 //! * [`serve`] — multi-tenant serving over one session: admission
 //!   control, bounded pin-aware eviction, per-tenant metrics
 //!   ([`ServingSession`] / [`Tenant`]).
+//! * [`spine`] — the async batched serving spine: non-blocking
+//!   [`Tenant::submit`] over bounded per-device queues, a worker pool,
+//!   and dynamic same-artifact batching into one arena execution
+//!   ([`ServeSpine`] / [`RequestHandle`]).
 //!
 //! The [`BackendRegistry`] (defined with the backends, re-exported here)
 //! indexes the per-device backends by device / name / framework slot and
@@ -44,6 +48,7 @@ pub mod pass;
 pub mod pipeline;
 pub mod planner;
 pub mod serve;
+pub mod spine;
 pub mod stages;
 
 use std::collections::HashMap;
@@ -61,9 +66,12 @@ pub use cache::{CacheKey, CacheStats, CompileCache, EvictionPolicy};
 pub use executor::{BaselineExecutor, Executor, Phase, SolExecutor};
 pub use pass::{CompileState, Pass, PassManager, PassRecord, PipelineConfig};
 pub use pipeline::{Pipeline, PipelineBuilder};
-pub use planner::{plan_memory, MemoryPlan};
+pub use planner::{plan_memory, plan_memory_batched, MemoryPlan};
 pub use serve::{
     AdmissionError, CompilePermit, ServingConfig, ServingSession, Tenant, TenantCounters,
+};
+pub use spine::{
+    RequestHandle, ServeOutput, ServeSpine, ServedArtifact, SpineConfig, SpineStats,
 };
 
 /// A compilation session: backend registry + compile cache + simulator

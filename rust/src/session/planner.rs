@@ -66,6 +66,11 @@ pub struct MemoryPlan {
     /// High-water im2col scratch requirement (f32 elements) over all conv
     /// nodes — the fast conv kernels' side buffer.
     pub scratch_elems: usize,
+    /// Leading batch multiplier the slots were sized for: every value
+    /// `[B0, ...]` is planned as `[batch · B0, ...]`
+    /// ([`plan_memory_batched`]).  `1` for [`plan_memory`]; a derived
+    /// (`Default`) plan carries `0` meaning "unplanned".
+    pub batch: usize,
 }
 
 impl MemoryPlan {
@@ -203,7 +208,36 @@ pub fn plan_memory(graph: &Graph) -> MemoryPlan {
         live_peak_bytes: live_peak,
         reuse_hits,
         scratch_elems,
+        batch: 1,
     }
+}
+
+/// [`plan_memory`] with a **leading batch dimension**: size every slot
+/// for `batch` stacked requests, so one arena execution can serve a
+/// dynamic batch (the serving spine's same-artifact coalescing).
+///
+/// Batching is a uniform scale on the value sizes — a value shaped
+/// `[B0, ...]` becomes `[batch · B0, ...]`, all in one contiguous buffer
+/// with per-request stride `elems(value)`.  Liveness, aliasing and slot
+/// assignment are *batch-invariant* (every `need` scales by the same
+/// factor, so best-fit comparisons order identically), which lets the
+/// batched plan reuse the unit plan's structure and simply scale the
+/// byte accounting.  The conv im2col scratch is per-image and therefore
+/// **not** scaled: the fast kernels iterate images serially through one
+/// scratch buffer regardless of batch.
+///
+/// # Panics
+/// Panics if `batch == 0` (a caller bug: an empty batch plans nothing).
+pub fn plan_memory_batched(graph: &Graph, batch: usize) -> MemoryPlan {
+    assert!(batch > 0, "batch must be >= 1");
+    let mut plan = plan_memory(graph);
+    for b in plan.slot_bytes.iter_mut() {
+        *b *= batch;
+    }
+    plan.arena_bytes *= batch;
+    plan.live_peak_bytes *= batch;
+    plan.batch = batch;
+    plan
 }
 
 /// The `plan-memory` pass: wiring of [`plan_memory`] into a backend's
@@ -320,6 +354,35 @@ mod tests {
         // values still live at the end
         assert!(out_slot < plan.slot_bytes.len());
         assert!(plan.slot_bytes[out_slot] >= g.node(g.output()).meta.bytes());
+    }
+
+    #[test]
+    fn batched_plan_scales_buffers_but_not_scratch() {
+        let g = chain_graph();
+        let unit = plan_memory(&g);
+        assert_eq!(unit.batch, 1);
+        for k in [1usize, 2, 5, 8] {
+            let b = plan_memory_batched(&g, k);
+            assert_eq!(b.batch, k);
+            // same structure: slots, aliasing and assignment are
+            // batch-invariant
+            assert_eq!(b.node_slot, unit.node_slot);
+            assert_eq!(b.alias_of, unit.alias_of);
+            assert_eq!(b.slot_bytes.len(), unit.slot_bytes.len());
+            for (bs, us) in b.slot_bytes.iter().zip(&unit.slot_bytes) {
+                assert_eq!(*bs, us * k);
+            }
+            assert_eq!(b.arena_bytes, unit.arena_bytes * k);
+            assert_eq!(b.live_peak_bytes, unit.live_peak_bytes * k);
+            // im2col scratch is per-image: independent of the batch
+            assert_eq!(b.scratch_elems, unit.scratch_elems);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "batch must be")]
+    fn batched_plan_rejects_zero() {
+        let _ = plan_memory_batched(&chain_graph(), 0);
     }
 
     #[test]

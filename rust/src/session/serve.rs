@@ -20,9 +20,15 @@
 //!   [`crate::metrics`] registry as `serve.<tenant>.<counter>` and
 //!   rendered by [`ServingSession::serving_report`].
 //!
-//! Execution stays per-request: every [`Tenant::run`] builds a fresh
-//! [`SolExecutor`] over the shared artifact, so concurrent requests never
-//! contend on executor state.
+//! Execution no longer pays per-request construction: [`Tenant::run`]
+//! reuses a pooled [`SolExecutor`] per `(artifact, mode)` (the executors
+//! are stateless over the `Arc`'d artifact, so sharing is free), counted
+//! per tenant as `serve.<tenant>.exec_reuse`.  For throughput traffic,
+//! the **serving spine** ([`super::spine`]) adds a non-blocking
+//! [`Tenant::submit`] → [`RequestHandle`] path with bounded per-device
+//! queues, a worker pool, and dynamic same-artifact batching; start it
+//! with [`ServingSession::spine_with`] (or lazily with defaults on first
+//! use) and load batched artifacts with [`Tenant::load_artifact`].
 //!
 //! ```no_run
 //! use sol::devsim::DeviceId;
@@ -41,17 +47,22 @@
 //! println!("{}", serving.serving_report());
 //! ```
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
 
 use crate::devsim::{DeviceId, SimReport};
 use crate::exec::solrun::OffloadMode;
+use crate::frontend::extract::ParamBinding;
 use crate::ir::Graph;
 use crate::metrics::{self, format_table};
 use crate::passes::optimizer::OptimizedModel;
+use crate::util::par::default_threads;
 
 use super::cache::{CacheKey, CacheStats, CompileCache, EvictionPolicy};
 use super::executor::{Phase, SolExecutor};
+use super::spine::{RequestHandle, ServeSpine, ServedArtifact, SpineConfig};
 use super::Session;
 
 /// Knobs of one serving deployment.
@@ -89,6 +100,16 @@ impl Default for ServingConfig {
 pub enum AdmissionError {
     /// The tenant already has `limit` compiles in flight.
     InflightLimit { tenant: String, limit: usize },
+    /// The device's spine queue is at `depth`: the submit was rejected
+    /// at the outer bound, never queued beyond it (back off and retry).
+    QueueFull { device: DeviceId, depth: usize },
+    /// The request's deadline passed while it waited `waited_us` µs in
+    /// the queue; it was rejected at drain time — expired requests are
+    /// never silently dropped.
+    DeadlineExceeded { waited_us: u64 },
+    /// The request could not be served: malformed (wrong input length,
+    /// artifact a spine cannot batch) or the execution itself failed.
+    Failed { reason: String },
 }
 
 impl std::fmt::Display for AdmissionError {
@@ -98,6 +119,13 @@ impl std::fmt::Display for AdmissionError {
                 f,
                 "tenant '{tenant}' rejected: {limit} compile(s) already in flight"
             ),
+            AdmissionError::QueueFull { device, depth } => {
+                write!(f, "rejected: {device:?} spine queue at capacity ({depth})")
+            }
+            AdmissionError::DeadlineExceeded { waited_us } => {
+                write!(f, "rejected: deadline exceeded after {waited_us} µs queued")
+            }
+            AdmissionError::Failed { reason } => write!(f, "request failed: {reason}"),
         }
     }
 }
@@ -111,11 +139,15 @@ pub struct TenantCounters {
     pub compiles: u64,
     /// Admitted compiles served straight from the shared cache.
     pub cache_hits: u64,
-    /// Executor runs driven through [`Tenant::run`].
+    /// Executor runs driven through [`Tenant::run`] plus spine
+    /// submissions completed on this tenant's behalf.
     pub runs: u64,
     /// Artifacts unpinned from this tenant's resident set by its
     /// resident-capacity limit.
     pub evicted: u64,
+    /// [`Tenant::run`] calls served by a pooled executor instead of a
+    /// fresh construction.
+    pub exec_reuse: u64,
     /// Artifacts currently pinned by this tenant.
     pub resident: usize,
     /// Compiles currently admitted and running.
@@ -128,22 +160,22 @@ pub struct TenantCounters {
 /// `ServingSession` reusing a tenant name starts its own counts at zero
 /// while `serve.<tenant>.*` in [`metrics::counters_snapshot`] stays
 /// cumulative process-wide.
-struct TenantCounter {
+pub(crate) struct TenantCounter {
     local: AtomicU64,
     metric: Arc<metrics::Counter>,
 }
 
 impl TenantCounter {
-    fn new(name: &str) -> Self {
+    pub(crate) fn new(name: &str) -> Self {
         TenantCounter { local: AtomicU64::new(0), metric: metrics::counter(name) }
     }
 
-    fn inc(&self) {
+    pub(crate) fn inc(&self) {
         self.local.fetch_add(1, Ordering::Relaxed);
         self.metric.inc();
     }
 
-    fn get(&self) -> u64 {
+    pub(crate) fn get(&self) -> u64 {
         self.local.load(Ordering::Relaxed)
     }
 }
@@ -151,15 +183,18 @@ impl TenantCounter {
 /// Per-tenant bookkeeping.  The `Arc<OptimizedModel>`s in `resident` are
 /// the tenant's pins: while an artifact sits here (or in a live
 /// executor), the shared cache will not evict it.
-struct TenantState {
+pub(crate) struct TenantState {
     name: String,
     inflight: AtomicUsize,
     /// Resident artifacts, LRU order (front = oldest).
     resident: Mutex<Vec<(CacheKey, Arc<OptimizedModel>)>>,
     compiles: TenantCounter,
     cache_hits: TenantCounter,
-    runs: TenantCounter,
+    /// `pub(crate)`: the spine attributes completed submissions to the
+    /// owning tenant through this counter.
+    pub(crate) runs: TenantCounter,
     evicted: TenantCounter,
+    exec_reuse: TenantCounter,
 }
 
 impl TenantState {
@@ -172,7 +207,52 @@ impl TenantState {
             cache_hits: TenantCounter::new(&format!("serve.{name}.cache_hits")),
             runs: TenantCounter::new(&format!("serve.{name}.runs")),
             evicted: TenantCounter::new(&format!("serve.{name}.evicted")),
+            exec_reuse: TenantCounter::new(&format!("serve.{name}.exec_reuse")),
         }
+    }
+}
+
+/// How many distinct `(artifact, mode)` executors the pool retains; at
+/// the cap the pool resets (executors are cheap stateless shims — the
+/// cap only bounds the map against unbounded artifact churn).
+const EXEC_POOL_CAP: usize = 256;
+
+/// Pooled [`SolExecutor`]s per `(artifact, mode)`, shared by every
+/// tenant of one [`ServingSession`] — single (unbatched) requests stop
+/// paying per-request executor construction.  Keyed by the artifact
+/// `Arc`'s address: safe from ABA because each map entry's executor
+/// holds its model `Arc` alive, so a live key's address cannot be
+/// recycled.
+struct ExecPool {
+    map: Mutex<HashMap<(usize, u8), Arc<SolExecutor>>>,
+}
+
+impl ExecPool {
+    fn new() -> Self {
+        ExecPool { map: Mutex::new(HashMap::new()) }
+    }
+
+    /// `(executor, reused)`: `reused` is false when this call built it.
+    fn get(&self, model: &Arc<OptimizedModel>, mode: OffloadMode) -> (Arc<SolExecutor>, bool) {
+        let mode_tag = match mode {
+            OffloadMode::Native => 0u8,
+            OffloadMode::Transparent => 1u8,
+        };
+        let key = (Arc::as_ptr(model) as usize, mode_tag);
+        let mut map = self.map.lock().unwrap();
+        if let Some(e) = map.get(&key) {
+            return (e.clone(), true);
+        }
+        if map.len() >= EXEC_POOL_CAP {
+            map.clear();
+        }
+        let e = Arc::new(SolExecutor::new(model.clone(), mode));
+        map.insert(key, e.clone());
+        (e, false)
+    }
+
+    fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
     }
 }
 
@@ -196,6 +276,8 @@ pub struct Tenant {
     session: Arc<Session>,
     state: Arc<TenantState>,
     cfg: ServingConfig,
+    exec_pool: Arc<ExecPool>,
+    spine: Arc<OnceLock<ServeSpine>>,
 }
 
 impl Tenant {
@@ -227,6 +309,14 @@ impl Tenant {
         graph: &Graph,
         device: DeviceId,
     ) -> std::result::Result<Arc<OptimizedModel>, AdmissionError> {
+        Ok(self.compile_outcome(graph, device)?.model)
+    }
+
+    fn compile_outcome(
+        &self,
+        graph: &Graph,
+        device: DeviceId,
+    ) -> std::result::Result<super::CompileOutcome, AdmissionError> {
         let _permit = self.try_admit()?;
         let outcome = self.session.compile_traced(graph, device);
         self.state.compiles.inc();
@@ -234,7 +324,53 @@ impl Tenant {
             self.state.cache_hits.inc();
         }
         self.pin(outcome.key, outcome.model.clone());
-        Ok(outcome.model)
+        Ok(outcome)
+    }
+
+    /// This tenant's spine handle, starting the session-shared spine
+    /// with [`SpineConfig::default`] if nobody configured it yet
+    /// ([`ServingSession::spine_with`]).
+    pub fn spine(&self) -> &ServeSpine {
+        self.spine.get_or_init(|| ServeSpine::start(SpineConfig::default()))
+    }
+
+    /// Admission-checked compile + registration with the spine: the
+    /// returned [`ServedArtifact`] carries batched executors and is
+    /// deduplicated spine-wide by [`CacheKey`], so two tenants loading
+    /// the same `(graph, device, pipeline)` batch together.  Requires an
+    /// arena-capable (host-executing) backend; `binding` are the
+    /// framework parameters from `frontend::extract_graph`.
+    pub fn load_artifact(
+        &self,
+        graph: &Graph,
+        binding: &ParamBinding,
+        device: DeviceId,
+    ) -> std::result::Result<Arc<ServedArtifact>, AdmissionError> {
+        if !self.session.registry().capabilities_for(device).arena_exec {
+            return Err(AdmissionError::Failed {
+                reason: format!(
+                    "{device:?} advertises no host arena fast path — spine batching \
+                     needs an arena-capable backend"
+                ),
+            });
+        }
+        let outcome = self.compile_outcome(graph, device)?;
+        self.spine().artifact(&graph.name, outcome.key, device, outcome.model, graph, binding)
+    }
+
+    /// Submit one request for `artifact` to the serving spine:
+    /// non-blocking, bounded ([`AdmissionError::QueueFull`]), deadline-
+    /// aware ([`AdmissionError::DeadlineExceeded`] — `deadline: None`
+    /// falls back to [`SpineConfig::default_deadline`]).  Wait on the
+    /// returned [`RequestHandle`] for the output; completed requests
+    /// count toward this tenant's `runs`.
+    pub fn submit(
+        &self,
+        artifact: &Arc<ServedArtifact>,
+        input: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> std::result::Result<RequestHandle, AdmissionError> {
+        self.spine().submit_from(&self.state, artifact, input, deadline)
     }
 
     /// Pin `model` in the resident set, refreshing LRU order; over
@@ -271,15 +407,33 @@ impl Tenant {
         self.state.resident.lock().unwrap().clear();
     }
 
-    /// A fresh per-request executor over a shared artifact.
+    /// A fresh per-request executor over a shared artifact (callers that
+    /// must not share run state; [`Tenant::run`] uses the pool instead).
     pub fn executor(&self, model: &Arc<OptimizedModel>, mode: OffloadMode) -> SolExecutor {
         SolExecutor::new(model.clone(), mode)
     }
 
-    /// Drive one phase over `model` through a per-request executor.
+    /// The session-pooled executor for `(model, mode)`; a pool hit
+    /// counts as `serve.<tenant>.exec_reuse`.
+    pub fn pooled_executor(
+        &self,
+        model: &Arc<OptimizedModel>,
+        mode: OffloadMode,
+    ) -> Arc<SolExecutor> {
+        let (exec, reused) = self.exec_pool.get(model, mode);
+        if reused {
+            self.state.exec_reuse.inc();
+        }
+        exec
+    }
+
+    /// Drive one phase over `model` through the pooled executor (the
+    /// executors are stateless over their `Arc`'d artifact, so reuse
+    /// across requests and tenants is free — construction cost is paid
+    /// once per `(artifact, mode)`).
     pub fn run(&self, model: &Arc<OptimizedModel>, mode: OffloadMode, phase: Phase) -> SimReport {
-        let exec = self.executor(model, mode);
-        let report = self.session.run(&exec, phase);
+        let exec = self.pooled_executor(model, mode);
+        let report = self.session.run(&*exec, phase);
         self.state.runs.inc();
         report
     }
@@ -302,6 +456,7 @@ impl Tenant {
             cache_hits: self.state.cache_hits.get(),
             runs: self.state.runs.get(),
             evicted: self.state.evicted.get(),
+            exec_reuse: self.state.exec_reuse.get(),
             resident: self.state.resident.lock().unwrap().len(),
             inflight: self.state.inflight.load(Ordering::SeqCst),
         }
@@ -314,6 +469,11 @@ pub struct ServingSession {
     cfg: ServingConfig,
     /// Registration order — the report's row order.
     tenants: Mutex<Vec<Arc<TenantState>>>,
+    /// Session-wide executor pool, shared by every tenant handle.
+    exec_pool: Arc<ExecPool>,
+    /// The serving spine, started on first use ([`ServingSession::spine`])
+    /// or explicitly configured once ([`ServingSession::spine_with`]).
+    spine: Arc<OnceLock<ServeSpine>>,
 }
 
 impl Default for ServingSession {
@@ -345,7 +505,24 @@ impl ServingSession {
             session: Arc::new(session),
             cfg,
             tenants: Mutex::new(Vec::new()),
+            exec_pool: Arc::new(ExecPool::new()),
+            spine: Arc::new(OnceLock::new()),
         }
+    }
+
+    /// The serving spine, started lazily with [`SpineConfig::default`] on
+    /// first access.
+    pub fn spine(&self) -> &ServeSpine {
+        self.spine.get_or_init(|| ServeSpine::start(SpineConfig::default()))
+    }
+
+    /// Start the spine with `cfg`.  First call wins — the spine's worker
+    /// pool and queues exist once per serving session, so a later call
+    /// (or an earlier lazy [`ServingSession::spine`]) makes this a no-op
+    /// that returns the already-running spine.  Configure before the
+    /// first `submit`/`load_artifact` to be sure `cfg` takes effect.
+    pub fn spine_with(&self, cfg: SpineConfig) -> &ServeSpine {
+        self.spine.get_or_init(|| ServeSpine::start(cfg))
     }
 
     pub fn config(&self) -> &ServingConfig {
@@ -373,7 +550,13 @@ impl ServingSession {
                 state
             }
         };
-        Tenant { session: self.session.clone(), state, cfg: self.cfg.clone() }
+        Tenant {
+            session: self.session.clone(),
+            state,
+            cfg: self.cfg.clone(),
+            exec_pool: self.exec_pool.clone(),
+            spine: self.spine.clone(),
+        }
     }
 
     /// Tenant names, registration order.
@@ -381,8 +564,21 @@ impl ServingSession {
         self.tenants.lock().unwrap().iter().map(|t| t.name.clone()).collect()
     }
 
-    /// Per-tenant counter table plus a shared-cache summary line.
+    /// Per-tenant counter table plus shared-cache and spine summary
+    /// lines.  Also refreshes the `exec.threads` and `serve.latency.*`
+    /// gauges so the `memory:` line below reflects this session's spine.
     pub fn serving_report(&self) -> String {
+        let threads = match self.spine.get() {
+            Some(spine) => spine.workers() as u64,
+            None => default_threads() as u64,
+        };
+        metrics::counter("exec.threads").set(threads);
+        if let Some(spine) = self.spine.get() {
+            let (p50, p95, p99) = spine.latency().percentiles();
+            metrics::counter("serve.latency.p50_us").set(p50 as u64);
+            metrics::counter("serve.latency.p95_us").set(p95 as u64);
+            metrics::counter("serve.latency.p99_us").set(p99 as u64);
+        }
         let rows: Vec<Vec<String>> = {
             let tenants = self.tenants.lock().unwrap();
             tenants
@@ -394,13 +590,14 @@ impl ServingSession {
                         t.cache_hits.get().to_string(),
                         t.runs.get().to_string(),
                         t.evicted.get().to_string(),
+                        t.exec_reuse.get().to_string(),
                         t.resident.lock().unwrap().len().to_string(),
                     ]
                 })
                 .collect()
         };
         let mut out = format_table(
-            &["tenant", "compiles", "hits", "runs", "evicted", "resident"],
+            &["tenant", "compiles", "hits", "runs", "evicted", "reuse", "resident"],
             &rows,
         );
         let s = self.cache_stats();
@@ -413,6 +610,23 @@ impl ServingSession {
             "cache: {}/{} resident, {} hits / {} misses / {} evictions\n",
             s.len, cap, s.hits, s.misses, s.evictions
         ));
+        if let Some(spine) = self.spine.get() {
+            let st = spine.stats();
+            let (p50, p95, p99) = spine.latency().percentiles();
+            out.push_str(&format!(
+                "spine: {} workers, {} queued, {} batches (max {}), \
+                 {} expired / {} rejected, latency p50={:.0}µs p95={:.0}µs p99={:.0}µs\n",
+                spine.workers(),
+                st.queued,
+                st.batches,
+                st.batch_max,
+                st.expired,
+                st.rejected_full,
+                p50,
+                p95,
+                p99
+            ));
+        }
         // memory-planner / fast-executor / consistency-audit behaviour of
         // the process (the `arena.*` gauges are high-water marks across
         // every compile the tenants drove; `exec.allocs_per_run` is the
@@ -559,5 +773,53 @@ mod tests {
         // and the report surfaces allocation/arena behaviour
         assert!(report.contains("arena.bytes_peak"), "{report}");
         assert!(report.contains("exec.") || report.contains("arena."), "{report}");
+    }
+
+    #[test]
+    fn repeat_runs_reuse_a_pooled_executor() {
+        let serving = ServingSession::new(tiny_cfg());
+        let t = serving.tenant("pool");
+        let g = NetId::Mlp.build(1);
+        let m = t.compile(&g, DeviceId::Xeon6126).unwrap();
+        t.run(&m, OffloadMode::Native, Phase::infer());
+        assert_eq!(t.counters().exec_reuse, 0, "first run builds the executor");
+        t.run(&m, OffloadMode::Native, Phase::infer());
+        t.run(&m, OffloadMode::Native, Phase::infer());
+        let c = t.counters();
+        assert_eq!(c.exec_reuse, 2, "subsequent runs hit the pool");
+        assert_eq!(c.runs, 3);
+        // a different mode over the same artifact is a distinct pool entry
+        t.run(&m, OffloadMode::Transparent, Phase::infer());
+        assert_eq!(t.counters().exec_reuse, 2);
+        t.run(&m, OffloadMode::Transparent, Phase::infer());
+        assert_eq!(t.counters().exec_reuse, 3);
+    }
+
+    #[test]
+    fn pool_is_shared_across_tenants_of_one_session() {
+        let serving = ServingSession::new(tiny_cfg());
+        let a = serving.tenant("a");
+        let b = serving.tenant("b");
+        let g = NetId::Mlp.build(1);
+        let m = a.compile(&g, DeviceId::Xeon6126).unwrap();
+        a.run(&m, OffloadMode::Native, Phase::infer());
+        // b's first run over the same (artifact, mode) reuses a's executor
+        b.run(&m, OffloadMode::Native, Phase::infer());
+        assert_eq!(b.counters().exec_reuse, 1);
+        assert_eq!(a.exec_pool.len(), 1);
+    }
+
+    #[test]
+    fn report_includes_reuse_column_and_spine_line_once_started() {
+        let serving = ServingSession::new(tiny_cfg());
+        serving.tenant("solo");
+        let report = serving.serving_report();
+        assert!(report.contains("reuse"), "{report}");
+        assert!(!report.contains("spine:"), "no spine before first use: {report}");
+        // manual-pump spine: no worker threads, fully deterministic
+        serving.spine_with(SpineConfig { workers: 0, ..SpineConfig::default() });
+        let report = serving.serving_report();
+        assert!(report.contains("spine: 0 workers"), "{report}");
+        assert!(report.contains("p50="), "{report}");
     }
 }

@@ -1,0 +1,595 @@
+//! The serving spine: non-blocking submission, bounded per-device
+//! request queues, a long-lived worker pool, and **dynamic same-artifact
+//! batching** — how one [`super::ServingSession`] turns many concurrent
+//! tenants' requests into few arena executions.
+//!
+//! ```text
+//!  Tenant::submit ──► bounded DeviceQueue ──► WorkerPool drain
+//!       │ (reject: QueueFull /                    │ coalesce same
+//!       │  DeadlineExceeded)                      ▼ CacheKey, ≤ max_batch
+//!   RequestHandle ◄── complete ◄── ArenaExec::run_batch (one pass)
+//! ```
+//!
+//! * **Submission is non-blocking**: [`super::Tenant::submit`] validates,
+//!   enqueues, schedules a drain job, and returns a [`RequestHandle`] the
+//!   caller waits on.  When the device queue is at
+//!   [`SpineConfig::queue_depth`] the submit is *rejected*
+//!   ([`AdmissionError::QueueFull`]) — the reject-not-queue contract of
+//!   the admission layer, applied at the outer limit.
+//! * **Batching identity is the cache key**: requests coalesce only when
+//!   their artifacts share a [`CacheKey`] — `(graph structural hash,
+//!   device, pipeline fingerprint)` — so two tenants batch together
+//!   exactly when the middleware would have compiled them to the same
+//!   artifact, and never across devices or pipeline variants.
+//! * **Deadlines reject, never drop**: an expired request is completed
+//!   with [`AdmissionError::DeadlineExceeded`] at drain time; the waiter
+//!   always hears back.
+//! * **Steady state allocates nothing per run**: each
+//!   [`ServedArtifact`] keeps an idle pool of batched [`ArenaExec`]s
+//!   (built lazily, at most one per concurrent drain); a warm drain
+//!   acquires an executor, runs the batch over the pre-sized arena, and
+//!   returns it.
+//!
+//! No external async runtime: the pool is `util::par::WorkerPool`
+//! (scoped-thread philosophy, explicit thread count), and completion is
+//! a mutex + condvar per request.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::devsim::DeviceId;
+use crate::frontend::extract::ParamBinding;
+use crate::frontend::ArenaExec;
+use crate::ir::Graph;
+use crate::metrics::{self, LatencyHistogram};
+use crate::passes::optimizer::OptimizedModel;
+use crate::util::par::{default_threads, WorkerPool};
+
+use super::cache::CacheKey;
+use super::serve::{AdmissionError, TenantCounter, TenantState};
+
+/// Knobs of the serving spine.
+#[derive(Debug, Clone)]
+pub struct SpineConfig {
+    /// Worker threads draining the queues.  `0` = no workers: submitted
+    /// requests sit queued until pumped manually
+    /// ([`ServeSpine::drain_one`]) — the deterministic mode the
+    /// backpressure/deadline tests use.
+    pub workers: usize,
+    /// Bound of each per-device request queue; a submit over the bound
+    /// is rejected ([`AdmissionError::QueueFull`]), never queued.
+    pub queue_depth: usize,
+    /// Most same-artifact requests one arena execution may coalesce
+    /// (the leading batch dimension executors are planned for).
+    pub max_batch: usize,
+    /// Deadline applied to submissions that do not carry their own.
+    /// `None` = requests wait indefinitely.
+    pub default_deadline: Option<Duration>,
+}
+
+impl Default for SpineConfig {
+    fn default() -> Self {
+        SpineConfig {
+            workers: default_threads(),
+            queue_depth: 256,
+            max_batch: 8,
+            default_deadline: None,
+        }
+    }
+}
+
+/// What a fulfilled request hands back through its [`RequestHandle`].
+#[derive(Debug, Clone)]
+pub struct ServeOutput {
+    /// The request's own output row(s), copied out of the batch.
+    pub output: Vec<f32>,
+    /// How many requests shared the arena execution that produced this.
+    pub batch_size: usize,
+    /// Time spent queued before its batch started, µs.
+    pub queue_us: f64,
+    /// The batch's kernel execution time, µs (shared across the batch).
+    pub exec_us: f64,
+    /// End-to-end submit → completion latency, µs.
+    pub total_us: f64,
+}
+
+/// Completion slot shared between a waiter and the drain that fulfills
+/// the request.
+#[derive(Default)]
+struct ReqShared {
+    slot: Mutex<Option<Result<ServeOutput, AdmissionError>>>,
+    cv: Condvar,
+}
+
+impl ReqShared {
+    fn complete(&self, r: Result<ServeOutput, AdmissionError>) {
+        *self.slot.lock().unwrap() = Some(r);
+        self.cv.notify_all();
+    }
+}
+
+/// A pending request's completion handle (from [`super::Tenant::submit`]).
+///
+/// The submission already happened; dropping the handle abandons the
+/// *result*, not the work.
+pub struct RequestHandle {
+    shared: Arc<ReqShared>,
+}
+
+impl RequestHandle {
+    /// Block until the request completes (fulfilled, expired, or failed).
+    pub fn wait(self) -> Result<ServeOutput, AdmissionError> {
+        let mut g = self.shared.slot.lock().unwrap();
+        while g.is_none() {
+            g = self.shared.cv.wait(g).unwrap();
+        }
+        g.take().expect("guarded by loop")
+    }
+
+    /// [`RequestHandle::wait`] bounded by `timeout`: `None` when the
+    /// request is still pending afterwards (the handle stays usable).
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<ServeOutput, AdmissionError>> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.shared.slot.lock().unwrap();
+        while g.is_none() {
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self.shared.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+        g.take()
+    }
+
+    /// Has the request completed (result still unclaimed)?
+    pub fn is_done(&self) -> bool {
+        self.shared.slot.lock().unwrap().is_some()
+    }
+}
+
+/// One artifact as the spine serves it: the compiled model plus the
+/// batched arena executors that run it, pooled for reuse.
+///
+/// The executor pool is sized by demand: a drain with no idle executor
+/// builds one (counted by `serve.spine.exec_builds`), so the pool's
+/// high-water mark is the max number of *concurrent* drains of this
+/// artifact — after warm-up every drain reuses, and the
+/// zero-allocations-per-run contract holds.
+pub struct ServedArtifact {
+    name: String,
+    key: CacheKey,
+    device: DeviceId,
+    model: Arc<OptimizedModel>,
+    graph: Graph,
+    binding: ParamBinding,
+    max_batch: usize,
+    input_len: usize,
+    output_len: usize,
+    idle: Mutex<Vec<ArenaExec>>,
+    exec_builds: Arc<metrics::Counter>,
+}
+
+impl ServedArtifact {
+    fn build(
+        name: &str,
+        key: CacheKey,
+        device: DeviceId,
+        model: Arc<OptimizedModel>,
+        graph: &Graph,
+        binding: &ParamBinding,
+        max_batch: usize,
+    ) -> crate::Result<ServedArtifact> {
+        // eager first executor: validates the graph/binding pair at load
+        // time (not at first drain) and seeds the idle pool
+        let exec_builds = metrics::counter("serve.spine.exec_builds");
+        let first = ArenaExec::build_batched(graph, binding, 1, max_batch)?;
+        exec_builds.inc();
+        Ok(ServedArtifact {
+            name: name.to_string(),
+            key,
+            device,
+            model,
+            graph: graph.clone(),
+            binding: binding.clone(),
+            max_batch,
+            input_len: first.input_len(),
+            output_len: first.output_len(),
+            idle: Mutex::new(vec![first]),
+            exec_builds,
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The batching identity: requests coalesce iff their artifacts
+    /// share this content address.
+    pub fn key(&self) -> CacheKey {
+        self.key
+    }
+
+    pub fn device(&self) -> DeviceId {
+        self.device
+    }
+
+    pub fn model(&self) -> &Arc<OptimizedModel> {
+        &self.model
+    }
+
+    /// Input length per request (f32 elements).
+    pub fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    /// Output length per request (f32 elements).
+    pub fn output_len(&self) -> usize {
+        self.output_len
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Executors currently idle in the pool (≥ 1 after construction
+    /// whenever no drain is in flight).
+    pub fn pooled_execs(&self) -> usize {
+        self.idle.lock().unwrap().len()
+    }
+
+    fn acquire_exec(&self) -> crate::Result<ArenaExec> {
+        if let Some(e) = self.idle.lock().unwrap().pop() {
+            return Ok(e);
+        }
+        // cold path: another drain holds every pooled executor
+        let e = ArenaExec::build_batched(&self.graph, &self.binding, 1, self.max_batch)?;
+        self.exec_builds.inc();
+        Ok(e)
+    }
+
+    fn release_exec(&self, e: ArenaExec) {
+        self.idle.lock().unwrap().push(e);
+    }
+
+    /// Run one request synchronously on the caller thread through a
+    /// pooled executor (the unbatched/sequential path; also the
+    /// serve-bench baseline).  Allocation-free once `out` has capacity
+    /// and the pool is warm.
+    pub fn run_blocking(&self, input: &[f32], out: &mut Vec<f32>) -> crate::Result<()> {
+        let exec = self.acquire_exec()?;
+        let r = exec.run_batch(&[input], std::slice::from_mut(out));
+        self.release_exec(exec);
+        r
+    }
+
+    /// Run an explicit batch synchronously on the caller thread (the
+    /// spine's drain uses this shape internally; exposed for the bench's
+    /// quiesced steady-state measurements).
+    pub fn run_batch_blocking(&self, inputs: &[&[f32]], outs: &mut [Vec<f32>]) -> crate::Result<()> {
+        let exec = self.acquire_exec()?;
+        let r = exec.run_batch(inputs, outs);
+        self.release_exec(exec);
+        r
+    }
+}
+
+/// One queued request.
+struct Pending {
+    artifact: Arc<ServedArtifact>,
+    tenant: Arc<TenantState>,
+    input: Vec<f32>,
+    /// Pre-sized output buffer (capacity reserved at submit, off the
+    /// drain path).
+    out: Vec<f32>,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+    shared: Arc<ReqShared>,
+}
+
+/// Bounded FIFO of pending requests for one device.
+struct DeviceQueue {
+    pending: Mutex<VecDeque<Pending>>,
+}
+
+/// Consistent snapshot of the spine's counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpineStats {
+    /// Requests accepted into a queue.
+    pub submitted: u64,
+    /// Requests fulfilled with an output.
+    pub completed: u64,
+    /// Submissions rejected at the queue bound.
+    pub rejected_full: u64,
+    /// Requests rejected at drain because their deadline passed.
+    pub expired: u64,
+    /// Arena executions (dynamic batches) run.
+    pub batches: u64,
+    /// Largest batch coalesced so far.
+    pub batch_max: u64,
+    /// Requests currently queued across all devices.
+    pub queued: usize,
+}
+
+/// Spine internals shared between the public handle and the drain jobs
+/// (which capture only this, so dropping the last public handle can
+/// never make a worker join itself).
+struct SpineCore {
+    cfg: SpineConfig,
+    artifacts: Mutex<HashMap<CacheKey, Arc<ServedArtifact>>>,
+    queues: Mutex<HashMap<DeviceId, Arc<DeviceQueue>>>,
+    latency: LatencyHistogram,
+    // session-local counts (SpineStats) mirrored into the process-global
+    // registry as `serve.spine.*` — same split as the tenant counters
+    submitted: TenantCounter,
+    completed: TenantCounter,
+    rejected_full: TenantCounter,
+    expired: TenantCounter,
+    batches: TenantCounter,
+    batch_max: Arc<metrics::Counter>,
+}
+
+impl SpineCore {
+    fn new(cfg: SpineConfig) -> SpineCore {
+        SpineCore {
+            cfg,
+            artifacts: Mutex::new(HashMap::new()),
+            queues: Mutex::new(HashMap::new()),
+            latency: LatencyHistogram::new(),
+            submitted: TenantCounter::new("serve.spine.submitted"),
+            completed: TenantCounter::new("serve.spine.completed"),
+            rejected_full: TenantCounter::new("serve.spine.rejected_full"),
+            expired: TenantCounter::new("serve.spine.expired"),
+            batches: TenantCounter::new("serve.spine.batches"),
+            batch_max: metrics::counter("serve.spine.batch_max"),
+        }
+    }
+
+    fn queue(&self, device: DeviceId) -> Arc<DeviceQueue> {
+        self.queues
+            .lock()
+            .unwrap()
+            .entry(device)
+            .or_insert_with(|| Arc::new(DeviceQueue { pending: Mutex::new(VecDeque::new()) }))
+            .clone()
+    }
+
+    fn queued_total(&self) -> usize {
+        let queues = self.queues.lock().unwrap();
+        queues.values().map(|q| q.pending.lock().unwrap().len()).sum()
+    }
+
+    /// Drain one dynamic batch from `device`'s queue: pop the front
+    /// request, coalesce up to `max_batch - 1` more with the same
+    /// [`CacheKey`] (later requests for *other* artifacts keep their
+    /// order), reject the expired, run the rest as one arena execution,
+    /// and complete every handle.  Returns how many requests were
+    /// completed (fulfilled + rejected); `0` means the queue was empty.
+    fn drain_one(&self, device: DeviceId) -> usize {
+        let q = self.queue(device);
+        let mut batch: Vec<Pending> = Vec::with_capacity(self.cfg.max_batch);
+        {
+            let mut pending = q.pending.lock().unwrap();
+            let Some(first) = pending.pop_front() else {
+                return 0;
+            };
+            let key = first.artifact.key();
+            batch.push(first);
+            let mut i = 0;
+            while batch.len() < self.cfg.max_batch && i < pending.len() {
+                if pending[i].artifact.key() == key {
+                    batch.push(pending.remove(i).expect("index checked"));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        let handled = batch.len();
+
+        // deadline policy: expired requests are *rejected*, never
+        // silently dropped — their waiters hear DeadlineExceeded
+        let now = Instant::now();
+        let mut live: Vec<Pending> = Vec::with_capacity(batch.len());
+        for p in batch {
+            match p.deadline {
+                Some(d) if now > d => {
+                    self.expired.inc();
+                    let waited_us = now.duration_since(p.enqueued).as_micros() as u64;
+                    p.shared.complete(Err(AdmissionError::DeadlineExceeded { waited_us }));
+                }
+                _ => live.push(p),
+            }
+        }
+        if live.is_empty() {
+            return handled;
+        }
+
+        let artifact = live[0].artifact.clone();
+        let batch_size = live.len();
+        // take inputs/outputs out of the requests so the executor sees
+        // plain slices (the buffers come back to their owners below)
+        let mut ins: Vec<Vec<f32>> = Vec::with_capacity(batch_size);
+        let mut outs: Vec<Vec<f32>> = Vec::with_capacity(batch_size);
+        for p in live.iter_mut() {
+            ins.push(std::mem::take(&mut p.input));
+            outs.push(std::mem::take(&mut p.out));
+        }
+        let in_refs: Vec<&[f32]> = ins.iter().map(|v| v.as_slice()).collect();
+        let t = crate::metrics::Timer::start();
+        let result = artifact
+            .run_batch_blocking(&in_refs, &mut outs)
+            .map_err(|e| AdmissionError::Failed { reason: e.to_string() });
+        let exec_us = t.us();
+
+        match result {
+            Ok(()) => {
+                self.batches.inc();
+                self.batch_max.set_max(batch_size as u64);
+                let done = Instant::now();
+                for (p, out) in live.into_iter().zip(outs) {
+                    let total_us = done.duration_since(p.enqueued).as_secs_f64() * 1e6;
+                    self.latency.record_us(total_us);
+                    self.completed.inc();
+                    p.tenant.runs.inc();
+                    p.shared.complete(Ok(ServeOutput {
+                        output: out,
+                        batch_size,
+                        queue_us: (total_us - exec_us).max(0.0),
+                        exec_us,
+                        total_us,
+                    }));
+                }
+            }
+            Err(e) => {
+                for p in &live {
+                    p.shared.complete(Err(e.clone()));
+                }
+            }
+        }
+        handled
+    }
+}
+
+/// The public spine handle: core + worker pool, side by side (drain jobs
+/// capture only the core, so the pool's graceful drop can always join).
+pub struct ServeSpine {
+    core: Arc<SpineCore>,
+    pool: WorkerPool,
+}
+
+impl ServeSpine {
+    /// Start a spine: spawn the workers, publish the resolved count as
+    /// the `exec.threads` gauge.
+    pub(crate) fn start(cfg: SpineConfig) -> ServeSpine {
+        metrics::counter("exec.threads").set(cfg.workers as u64);
+        let pool = WorkerPool::new(cfg.workers);
+        ServeSpine { core: Arc::new(SpineCore::new(cfg)), pool }
+    }
+
+    pub fn config(&self) -> &SpineConfig {
+        &self.core.cfg
+    }
+
+    /// Worker threads draining this spine.
+    pub fn workers(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// The spine's end-to-end latency histogram (submit → completion).
+    pub fn latency(&self) -> &LatencyHistogram {
+        &self.core.latency
+    }
+
+    pub fn stats(&self) -> SpineStats {
+        SpineStats {
+            submitted: self.core.submitted.get(),
+            completed: self.core.completed.get(),
+            rejected_full: self.core.rejected_full.get(),
+            expired: self.core.expired.get(),
+            batches: self.core.batches.get(),
+            batch_max: self.core.batch_max.get(),
+            queued: self.core.queued_total(),
+        }
+    }
+
+    /// Manually drain one batch from `device`'s queue on the caller
+    /// thread.  With `workers: 0` this is the *only* drain path — the
+    /// deterministic pump the backpressure/deadline tests use; with
+    /// workers it is a harmless extra drain.  Returns requests completed.
+    pub fn drain_one(&self, device: DeviceId) -> usize {
+        self.core.drain_one(device)
+    }
+
+    /// Drain `device`'s queue to empty on the caller thread.
+    pub fn drain_device(&self, device: DeviceId) -> usize {
+        let mut total = 0;
+        loop {
+            let n = self.core.drain_one(device);
+            if n == 0 {
+                return total;
+            }
+            total += n;
+        }
+    }
+
+    /// Get-or-build the served artifact for `key` (spine-wide dedup:
+    /// same content address ⇒ same `Arc`, across tenants).
+    pub(crate) fn artifact(
+        &self,
+        name: &str,
+        key: CacheKey,
+        device: DeviceId,
+        model: Arc<OptimizedModel>,
+        graph: &Graph,
+        binding: &ParamBinding,
+    ) -> Result<Arc<ServedArtifact>, AdmissionError> {
+        let mut arts = self.core.artifacts.lock().unwrap();
+        if let Some(a) = arts.get(&key) {
+            return Ok(a.clone());
+        }
+        let built =
+            ServedArtifact::build(name, key, device, model, graph, binding, self.core.cfg.max_batch)
+                .map_err(|e| AdmissionError::Failed { reason: e.to_string() })?;
+        let a = Arc::new(built);
+        arts.insert(key, a.clone());
+        Ok(a)
+    }
+
+    /// Enqueue one request for `artifact` on behalf of `tenant` and
+    /// schedule a drain.  Non-blocking: the bounded queue rejects
+    /// ([`AdmissionError::QueueFull`]) instead of waiting.
+    pub(crate) fn submit_from(
+        &self,
+        tenant: &Arc<TenantState>,
+        artifact: &Arc<ServedArtifact>,
+        input: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<RequestHandle, AdmissionError> {
+        if input.len() != artifact.input_len() {
+            return Err(AdmissionError::Failed {
+                reason: format!(
+                    "input length {} != the {} expected by artifact '{}'",
+                    input.len(),
+                    artifact.input_len(),
+                    artifact.name
+                ),
+            });
+        }
+        let device = artifact.device;
+        let q = self.core.queue(device);
+        let now = Instant::now();
+        let deadline = deadline.or(self.core.cfg.default_deadline).map(|d| now + d);
+        let shared = Arc::new(ReqShared::default());
+        {
+            let mut pending = q.pending.lock().unwrap();
+            if pending.len() >= self.core.cfg.queue_depth {
+                self.core.rejected_full.inc();
+                return Err(AdmissionError::QueueFull {
+                    device,
+                    depth: self.core.cfg.queue_depth,
+                });
+            }
+            pending.push_back(Pending {
+                artifact: artifact.clone(),
+                tenant: tenant.clone(),
+                out: Vec::with_capacity(artifact.output_len),
+                input,
+                enqueued: now,
+                deadline,
+                shared: shared.clone(),
+            });
+        }
+        self.core.submitted.inc();
+        // one drain job per accepted submit keeps jobs ≥ queued requests
+        // at all times (a job whose batch was already taken by another
+        // drain simply finds the queue empty) — no lost wake-ups
+        if self.pool.threads() > 0 {
+            let core = self.core.clone();
+            self.pool.submit(move || {
+                core.drain_one(device);
+            });
+        }
+        Ok(RequestHandle { shared })
+    }
+}

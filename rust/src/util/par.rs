@@ -1,22 +1,149 @@
 //! Minimal scoped-thread data parallelism (the offline build has no rayon).
 //!
-//! One primitive covers every kernel in this repo:
-//! [`parallel_chunks_mut`] — a parallel-for over a mutable slice, split
-//! into contiguous per-thread sub-slices aligned to a `unit` stride
-//! (e.g. one GEMM output row), so each thread owns its rows exclusively —
-//! no locks, no unsafe.
+//! Two primitives cover every parallel path in this repo:
+//!
+//! * [`parallel_chunks_mut`] — a parallel-for over a mutable slice, split
+//!   into contiguous per-thread sub-slices aligned to a `unit` stride
+//!   (e.g. one GEMM output row), so each thread owns its rows exclusively —
+//!   no locks, no unsafe.  Scoped threads: spawned and joined per call.
+//! * [`WorkerPool`] — a long-lived pool of named worker threads draining
+//!   a shared job queue, for callers with *streams* of independent work
+//!   (the serving spine) where per-call spawning would dominate.
 //!
 //! Thread count is always an **explicit argument**: callers that must be
-//! allocation-free in steady state (the arena executor) pass `1` and the
-//! function degrades to a plain loop without spawning (spawning threads
-//! heap-allocates, so implicit parallelism would silently break the
-//! zero-allocation contract).  [`default_threads`] is the convenience
-//! policy for throughput-oriented callers (benches, registry kernels).
+//! allocation-free in steady state (the arena executor) pass `1` and
+//! `parallel_chunks_mut` degrades to a plain loop without spawning
+//! (spawning threads heap-allocates, so implicit parallelism would
+//! silently break the zero-allocation contract).  [`default_threads`] is
+//! the convenience policy for throughput-oriented callers (benches,
+//! registry kernels, the serving spine's worker pool).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Hard ceiling on [`default_threads`]: the kernels here stop scaling
+/// past it, and the `SOL_THREADS` override is clamped to it too.
+const MAX_DEFAULT_THREADS: usize = 8;
 
 /// Suggested thread count for throughput-oriented callers: available
 /// parallelism capped at 8 (the kernels here stop scaling past that).
+///
+/// A `SOL_THREADS` environment variable overrides the detected value —
+/// still clamped to `1..=8`, and ignored when unparseable — so a
+/// deployment can pin the serving spine / bench parallelism without a
+/// code change.
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+    let detected =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(MAX_DEFAULT_THREADS);
+    match std::env::var("SOL_THREADS").ok().and_then(|s| s.trim().parse::<usize>().ok()) {
+        Some(n) => n.clamp(1, MAX_DEFAULT_THREADS),
+        None => detected,
+    }
+}
+
+/// One queued unit of pool work.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Queue + shutdown flag shared between submitters and workers.
+struct PoolShared {
+    /// `(jobs, shutdown)` under one mutex so a worker can atomically
+    /// decide "queue empty AND shutting down ⇒ exit".
+    state: Mutex<(VecDeque<Job>, bool)>,
+    signal: Condvar,
+}
+
+/// A long-lived pool of worker threads over one FIFO job queue.
+///
+/// * `new(threads)` spawns exactly `threads` workers (explicit-count
+///   contract, like [`parallel_chunks_mut`]); `new(0)` spawns none —
+///   submitted jobs then sit in the queue until the owner drains them
+///   through some external mechanism (the serving spine's tests pump its
+///   queues manually in that mode).
+/// * [`WorkerPool::submit`] enqueues and wakes one worker; jobs run in
+///   FIFO order per worker pick-up, with no result channel — a job
+///   communicates through whatever it captured.
+/// * Dropping the pool is **graceful**: workers finish every queued job
+///   before exiting, so no submitted work is ever silently discarded.
+///
+/// A job that panics takes its worker thread down (the panic is confined
+/// to that worker; remaining workers keep draining).  Jobs are expected
+/// to return errors through their captured state instead of panicking.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` named worker threads over an empty queue.
+    pub fn new(threads: usize) -> WorkerPool {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new((VecDeque::new(), false)),
+            signal: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("sol-worker-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, workers }
+    }
+
+    /// Enqueue one job and wake a worker.  Never blocks on the workers;
+    /// the queue itself is unbounded (callers wanting backpressure bound
+    /// admission *before* submitting, like the serving spine's
+    /// per-device request queues).
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.0.push_back(Box::new(f));
+        drop(st);
+        self.shared.signal.notify_one();
+    }
+
+    /// Number of worker threads this pool runs.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Jobs currently queued (not yet picked up by a worker).
+    pub fn pending(&self) -> usize {
+        self.shared.state.lock().unwrap().0.len()
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.0.pop_front() {
+                    break Some(j);
+                }
+                if st.1 {
+                    break None; // empty queue + shutdown: drained, exit
+                }
+                st = shared.signal.wait(st).unwrap();
+            }
+        };
+        match job {
+            Some(j) => j(),
+            None => return,
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().1 = true;
+        self.shared.signal.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
 }
 
 /// Split `data` into up to `threads` contiguous pieces, each a whole
@@ -87,5 +214,53 @@ mod tests {
     fn chunks_mut_rejects_ragged_unit() {
         let mut data = vec![0u8; 7];
         parallel_chunks_mut(2, &mut data, 3, |_, _| {});
+    }
+
+    #[test]
+    fn sol_threads_env_overrides_and_clamps() {
+        // one test owns the env var (parallel tests in this binary do not
+        // read it at a moment that matters — default_threads is a policy
+        // hint, not a correctness input)
+        std::env::set_var("SOL_THREADS", "3");
+        assert_eq!(default_threads(), 3);
+        std::env::set_var("SOL_THREADS", "99");
+        assert_eq!(default_threads(), 8, "override clamped to the ceiling");
+        std::env::set_var("SOL_THREADS", "0");
+        assert_eq!(default_threads(), 1, "override floored at 1");
+        std::env::set_var("SOL_THREADS", "not-a-number");
+        let detected = default_threads();
+        assert!((1..=8).contains(&detected), "unparseable override ignored");
+        std::env::remove_var("SOL_THREADS");
+        assert!((1..=8).contains(&default_threads()));
+    }
+
+    #[test]
+    fn worker_pool_runs_every_job_before_drop_returns() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let done = Arc::new(AtomicUsize::new(0));
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.threads(), 3);
+        for _ in 0..64 {
+            let done = done.clone();
+            pool.submit(move || {
+                done.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(pool); // graceful: drains the queue before joining
+        assert_eq!(done.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn zero_thread_pool_queues_without_running() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let done = Arc::new(AtomicUsize::new(0));
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.threads(), 0);
+        let d = done.clone();
+        pool.submit(move || {
+            d.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(pool.pending(), 1);
+        assert_eq!(done.load(Ordering::Relaxed), 0, "no workers: job must not run");
     }
 }
