@@ -21,9 +21,19 @@
 //! `--smoke` shrinks tenant/request counts for CI; the full run also
 //! enforces the acceptance bar (batched ≥ 2× sequential on mini-cnn).
 //!
+//! `--policy adaptive` switches the soak to the **A/B mode** behind
+//! `BENCH_8.json` ([`run_policy_ab`]): the same workload is driven twice
+//! — once under [`SpinePolicy::Fifo`], once under
+//! [`SpinePolicy::Adaptive`] — and the headline `p95_speedup` is
+//! `fifo_p95 / adaptive_p95` (>1 ⇒ the adaptive policy improved tail
+//! latency).  The A/B run gates the adaptive policy against a p95
+//! regression versus FIFO.
+//!
 //! [`ServedArtifact::run_blocking`]: crate::session::ServedArtifact::run_blocking
 //! [`Tenant::submit`]: crate::session::Tenant::submit
 //! [`SpineConfig::max_batch`]: crate::session::SpineConfig::max_batch
+//! [`SpinePolicy::Fifo`]: crate::session::SpinePolicy::Fifo
+//! [`SpinePolicy::Adaptive`]: crate::session::SpinePolicy::Adaptive
 
 use std::collections::BTreeMap;
 
@@ -34,7 +44,7 @@ use crate::devsim::DeviceId;
 use crate::exec::kernelbench::{validate_bench_json, BenchRow};
 use crate::frontend::extract_graph;
 use crate::metrics::Timer;
-use crate::session::{AdmissionError, ServingConfig, ServingSession, SpineConfig};
+use crate::session::{AdmissionError, ServingConfig, ServingSession, SpineConfig, SpinePolicy};
 use crate::util::alloc::alloc_count;
 use crate::util::par::default_threads;
 use crate::util::{Json, XorShift};
@@ -55,6 +65,9 @@ pub struct ServeBenchConfig {
     pub workers: usize,
     /// Dynamic-batch bound the spine plans its executors for.
     pub max_batch: usize,
+    /// Drain policy the spine soaks under ([`SpinePolicy::Fifo`] is the
+    /// PR 7 baseline; the A/B mode flips this knob and nothing else).
+    pub policy: SpinePolicy,
 }
 
 impl ServeBenchConfig {
@@ -66,6 +79,7 @@ impl ServeBenchConfig {
                 requests: 512,
                 workers: default_threads(),
                 max_batch: 8,
+                policy: SpinePolicy::Fifo,
             }
         } else {
             ServeBenchConfig {
@@ -74,6 +88,7 @@ impl ServeBenchConfig {
                 requests: 6000,
                 workers: default_threads(),
                 max_batch: 8,
+                policy: SpinePolicy::Fifo,
             }
         }
     }
@@ -100,6 +115,13 @@ pub struct ServeBenchReport {
     pub batch_max: u64,
     /// Arena executions the soak's requests were folded into.
     pub batches: u64,
+    /// Drains the adaptive policy deferred inside its hold window
+    /// (always 0 under [`SpinePolicy::Fifo`]).
+    pub spine_held: u64,
+    /// Submissions adaptive placement re-routed to a sibling queue
+    /// (always 0 under [`SpinePolicy::Fifo`], and on the single-device
+    /// default registry).
+    pub spine_placed: u64,
     /// Submissions that hit [`AdmissionError::QueueFull`] and were
     /// retried by the driver (backpressure observed, not an error).
     pub queue_rejects: u64,
@@ -149,6 +171,8 @@ pub fn run_serve_bench(cfg: &ServeBenchConfig) -> Result<ServeBenchReport> {
         queue_depth: 1024,
         max_batch: cfg.max_batch,
         default_deadline: None,
+        policy: cfg.policy,
+        ..SpineConfig::default()
     });
     let tenants: Vec<_> = (0..cfg.tenants.max(1))
         .map(|i| serving.tenant(&format!("soak-{i}")))
@@ -280,6 +304,8 @@ pub fn run_serve_bench(cfg: &ServeBenchConfig) -> Result<ServeBenchReport> {
         p99_us,
         batch_max: stats.batch_max,
         batches: stats.batches,
+        spine_held: stats.held,
+        spine_placed: stats.placed,
         queue_rejects,
         steady_allocs_per_batch,
     };
@@ -352,6 +378,118 @@ pub fn write_serve_bench_json(path: &std::path::Path, r: &ServeBenchReport) -> R
     Ok(())
 }
 
+/// What the policy A/B run (`--policy adaptive`, `BENCH_8.json`)
+/// measured: the identical workload soaked under both drain policies.
+#[derive(Debug, Clone)]
+pub struct PolicyAbReport {
+    pub fifo: ServeBenchReport,
+    pub adaptive: ServeBenchReport,
+    /// The headline: `fifo_p95 / adaptive_p95` (>1 ⇒ the adaptive
+    /// policy improved tail latency on this workload).
+    pub p95_speedup: f64,
+    /// Throughput ratio, adaptive / fifo.
+    pub rps_ratio: f64,
+    /// Hold-window deferrals / placement re-routes the adaptive run
+    /// recorded (from the spine's own counters).
+    pub held: u64,
+    pub placed: u64,
+}
+
+/// Drive the same workload twice — [`SpinePolicy::Fifo`] then
+/// [`SpinePolicy::Adaptive`], equal tenant/request/worker counts — and
+/// gate the adaptive policy against a p95 regression.
+///
+/// The gate allows measurement noise on the smoke tier: a hold window
+/// adds up to `SpineConfig::hold_us` to an under-filled batch by
+/// design, and CI smoke runs are small enough that scheduler jitter
+/// dominates single-digit-percent differences.  The full (nightly) tier
+/// requires adaptive p95 ≤ fifo p95 outright — under sustained load the
+/// policy must pay for itself.
+pub fn run_policy_ab(cfg: &ServeBenchConfig) -> Result<PolicyAbReport> {
+    let fifo_cfg = ServeBenchConfig { policy: SpinePolicy::Fifo, ..cfg.clone() };
+    let adaptive_cfg = ServeBenchConfig { policy: SpinePolicy::Adaptive, ..cfg.clone() };
+    let fifo = run_serve_bench(&fifo_cfg)?;
+    let (adaptive, held, placed) = {
+        let r = run_serve_bench(&adaptive_cfg)?;
+        (r.clone(), r.spine_held, r.spine_placed)
+    };
+    let p95_speedup = if adaptive.p95_us > 0.0 { fifo.p95_us / adaptive.p95_us } else { 1.0 };
+    let rps_ratio =
+        if fifo.batched_rps > 0.0 { adaptive.batched_rps / fifo.batched_rps } else { 1.0 };
+    let bound = if cfg.smoke {
+        // noise allowance: 1.5× plus a 2ms floor — still catches a real
+        // regression (a broken hold window parks requests for ≫ hold_us)
+        fifo.p95_us * 1.5 + 2_000.0
+    } else {
+        fifo.p95_us
+    };
+    if adaptive.p95_us > bound {
+        bail!(
+            "policy A/B acceptance: adaptive p95 {:.0}µs exceeds the {} bound {:.0}µs \
+             (fifo p95 {:.0}µs)",
+            adaptive.p95_us,
+            if cfg.smoke { "smoke" } else { "full" },
+            bound,
+            fifo.p95_us
+        );
+    }
+    Ok(PolicyAbReport { fifo, adaptive, p95_speedup, rps_ratio, held, placed })
+}
+
+/// Render the A/B report as the `BENCH_8.json` document: headline
+/// `p95_speedup`, per-policy latency/throughput summaries, and both
+/// runs' rows with `fifo.`/`adaptive.` op prefixes (same row schema as
+/// every other `BENCH_*.json`).
+pub fn policy_ab_json(r: &PolicyAbReport) -> Json {
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("serve-policy-ab".into()));
+    top.insert(
+        "mode".to_string(),
+        Json::Str(if r.fifo.cfg.smoke { "smoke" } else { "full" }.into()),
+    );
+    top.insert("p95_speedup".to_string(), Json::Num(r.p95_speedup));
+    top.insert("rps_ratio".to_string(), Json::Num(r.rps_ratio));
+    top.insert("fifo_p50_us".to_string(), Json::Num(r.fifo.p50_us));
+    top.insert("fifo_p95_us".to_string(), Json::Num(r.fifo.p95_us));
+    top.insert("fifo_p99_us".to_string(), Json::Num(r.fifo.p99_us));
+    top.insert("fifo_rps".to_string(), Json::Num(r.fifo.batched_rps));
+    top.insert("adaptive_p50_us".to_string(), Json::Num(r.adaptive.p50_us));
+    top.insert("adaptive_p95_us".to_string(), Json::Num(r.adaptive.p95_us));
+    top.insert("adaptive_p99_us".to_string(), Json::Num(r.adaptive.p99_us));
+    top.insert("adaptive_rps".to_string(), Json::Num(r.adaptive.batched_rps));
+    top.insert("held".to_string(), Json::Num(r.held as f64));
+    top.insert("placed".to_string(), Json::Num(r.placed as f64));
+    top.insert("tenants".to_string(), Json::Num(r.fifo.cfg.tenants as f64));
+    top.insert("requests".to_string(), Json::Num(r.fifo.cfg.requests as f64));
+    top.insert("workers".to_string(), Json::Num(r.fifo.cfg.workers as f64));
+    top.insert("max_batch".to_string(), Json::Num(r.fifo.cfg.max_batch as f64));
+    let rows: Vec<Json> = r
+        .fifo
+        .rows
+        .iter()
+        .map(|row| ("fifo", row))
+        .chain(r.adaptive.rows.iter().map(|row| ("adaptive", row)))
+        .map(|(policy, row)| {
+            let mut o = BTreeMap::new();
+            o.insert("op".to_string(), Json::Str(format!("{policy}.{}", row.op)));
+            o.insert("bytes".to_string(), Json::Num(row.bytes as f64));
+            o.insert("ns_per_iter".to_string(), Json::Num(row.ns_per_iter));
+            o.insert("allocs_per_run".to_string(), Json::Num(row.allocs_per_run as f64));
+            Json::Obj(o)
+        })
+        .collect();
+    top.insert("rows".to_string(), Json::Arr(rows));
+    Json::Obj(top)
+}
+
+/// Write the A/B report to `path` through the shared schema gate.
+pub fn write_policy_ab_json(path: &std::path::Path, r: &PolicyAbReport) -> Result<()> {
+    let doc = policy_ab_json(r);
+    validate_bench_json(&doc)?;
+    std::fs::write(path, doc.to_string() + "\n")?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -364,6 +502,7 @@ mod tests {
             requests: 24,
             workers: 2,
             max_batch: 4,
+            policy: SpinePolicy::Fifo,
         };
         let r = run_serve_bench(&cfg).expect("tiny soak");
         assert_eq!(r.rows.len(), 3);
@@ -377,6 +516,43 @@ mod tests {
         validate_bench_json(&doc).expect("BENCH_7 schema");
         assert_eq!(doc.get("bench").and_then(Json::as_str), Some("serving-spine"));
         assert!(doc.get("batch_speedup").and_then(Json::as_f64).unwrap() > 0.0);
+        assert_eq!(Json::parse(&doc.to_string()).unwrap(), doc);
+    }
+
+    #[test]
+    fn tiny_policy_ab_completes_and_validates() {
+        let cfg = ServeBenchConfig {
+            smoke: true,
+            tenants: 4,
+            requests: 24,
+            workers: 2,
+            max_batch: 4,
+            policy: SpinePolicy::Adaptive,
+        };
+        let r = run_policy_ab(&cfg).expect("tiny A/B");
+        assert!(r.p95_speedup.is_finite() && r.p95_speedup > 0.0);
+        assert!(r.rps_ratio.is_finite() && r.rps_ratio > 0.0);
+        assert_eq!(r.fifo.spine_held, 0, "FIFO never holds");
+        assert_eq!(r.fifo.spine_placed, 0, "FIFO never re-places");
+        let doc = policy_ab_json(&r);
+        validate_bench_json(&doc).expect("BENCH_8 schema");
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("serve-policy-ab"));
+        assert_eq!(doc.get("mode").and_then(Json::as_str), Some("smoke"));
+        assert!(doc.get("p95_speedup").and_then(Json::as_f64).unwrap() > 0.0);
+        // both policies' rows survive, distinguishable by prefix
+        let rows = match doc.get("rows") {
+            Some(Json::Arr(rows)) => rows,
+            other => panic!("rows missing: {other:?}"),
+        };
+        assert_eq!(rows.len(), 6);
+        assert!(rows.iter().any(|r| matches!(
+            r.get("op"),
+            Some(Json::Str(s)) if s.starts_with("fifo.")
+        )));
+        assert!(rows.iter().any(|r| matches!(
+            r.get("op"),
+            Some(Json::Str(s)) if s.starts_with("adaptive.")
+        )));
         assert_eq!(Json::parse(&doc.to_string()).unwrap(), doc);
     }
 

@@ -14,6 +14,7 @@
 //!   across all devices through one bounded-cache `ServingSession`
 //! * `serve-bench` — serving-spine soak: thousands of logical tenants
 //!   submitting concurrently, dynamically batched; writes `BENCH_7.json`
+//!   (`--policy adaptive` = FIFO-vs-adaptive A/B, writes `BENCH_8.json`)
 //! * `effort`    — the §VI-A programming-effort table measured on this repo
 //! * `audit`     — cross-backend consistency sweep: every backend ×
 //!   execution path differentially tested against the framework reference
@@ -407,7 +408,11 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
-    use sol::exec::servebench::{run_serve_bench, write_serve_bench_json, ServeBenchConfig};
+    use sol::exec::servebench::{
+        run_policy_ab, run_serve_bench, write_policy_ab_json, write_serve_bench_json,
+        ServeBenchConfig,
+    };
+    use sol::session::SpinePolicy;
     let mut cfg = ServeBenchConfig::new(flags.contains_key("smoke"));
     if let Some(v) = flags.get("tenants") {
         cfg.tenants = v.parse()?;
@@ -420,6 +425,44 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
     }
     if let Some(v) = flags.get("batch") {
         cfg.max_batch = v.parse()?;
+    }
+    if let Some(v) = flags.get("policy") {
+        cfg.policy = v.parse::<SpinePolicy>().map_err(anyhow::Error::msg)?;
+    }
+    // --policy adaptive switches to the A/B mode: the same workload under
+    // FIFO then adaptive, headline p95_speedup, BENCH_8.json
+    if cfg.policy == SpinePolicy::Adaptive {
+        println!(
+            "serve-bench A/B: {} logical tenants, {} requests, {} workers, max batch {} ({})",
+            cfg.tenants,
+            cfg.requests,
+            cfg.workers,
+            cfg.max_batch,
+            if cfg.smoke { "smoke" } else { "full" }
+        );
+        let r = run_policy_ab(&cfg)?;
+        println!(
+            "fifo:     p50 {:.0} µs / p95 {:.0} µs / p99 {:.0} µs | {:>9.0} req/s",
+            r.fifo.p50_us, r.fifo.p95_us, r.fifo.p99_us, r.fifo.batched_rps
+        );
+        println!(
+            "adaptive: p50 {:.0} µs / p95 {:.0} µs / p99 {:.0} µs | {:>9.0} req/s | \
+             {} held / {} placed",
+            r.adaptive.p50_us,
+            r.adaptive.p95_us,
+            r.adaptive.p99_us,
+            r.adaptive.batched_rps,
+            r.held,
+            r.placed
+        );
+        println!("p95 speedup {:.2}x | rps ratio {:.2}x", r.p95_speedup, r.rps_ratio);
+        if flags.contains_key("json") {
+            let default = "BENCH_8.json".to_string();
+            let out = flags.get("out").unwrap_or(&default);
+            write_policy_ab_json(std::path::Path::new(out), &r)?;
+            println!("wrote {out}");
+        }
+        return Ok(());
     }
     println!(
         "serve-bench: {} logical tenants, {} requests, {} workers, max batch {} ({})",
@@ -545,6 +588,7 @@ USAGE: sol <devices|optimize|kernels|fig3|train-mlp|deploy|serve|bench|serve-ben
   bench     [--json] [--out BENCH_4.json] [--smoke]   kernel/planner microbenches
   serve-bench [--json] [--out BENCH_7.json] [--smoke] [--tenants N] [--requests N]
             [--workers N] [--batch N]   serving-spine throughput/latency soak
+            [--policy fifo|adaptive]   adaptive = FIFO-vs-adaptive A/B, BENCH_8.json
   audit     [--seeds 8] [--json] [--tol abs=A,rel=R,ulp=U]   cross-backend differential
             consistency sweep; exits 2 on any finding (the CI divergence gate)";
 

@@ -19,10 +19,15 @@
 //! | `serve.spine.submitted`    | requests accepted into the serving spine's device queues |
 //! | `serve.spine.completed`    | spine requests fulfilled with an output |
 //! | `serve.spine.rejected_full`| submissions rejected at the bounded queue (`QueueFull`, reject-not-queue) |
-//! | `serve.spine.expired`      | queued requests rejected at drain time because their deadline passed (`DeadlineExceeded`, never silently dropped) |
+//! | `serve.spine.expired`      | requests rejected because their deadline passed — at submit (already unmeetable, never enqueued) or at drain (expired while queued; `DeadlineExceeded`, never silently dropped) |
+//! | `serve.spine.failed`       | spine requests resolved with `Failed` because their batch execution errored (latency is still recorded for them) |
 //! | `serve.spine.batches`      | dynamic batches executed (same-artifact coalescing) |
 //! | `serve.spine.batch_max`    | largest coalesced batch so far (gauge: high-water mark) |
 //! | `serve.spine.exec_builds`  | batched arena executors constructed (cold path; steady state reuses the idle pool) |
+//! | `serve.spine.held`         | adaptive drains deferred inside the hold-for-µs coalescing window (`SpineConfig::hold_us`) |
+//! | `serve.spine.placed`       | submissions the adaptive policy routed to a less-loaded sibling queue (same structural graph, another device) |
+//! | `serve.artifact.<name>.target_batch` | the artifact's current controller-tuned target batch size (gauge) |
+//! | `serve.artifact.<name>.p95_us`       | the artifact's own end-to-end p95, as last sampled by its `BatchController` (gauge) |
 //! | `serve.latency.p50_us` / `p95_us` / `p99_us` | spine end-to-end latency percentiles (gauges, refreshed by `serving_report`) |
 //! | `exec.threads`             | resolved worker-thread count (gauge: spine workers once started, else `util::par::default_threads`) |
 //! | `arena.bytes_peak`         | largest planned activation arena (gauge: high-water mark) |

@@ -71,7 +71,8 @@ pub use serve::{
     AdmissionError, CompilePermit, ServingConfig, ServingSession, Tenant, TenantCounters,
 };
 pub use spine::{
-    RequestHandle, ServeOutput, ServeSpine, ServedArtifact, SpineConfig, SpineStats,
+    BatchController, DrainOutcome, RequestHandle, ServeOutput, ServeSpine, ServedArtifact,
+    SpineConfig, SpinePolicy, SpineStats,
 };
 
 /// A compilation session: backend registry + compile cache + simulator

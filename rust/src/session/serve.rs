@@ -140,7 +140,8 @@ pub struct TenantCounters {
     /// Admitted compiles served straight from the shared cache.
     pub cache_hits: u64,
     /// Executor runs driven through [`Tenant::run`] plus spine
-    /// submissions completed on this tenant's behalf.
+    /// submissions resolved (fulfilled *or* failed) on this tenant's
+    /// behalf — failed traffic is accounted, never silent.
     pub runs: u64,
     /// Artifacts unpinned from this tenant's resident set by its
     /// resident-capacity limit.
@@ -361,9 +362,12 @@ impl Tenant {
     /// Submit one request for `artifact` to the serving spine:
     /// non-blocking, bounded ([`AdmissionError::QueueFull`]), deadline-
     /// aware ([`AdmissionError::DeadlineExceeded`] — `deadline: None`
-    /// falls back to [`SpineConfig::default_deadline`]).  Wait on the
-    /// returned [`RequestHandle`] for the output; completed requests
-    /// count toward this tenant's `runs`.
+    /// falls back to [`SpineConfig::default_deadline`]; an already-
+    /// expired deadline is rejected here, before touching a queue).
+    /// Under [`super::SpinePolicy::Adaptive`] the request may be placed
+    /// on the least-loaded sibling queue serving the same structural
+    /// graph.  Wait on the returned [`RequestHandle`] for the output;
+    /// resolved requests count toward this tenant's `runs`.
     pub fn submit(
         &self,
         artifact: &Arc<ServedArtifact>,
@@ -614,14 +618,19 @@ impl ServingSession {
             let st = spine.stats();
             let (p50, p95, p99) = spine.latency().percentiles();
             out.push_str(&format!(
-                "spine: {} workers, {} queued, {} batches (max {}), \
-                 {} expired / {} rejected, latency p50={:.0}µs p95={:.0}µs p99={:.0}µs\n",
+                "spine: {} workers, {} policy, {} queued, {} batches (max {}), \
+                 {} expired / {} rejected / {} failed, {} held / {} placed, \
+                 latency p50={:.0}µs p95={:.0}µs p99={:.0}µs\n",
                 spine.workers(),
+                spine.policy(),
                 st.queued,
                 st.batches,
                 st.batch_max,
                 st.expired,
                 st.rejected_full,
+                st.failed,
+                st.held,
+                st.placed,
                 p50,
                 p95,
                 p99

@@ -17,7 +17,7 @@ use sol::devsim::DeviceId;
 use sol::exec::kernelbench::validate_bench_json;
 use sol::exec::servebench::{run_serve_bench, write_serve_bench_json, ServeBenchConfig};
 use sol::frontend::{extract_graph, ArenaExec};
-use sol::session::{AdmissionError, ServingConfig, ServingSession, SpineConfig};
+use sol::session::{AdmissionError, ServingConfig, ServingSession, SpineConfig, SpinePolicy};
 use sol::util::alloc::alloc_count;
 use sol::util::gen::random_module;
 use sol::util::{Json, XorShift};
@@ -44,6 +44,7 @@ fn pump_spine(queue_depth: usize, max_batch: usize) -> ServingSession {
         queue_depth,
         max_batch,
         default_deadline: None,
+        ..SpineConfig::default()
     });
     serving
 }
@@ -158,8 +159,11 @@ fn queue_full_rejects_at_the_bound() {
     assert!(h.wait().is_ok());
 }
 
-/// An expired request is rejected with `DeadlineExceeded` at drain time
-/// — completed, never silently dropped.
+/// A request whose deadline passes *while queued* is rejected with
+/// `DeadlineExceeded` at drain time — completed, never silently dropped.
+/// (A deadline already dead at submit never reaches a queue at all —
+/// see `tests/spine_policy.rs` — so this test expires its request with
+/// the spine's virtual clock instead of sleeping.)
 #[test]
 fn expired_requests_are_rejected_never_dropped() {
     let serving = pump_spine(8, 4);
@@ -168,14 +172,16 @@ fn expired_requests_are_rejected_never_dropped() {
     let t = serving.tenant("deadline");
     let art = t.load_artifact(&g, &b, DeviceId::Xeon6126).unwrap();
     let x = vec![0.2f32; art.input_len()];
-    let expired = t.submit(&art, x.clone(), Some(Duration::ZERO)).unwrap();
+    let expired = t.submit(&art, x.clone(), Some(Duration::from_millis(2))).unwrap();
     let live = t.submit(&art, x, None).unwrap();
-    std::thread::sleep(Duration::from_millis(2));
+    // step past the 2ms deadline on the virtual clock — deterministic,
+    // no sleeps
+    serving.spine().advance_clock_us(5_000);
     // the drain *handles* both: one rejected, one fulfilled in a batch of 1
     assert_eq!(serving.spine().drain_one(DeviceId::Xeon6126), 2);
     match expired.wait() {
         Err(AdmissionError::DeadlineExceeded { waited_us }) => {
-            assert!(waited_us >= 1_000, "waited {waited_us} µs, slept 2 ms");
+            assert!(waited_us >= 5_000, "waited {waited_us} µs, clock advanced 5 ms");
         }
         other => panic!("expected DeadlineExceeded, got {other:?}"),
     }
@@ -229,6 +235,7 @@ fn worker_pool_completes_concurrent_submissions() {
         queue_depth: 256,
         max_batch: 4,
         default_deadline: None,
+        ..SpineConfig::default()
     });
     let wl = &fixed_workloads()[0]; // mini-cnn
     let (g, b) = extract_graph(&wl.module, &wl.input_shape, "mini-cnn").unwrap();
@@ -302,6 +309,7 @@ fn serve_bench_smoke_writes_bench_7_json() {
         requests: 48,
         workers: 2,
         max_batch: 4,
+        policy: SpinePolicy::Fifo,
     };
     let r = run_serve_bench(&cfg).expect("smoke soak");
     assert!(r.sequential_rps > 0.0 && r.batched_rps > 0.0);

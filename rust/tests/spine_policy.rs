@@ -1,0 +1,570 @@
+//! Acceptance tests for the spine's drain-accounting fixes and the
+//! latency-aware adaptive batching & placement policy — all driven in
+//! manual-pump mode (`workers: 0`) on the spine's virtual clock, so
+//! every assertion is deterministic (no sleeps, no timing flakes).
+//!
+//! The four regression tests pin behaviors that were wrong before this
+//! change and would fail against the pre-fix spine:
+//! * an already-expired deadline used to be *enqueued* (burning a queue
+//!   slot until a drain noticed) — now rejected at submit;
+//! * a failed batch used to vanish from the accounting (no counter, no
+//!   latency, no tenant attribution) — now `failed` counts it and the
+//!   histogram records it;
+//! * `queue_us` used to be `total_us - exec_us`, charging batch
+//!   assembly to "queued" — now it is enqueue → batch start, measured;
+//! * same-key coalescing used to `VecDeque::remove` in a scan — the
+//!   single-pass rewrite must preserve non-batched requests' relative
+//!   order (property-tested over random interleavings).
+
+use std::time::Duration;
+
+use sol::audit::fixed_workloads;
+use sol::backends::{BackendRegistry, Capabilities, DeviceBackend};
+use sol::devsim::DeviceId;
+use sol::dfp::Flavor;
+use sol::dnn::Library;
+use sol::exec::kernelbench::validate_bench_json;
+use sol::exec::servebench::{run_policy_ab, write_policy_ab_json, ServeBenchConfig};
+use sol::framework::DeviceType;
+use sol::frontend::extract_graph;
+use sol::session::{
+    AdmissionError, DrainOutcome, ServingConfig, ServingSession, Session, SpineConfig,
+    SpinePolicy,
+};
+use sol::util::{Json, XorShift};
+
+const HOST: DeviceId = DeviceId::Xeon6126;
+
+fn assert_close(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (a, b)) in want.iter().zip(got).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-4 * (1.0 + a.abs().max(b.abs())),
+            "{ctx}: elem {i}: {a} vs {b}"
+        );
+    }
+}
+
+/// A manual-pump spine under `policy` over the default registry.
+fn pump_spine(cfg: SpineConfig) -> ServingSession {
+    assert_eq!(cfg.workers, 0, "policy tests must stay deterministic");
+    let serving = ServingSession::new(ServingConfig::default());
+    serving.spine_with(cfg);
+    serving
+}
+
+fn adaptive(queue_depth: usize, max_batch: usize, hold_us: u64) -> SpineConfig {
+    SpineConfig {
+        workers: 0,
+        queue_depth,
+        max_batch,
+        policy: SpinePolicy::Adaptive,
+        hold_us,
+        ..SpineConfig::default()
+    }
+}
+
+fn fifo(queue_depth: usize, max_batch: usize) -> SpineConfig {
+    SpineConfig { workers: 0, queue_depth, max_batch, ..SpineConfig::default() }
+}
+
+// ---------------------------------------------------------------------
+// regression: expired-at-submit rejection
+// ---------------------------------------------------------------------
+
+/// A request whose deadline is already unmeetable at submit time is
+/// rejected at the door — it never occupies a queue slot, never counts
+/// as submitted, and the waiterless caller hears `DeadlineExceeded`
+/// immediately.  (Pre-fix, the submit succeeded and the dead request
+/// burned `queue_depth` until a drain discovered it.)
+#[test]
+fn already_expired_deadlines_reject_at_submit() {
+    let serving = pump_spine(fifo(4, 2));
+    let wl = &fixed_workloads()[2]; // mlp
+    let (g, b) = extract_graph(&wl.module, &wl.input_shape, "mlp").unwrap();
+    let t = serving.tenant("door");
+    let art = t.load_artifact(&g, &b, HOST).unwrap();
+    let x = vec![0.1f32; art.input_len()];
+
+    let err = t.submit(&art, x.clone(), Some(Duration::ZERO)).unwrap_err();
+    assert_eq!(err, AdmissionError::DeadlineExceeded { waited_us: 0 });
+    let st = serving.spine().stats();
+    assert_eq!((st.submitted, st.queued, st.expired), (0, 0, 1), "never enqueued");
+
+    // a meetable deadline is accepted and served as usual
+    let h = t.submit(&art, x, Some(Duration::from_secs(60))).unwrap();
+    assert_eq!(serving.spine().stats().queued, 1);
+    assert_eq!(serving.spine().drain_one(HOST), 1);
+    assert!(h.wait().is_ok());
+}
+
+// ---------------------------------------------------------------------
+// regression: failure-path accounting
+// ---------------------------------------------------------------------
+
+/// A failed batch is *accounted* traffic: every request in it increments
+/// `failed`, records end-to-end latency, and is attributed to its
+/// tenant's `runs` — and every waiter resolves with the error.
+/// (Pre-fix, the error path updated nothing: no counter, no histogram
+/// sample, no tenant attribution.)
+#[test]
+fn failed_batches_are_counted_and_recorded() {
+    let serving = pump_spine(fifo(8, 4));
+    let wl = &fixed_workloads()[2];
+    let (g, b) = extract_graph(&wl.module, &wl.input_shape, "mlp").unwrap();
+    let t = serving.tenant("faulty");
+    let art = t.load_artifact(&g, &b, HOST).unwrap();
+    let x = vec![0.2f32; art.input_len()];
+
+    let h1 = t.submit(&art, x.clone(), None).unwrap();
+    let h2 = t.submit(&art, x.clone(), None).unwrap();
+    serving.spine().fail_next_batches_for_tests(1);
+    assert_eq!(serving.spine().drain_one(HOST), 2, "both requests resolved");
+    for h in [h1, h2] {
+        match h.wait() {
+            Err(AdmissionError::Failed { reason }) => {
+                assert!(reason.contains("injected"), "{reason}")
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+    }
+    let st = serving.spine().stats();
+    assert_eq!((st.failed, st.completed, st.queued), (2, 0, 0));
+    assert_eq!(serving.spine().latency().count(), 2, "failed latency is recorded");
+    assert_eq!(t.counters().runs, 2, "failed submissions attribute to the tenant");
+
+    // the injection is consumed: the next batch succeeds normally
+    let h = t.submit(&art, x, None).unwrap();
+    assert_eq!(serving.spine().drain_one(HOST), 1);
+    assert!(h.wait().is_ok());
+    let st = serving.spine().stats();
+    assert_eq!((st.failed, st.completed), (2, 1));
+    assert_eq!(serving.spine().latency().count(), 3);
+}
+
+// ---------------------------------------------------------------------
+// regression: honest queue_us decomposition
+// ---------------------------------------------------------------------
+
+/// `queue_us` measures enqueue → batch start, per request; batch
+/// assembly lands only in the `total - queue - exec` gap.  (Pre-fix,
+/// `queue_us = total_us - exec_us`, so 200ms of simulated assembly
+/// would have been reported as queueing.)
+#[test]
+fn queue_us_excludes_batch_assembly_time() {
+    let serving = pump_spine(fifo(4, 2));
+    let wl = &fixed_workloads()[2];
+    let (g, b) = extract_graph(&wl.module, &wl.input_shape, "mlp").unwrap();
+    let t = serving.tenant("honest");
+    let art = t.load_artifact(&g, &b, HOST).unwrap();
+
+    let h = t.submit(&art, vec![0.3f32; art.input_len()], None).unwrap();
+    // 300ms queued, then 200ms of (virtual) batch-assembly cost
+    serving.spine().advance_clock_us(300_000);
+    serving.spine().set_assembly_advance_us_for_tests(200_000);
+    assert_eq!(serving.spine().drain_one(HOST), 1);
+    serving.spine().set_assembly_advance_us_for_tests(0);
+
+    let out = h.wait().unwrap();
+    assert!(out.queue_us >= 300_000.0, "queued 300ms, reported {}", out.queue_us);
+    assert!(
+        out.queue_us < 400_000.0,
+        "assembly must not be charged to queueing (queue_us {})",
+        out.queue_us
+    );
+    assert!(out.total_us >= 500_000.0, "total spans queue + assembly ({})", out.total_us);
+    let gap = out.total_us - out.queue_us - out.exec_us;
+    assert!(gap >= 199_000.0, "the assembly cost must appear in the gap (gap {gap})");
+}
+
+// ---------------------------------------------------------------------
+// adaptive policy: hold-for-µs coalescing window
+// ---------------------------------------------------------------------
+
+/// A lone request holds for the coalescing window instead of executing
+/// at batch=1; the window elapses on the virtual clock and the request
+/// then runs.  A full target batch never holds.  `drain_device` forces
+/// through an open window (the flush path).
+#[test]
+fn lone_requests_hold_for_the_window_then_execute() {
+    let serving = pump_spine(adaptive(16, 4, 1_000_000));
+    let wl = &fixed_workloads()[2];
+    let (g, b) = extract_graph(&wl.module, &wl.input_shape, "mlp").unwrap();
+    let t = serving.tenant("holder");
+    let art = t.load_artifact(&g, &b, HOST).unwrap();
+    let x = vec![0.4f32; art.input_len()];
+
+    let h = t.submit(&art, x.clone(), None).unwrap();
+    match serving.spine().pump(HOST) {
+        DrainOutcome::Held { remaining_us } => {
+            assert!(remaining_us > 0 && remaining_us <= 1_000_000, "{remaining_us}");
+        }
+        other => panic!("a lone under-filled batch must hold, got {other:?}"),
+    }
+    assert!(!h.is_done(), "held requests stay queued");
+    assert_eq!(serving.spine().stats().held, 1);
+
+    // the window elapses (virtually): the same pump now executes
+    serving.spine().advance_clock_us(1_000_000);
+    assert_eq!(serving.spine().pump(HOST), DrainOutcome::Completed(1));
+    assert_eq!(h.wait().unwrap().batch_size, 1);
+
+    // a full target batch executes immediately — no hold
+    let hs: Vec<_> = (0..4).map(|_| t.submit(&art, x.clone(), None).unwrap()).collect();
+    assert_eq!(serving.spine().pump(HOST), DrainOutcome::Completed(4));
+    for h in hs {
+        assert_eq!(h.wait().unwrap().batch_size, 4);
+    }
+    assert_eq!(serving.spine().stats().held, 1, "no further holds");
+
+    // drain_device forces through an open window
+    let h = t.submit(&art, x, None).unwrap();
+    assert_eq!(serving.spine().drain_device(HOST), 1);
+    assert!(h.wait().is_ok());
+}
+
+/// The hold window never outlasts the anchor's deadline: when the
+/// anchor's slack is smaller than the window, the hold is bounded by
+/// the slack — and once the deadline passes, the request expires (via
+/// `DeadlineExceeded`) instead of holding forever.
+#[test]
+fn hold_window_is_capped_by_the_anchor_deadline() {
+    // 60s window, but the lone request only has 30s of slack
+    let serving = pump_spine(adaptive(16, 4, 60_000_000));
+    let wl = &fixed_workloads()[2];
+    let (g, b) = extract_graph(&wl.module, &wl.input_shape, "mlp").unwrap();
+    let t = serving.tenant("capped");
+    let art = t.load_artifact(&g, &b, HOST).unwrap();
+
+    let h = t
+        .submit(&art, vec![0.5f32; art.input_len()], Some(Duration::from_secs(30)))
+        .unwrap();
+    match serving.spine().pump(HOST) {
+        DrainOutcome::Held { remaining_us } => {
+            assert!(
+                remaining_us <= 30_000_000,
+                "the deadline slack, not the 60s window, bounds the hold: {remaining_us}"
+            );
+        }
+        other => panic!("expected a hold, got {other:?}"),
+    }
+    // past the deadline the request must resolve, not hold: slack is 0,
+    // so the drain proceeds and rejects it as expired
+    serving.spine().advance_clock_us(31_000_000);
+    assert_eq!(serving.spine().pump(HOST), DrainOutcome::Completed(1));
+    match h.wait() {
+        Err(AdmissionError::DeadlineExceeded { waited_us }) => {
+            assert!(waited_us >= 30_000_000, "{waited_us}");
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    assert_eq!(serving.spine().stats().expired, 1);
+}
+
+// ---------------------------------------------------------------------
+// adaptive policy: deadline-sorted batch assembly
+// ---------------------------------------------------------------------
+
+/// Under the adaptive policy the tightest-deadline request anchors the
+/// batch and same-key peers are taken in deadline order — near-expiry
+/// requests are never passed over.  Under FIFO the same queue drains
+/// front-first (the pre-policy behavior, kept bit-for-bit).
+#[test]
+fn deadline_sorted_assembly_never_passes_over_urgent_requests() {
+    let wl = &fixed_workloads()[2];
+    let (g, b) = extract_graph(&wl.module, &wl.input_shape, "mlp").unwrap();
+
+    // adaptive: the undeadlined front request yields to the urgent pair
+    let serving = pump_spine(adaptive(16, 2, 0));
+    let t = serving.tenant("sorted");
+    let art = t.load_artifact(&g, &b, HOST).unwrap();
+    let x = vec![0.6f32; art.input_len()];
+    let a = t.submit(&art, x.clone(), None).unwrap(); // front, no deadline
+    let b_h = t.submit(&art, x.clone(), Some(Duration::from_secs(10))).unwrap();
+    let c = t.submit(&art, x.clone(), Some(Duration::from_secs(1))).unwrap(); // tightest
+    assert_eq!(serving.spine().pump(HOST), DrainOutcome::Completed(2));
+    let (ob, oc) = (b_h.wait().unwrap(), c.wait().unwrap());
+    assert_eq!((ob.batch_size, oc.batch_size), (2, 2), "the urgent pair batched");
+    assert!(!a.is_done(), "the undeadlined request waits its turn");
+    assert_eq!(serving.spine().pump(HOST), DrainOutcome::Completed(1));
+    assert_eq!(a.wait().unwrap().batch_size, 1);
+
+    // FIFO control: the identical queue drains front-first instead
+    let serving = pump_spine(fifo(16, 2));
+    let t = serving.tenant("fifo-control");
+    let art = t.load_artifact(&g, &b, HOST).unwrap();
+    let a = t.submit(&art, x.clone(), None).unwrap();
+    let b_h = t.submit(&art, x.clone(), Some(Duration::from_secs(10))).unwrap();
+    let c = t.submit(&art, x, Some(Duration::from_secs(1))).unwrap();
+    assert_eq!(serving.spine().drain_one(HOST), 2);
+    assert!(a.is_done() && b_h.is_done(), "FIFO takes the front two");
+    assert!(!c.is_done(), "…and passes over the urgent request");
+    serving.spine().drain_one(HOST);
+    assert!(c.wait().is_ok());
+}
+
+// ---------------------------------------------------------------------
+// adaptive policy: per-artifact batch-size controller wiring
+// ---------------------------------------------------------------------
+
+/// `SpineConfig`'s SLO/cadence knobs reach the per-artifact controller,
+/// and the drain honors the tuned target: after latency data narrows an
+/// artifact's target to 1, a lone request executes immediately — the
+/// hold window no longer waits for peers that latency says not to want.
+#[test]
+fn controller_narrowing_disables_the_hold_for_lone_requests() {
+    let mut cfg = adaptive(16, 8, 1_000_000);
+    cfg.slo_p95_us = 1_000;
+    cfg.adjust_every = 4;
+    let serving = pump_spine(cfg);
+    let wl = &fixed_workloads()[2];
+    let (g, b) = extract_graph(&wl.module, &wl.input_shape, "mlp").unwrap();
+    let t = serving.tenant("tuner");
+    let art = t.load_artifact(&g, &b, HOST).unwrap();
+    let ctl = art.controller();
+    assert_eq!(ctl.target(), 8, "the controller starts at max_batch");
+
+    // over-SLO, under-filled windows narrow the target to 1
+    for _ in 0..3 {
+        for _ in 0..4 {
+            ctl.record_us(50_000.0);
+            ctl.batch_done(1);
+        }
+    }
+    assert_eq!(ctl.target(), 1, "8 → 4 → 2 → 1 across three windows");
+    let (widened, narrowed) = ctl.adjustments();
+    assert_eq!((widened, narrowed), (0, 3));
+
+    // a lone request now fills the target: no hold, immediate execution
+    let h = t.submit(&art, vec![0.7f32; art.input_len()], None).unwrap();
+    assert_eq!(serving.spine().pump(HOST), DrainOutcome::Completed(1));
+    assert!(h.wait().is_ok());
+    assert_eq!(serving.spine().stats().held, 0, "narrowed target never held");
+}
+
+// ---------------------------------------------------------------------
+// property: coalescing preserves the order of everything it leaves
+// ---------------------------------------------------------------------
+
+/// Random interleavings of three artifacts' requests, drained batch by
+/// batch against a reference model of the queue: each drain takes the
+/// front request's same-key peers (up to `max_batch`, FIFO order) and
+/// every request it leaves behind keeps its relative order.  This is
+/// the regression net over the single-pass extraction rewrite (the old
+/// `VecDeque::remove`-in-a-scan was order-preserving but O(n²); a
+/// wrong rewrite that scrambles survivors fails here).
+#[test]
+fn coalescing_preserves_relative_order_of_other_artifacts() {
+    let wls = fixed_workloads();
+    let arts_src: Vec<_> = (0..3)
+        .map(|i| extract_graph(&wls[i].module, &wls[i].input_shape, &wls[i].name).unwrap())
+        .collect();
+    for seed in 0..5u64 {
+        let serving = pump_spine(fifo(64, 2));
+        let t = serving.tenant(&format!("prop-{seed}"));
+        let arts: Vec<_> =
+            arts_src.iter().map(|(g, b)| t.load_artifact(g, b, HOST).unwrap()).collect();
+        let mut rng = XorShift::new(seed * 7 + 1);
+        let n = 8 + rng.below(5);
+        let mut handles = Vec::new();
+        let mut inputs = Vec::new();
+        let mut owners = Vec::new();
+        let mut model: Vec<(usize, usize)> = Vec::new(); // (request id, artifact idx)
+        for id in 0..n {
+            let a = rng.below(arts.len());
+            let x = rng.normal_vec(arts[a].input_len(), 0.5);
+            handles.push(t.submit(&arts[a], x.clone(), None).unwrap());
+            inputs.push(x);
+            owners.push(a);
+            model.push((id, a));
+        }
+        // drain to empty, checking each batch against the reference model
+        while !model.is_empty() {
+            let key_art = model[0].1;
+            let taken: Vec<usize> = model
+                .iter()
+                .filter(|(_, a)| *a == key_art)
+                .take(2)
+                .map(|(id, _)| *id)
+                .collect();
+            assert_eq!(
+                serving.spine().drain_one(HOST),
+                taken.len(),
+                "seed {seed}: batch must be the front artifact's peers"
+            );
+            model.retain(|(id, _)| !taken.contains(id));
+            for &id in &taken {
+                assert!(handles[id].is_done(), "seed {seed}: request {id} resolved");
+            }
+            for (id, _) in &model {
+                assert!(!handles[*id].is_done(), "seed {seed}: request {id} still queued");
+            }
+        }
+        // and everything computed the right numbers
+        let mut want = Vec::new();
+        for (id, h) in handles.into_iter().enumerate() {
+            let out = h.wait().unwrap();
+            arts[owners[id]].run_blocking(&inputs[id], &mut want).unwrap();
+            assert_close(&out.output, &want, &format!("seed {seed}, request {id}"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// adaptive policy: least-loaded-queue placement
+// ---------------------------------------------------------------------
+
+/// A host-executing backend on a second device: same structural graphs
+/// compile into a sibling artifact the adaptive policy may place onto.
+struct TitanHost;
+
+impl DeviceBackend for TitanHost {
+    fn name(&self) -> &'static str {
+        "titan-host"
+    }
+    fn device(&self) -> DeviceId {
+        DeviceId::TitanV
+    }
+    fn flavor(&self) -> Flavor {
+        Flavor::Ispc
+    }
+    fn libraries(&self) -> Vec<Library> {
+        vec![Library::OpenBlas]
+    }
+    fn framework_slot(&self) -> DeviceType {
+        DeviceType::Cuda
+    }
+    fn capabilities(&self) -> Capabilities {
+        // host-executing: claims the arena fast path (the capability
+        // gate `load_artifact` checks), unlike the default TitanV sheet
+        Capabilities { arena_exec: true, ..Capabilities::for_device(DeviceId::TitanV) }
+    }
+}
+
+/// A host-executing backend on the Xeon (default capabilities already
+/// include the arena path).
+struct XeonHost;
+
+impl DeviceBackend for XeonHost {
+    fn name(&self) -> &'static str {
+        "xeon-host"
+    }
+    fn device(&self) -> DeviceId {
+        HOST
+    }
+    fn flavor(&self) -> Flavor {
+        Flavor::Ispc
+    }
+    fn libraries(&self) -> Vec<Library> {
+        vec![Library::OpenBlas]
+    }
+    fn framework_slot(&self) -> DeviceType {
+        DeviceType::Cpu
+    }
+}
+
+fn two_device_serving(cfg: SpineConfig) -> ServingSession {
+    let mut reg = BackendRegistry::new();
+    reg.register(Box::new(XeonHost));
+    reg.register(Box::new(TitanHost));
+    let serving = ServingSession::over(Session::with_registry(reg), ServingConfig::default());
+    serving.spine_with(cfg);
+    serving
+}
+
+/// With two arena-capable devices serving the same structural graph, an
+/// adaptive submit routes to the least-loaded queue (ties keep the
+/// requested device); FIFO never re-routes.  `ServeOutput::device`
+/// reports where the request actually ran, and both devices' artifacts
+/// agree numerically.
+#[test]
+fn adaptive_placement_routes_to_the_least_loaded_sibling_queue() {
+    let wl = &fixed_workloads()[2];
+    let (g, b) = extract_graph(&wl.module, &wl.input_shape, "mlp").unwrap();
+
+    let serving = two_device_serving(adaptive(16, 4, 0));
+    let t = serving.tenant("placer");
+    let xeon_art = t.load_artifact(&g, &b, HOST).unwrap();
+    let titan_art = t.load_artifact(&g, &b, DeviceId::TitanV).unwrap();
+    assert_ne!(xeon_art.key(), titan_art.key(), "sibling artifacts, distinct keys");
+
+    let mut rng = XorShift::new(3);
+    let x1 = rng.normal_vec(xeon_art.input_len(), 0.5);
+    let x2 = rng.normal_vec(xeon_art.input_len(), 0.5);
+    // empty queues tie → the requested device keeps the first request
+    let h1 = t.submit(&xeon_art, x1.clone(), None).unwrap();
+    assert_eq!(serving.spine().stats().placed, 0, "ties never churn");
+    // now Xeon holds 1, Titan 0 → the second submit is re-placed
+    let h2 = t.submit(&xeon_art, x2.clone(), None).unwrap();
+    assert_eq!(serving.spine().stats().placed, 1);
+
+    assert_eq!(serving.spine().drain_one(HOST), 1);
+    assert_eq!(serving.spine().drain_one(DeviceId::TitanV), 1);
+    let (o1, o2) = (h1.wait().unwrap(), h2.wait().unwrap());
+    assert_eq!(o1.device, HOST);
+    assert_eq!(o2.device, DeviceId::TitanV, "served by the sibling queue");
+
+    // both placements compute the same function
+    let mut want = Vec::new();
+    xeon_art.run_blocking(&x1, &mut want).unwrap();
+    assert_close(&o1.output, &want, "request on the requested device");
+    xeon_art.run_blocking(&x2, &mut want).unwrap();
+    assert_close(&o2.output, &want, "request on the placed device");
+
+    // FIFO control: the same double submit stays on the requested queue
+    let serving = two_device_serving(fifo(16, 4));
+    let t = serving.tenant("fifo-placer");
+    let xeon_art = t.load_artifact(&g, &b, HOST).unwrap();
+    let _titan_art = t.load_artifact(&g, &b, DeviceId::TitanV).unwrap();
+    let h1 = t.submit(&xeon_art, x1, None).unwrap();
+    let h2 = t.submit(&xeon_art, x2, None).unwrap();
+    assert_eq!(serving.spine().stats().placed, 0, "FIFO never re-places");
+    assert_eq!(serving.spine().drain_one(HOST), 2, "both coalesce on the Xeon");
+    assert_eq!(h1.wait().unwrap().device, HOST);
+    assert_eq!(h2.wait().unwrap().device, HOST);
+}
+
+// ---------------------------------------------------------------------
+// BENCH_8: the FIFO-vs-adaptive A/B smoke
+// ---------------------------------------------------------------------
+
+/// The A/B smoke runs end to end and records `BENCH_8.json` under the
+/// shared schema gate, with the finite positive `p95_speedup` headline.
+#[test]
+fn policy_ab_smoke_writes_bench_8_json() {
+    let cfg = ServeBenchConfig {
+        smoke: true,
+        tenants: 6,
+        requests: 48,
+        workers: 2,
+        max_batch: 4,
+        policy: SpinePolicy::Adaptive,
+    };
+    let r = run_policy_ab(&cfg).expect("A/B smoke");
+    assert!(r.p95_speedup.is_finite() && r.p95_speedup > 0.0);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_8.json");
+    write_policy_ab_json(&path, &r).unwrap();
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    validate_bench_json(&doc).expect("written BENCH_8.json validates");
+    assert_eq!(doc.get("bench").and_then(Json::as_str), Some("serve-policy-ab"));
+    assert_eq!(doc.get("mode").and_then(Json::as_str), Some("smoke"));
+    assert!(doc.get("p95_speedup").and_then(Json::as_f64).unwrap() > 0.0);
+    assert!(doc.get("fifo_p95_us").and_then(Json::as_f64).unwrap() > 0.0);
+    assert!(doc.get("adaptive_p95_us").and_then(Json::as_f64).unwrap() > 0.0);
+}
+
+// ---------------------------------------------------------------------
+// report: the policy surfaces in serving_report()
+// ---------------------------------------------------------------------
+
+/// The spine line names the active policy and the new counters.
+#[test]
+fn serving_report_names_the_policy_and_new_counters() {
+    let serving = pump_spine(adaptive(8, 2, 0));
+    let _ = serving.tenant("report");
+    let report = serving.serving_report();
+    assert!(report.contains("spine: 0 workers, adaptive policy"), "{report}");
+    assert!(report.contains("failed"), "{report}");
+    assert!(report.contains("held"), "{report}");
+    assert!(report.contains("placed"), "{report}");
+}
