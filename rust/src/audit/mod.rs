@@ -180,18 +180,11 @@ impl fmt::Display for AuditFinding {
     }
 }
 
-/// Test-only fault injection: add `offset` to element 0 of the chosen
-/// (device, path) variant's output before comparison.  This is the
-/// audit's self-test hook — an intentionally perturbed kernel that
-/// proves the net catches real divergence (`rust/tests/audit.rs` and
-/// the hidden `sol audit --fault` flag drive it); it has no place in a
-/// production sweep.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct FaultSpec {
-    pub device: DeviceId,
-    pub path: ExecPath,
-    pub offset: f32,
-}
+// The audit's test-only fault injection (add `offset` to element 0 of
+// the chosen variant's output) now lives with the rest of the fault
+// plumbing in `util::fault`, shared with the spine's chaos harness;
+// re-exported here so audit callers are unchanged.
+pub use crate::util::fault::FaultSpec;
 
 /// Audit engine configuration.
 pub struct AuditConfig {

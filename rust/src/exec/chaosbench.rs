@@ -1,0 +1,626 @@
+//! `sol chaos` — the fault-injection soak behind `BENCH_9.json`: the
+//! serving spine under seeded kernel, batch and device failures.
+//!
+//! Every seed is one fully deterministic serving scenario, driven in
+//! manual-pump mode (`workers: 0`) on the spine's virtual clock over a
+//! two-device registry (Xeon + a host-executing Titan sibling):
+//!
+//! * **clean phase** — fault-free waves establish the baseline latency
+//!   pool;
+//! * **probabilistic batch faults** — a seeded rate-0.4 rule fails batch
+//!   executions until its budget runs out; the degradation ladder
+//!   (bisection + naive rescue) must serve *every* request anyway;
+//! * **poison isolation** — one request carries the poison sentinel: the
+//!   ladder must fail exactly that request and serve its batchmates;
+//! * **panic containment** — an injected batch panic must be contained
+//!   (`catch_unwind`) and every request still resolved;
+//! * **device down / failover / recovery** — a persistent all-site fault
+//!   trips the Xeon's breaker: queued requests migrate to the Titan
+//!   sibling, new submits fail over at placement, and once the fault
+//!   clears a half-open probe restores the device.
+//!
+//! Invariants checked on every seed: no request is lost (every handle
+//! resolves), resolutions sum to submissions, nothing resolves twice
+//! (the `serve.spine.double_resolve` guard stays zero), the breaker
+//! trips and recovers, and failover actually happened.  The headline
+//! `degraded_p95_ratio` is faulted-phase p95 over clean p95 — how much
+//! tail latency the resilience machinery costs while faults are live.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::bail;
+
+use crate::audit::fixed_workloads;
+use crate::backends::{BackendRegistry, Capabilities, DeviceBackend};
+use crate::devsim::DeviceId;
+use crate::dfp::Flavor;
+use crate::dnn::Library;
+use crate::exec::kernelbench::{validate_bench_json, BenchRow};
+use crate::framework::DeviceType;
+use crate::frontend::extract::ParamBinding;
+use crate::frontend::extract_graph;
+use crate::ir::Graph;
+use crate::metrics;
+use crate::session::{
+    DeviceHealth, DrainOutcome, RequestHandle, ServedArtifact, ServingConfig, ServingSession,
+    Session, SpineConfig, SpinePolicy, Tenant,
+};
+use crate::util::fault::{FaultAction, FaultRule, FaultSite};
+use crate::util::{Json, XorShift};
+use crate::Result;
+
+const XEON: DeviceId = DeviceId::Xeon6126;
+const TITAN: DeviceId = DeviceId::TitanV;
+
+/// The poison input signature ([`crate::util::fault::FaultInjector::set_poison`]).
+const POISON: f32 = 1e30;
+
+/// Knobs of one chaos run.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// CI tier: few seeds, same scenario structure.
+    pub smoke: bool,
+    /// Independent deterministic scenarios (`--seeds`); each seeds the
+    /// injector's RNG and the input generator.
+    pub seeds: u64,
+    /// Clean-phase requests per seed (the baseline latency pool; the
+    /// fault phases add a fixed number on top).
+    pub requests: usize,
+}
+
+impl ChaosConfig {
+    pub fn new(smoke: bool) -> ChaosConfig {
+        if smoke {
+            ChaosConfig { smoke, seeds: 4, requests: 24 }
+        } else {
+            ChaosConfig { smoke, seeds: 32, requests: 96 }
+        }
+    }
+}
+
+/// What the chaos soak measured, summed over every seed.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    pub cfg: ChaosConfig,
+    /// The `BENCH_9.json` rows (clean / degraded latency).
+    pub rows: Vec<BenchRow>,
+    pub submitted: u64,
+    /// Requests fulfilled with an output (clean and fault phases).
+    pub resolved_ok: u64,
+    /// Requests resolved with an error — every one expected and
+    /// accounted (poison requests, dead-device waves).
+    pub resolved_err: u64,
+    /// Degradation-ladder attempts across all seeds.
+    pub retries: u64,
+    /// Requests isolated as poison.
+    pub poison: u64,
+    /// Requests routed away from a tripped device.
+    pub failover: u64,
+    /// Breaker trips (Healthy → Quarantined), summed over devices.
+    pub trips: u64,
+    /// Half-open probes (Quarantined → HalfOpen), summed over devices.
+    pub probes: u64,
+    pub clean_p50_us: f64,
+    pub clean_p95_us: f64,
+    pub degraded_p50_us: f64,
+    pub degraded_p95_us: f64,
+    /// The headline: faulted-phase p95 / clean p95.
+    pub degraded_p95_ratio: f64,
+}
+
+/// Exact quantile over an ascending-sorted sample (ceil-rank).
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// A host-executing backend on the Xeon (default capabilities already
+/// include the arena fast path the spine needs).
+struct XeonHost;
+
+impl DeviceBackend for XeonHost {
+    fn name(&self) -> &'static str {
+        "chaos-xeon-host"
+    }
+    fn device(&self) -> DeviceId {
+        XEON
+    }
+    fn flavor(&self) -> Flavor {
+        Flavor::Ispc
+    }
+    fn libraries(&self) -> Vec<Library> {
+        vec![Library::OpenBlas]
+    }
+    fn framework_slot(&self) -> DeviceType {
+        DeviceType::Cpu
+    }
+}
+
+/// A host-executing backend on a second device: the same structural
+/// graph compiles into a sibling artifact, so the breaker has a real
+/// failover destination.
+struct TitanHost;
+
+impl DeviceBackend for TitanHost {
+    fn name(&self) -> &'static str {
+        "chaos-titan-host"
+    }
+    fn device(&self) -> DeviceId {
+        TITAN
+    }
+    fn flavor(&self) -> Flavor {
+        Flavor::Ispc
+    }
+    fn libraries(&self) -> Vec<Library> {
+        vec![Library::OpenBlas]
+    }
+    fn framework_slot(&self) -> DeviceType {
+        DeviceType::Cuda
+    }
+    fn capabilities(&self) -> Capabilities {
+        Capabilities { arena_exec: true, ..Capabilities::for_device(TITAN) }
+    }
+}
+
+fn two_device_serving(spine: SpineConfig) -> ServingSession {
+    let mut reg = BackendRegistry::new();
+    reg.register(Box::new(XeonHost));
+    reg.register(Box::new(TitanHost));
+    let serving = ServingSession::over(Session::with_registry(reg), ServingConfig::default());
+    serving.spine_with(spine);
+    serving
+}
+
+/// Per-seed tallies feeding the aggregate report (captured before the
+/// seed's session is dropped).
+struct SeedOutcome {
+    submitted: u64,
+    ok: u64,
+    err: u64,
+    retries: u64,
+    poison: u64,
+    failover: u64,
+    trips: u64,
+    probes: u64,
+    clean_lat: Vec<f64>,
+    degraded_lat: Vec<f64>,
+}
+
+/// Submit `n` fresh requests for `art`.
+fn submit_wave(
+    tenant: &Tenant,
+    art: &Arc<ServedArtifact>,
+    rng: &mut XorShift,
+    n: usize,
+) -> Result<Vec<RequestHandle>> {
+    let mut hs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let x = rng.normal_vec(art.input_len(), 0.5);
+        hs.push(tenant.submit(art, x, None).map_err(anyhow::Error::new)?);
+    }
+    Ok(hs)
+}
+
+/// Resolve a wave's handles: every one must already be done (no request
+/// may be lost), fulfilled latencies land in `lat`.
+fn settle(
+    seed: u64,
+    phase: &str,
+    handles: Vec<RequestHandle>,
+    lat: &mut Vec<f64>,
+) -> Result<(u64, u64)> {
+    let (mut ok, mut err) = (0u64, 0u64);
+    for (i, h) in handles.into_iter().enumerate() {
+        if !h.is_done() {
+            bail!("chaos seed {seed}/{phase}: request {i} was never resolved (lost request)");
+        }
+        match h.wait() {
+            Ok(out) => {
+                ok += 1;
+                lat.push(out.total_us);
+            }
+            Err(_) => err += 1,
+        }
+    }
+    Ok((ok, err))
+}
+
+/// One deterministic chaos scenario (see the module doc for the phases).
+fn run_seed(
+    cfg: &ChaosConfig,
+    seed: u64,
+    graph: &Graph,
+    binding: &ParamBinding,
+) -> Result<SeedOutcome> {
+    let serving = two_device_serving(SpineConfig {
+        workers: 0,
+        queue_depth: 1024,
+        max_batch: 4,
+        default_deadline: None,
+        policy: SpinePolicy::Fifo,
+        max_retries: 4,
+        trip_after: 2,
+        probe_backoff_us: 1_000,
+        probe_backoff_max_us: 8_000,
+        ..SpineConfig::default()
+    });
+    let tenant = serving.tenant(&format!("chaos-{seed}"));
+    let xeon = tenant.load_artifact(graph, binding, XEON).map_err(anyhow::Error::new)?;
+    let _titan = tenant.load_artifact(graph, binding, TITAN).map_err(anyhow::Error::new)?;
+    let spine = serving.spine();
+    let mut rng = XorShift::new(0xC4A05 ^ seed.wrapping_mul(0x9E37_79B9));
+    let mut out = SeedOutcome {
+        submitted: 0,
+        ok: 0,
+        err: 0,
+        retries: 0,
+        poison: 0,
+        failover: 0,
+        trips: 0,
+        probes: 0,
+        clean_lat: Vec::new(),
+        degraded_lat: Vec::new(),
+    };
+    // ---- phase A: clean baseline --------------------------------------
+    let waves = (cfg.requests / 4).max(2);
+    for _ in 0..waves {
+        let hs = submit_wave(&tenant, &xeon, &mut rng, 4)?;
+        out.submitted += 4;
+        spine.advance_clock_us(500);
+        spine.drain_device(XEON);
+        let (ok, err) = settle(seed, "clean", hs, &mut out.clean_lat)?;
+        if err != 0 {
+            bail!("chaos seed {seed}: {err} failures in the fault-free phase");
+        }
+        out.ok += ok;
+    }
+
+    let inj = spine.fault_injector();
+
+    // ---- phase B1: seeded probabilistic batch faults ------------------
+    // the rule only hits the batch site, so the ladder's naive rescue is
+    // always available: every request must still be served
+    inj.seed(seed.wrapping_mul(31).wrapping_add(7));
+    inj.push_rule(FaultRule {
+        device: None,
+        site: Some(FaultSite::Batch),
+        action: FaultAction::Fail,
+        rate: 0.4,
+        remaining: Some(6),
+    });
+    for _ in 0..3 {
+        let hs = submit_wave(&tenant, &xeon, &mut rng, 4)?;
+        out.submitted += 4;
+        spine.advance_clock_us(500);
+        spine.drain_device(XEON);
+        let (ok, err) = settle(seed, "probabilistic", hs, &mut out.degraded_lat)?;
+        if err != 0 {
+            bail!("chaos seed {seed}: batch-site faults must degrade, not fail ({err} lost)");
+        }
+        out.ok += ok;
+    }
+    inj.clear();
+
+    // ---- phase B2: poison isolation -----------------------------------
+    inj.set_poison(Some(POISON));
+    let poison_before = spine.stats().poison;
+    let mut hs = Vec::with_capacity(4);
+    for i in 0..4 {
+        let mut x = rng.normal_vec(xeon.input_len(), 0.5);
+        if i == 2 {
+            x[0] = POISON;
+        }
+        hs.push(tenant.submit(&xeon, x, None).map_err(anyhow::Error::new)?);
+    }
+    out.submitted += 4;
+    spine.advance_clock_us(500);
+    spine.drain_device(XEON);
+    let (ok, err) = settle(seed, "poison", hs, &mut out.degraded_lat)?;
+    if (ok, err) != (3, 1) {
+        bail!("chaos seed {seed}: poison isolation served {ok}, failed {err} (want 3/1)");
+    }
+    out.ok += ok;
+    out.err += err;
+    if spine.stats().poison <= poison_before {
+        bail!("chaos seed {seed}: the poison request was not counted as poison");
+    }
+    if spine.device_health().iter().any(|(_, h, _, _)| *h != DeviceHealth::Healthy) {
+        bail!("chaos seed {seed}: one poison request must not trip a healthy device");
+    }
+    inj.set_poison(None);
+
+    // ---- phase B3: panic containment ----------------------------------
+    inj.push_rule(FaultRule {
+        device: None,
+        site: Some(FaultSite::Batch),
+        action: FaultAction::Panic,
+        rate: 1.0,
+        remaining: Some(1),
+    });
+    let hs = submit_wave(&tenant, &xeon, &mut rng, 4)?;
+    out.submitted += 4;
+    spine.advance_clock_us(500);
+    spine.drain_device(XEON);
+    let (ok, err) = settle(seed, "panic", hs, &mut out.degraded_lat)?;
+    if err != 0 {
+        bail!("chaos seed {seed}: a contained panic must not lose requests ({err} lost)");
+    }
+    out.ok += ok;
+    inj.clear();
+
+    // ---- phase B4: device down → trip → migrate → fail over → heal ----
+    // all-site faults on the Xeon: the ladder can't rescue (the naive
+    // path fails too), so whole batches die and the breaker trips
+    inj.push_rule(FaultRule {
+        device: Some(XEON),
+        site: None,
+        action: FaultAction::Fail,
+        rate: 1.0,
+        remaining: None,
+    });
+    // wave 1: every request dies, first consecutive failure
+    let hs = submit_wave(&tenant, &xeon, &mut rng, 4)?;
+    out.submitted += 4;
+    spine.advance_clock_us(500);
+    if spine.drain_one(XEON) != 4 {
+        bail!("chaos seed {seed}: dead-device wave 1 must resolve all 4 requests");
+    }
+    let (ok, err) = settle(seed, "dead-1", hs, &mut out.degraded_lat)?;
+    out.ok += ok;
+    out.err += err;
+    // wave 2: the first batch's failure trips the breaker; the 4 still
+    // queued requests must migrate to the Titan sibling and be served
+    let hs = submit_wave(&tenant, &xeon, &mut rng, 8)?;
+    out.submitted += 8;
+    spine.advance_clock_us(500);
+    spine.drain_one(XEON);
+    let quarantined = spine
+        .device_health()
+        .iter()
+        .any(|(d, h, _, _)| *d == XEON && *h == DeviceHealth::Quarantined);
+    if !quarantined {
+        bail!("chaos seed {seed}: the Xeon must be quarantined after 2 failed batches");
+    }
+    match spine.pump(XEON) {
+        DrainOutcome::Completed(4) => {}
+        other => bail!(
+            "chaos seed {seed}: quarantine migration expected Completed(4), got {other:?}"
+        ),
+    }
+    let (ok, err) = settle(seed, "dead-2", hs, &mut out.degraded_lat)?;
+    if (ok, err) != (4, 4) {
+        bail!("chaos seed {seed}: dead-device wave 2 served {ok}, failed {err} (want 4/4)");
+    }
+    out.ok += ok;
+    out.err += err;
+    // wave 3: new submits fail over at placement (the Xeon is tripped)
+    let failover_before = spine.stats().failover;
+    let hs = submit_wave(&tenant, &xeon, &mut rng, 4)?;
+    out.submitted += 4;
+    spine.advance_clock_us(500);
+    while spine.drain_one(TITAN) > 0 {}
+    let (ok, err) = settle(seed, "failover", hs, &mut out.degraded_lat)?;
+    if err != 0 {
+        bail!("chaos seed {seed}: failed-over requests must be served ({err} lost)");
+    }
+    out.ok += ok;
+    if spine.stats().failover <= failover_before {
+        bail!("chaos seed {seed}: submits to the tripped device never failed over");
+    }
+    // heal: the fault clears, the backoff elapses, a half-open probe
+    // restores the device, and normal service resumes on it
+    inj.clear();
+    spine.advance_clock_us(2_000);
+    let hs = submit_wave(&tenant, &xeon, &mut rng, 1)?;
+    out.submitted += 1;
+    spine.advance_clock_us(500);
+    if spine.drain_one(XEON) != 1 {
+        bail!("chaos seed {seed}: the half-open probe batch did not run");
+    }
+    let (ok, err) = settle(seed, "probe", hs, &mut out.degraded_lat)?;
+    if (ok, err) != (1, 0) {
+        bail!("chaos seed {seed}: the probe request must succeed on the healed device");
+    }
+    out.ok += ok;
+    let hs = submit_wave(&tenant, &xeon, &mut rng, 4)?;
+    out.submitted += 4;
+    spine.advance_clock_us(500);
+    spine.drain_device(XEON);
+    let (ok, err) = settle(seed, "healed", hs, &mut out.degraded_lat)?;
+    if err != 0 {
+        bail!("chaos seed {seed}: the healed device failed {err} requests");
+    }
+    out.ok += ok;
+
+    // ---- per-seed invariants ------------------------------------------
+    let st = spine.stats();
+    if out.ok + out.err != out.submitted {
+        bail!(
+            "chaos seed {seed}: resolutions ({} ok + {} err) != {} submissions",
+            out.ok,
+            out.err,
+            out.submitted
+        );
+    }
+    if st.queued != 0 {
+        bail!("chaos seed {seed}: {} requests left queued after the scenario", st.queued);
+    }
+    if st.retries == 0 {
+        bail!("chaos seed {seed}: the degradation ladder never retried anything");
+    }
+    let health = spine.device_health();
+    let trips: u64 = health.iter().map(|(_, _, t, _)| t).sum();
+    let probes: u64 = health.iter().map(|(_, _, _, p)| p).sum();
+    if trips == 0 || probes == 0 {
+        bail!("chaos seed {seed}: expected >= 1 trip and >= 1 probe, got {trips}/{probes}");
+    }
+    if health.iter().any(|(_, h, _, _)| *h != DeviceHealth::Healthy) {
+        bail!("chaos seed {seed}: every device must end the scenario healthy");
+    }
+    out.retries = st.retries;
+    out.poison = st.poison;
+    out.failover = st.failover;
+    out.trips = trips;
+    out.probes = probes;
+    Ok(out)
+}
+
+/// Run the soak over every seed and aggregate.  Any broken invariant is
+/// an error (the CI `chaos-smoke` gate), and the aggregate must show the
+/// machinery actually exercised: trips, probes, failover, retries.
+pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosReport> {
+    let workloads = fixed_workloads();
+    let wl = &workloads[2]; // mlp: the smallest fixed workload
+    let (graph, binding) = extract_graph(&wl.module, &wl.input_shape, &wl.name)?;
+    let double_before = metrics::counter("serve.spine.double_resolve").get();
+    let seeds = cfg.seeds.max(1);
+    let (mut submitted, mut ok, mut err) = (0u64, 0u64, 0u64);
+    let (mut retries, mut poison, mut failover) = (0u64, 0u64, 0u64);
+    let (mut trips, mut probes) = (0u64, 0u64);
+    let mut clean_lat: Vec<f64> = Vec::new();
+    let mut degraded_lat: Vec<f64> = Vec::new();
+    for seed in 0..seeds {
+        // each seed runs in a fresh session: per-seed stats start at zero
+        let so = run_seed(cfg, seed, &graph, &binding)?;
+        submitted += so.submitted;
+        ok += so.ok;
+        err += so.err;
+        retries += so.retries;
+        poison += so.poison;
+        failover += so.failover;
+        trips += so.trips;
+        probes += so.probes;
+        clean_lat.extend(so.clean_lat);
+        degraded_lat.extend(so.degraded_lat);
+    }
+    let double_resolved = metrics::counter("serve.spine.double_resolve").get() - double_before;
+    if double_resolved != 0 {
+        bail!("chaos: {double_resolved} requests resolved twice (first-write-wins guard fired)");
+    }
+    clean_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    degraded_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let clean_p50_us = pct(&clean_lat, 0.50);
+    let clean_p95_us = pct(&clean_lat, 0.95);
+    let degraded_p50_us = pct(&degraded_lat, 0.50);
+    let degraded_p95_us = pct(&degraded_lat, 0.95);
+    if clean_p95_us <= 0.0 {
+        bail!("chaos: empty clean latency pool (no baseline to ratio against)");
+    }
+    let degraded_p95_ratio = degraded_p95_us / clean_p95_us;
+    if !degraded_p95_ratio.is_finite() || degraded_p95_ratio <= 0.0 {
+        bail!("chaos: degraded_p95_ratio must be finite positive, got {degraded_p95_ratio}");
+    }
+    let req_bytes = 0; // per-request payload is not the figure of merit here
+    let clean_mean_us = clean_lat.iter().sum::<f64>() / clean_lat.len() as f64;
+    let degraded_mean_us = degraded_lat.iter().sum::<f64>() / degraded_lat.len().max(1) as f64;
+    let rows = vec![
+        BenchRow {
+            op: "chaos.clean.mlp".into(),
+            bytes: req_bytes,
+            ns_per_iter: clean_mean_us * 1e3,
+            allocs_per_run: 0,
+        },
+        BenchRow {
+            op: "chaos.degraded.mlp".into(),
+            bytes: req_bytes,
+            ns_per_iter: degraded_mean_us * 1e3,
+            allocs_per_run: 0,
+        },
+    ];
+    Ok(ChaosReport {
+        cfg: ChaosConfig { seeds, ..cfg.clone() },
+        rows,
+        submitted,
+        resolved_ok: ok,
+        resolved_err: err,
+        retries,
+        poison,
+        failover,
+        trips,
+        probes,
+        clean_p50_us,
+        clean_p95_us,
+        degraded_p50_us,
+        degraded_p95_us,
+        degraded_p95_ratio,
+    })
+}
+
+/// Render the report as the `BENCH_9.json` document (same row schema as
+/// every other `BENCH_*.json`; the headline key is `degraded_p95_ratio`).
+pub fn chaos_json(r: &ChaosReport) -> Json {
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("chaos-resilience".into()));
+    top.insert(
+        "mode".to_string(),
+        Json::Str(if r.cfg.smoke { "smoke" } else { "full" }.into()),
+    );
+    top.insert("degraded_p95_ratio".to_string(), Json::Num(r.degraded_p95_ratio));
+    top.insert("seeds".to_string(), Json::Num(r.cfg.seeds as f64));
+    top.insert("requests".to_string(), Json::Num(r.cfg.requests as f64));
+    top.insert("submitted".to_string(), Json::Num(r.submitted as f64));
+    top.insert("resolved_ok".to_string(), Json::Num(r.resolved_ok as f64));
+    top.insert("resolved_err".to_string(), Json::Num(r.resolved_err as f64));
+    top.insert("retries".to_string(), Json::Num(r.retries as f64));
+    top.insert("poison".to_string(), Json::Num(r.poison as f64));
+    top.insert("failover".to_string(), Json::Num(r.failover as f64));
+    top.insert("trips".to_string(), Json::Num(r.trips as f64));
+    top.insert("probes".to_string(), Json::Num(r.probes as f64));
+    top.insert("clean_p50_us".to_string(), Json::Num(r.clean_p50_us));
+    top.insert("clean_p95_us".to_string(), Json::Num(r.clean_p95_us));
+    top.insert("degraded_p50_us".to_string(), Json::Num(r.degraded_p50_us));
+    top.insert("degraded_p95_us".to_string(), Json::Num(r.degraded_p95_us));
+    top.insert(
+        "rows".to_string(),
+        Json::Arr(
+            r.rows
+                .iter()
+                .map(|row| {
+                    let mut o = BTreeMap::new();
+                    o.insert("op".to_string(), Json::Str(row.op.clone()));
+                    o.insert("bytes".to_string(), Json::Num(row.bytes as f64));
+                    o.insert("ns_per_iter".to_string(), Json::Num(row.ns_per_iter));
+                    o.insert(
+                        "allocs_per_run".to_string(),
+                        Json::Num(row.allocs_per_run as f64),
+                    );
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(top)
+}
+
+/// Write the report to `path` through the shared schema gate
+/// ([`validate_bench_json`]).
+pub fn write_chaos_json(path: &std::path::Path, r: &ChaosReport) -> Result<()> {
+    let doc = chaos_json(r);
+    validate_bench_json(&doc)?;
+    std::fs::write(path, doc.to_string() + "\n")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_chaos_run_holds_invariants_and_validates() {
+        let cfg = ChaosConfig { smoke: true, seeds: 1, requests: 8 };
+        let r = run_chaos(&cfg).expect("tiny chaos run");
+        assert_eq!(r.resolved_ok + r.resolved_err, r.submitted);
+        assert!(r.resolved_err > 0, "the dead-device phase fails requests by design");
+        assert!(r.degraded_p95_ratio.is_finite() && r.degraded_p95_ratio > 0.0);
+        let doc = chaos_json(&r);
+        validate_bench_json(&doc).expect("BENCH_9 schema");
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("chaos-resilience"));
+        assert_eq!(doc.get("mode").and_then(Json::as_str), Some("smoke"));
+        assert!(doc.get("degraded_p95_ratio").and_then(Json::as_f64).unwrap() > 0.0);
+        assert_eq!(Json::parse(&doc.to_string()).unwrap(), doc);
+    }
+}

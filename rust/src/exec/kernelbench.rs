@@ -251,19 +251,20 @@ pub fn validate_bench_json(doc: &Json) -> Result<()> {
         Some("smoke") | Some("full") => {}
         other => bail!("bench json: 'mode' must be smoke|full, got {other:?}"),
     }
-    // every recorded suite carries at least one headline `*_speedup`
-    // figure (BENCH_4: conv2d_speedup, BENCH_7: batch_speedup), and a
-    // zeroed/NaN one is the stale-seed signature
+    // every recorded suite carries at least one headline `*_speedup` or
+    // `*_ratio` figure (BENCH_4: conv2d_speedup, BENCH_7: batch_speedup,
+    // BENCH_9: degraded_p95_ratio), and a zeroed/NaN one is the
+    // stale-seed signature
     let speedups: Vec<(&str, Option<f64>)> = match doc {
         Json::Obj(o) => o
             .iter()
-            .filter(|(k, _)| k.ends_with("_speedup"))
+            .filter(|(k, _)| k.ends_with("_speedup") || k.ends_with("_ratio"))
             .map(|(k, v)| (k.as_str(), v.as_f64()))
             .collect(),
         _ => bail!("bench json: document is not an object"),
     };
     if speedups.is_empty() {
-        bail!("bench json: no '*_speedup' key (every suite records a headline speedup)");
+        bail!("bench json: no '*_speedup' or '*_ratio' key (every suite records a headline)");
     }
     for (key, v) in speedups {
         match v {

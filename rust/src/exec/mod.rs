@@ -16,6 +16,10 @@
 //!   simulated tenants submitting through the batching queue, reported
 //!   as throughput + p50/p95/p99 latency (`sol serve-bench --json`,
 //!   `BENCH_7.json`).
+//! * [`chaosbench`] — the fault-injection soak: the spine under seeded
+//!   batch/device failures, asserting the resilience invariants (no
+//!   lost requests, breaker trips and recovers) and reporting the tail
+//!   cost of degradation (`sol chaos --json`, `BENCH_9.json`).
 //!
 //! These modules build *step lists*; the stepping itself is unified
 //! behind [`crate::session::Executor`] (`BaselineExecutor` /
@@ -24,6 +28,7 @@
 
 pub mod baseline;
 pub mod calibrate;
+pub mod chaosbench;
 pub mod fig3;
 pub mod kernelbench;
 pub mod servebench;

@@ -189,116 +189,12 @@ impl SolModel {
     /// ([`crate::audit`]) drives it with a pure naive registry
     /// (`install_default()`) to pin the naive execution path even on
     /// arena-capable targets, whose `forward` would otherwise route
-    /// through the fused executor or the fast kernel set.
+    /// through the fused executor or the fast kernel set.  (Free-function
+    /// form: [`naive_forward`] — the serving spine's degradation ladder
+    /// uses it without a `SolModel` in hand.)
     pub fn forward_on(&self, input: &Tensor, kernels: &OperatorRegistry) -> Result<Tensor> {
-        let pmap: HashMap<NodeId, &Vec<(String, Tensor)>> =
-            self.params.iter().map(|(id, ps)| (*id, ps)).collect();
-        let mut values: Vec<Option<Tensor>> = vec![None; self.graph.nodes.len()];
-        for n in &self.graph.nodes {
-            let val = match &n.op {
-                Op::Input => input.clone(),
-                op => {
-                    let ins: Vec<Tensor> = n
-                        .inputs
-                        .iter()
-                        .map(|&i| values[i].clone().ok_or_else(|| anyhow!("missing value")))
-                        .collect::<Result<_>>()?;
-                    self.eval(op, n.id, &ins, &pmap, kernels)?
-                }
-            };
-            values[n.id] = Some(val);
-        }
-        values[self.graph.output()]
-            .clone()
-            .ok_or_else(|| anyhow!("no output computed"))
+        naive_forward(&self.graph, &self.params, input, kernels)
     }
-
-    fn eval(
-        &self,
-        op: &Op,
-        id: NodeId,
-        ins: &[Tensor],
-        pmap: &HashMap<NodeId, &Vec<(String, Tensor)>>,
-        r: &OperatorRegistry,
-    ) -> Result<Tensor> {
-        let dev = crate::framework::device::DeviceType::Cpu;
-        let param = |k: &str| -> Result<Tensor> {
-            pmap.get(&id)
-                .and_then(|ps| ps.iter().find(|(n, _)| n == k))
-                .map(|(_, t)| t.clone())
-                .ok_or_else(|| anyhow!("node {id}: missing param {k}"))
-        };
-        match op {
-            Op::Conv2d { stride, pad, groups, .. } => {
-                let a = Attrs::new()
-                    .with_int("stride", *stride as i64)
-                    .with_int("pad", *pad as i64)
-                    .with_int("groups", *groups as i64);
-                r.dispatch(
-                    "aten::conv2d",
-                    dev,
-                    &[ins[0].clone(), param("weight")?, param("bias")?],
-                    &a,
-                )
-            }
-            Op::Linear { .. } => r.dispatch(
-                "aten::linear",
-                dev,
-                &[ins[0].clone(), param("weight")?, param("bias")?],
-                &Attrs::new(),
-            ),
-            Op::ReLU => r.dispatch("aten::relu", dev, ins, &Attrs::new()),
-            Op::BatchNorm => r.dispatch(
-                "aten::batch_norm",
-                dev,
-                &[ins[0].clone(), param("gamma")?, param("beta")?],
-                &Attrs::new(),
-            ),
-            Op::MaxPool { k, stride, pad, min_value } => {
-                let mut a = Attrs::new()
-                    .with_int("k", *k as i64)
-                    .with_int("stride", *stride as i64)
-                    .with_int("pad", *pad as i64);
-                if *min_value == 0.0 {
-                    a = a.with_float("min_value", 0.0);
-                }
-                r.dispatch("aten::max_pool2d", dev, ins, &a)
-            }
-            Op::AvgPool { k, stride, pad, count_include_pad } => {
-                let a = Attrs::new()
-                    .with_int("k", *k as i64)
-                    .with_int("stride", *stride as i64)
-                    .with_int("pad", *pad as i64)
-                    .with_int("count_include_pad", *count_include_pad as i64);
-                r.dispatch("aten::avg_pool2d", dev, ins, &a)
-            }
-            Op::GlobalAvgPool => r.dispatch("aten::adaptive_avg_pool2d", dev, ins, &Attrs::new()),
-            Op::Add => r.dispatch("aten::add", dev, ins, &Attrs::new()),
-            Op::Concat => r.dispatch("aten::cat", dev, ins, &Attrs::new()),
-            Op::ChannelShuffle { groups } => {
-                let a = Attrs::new().with_int("groups", *groups as i64);
-                r.dispatch("aten::channel_shuffle", dev, ins, &a)
-            }
-            Op::Slice { offset, channels } => {
-                // view op: executed inline by SOL (no framework kernel)
-                let x = &ins[0];
-                let (n, c, h, w) =
-                    (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
-                let v = x.to_f32()?;
-                let mut out = Vec::with_capacity(n * channels * h * w);
-                for ni in 0..n {
-                    let s = (ni * c + offset) * h * w;
-                    out.extend_from_slice(&v[s..s + channels * h * w]);
-                }
-                Ok(Tensor::from_f32(out, &[n, *channels, h, w]))
-            }
-            Op::Flatten => r.dispatch("aten::flatten", dev, ins, &Attrs::new()),
-            Op::Softmax => r.dispatch("aten::softmax", dev, ins, &Attrs::new()),
-            Op::Dropout => Ok(ins[0].clone()),
-            Op::Input => bail!("Input evaluated twice"),
-        }
-    }
-
     /// How many times `sol.call` ran.
     pub fn call_count(&self) -> u64 {
         self.calls.load(Ordering::Relaxed)
@@ -332,6 +228,120 @@ impl SolModel {
             .iter()
             .flat_map(|(_, ps)| ps.iter().map(|(_, t)| t.byte_len()))
             .sum()
+    }
+}
+
+/// Evaluate `graph` per op through an explicit kernel registry —
+/// [`SolModel::forward_on`] without the model: the extracted DAG, its
+/// parameter binding, one input.  The serving spine's degradation
+/// ladder runs this as the naive fallback when the batched arena path
+/// keeps failing; the audit engine drives the same code (through
+/// `forward_on`) to pin the naive execution path on arena-capable
+/// targets.
+pub fn naive_forward(
+    graph: &Graph,
+    params: &ParamBinding,
+    input: &Tensor,
+    kernels: &OperatorRegistry,
+) -> Result<Tensor> {
+    let pmap: HashMap<NodeId, &Vec<(String, Tensor)>> =
+        params.iter().map(|(id, ps)| (*id, ps)).collect();
+    let mut values: Vec<Option<Tensor>> = vec![None; graph.nodes.len()];
+    for n in &graph.nodes {
+        let val = match &n.op {
+            Op::Input => input.clone(),
+            op => {
+                let ins: Vec<Tensor> = n
+                    .inputs
+                    .iter()
+                    .map(|&i| values[i].clone().ok_or_else(|| anyhow!("missing value")))
+                    .collect::<Result<_>>()?;
+                eval_op(op, n.id, &ins, &pmap, kernels)?
+            }
+        };
+        values[n.id] = Some(val);
+    }
+    values[graph.output()]
+        .clone()
+        .ok_or_else(|| anyhow!("no output computed"))
+}
+
+fn eval_op(
+    op: &Op,
+    id: NodeId,
+    ins: &[Tensor],
+    pmap: &HashMap<NodeId, &Vec<(String, Tensor)>>,
+    r: &OperatorRegistry,
+) -> Result<Tensor> {
+    let dev = crate::framework::device::DeviceType::Cpu;
+    let param = |k: &str| -> Result<Tensor> {
+        pmap.get(&id)
+            .and_then(|ps| ps.iter().find(|(n, _)| n == k))
+            .map(|(_, t)| t.clone())
+            .ok_or_else(|| anyhow!("node {id}: missing param {k}"))
+    };
+    match op {
+        Op::Conv2d { stride, pad, groups, .. } => {
+            let a = Attrs::new()
+                .with_int("stride", *stride as i64)
+                .with_int("pad", *pad as i64)
+                .with_int("groups", *groups as i64);
+            r.dispatch("aten::conv2d", dev, &[ins[0].clone(), param("weight")?, param("bias")?], &a)
+        }
+        Op::Linear { .. } => r.dispatch(
+            "aten::linear",
+            dev,
+            &[ins[0].clone(), param("weight")?, param("bias")?],
+            &Attrs::new(),
+        ),
+        Op::ReLU => r.dispatch("aten::relu", dev, ins, &Attrs::new()),
+        Op::BatchNorm => r.dispatch(
+            "aten::batch_norm",
+            dev,
+            &[ins[0].clone(), param("gamma")?, param("beta")?],
+            &Attrs::new(),
+        ),
+        Op::MaxPool { k, stride, pad, min_value } => {
+            let mut a = Attrs::new()
+                .with_int("k", *k as i64)
+                .with_int("stride", *stride as i64)
+                .with_int("pad", *pad as i64);
+            if *min_value == 0.0 {
+                a = a.with_float("min_value", 0.0);
+            }
+            r.dispatch("aten::max_pool2d", dev, ins, &a)
+        }
+        Op::AvgPool { k, stride, pad, count_include_pad } => {
+            let a = Attrs::new()
+                .with_int("k", *k as i64)
+                .with_int("stride", *stride as i64)
+                .with_int("pad", *pad as i64)
+                .with_int("count_include_pad", *count_include_pad as i64);
+            r.dispatch("aten::avg_pool2d", dev, ins, &a)
+        }
+        Op::GlobalAvgPool => r.dispatch("aten::adaptive_avg_pool2d", dev, ins, &Attrs::new()),
+        Op::Add => r.dispatch("aten::add", dev, ins, &Attrs::new()),
+        Op::Concat => r.dispatch("aten::cat", dev, ins, &Attrs::new()),
+        Op::ChannelShuffle { groups } => {
+            let a = Attrs::new().with_int("groups", *groups as i64);
+            r.dispatch("aten::channel_shuffle", dev, ins, &a)
+        }
+        Op::Slice { offset, channels } => {
+            // view op: executed inline by SOL (no framework kernel)
+            let x = &ins[0];
+            let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+            let v = x.to_f32()?;
+            let mut out = Vec::with_capacity(n * channels * h * w);
+            for ni in 0..n {
+                let s = (ni * c + offset) * h * w;
+                out.extend_from_slice(&v[s..s + channels * h * w]);
+            }
+            Ok(Tensor::from_f32(out, &[n, *channels, h, w]))
+        }
+        Op::Flatten => r.dispatch("aten::flatten", dev, ins, &Attrs::new()),
+        Op::Softmax => r.dispatch("aten::softmax", dev, ins, &Attrs::new()),
+        Op::Dropout => Ok(ins[0].clone()),
+        Op::Input => bail!("Input evaluated twice"),
     }
 }
 

@@ -26,6 +26,6 @@ pub mod offload;
 
 pub use extract::extract_graph;
 pub use fastexec::ArenaExec;
-pub use inject::SolModel;
+pub use inject::{naive_forward, SolModel};
 pub use native::install_native_backend;
 pub use offload::{OffloadContext, TransparentOffload};

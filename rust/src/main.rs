@@ -19,6 +19,10 @@
 //! * `audit`     — cross-backend consistency sweep: every backend ×
 //!   execution path differentially tested against the framework reference
 //!   (exit code 2 on any above-tolerance divergence — the CI gate)
+//! * `chaos`     — fault-injection soak for the serving spine: seeded
+//!   kernel/batch/device failures under live traffic, asserting the
+//!   resilience invariants (no lost or double-resolved request, tripped
+//!   devices quarantine and recover); writes `BENCH_9.json`
 
 use std::collections::HashMap;
 
@@ -41,13 +45,8 @@ use sol::util::XorShift;
 use sol::workloads::NetId;
 
 fn parse_device(s: &str) -> Result<DeviceId> {
-    Ok(match s {
-        "cpu" | "xeon" => DeviceId::Xeon6126,
-        "aurora" | "ve" | "vpu" => DeviceId::AuroraVE10B,
-        "p4000" => DeviceId::QuadroP4000,
-        "titanv" | "gpu" => DeviceId::TitanV,
-        other => bail!("unknown device '{other}' (cpu|aurora|p4000|titanv)"),
-    })
+    // shared with `--fault` spec parsing (util::fault)
+    sol::util::fault::parse_device_name(s)
 }
 
 fn parse_net(s: &str) -> Result<NetId> {
@@ -508,9 +507,7 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
 /// compared pairwise against the framework reference.  Exits with code 2
 /// on any above-tolerance finding (the CI divergence gate).
 fn cmd_audit(flags: &HashMap<String, String>) -> Result<()> {
-    use sol::audit::{
-        AuditConfig, AuditEngine, ExecPath, FaultSpec, TolerancePolicy, ToleranceTable,
-    };
+    use sol::audit::{AuditConfig, AuditEngine, FaultSpec, TolerancePolicy, ToleranceTable};
     let mut cfg = AuditConfig::default();
     if let Some(s) = flags.get("seeds") {
         cfg.seeds = s.parse()?;
@@ -522,15 +519,7 @@ fn cmd_audit(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(f) = flags.get("fault") {
         // test-only self-check hook: `--fault DEVICE:PATH:OFFSET`
         // perturbs one variant's output so the gate demonstrably trips
-        let parts: Vec<&str> = f.split(':').collect();
-        let &[dev, path, offset] = parts.as_slice() else {
-            bail!("--fault wants DEVICE:PATH:OFFSET, got '{f}'");
-        };
-        cfg.fault = Some(FaultSpec {
-            device: parse_device(dev)?,
-            path: ExecPath::parse(path)?,
-            offset: offset.parse()?,
-        });
+        cfg.fault = Some(FaultSpec::parse(f)?);
     }
     let report = AuditEngine::new(cfg).run()?;
     if flags.contains_key("json") {
@@ -540,6 +529,42 @@ fn cmd_audit(flags: &HashMap<String, String>) -> Result<()> {
     }
     if !report.passed() {
         std::process::exit(2);
+    }
+    Ok(())
+}
+
+/// `sol chaos` — the resilience soak: per-seed deterministic serving
+/// runs (manual pump + virtual clock) under injected faults, checking
+/// the fault-tolerance invariants and measuring how far degraded-mode
+/// latency drifts from the clean baseline.
+fn cmd_chaos(flags: &HashMap<String, String>) -> Result<()> {
+    use sol::exec::chaosbench::{run_chaos, write_chaos_json, ChaosConfig};
+    let mut cfg = ChaosConfig::new(flags.contains_key("smoke"));
+    if let Some(v) = flags.get("seeds") {
+        cfg.seeds = v.parse()?;
+    }
+    println!(
+        "chaos: {} seeds, {} requests/seed ({})",
+        cfg.seeds,
+        cfg.requests,
+        if cfg.smoke { "smoke" } else { "full" }
+    );
+    let r = run_chaos(&cfg)?;
+    println!(
+        "submitted {} | ok {} | failed {} ({} poison) | retries {} | failover {}",
+        r.submitted, r.resolved_ok, r.resolved_err, r.poison, r.retries, r.failover
+    );
+    println!(
+        "breaker: {} trips / {} probes | clean p95 {:.0} µs | degraded p95 {:.0} µs | \
+         ratio {:.2}x",
+        r.trips, r.probes, r.clean_p95_us, r.degraded_p95_us, r.degraded_p95_ratio
+    );
+    println!("invariants held on all {} seeds", cfg.seeds);
+    if flags.contains_key("json") {
+        let default = "BENCH_9.json".to_string();
+        let out = flags.get("out").unwrap_or(&default);
+        write_chaos_json(std::path::Path::new(out), &r)?;
+        println!("wrote {out}");
     }
     Ok(())
 }
@@ -577,7 +602,7 @@ fn cmd_effort() {
 }
 
 const HELP: &str = "sol — SOL middleware reproduction
-USAGE: sol <devices|optimize|kernels|fig3|train-mlp|deploy|serve|bench|serve-bench|audit|effort|help> [--flags]
+USAGE: sol <devices|optimize|kernels|fig3|train-mlp|deploy|serve|bench|serve-bench|audit|chaos|effort|help> [--flags]
   optimize  --net resnet18 --device cpu [--batch 1]
   kernels   --net resnet18 --device aurora [--count 2]
   fig3      [--training] [--calibrate]
@@ -590,7 +615,9 @@ USAGE: sol <devices|optimize|kernels|fig3|train-mlp|deploy|serve|bench|serve-ben
             [--workers N] [--batch N]   serving-spine throughput/latency soak
             [--policy fifo|adaptive]   adaptive = FIFO-vs-adaptive A/B, BENCH_8.json
   audit     [--seeds 8] [--json] [--tol abs=A,rel=R,ulp=U]   cross-backend differential
-            consistency sweep; exits 2 on any finding (the CI divergence gate)";
+            consistency sweep; exits 2 on any finding (the CI divergence gate)
+  chaos     [--seeds 8] [--smoke] [--json] [--out BENCH_9.json]   fault-injection soak
+            for the serving spine; errors if any resilience invariant breaks";
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -609,6 +636,7 @@ fn main() -> Result<()> {
         "bench" => cmd_bench(&flags)?,
         "serve-bench" => cmd_serve_bench(&flags)?,
         "audit" => cmd_audit(&flags)?,
+        "chaos" => cmd_chaos(&flags)?,
         "effort" => cmd_effort(),
         _ => println!("{HELP}"),
     }

@@ -26,6 +26,13 @@
 //! | `serve.spine.exec_builds`  | batched arena executors constructed (cold path; steady state reuses the idle pool) |
 //! | `serve.spine.held`         | adaptive drains deferred inside the hold-for-µs coalescing window (`SpineConfig::hold_us`) |
 //! | `serve.spine.placed`       | submissions the adaptive policy routed to a less-loaded sibling queue (same structural graph, another device) |
+//! | `serve.spine.retries`      | degradation-ladder attempts after a failed batch: bisection re-executions plus naive per-request fallbacks (each bounded by `SpineConfig::max_retries`) |
+//! | `serve.spine.poison`       | requests isolated as poison by batch bisection — they kept failing alone and through the naive fallback (only these resolve `Failed` from a faulted batch) |
+//! | `serve.spine.failover`     | requests routed away from a quarantined device to a healthy same-family sibling, at placement or by drain-time queue migration |
+//! | `serve.spine.double_resolve` | requests whose completion slot was written twice (first-write-wins kept the original; any nonzero value is a spine bug — the chaos harness gates on 0) |
+//! | `serve.device.<d>.state`   | the device's circuit-breaker state (gauge: 0 healthy, 1 quarantined, 2 half-open) |
+//! | `serve.device.<d>.trips`   | times the device's breaker tripped Healthy → Quarantined (`SpineConfig::trip_after` consecutive dead batches) |
+//! | `serve.device.<d>.probes`  | half-open probe batches admitted after a quarantine backoff expired |
 //! | `serve.artifact.<name>.target_batch` | the artifact's current controller-tuned target batch size (gauge) |
 //! | `serve.artifact.<name>.p95_us`       | the artifact's own end-to-end p95, as last sampled by its `BatchController` (gauge) |
 //! | `serve.latency.p50_us` / `p95_us` / `p99_us` | spine end-to-end latency percentiles (gauges, refreshed by `serving_report`) |

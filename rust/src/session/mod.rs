@@ -19,6 +19,9 @@
 //!   [`Tenant::submit`] over bounded per-device queues, a worker pool,
 //!   and dynamic same-artifact batching into one arena execution
 //!   ([`ServeSpine`] / [`RequestHandle`]).
+//! * [`resilience`] — per-device health for the spine: the
+//!   [`DeviceBreaker`] circuit breaker behind failover placement,
+//!   quarantine and half-open probes (architecture Layer 8).
 //!
 //! The [`BackendRegistry`] (defined with the backends, re-exported here)
 //! indexes the per-device backends by device / name / framework slot and
@@ -47,6 +50,7 @@ pub mod executor;
 pub mod pass;
 pub mod pipeline;
 pub mod planner;
+pub mod resilience;
 pub mod serve;
 pub mod spine;
 pub mod stages;
@@ -67,6 +71,7 @@ pub use executor::{BaselineExecutor, Executor, Phase, SolExecutor};
 pub use pass::{CompileState, Pass, PassManager, PassRecord, PipelineConfig};
 pub use pipeline::{Pipeline, PipelineBuilder};
 pub use planner::{plan_memory, plan_memory_batched, MemoryPlan};
+pub use resilience::{Admission, BreakerConfig, DeviceBreaker, DeviceHealth};
 pub use serve::{
     AdmissionError, CompilePermit, ServingConfig, ServingSession, Tenant, TenantCounters,
 };

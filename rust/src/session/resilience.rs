@@ -1,0 +1,331 @@
+//! Per-device health tracking — the circuit breaker behind the serving
+//! spine's failover placement (architecture Layer 8).
+//!
+//! Every spine device queue owns one [`DeviceBreaker`].  Batches report
+//! their outcome after the degradation ladder ran
+//! (`record_success` / `record_failure`); `trip_after` *consecutive*
+//! failures trip the device:
+//!
+//! ```text
+//!            trip_after consecutive failures
+//!  Healthy ──────────────────────────────────▶ Quarantined
+//!     ▲                                           │
+//!     │ probe succeeds              backoff expires│ (exponential,
+//!     │                                           ▼  capped)
+//!     └──────────────────────────────────────  HalfOpen
+//!                 probe fails: back to Quarantined, backoff doubled
+//! ```
+//!
+//! While `Quarantined`, [`DeviceBreaker::routable`] is false — submits
+//! re-route to same-family siblings (failover placement) and drains
+//! migrate the queue instead of executing.  Once the backoff expires,
+//! the next drain admits exactly one **probe** batch (capacity 1); its
+//! outcome either restores `Healthy` or re-quarantines with the backoff
+//! doubled (capped at `probe_backoff_max_us`).
+//!
+//! All timing flows through the spine's virtual clock (`SpineCore::now`),
+//! so breaker scenarios are deterministic under manual pump.  Trip and
+//! probe counts are session-local with process-global mirrors
+//! (`serve.device.<d>.{state,trips,probes}`), mirroring the
+//! `TenantCounter` convention.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::devsim::DeviceId;
+use crate::metrics::{counter, Counter};
+
+/// Breaker state of one device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceHealth {
+    /// Serving normally.
+    Healthy,
+    /// Tripped: not routable until the probe backoff expires.
+    Quarantined,
+    /// Backoff expired: one probe batch decides recovery.
+    HalfOpen,
+}
+
+impl DeviceHealth {
+    /// Gauge encoding for `serve.device.<d>.state`.
+    fn gauge(self) -> u64 {
+        match self {
+            DeviceHealth::Healthy => 0,
+            DeviceHealth::Quarantined => 1,
+            DeviceHealth::HalfOpen => 2,
+        }
+    }
+}
+
+impl fmt::Display for DeviceHealth {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            DeviceHealth::Healthy => "healthy",
+            DeviceHealth::Quarantined => "quarantined",
+            DeviceHealth::HalfOpen => "half-open",
+        })
+    }
+}
+
+/// What a drain is allowed to do on this device right now.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Execute normally.
+    Healthy,
+    /// Execute one probe batch (callers cap it at a single request).
+    Probe,
+    /// Quarantined: don't execute; re-check in `retry_in_us`.
+    Refused { retry_in_us: u64 },
+}
+
+/// Breaker tuning (lifted off `SpineConfig`).
+#[derive(Debug, Clone, Copy)]
+pub struct BreakerConfig {
+    /// Consecutive batch failures that trip the device (min 1).
+    pub trip_after: u32,
+    /// First quarantine duration before a half-open probe, µs.
+    pub probe_backoff_us: u64,
+    /// Backoff doubling cap, µs.
+    pub probe_backoff_max_us: u64,
+}
+
+#[derive(Debug)]
+struct BreakerState {
+    health: DeviceHealth,
+    consecutive: u32,
+    backoff_us: u64,
+    probe_at: Option<Instant>,
+}
+
+/// The per-device circuit breaker.
+#[derive(Debug)]
+pub struct DeviceBreaker {
+    device: DeviceId,
+    cfg: BreakerConfig,
+    state: Mutex<BreakerState>,
+    // session-local counts (what `device_health()` and tests read) ...
+    trips: AtomicU64,
+    probes: AtomicU64,
+    // ... with cumulative process-global mirrors, TenantCounter-style
+    state_gauge: Arc<Counter>,
+    trips_mirror: Arc<Counter>,
+    probes_mirror: Arc<Counter>,
+}
+
+impl DeviceBreaker {
+    pub fn new(device: DeviceId, cfg: BreakerConfig) -> DeviceBreaker {
+        let cfg = BreakerConfig {
+            trip_after: cfg.trip_after.max(1),
+            probe_backoff_us: cfg.probe_backoff_us.max(1),
+            probe_backoff_max_us: cfg.probe_backoff_max_us.max(cfg.probe_backoff_us.max(1)),
+        };
+        let gauge = counter(&format!("serve.device.{device:?}.state"));
+        gauge.set(DeviceHealth::Healthy.gauge());
+        DeviceBreaker {
+            device,
+            cfg,
+            state: Mutex::new(BreakerState {
+                health: DeviceHealth::Healthy,
+                consecutive: 0,
+                backoff_us: cfg.probe_backoff_us,
+                probe_at: None,
+            }),
+            trips: AtomicU64::new(0),
+            probes: AtomicU64::new(0),
+            state_gauge: gauge,
+            trips_mirror: counter(&format!("serve.device.{device:?}.trips")),
+            probes_mirror: counter(&format!("serve.device.{device:?}.probes")),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, BreakerState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn device(&self) -> DeviceId {
+        self.device
+    }
+
+    pub fn health(&self) -> DeviceHealth {
+        self.lock().health
+    }
+
+    /// Session-local trip count (Healthy → Quarantined transitions).
+    pub fn trips(&self) -> u64 {
+        self.trips.load(Ordering::Relaxed)
+    }
+
+    /// Session-local probe count (Quarantined → HalfOpen transitions).
+    pub fn probes(&self) -> u64 {
+        self.probes.load(Ordering::Relaxed)
+    }
+
+    /// Non-mutating routability check for placement: can this device
+    /// take new work right now (healthy, probing, or probe-due)?
+    pub fn routable(&self, now: Instant) -> bool {
+        let st = self.lock();
+        match st.health {
+            DeviceHealth::Healthy | DeviceHealth::HalfOpen => true,
+            DeviceHealth::Quarantined => st.probe_at.map_or(false, |t| t <= now),
+        }
+    }
+
+    /// Drain-side admission: transitions Quarantined → HalfOpen when the
+    /// probe backoff has expired (this is the only place probes start).
+    pub fn admit(&self, now: Instant) -> Admission {
+        let mut st = self.lock();
+        match st.health {
+            DeviceHealth::Healthy => Admission::Healthy,
+            DeviceHealth::HalfOpen => Admission::Probe,
+            DeviceHealth::Quarantined => {
+                let due = st.probe_at.unwrap_or(now);
+                if due <= now {
+                    st.health = DeviceHealth::HalfOpen;
+                    self.state_gauge.set(st.health.gauge());
+                    self.probes.fetch_add(1, Ordering::Relaxed);
+                    self.probes_mirror.inc();
+                    Admission::Probe
+                } else {
+                    Admission::Refused {
+                        retry_in_us: (due.duration_since(now).as_micros() as u64).max(1),
+                    }
+                }
+            }
+        }
+    }
+
+    /// A batch (or its degradation ladder) ultimately served at least
+    /// one request on this device.
+    pub fn record_success(&self) {
+        let mut st = self.lock();
+        st.health = DeviceHealth::Healthy;
+        st.consecutive = 0;
+        st.backoff_us = self.cfg.probe_backoff_us;
+        st.probe_at = None;
+        self.state_gauge.set(st.health.gauge());
+    }
+
+    /// A batch failed outright (every request lost, fallback included).
+    pub fn record_failure(&self, now: Instant) {
+        let mut st = self.lock();
+        match st.health {
+            DeviceHealth::Healthy => {
+                st.consecutive += 1;
+                if st.consecutive >= self.cfg.trip_after {
+                    st.health = DeviceHealth::Quarantined;
+                    st.probe_at = Some(now + Duration::from_micros(st.backoff_us));
+                    self.trips.fetch_add(1, Ordering::Relaxed);
+                    self.trips_mirror.inc();
+                    self.state_gauge.set(st.health.gauge());
+                }
+            }
+            DeviceHealth::HalfOpen => {
+                // failed probe: re-quarantine, double the backoff
+                st.health = DeviceHealth::Quarantined;
+                st.backoff_us = (st.backoff_us * 2).min(self.cfg.probe_backoff_max_us);
+                st.probe_at = Some(now + Duration::from_micros(st.backoff_us));
+                self.state_gauge.set(st.health.gauge());
+            }
+            // a forced drain may still execute (and fail) while
+            // quarantined; the breaker is already as open as it gets
+            DeviceHealth::Quarantined => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn breaker() -> DeviceBreaker {
+        DeviceBreaker::new(
+            DeviceId::TitanV,
+            BreakerConfig { trip_after: 3, probe_backoff_us: 100, probe_backoff_max_us: 350 },
+        )
+    }
+
+    #[test]
+    fn trips_after_consecutive_failures_only() {
+        let b = breaker();
+        let t0 = Instant::now();
+        b.record_failure(t0);
+        b.record_failure(t0);
+        b.record_success(); // streak broken
+        b.record_failure(t0);
+        b.record_failure(t0);
+        assert_eq!(b.health(), DeviceHealth::Healthy);
+        assert_eq!(b.trips(), 0);
+        b.record_failure(t0);
+        assert_eq!(b.health(), DeviceHealth::Quarantined);
+        assert_eq!(b.trips(), 1);
+        assert!(!b.routable(t0));
+    }
+
+    #[test]
+    fn quarantine_refuses_until_backoff_then_probes() {
+        let b = breaker();
+        let t0 = Instant::now();
+        for _ in 0..3 {
+            b.record_failure(t0);
+        }
+        match b.admit(t0) {
+            Admission::Refused { retry_in_us } => assert!(retry_in_us > 0 && retry_in_us <= 100),
+            other => panic!("expected Refused, got {other:?}"),
+        }
+        assert_eq!(b.probes(), 0);
+        let due = t0 + Duration::from_micros(100);
+        assert!(b.routable(due), "probe-due devices are routable");
+        assert_eq!(b.admit(due), Admission::Probe);
+        assert_eq!(b.health(), DeviceHealth::HalfOpen);
+        assert_eq!(b.probes(), 1);
+        b.record_success();
+        assert_eq!(b.health(), DeviceHealth::Healthy);
+        assert!(b.routable(due));
+    }
+
+    #[test]
+    fn failed_probe_doubles_backoff_up_to_the_cap() {
+        let b = breaker();
+        let mut now = Instant::now();
+        for _ in 0..3 {
+            b.record_failure(now);
+        }
+        // expected successive quarantine windows: 100 → 200 → 350 → 350
+        for want in [200u64, 350, 350] {
+            now += Duration::from_micros(1_000); // past any backoff
+            assert_eq!(b.admit(now), Admission::Probe);
+            b.record_failure(now); // probe fails
+            assert_eq!(b.health(), DeviceHealth::Quarantined);
+            match b.admit(now) {
+                Admission::Refused { retry_in_us } => {
+                    assert!(
+                        retry_in_us > want - 50 && retry_in_us <= want,
+                        "backoff {retry_in_us} vs want {want}"
+                    );
+                }
+                other => panic!("expected Refused, got {other:?}"),
+            }
+        }
+        // recovery resets the backoff to its floor
+        now += Duration::from_micros(1_000);
+        assert_eq!(b.admit(now), Admission::Probe);
+        b.record_success();
+        for _ in 0..3 {
+            b.record_failure(now);
+        }
+        match b.admit(now) {
+            Admission::Refused { retry_in_us } => assert!(retry_in_us <= 100),
+            other => panic!("expected Refused, got {other:?}"),
+        }
+        assert_eq!(b.trips(), 2);
+    }
+
+    #[test]
+    fn display_names_match_the_report_vocabulary() {
+        assert_eq!(DeviceHealth::Healthy.to_string(), "healthy");
+        assert_eq!(DeviceHealth::Quarantined.to_string(), "quarantined");
+        assert_eq!(DeviceHealth::HalfOpen.to_string(), "half-open");
+    }
+}

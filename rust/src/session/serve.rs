@@ -107,8 +107,14 @@ pub enum AdmissionError {
     /// the queue; it was rejected at drain time — expired requests are
     /// never silently dropped.
     DeadlineExceeded { waited_us: u64 },
-    /// The request could not be served: malformed (wrong input length,
-    /// artifact a spine cannot batch) or the execution itself failed.
+    /// The request can *never* be served as posed — the target backend
+    /// lacks a required capability (e.g. no arena fast path for spine
+    /// batching).  Permanent: unlike [`AdmissionError::QueueFull`] or a
+    /// transient [`AdmissionError::Failed`], retrying is pointless;
+    /// retry logic keys off this distinction.
+    Unsupported { device: DeviceId, reason: String },
+    /// The request could not be served: malformed (wrong input length)
+    /// or the execution itself failed.  Possibly transient.
     Failed { reason: String },
 }
 
@@ -124,6 +130,9 @@ impl std::fmt::Display for AdmissionError {
             }
             AdmissionError::DeadlineExceeded { waited_us } => {
                 write!(f, "rejected: deadline exceeded after {waited_us} µs queued")
+            }
+            AdmissionError::Unsupported { device, reason } => {
+                write!(f, "unsupported on {device:?}: {reason}")
             }
             AdmissionError::Failed { reason } => write!(f, "request failed: {reason}"),
         }
@@ -348,11 +357,13 @@ impl Tenant {
         device: DeviceId,
     ) -> std::result::Result<Arc<ServedArtifact>, AdmissionError> {
         if !self.session.registry().capabilities_for(device).arena_exec {
-            return Err(AdmissionError::Failed {
-                reason: format!(
-                    "{device:?} advertises no host arena fast path — spine batching \
-                     needs an arena-capable backend"
-                ),
+            // typed as permanent: no amount of retrying grows the
+            // backend an arena fast path
+            return Err(AdmissionError::Unsupported {
+                device,
+                reason: "advertises no host arena fast path — spine batching needs an \
+                         arena-capable backend"
+                    .to_string(),
             });
         }
         let outcome = self.compile_outcome(graph, device)?;
@@ -635,6 +646,22 @@ impl ServingSession {
                 p95,
                 p99
             ));
+            // resilience summary: one row per device the spine has
+            // touched — breaker state plus lifetime trip/probe counts
+            let health = spine.device_health();
+            if !health.is_empty() {
+                let rows: Vec<String> = health
+                    .iter()
+                    .map(|(d, h, trips, probes)| {
+                        format!("{d:?}={h} (trips {trips}, probes {probes})")
+                    })
+                    .collect();
+                out.push_str(&format!("health: {}\n", rows.join(", ")));
+                out.push_str(&format!(
+                    "resilience: {} retries / {} poison / {} failover\n",
+                    st.retries, st.poison, st.failover
+                ));
+            }
         }
         // memory-planner / fast-executor / consistency-audit behaviour of
         // the process (the `arena.*` gauges are high-water marks across

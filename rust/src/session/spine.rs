@@ -41,6 +41,20 @@
 //!   always hears back.  A failed batch is completed with
 //!   [`AdmissionError::Failed`] and *accounted*: the `serve.spine.failed`
 //!   counter and the latency histogram see failed traffic too.
+//! * **Failures degrade, they don't cascade** (the resilience layer,
+//!   [`super::resilience`]): a failed batch is *bisected* to isolate
+//!   poison requests — innocents retry within their
+//!   [`SpineConfig::max_retries`]/deadline budgets, then fall back to
+//!   the per-request naive path before ever surfacing `Failed`; batch
+//!   panics are contained (`catch_unwind` + poison-recovering locks, so
+//!   a panicking kernel can never wedge other waiters); and a
+//!   per-device [`DeviceBreaker`] quarantines a device after
+//!   [`SpineConfig::trip_after`] consecutive batch failures — submits
+//!   and drains fail over to same-family siblings until a half-open
+//!   probe (virtual-clock timed, exponential backoff) restores it.
+//!   Faults are injected through the shared deterministic
+//!   [`FaultInjector`] (`util::fault`), the same plumbing `sol audit
+//!   --fault` and the `sol chaos` harness use.
 //! * **Steady state allocates nothing per run**: each
 //!   [`ServedArtifact`] keeps an idle pool of batched [`ArenaExec`]s
 //!   (built lazily, at most one per concurrent drain); a warm drain
@@ -58,20 +72,51 @@
 //! a mutex + condvar per request.
 
 use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::devsim::DeviceId;
+use crate::framework::{install_default, OperatorRegistry, Tensor};
 use crate::frontend::extract::ParamBinding;
-use crate::frontend::ArenaExec;
-use crate::ir::Graph;
+use crate::frontend::{naive_forward, ArenaExec};
+use crate::ir::{Graph, Op};
 use crate::metrics::{self, LatencyHistogram};
 use crate::passes::optimizer::OptimizedModel;
+use crate::util::fault::{FaultAction, FaultInjector, FaultSite};
 use crate::util::par::{default_threads, WorkerPool};
 
 use super::cache::CacheKey;
+use super::resilience::{Admission, BreakerConfig, DeviceBreaker, DeviceHealth};
 use super::serve::{AdmissionError, TenantCounter, TenantState};
+
+/// Poison-recovering lock: a panicking thread (its unwind is contained
+/// by the drain's `catch_unwind`) must never wedge every other waiter
+/// sharing the mutex — the guarded state is plain data, valid whether
+/// or not the writer finished its critical section normally.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Render a `catch_unwind` payload as a failure reason.
+fn panic_reason(e: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// The naive fallback's kernel registry (pure per-op reference kernels),
+/// shared process-wide: the fallback is a cold error path and must not
+/// pay a registry construction per rescued request.
+fn naive_kernels() -> &'static OperatorRegistry {
+    static REG: OnceLock<OperatorRegistry> = OnceLock::new();
+    REG.get_or_init(install_default)
+}
 
 /// How [`ServeSpine`] drains its queues.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -148,6 +193,22 @@ pub struct SpineConfig {
     /// Adaptive only: controller cadence — re-tune each artifact's
     /// target batch every this many completed batches.
     pub adjust_every: u64,
+    /// Per-request retry budget of the failure-degradation ladder
+    /// (bisection re-executions and the naive fallback each consume
+    /// one).  `0` disables the ladder entirely: a failed batch resolves
+    /// every member `Failed` in one step (the pre-resilience semantics;
+    /// keep it ≥ `log2(max_batch) + 1` otherwise, or innocents exhaust
+    /// their budget mid-bisection).
+    pub max_retries: u32,
+    /// Consecutive failed batches (ladder included — a batch "fails"
+    /// only when *no* request in it could be served) that trip a
+    /// device's [`DeviceBreaker`] to quarantine.
+    pub trip_after: u32,
+    /// First quarantine duration before a half-open probe, µs
+    /// (virtual-clock timed; doubles on every failed probe).
+    pub probe_backoff_us: u64,
+    /// Cap of the probe backoff doubling, µs.
+    pub probe_backoff_max_us: u64,
 }
 
 impl Default for SpineConfig {
@@ -161,6 +222,10 @@ impl Default for SpineConfig {
             hold_us: 200,
             slo_p95_us: 5_000,
             adjust_every: 16,
+            max_retries: 4,
+            trip_after: 3,
+            probe_backoff_us: 10_000,
+            probe_backoff_max_us: 1_000_000,
         }
     }
 }
@@ -196,8 +261,17 @@ struct ReqShared {
 }
 
 impl ReqShared {
+    /// First write wins: the degradation ladder re-routes requests
+    /// through several execution attempts, and a request that was
+    /// already resolved must never be clobbered (the chaos harness's
+    /// resolved-exactly-once invariant watches the counter).
     fn complete(&self, r: Result<ServeOutput, AdmissionError>) {
-        *self.slot.lock().unwrap() = Some(r);
+        let mut slot = lock(&self.slot);
+        if slot.is_some() {
+            metrics::counter("serve.spine.double_resolve").inc();
+            return;
+        }
+        *slot = Some(r);
         self.cv.notify_all();
     }
 }
@@ -213,9 +287,9 @@ pub struct RequestHandle {
 impl RequestHandle {
     /// Block until the request completes (fulfilled, expired, or failed).
     pub fn wait(self) -> Result<ServeOutput, AdmissionError> {
-        let mut g = self.shared.slot.lock().unwrap();
+        let mut g = lock(&self.shared.slot);
         while g.is_none() {
-            g = self.shared.cv.wait(g).unwrap();
+            g = self.shared.cv.wait(g).unwrap_or_else(|e| e.into_inner());
         }
         g.take().expect("guarded by loop")
     }
@@ -224,13 +298,17 @@ impl RequestHandle {
     /// request is still pending afterwards (the handle stays usable).
     pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<ServeOutput, AdmissionError>> {
         let deadline = Instant::now() + timeout;
-        let mut g = self.shared.slot.lock().unwrap();
+        let mut g = lock(&self.shared.slot);
         while g.is_none() {
             let now = Instant::now();
             if now >= deadline {
                 return None;
             }
-            let (guard, _) = self.shared.cv.wait_timeout(g, deadline - now).unwrap();
+            let (guard, _) = self
+                .shared
+                .cv
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
             g = guard;
         }
         g.take()
@@ -238,7 +316,7 @@ impl RequestHandle {
 
     /// Has the request completed (result still unclaimed)?
     pub fn is_done(&self) -> bool {
-        self.shared.slot.lock().unwrap().is_some()
+        lock(&self.shared.slot).is_some()
     }
 }
 
@@ -467,11 +545,11 @@ impl ServedArtifact {
     /// Executors currently idle in the pool (≥ 1 after construction
     /// whenever no drain is in flight).
     pub fn pooled_execs(&self) -> usize {
-        self.idle.lock().unwrap().len()
+        lock(&self.idle).len()
     }
 
     fn acquire_exec(&self) -> crate::Result<ArenaExec> {
-        if let Some(e) = self.idle.lock().unwrap().pop() {
+        if let Some(e) = lock(&self.idle).pop() {
             return Ok(e);
         }
         // cold path: another drain holds every pooled executor
@@ -481,7 +559,7 @@ impl ServedArtifact {
     }
 
     fn release_exec(&self, e: ArenaExec) {
-        self.idle.lock().unwrap().push(e);
+        lock(&self.idle).push(e);
     }
 
     /// Run one request synchronously on the caller thread through a
@@ -504,6 +582,22 @@ impl ServedArtifact {
         self.release_exec(exec);
         r
     }
+
+    /// Run one request through the per-op **naive** evaluation path
+    /// (`SolModel::forward_on` semantics: the reference kernels, no
+    /// arena) — the degradation ladder's last execution rung when the
+    /// batched arena path keeps failing.
+    pub fn run_naive(&self, input: &[f32]) -> crate::Result<Vec<f32>> {
+        let shape = self
+            .graph
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Op::Input))
+            .map(|n| n.meta.shape())
+            .ok_or_else(|| anyhow::anyhow!("artifact '{}' has no input node", self.name))?;
+        let x = Tensor::from_f32(input.to_vec(), &shape);
+        naive_forward(&self.graph, &self.binding, &x, naive_kernels())?.to_f32()
+    }
 }
 
 /// One queued request.
@@ -516,6 +610,10 @@ struct Pending {
     out: Vec<f32>,
     enqueued: Instant,
     deadline: Option<Instant>,
+    /// Degradation-ladder attempts consumed so far (bisection
+    /// re-executions and the naive fallback each cost one, bounded by
+    /// [`SpineConfig::max_retries`]).
+    retries: u32,
     shared: Arc<ReqShared>,
 }
 
@@ -562,6 +660,16 @@ pub struct SpineStats {
     /// Submissions routed to a less-loaded sibling queue by adaptive
     /// placement.
     pub placed: u64,
+    /// Degradation-ladder attempts: bisection re-executions plus naive
+    /// fallbacks, summed over requests.
+    pub retries: u64,
+    /// Requests isolated as poison — they kept failing down to batch
+    /// size 1 *and* through the naive fallback (or exhausted their
+    /// retry budget inside the ladder's last rung).
+    pub poison: u64,
+    /// Requests routed away from an unroutable (tripped) device to a
+    /// healthy same-family sibling, at submit or drain-migration time.
+    pub failover: u64,
     /// Requests currently queued across all devices.
     pub queued: usize,
 }
@@ -577,6 +685,8 @@ struct SpineCore {
     /// pipeline).
     families: Mutex<HashMap<(u64, u64, u32), Vec<Arc<ServedArtifact>>>>,
     queues: Mutex<HashMap<DeviceId, Arc<DeviceQueue>>>,
+    /// Circuit breaker per device queue (created lazily with the queue).
+    breakers: Mutex<HashMap<DeviceId, Arc<DeviceBreaker>>>,
     latency: LatencyHistogram,
     /// Virtual-clock offset, µs: every policy/accounting decision reads
     /// `Instant::now() + clock_us`, so tests advance time explicitly.
@@ -584,8 +694,10 @@ struct SpineCore {
     /// Test hook: virtual µs charged to batch assembly on every drain
     /// (simulates expensive assembly without sleeping).
     assembly_advance_us: AtomicU64,
-    /// Test hook: fail the next N batch executions.
-    fail_next: AtomicU64,
+    /// The spine's deterministic fault injector (scripted `fail_next`,
+    /// poison sentinels, probabilistic rules) — shared plumbing with
+    /// `sol audit --fault` and the `sol chaos` harness.
+    injector: FaultInjector,
     // session-local counts (SpineStats) mirrored into the process-global
     // registry as `serve.spine.*` — same split as the tenant counters
     submitted: TenantCounter,
@@ -596,6 +708,9 @@ struct SpineCore {
     batches: TenantCounter,
     held: TenantCounter,
     placed: TenantCounter,
+    retries: TenantCounter,
+    poison: TenantCounter,
+    failover: TenantCounter,
     batch_max: Arc<metrics::Counter>,
 }
 
@@ -606,10 +721,11 @@ impl SpineCore {
             artifacts: Mutex::new(HashMap::new()),
             families: Mutex::new(HashMap::new()),
             queues: Mutex::new(HashMap::new()),
+            breakers: Mutex::new(HashMap::new()),
             latency: LatencyHistogram::new(),
             clock_us: AtomicU64::new(0),
             assembly_advance_us: AtomicU64::new(0),
-            fail_next: AtomicU64::new(0),
+            injector: FaultInjector::new(),
             submitted: TenantCounter::new("serve.spine.submitted"),
             completed: TenantCounter::new("serve.spine.completed"),
             failed: TenantCounter::new("serve.spine.failed"),
@@ -618,6 +734,9 @@ impl SpineCore {
             batches: TenantCounter::new("serve.spine.batches"),
             held: TenantCounter::new("serve.spine.held"),
             placed: TenantCounter::new("serve.spine.placed"),
+            retries: TenantCounter::new("serve.spine.retries"),
+            poison: TenantCounter::new("serve.spine.poison"),
+            failover: TenantCounter::new("serve.spine.failover"),
             batch_max: metrics::counter("serve.spine.batch_max"),
         }
     }
@@ -628,63 +747,122 @@ impl SpineCore {
     }
 
     fn queue(&self, device: DeviceId) -> Arc<DeviceQueue> {
-        self.queues
-            .lock()
-            .unwrap()
+        lock(&self.queues)
             .entry(device)
             .or_insert_with(|| Arc::new(DeviceQueue { pending: Mutex::new(VecDeque::new()) }))
             .clone()
     }
 
-    fn queued_total(&self) -> usize {
-        let queues = self.queues.lock().unwrap();
-        queues.values().map(|q| q.pending.lock().unwrap().len()).sum()
+    /// The circuit breaker guarding `device` (created lazily, configured
+    /// from [`SpineConfig`]'s `trip_after` / probe-backoff knobs).
+    fn breaker(&self, device: DeviceId) -> Arc<DeviceBreaker> {
+        lock(&self.breakers)
+            .entry(device)
+            .or_insert_with(|| {
+                Arc::new(DeviceBreaker::new(
+                    device,
+                    BreakerConfig {
+                        trip_after: self.cfg.trip_after,
+                        probe_backoff_us: self.cfg.probe_backoff_us,
+                        probe_backoff_max_us: self.cfg.probe_backoff_max_us,
+                    },
+                ))
+            })
+            .clone()
     }
 
-    /// Adaptive placement: among the requested artifact's siblings (same
+    fn queued_total(&self) -> usize {
+        let queues = lock(&self.queues);
+        queues.values().map(|q| lock(&q.pending).len()).sum()
+    }
+
+    /// Placement: among the requested artifact's siblings (same
     /// structural graph on other devices — each admitted through the
     /// same `BackendRegistry` arena-capability gate at `load_artifact`),
     /// pick the one whose device queue is least loaded.  Ties keep the
     /// requested artifact, so placement never churns an evenly loaded
     /// fleet.
+    ///
+    /// Health overrides policy: an unroutable (quarantined) device is
+    /// never chosen while any routable sibling exists — **failover
+    /// placement**, active even under FIFO (which otherwise never
+    /// re-places).  A healthy FIFO submit still short-circuits, so the
+    /// FIFO `placed == 0` contract holds whenever the fleet is healthy.
     fn place(&self, requested: &Arc<ServedArtifact>) -> Arc<ServedArtifact> {
-        if self.cfg.policy != SpinePolicy::Adaptive {
+        let now = self.now();
+        let requested_ok = self.breaker(requested.device).routable(now);
+        if self.cfg.policy != SpinePolicy::Adaptive && requested_ok {
             return requested.clone();
         }
-        let families = self.families.lock().unwrap();
+        let families = lock(&self.families);
         let Some(members) = families.get(&requested.family()) else {
             return requested.clone();
         };
         if members.len() <= 1 {
             return requested.clone();
         }
-        let mut best = requested.clone();
-        let mut best_len = self.queue(requested.device).pending.lock().unwrap().len();
+        let mut best = if requested_ok { Some(requested.clone()) } else { None };
+        let mut best_len = if requested_ok {
+            lock(&self.queue(requested.device).pending).len()
+        } else {
+            usize::MAX
+        };
         for m in members {
-            if m.key() == requested.key() {
+            if m.key() == requested.key() || !self.breaker(m.device).routable(now) {
                 continue;
             }
-            let len = self.queue(m.device).pending.lock().unwrap().len();
+            let len = lock(&self.queue(m.device).pending).len();
             if len < best_len {
-                best = m.clone();
+                best = Some(m.clone());
                 best_len = len;
             }
         }
+        let Some(best) = best else {
+            // nothing routable anywhere in the family: keep the requested
+            // queue — the drain side (quarantine migration, half-open
+            // probes) takes over from there
+            return requested.clone();
+        };
         if best.key() != requested.key() {
             self.placed.inc();
+            if !requested_ok {
+                self.failover.inc();
+            }
         }
         best
     }
 
     /// Drain one dynamic batch from `device`'s queue under the
     /// configured policy.  `force` executes immediately even inside an
-    /// adaptive hold window (the flush path, [`ServeSpine::drain_device`]).
+    /// adaptive hold window (the flush path, [`ServeSpine::drain_device`])
+    /// and bypasses the health gate, so flushes always make progress.
     fn drain_one(&self, device: DeviceId, force: bool) -> DrainOutcome {
         let q = self.queue(device);
+        if lock(&q.pending).is_empty() {
+            // checked *before* the health gate: an empty quarantined
+            // queue must not consume the device's half-open probe
+            return DrainOutcome::Empty;
+        }
+
+        // health gate: a quarantined device refuses to execute until its
+        // probe backoff expires (its queue migrates to siblings instead);
+        // a half-open device admits exactly one probe request
+        let mut probe_cap: Option<usize> = None;
+        if !force {
+            match self.breaker(device).admit(self.now()) {
+                Admission::Healthy => {}
+                Admission::Probe => probe_cap = Some(1),
+                Admission::Refused { retry_in_us } => {
+                    return self.drain_quarantined(device, retry_in_us);
+                }
+            }
+        }
+
         let mut batch: Vec<Pending> = Vec::with_capacity(self.cfg.max_batch);
         {
-            let mut pending = q.pending.lock().unwrap();
+            let mut pending = lock(&q.pending);
             if pending.is_empty() {
+                // raced with another drain between the peek and here
                 return DrainOutcome::Empty;
             }
             let now = self.now();
@@ -707,11 +885,16 @@ impl SpineCore {
                 0
             };
             let key = pending[anchor].artifact.key();
-            let cap = if adaptive {
+            let mut cap = if adaptive {
                 pending[anchor].artifact.controller().target().clamp(1, self.cfg.max_batch)
             } else {
                 self.cfg.max_batch
             };
+            if let Some(pc) = probe_cap {
+                // a probe batch risks as little work as possible (and a
+                // 1-cap can never hold: the anchor alone fills it)
+                cap = cap.min(pc);
+            }
 
             // hold window: an under-filled adaptive batch waits (bounded
             // by hold_us from the oldest same-key enqueue, and by the
@@ -801,67 +984,340 @@ impl SpineCore {
 
         let artifact = live[0].artifact.clone();
         let batch_size = live.len();
-        // take inputs/outputs out of the requests so the executor sees
-        // plain slices (the buffers come back to their owners below)
-        let mut ins: Vec<Vec<f32>> = Vec::with_capacity(batch_size);
-        let mut outs: Vec<Vec<f32>> = Vec::with_capacity(batch_size);
-        for p in live.iter_mut() {
-            ins.push(std::mem::take(&mut p.input));
-            outs.push(std::mem::take(&mut p.out));
-        }
-        let in_refs: Vec<&[f32]> = ins.iter().map(|v| v.as_slice()).collect();
-        let t = crate::metrics::Timer::start();
-        let injected = self
-            .fail_next
-            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| n.checked_sub(1))
-            .is_ok();
-        let result = if injected {
-            Err(AdmissionError::Failed { reason: "injected spine fault".into() })
-        } else {
-            artifact
-                .run_batch_blocking(&in_refs, &mut outs)
-                .map_err(|e| AdmissionError::Failed { reason: e.to_string() })
-        };
-        let exec_us = t.us();
-
+        let (result, exec_us) = self.try_exec_group(&artifact, &mut live);
         self.batches.inc();
         self.batch_max.set_max(batch_size as u64);
-        let done = self.now();
+        let breaker = self.breaker(device);
         match result {
             Ok(()) => {
-                for (p, out) in live.into_iter().zip(outs) {
-                    let total_us = done.duration_since(p.enqueued).as_secs_f64() * 1e6;
-                    let queue_us = batch_start.duration_since(p.enqueued).as_secs_f64() * 1e6;
-                    self.latency.record_us(total_us);
-                    artifact.controller().record_us(total_us);
-                    self.completed.inc();
-                    p.tenant.runs.inc();
-                    p.shared.complete(Ok(ServeOutput {
-                        output: out,
-                        batch_size,
-                        device: artifact.device,
-                        queue_us,
-                        exec_us,
-                        total_us,
-                    }));
+                breaker.record_success();
+                for p in live {
+                    self.fulfill_one(&artifact, p, batch_start, batch_size, exec_us);
+                }
+            }
+            Err(e) if self.cfg.max_retries == 0 => {
+                // ladder disabled: the pre-resilience semantics — one
+                // failed batch resolves every member Failed in one step
+                breaker.record_failure(self.now());
+                for p in live {
+                    self.fail_one(&artifact, p, &e);
                 }
             }
             Err(e) => {
-                // failed traffic is still traffic: account latency, the
-                // failure counter and the owning tenant before resolving
-                // every waiter with the error
-                for p in &live {
-                    let total_us = done.duration_since(p.enqueued).as_secs_f64() * 1e6;
-                    self.latency.record_us(total_us);
-                    artifact.controller().record_us(total_us);
-                    self.failed.inc();
-                    p.tenant.runs.inc();
-                    p.shared.complete(Err(e.clone()));
+                // the degradation ladder: bisect, retry, rescue.  The
+                // breaker hears "success" if *any* request was served —
+                // one poison request must not quarantine a healthy device
+                if self.degrade(&artifact, live, e, batch_start) {
+                    breaker.record_success();
+                } else {
+                    breaker.record_failure(self.now());
                 }
             }
         }
         artifact.controller().batch_done(batch_size);
         DrainOutcome::Completed(handled)
+    }
+
+    /// Execute `group` as one arena batch, with fault injection
+    /// ([`FaultInjector::decide`] at [`FaultSite::Batch`]) and panic
+    /// containment (`catch_unwind`, so a panicking kernel becomes an
+    /// [`AdmissionError::Failed`] instead of wedging waiters).  Inputs
+    /// and outputs are restored to their requests either way: on success
+    /// each request's result sits in its `out` buffer; on failure the
+    /// buffers are intact for the ladder to re-execute.
+    fn try_exec_group(
+        &self,
+        artifact: &Arc<ServedArtifact>,
+        group: &mut [Pending],
+    ) -> (Result<(), AdmissionError>, f64) {
+        let mut ins: Vec<Vec<f32>> = Vec::with_capacity(group.len());
+        let mut outs: Vec<Vec<f32>> = Vec::with_capacity(group.len());
+        for p in group.iter_mut() {
+            ins.push(std::mem::take(&mut p.input));
+            outs.push(std::mem::take(&mut p.out));
+        }
+        let in_refs: Vec<&[f32]> = ins.iter().map(|v| v.as_slice()).collect();
+        let action = self.injector.decide(artifact.device(), FaultSite::Batch, &in_refs);
+        let t = metrics::Timer::start();
+        let result = if action == Some(FaultAction::Fail) {
+            Err(AdmissionError::Failed { reason: "injected spine fault".into() })
+        } else {
+            match catch_unwind(AssertUnwindSafe(|| {
+                if action == Some(FaultAction::Panic) {
+                    panic!("injected panic fault");
+                }
+                artifact.run_batch_blocking(&in_refs, &mut outs)
+            })) {
+                Ok(r) => r.map_err(|e| AdmissionError::Failed { reason: e.to_string() }),
+                Err(e) => Err(AdmissionError::Failed {
+                    reason: format!("batch execution panicked: {}", panic_reason(e)),
+                }),
+            }
+        };
+        let exec_us = t.us();
+        drop(in_refs);
+        for ((p, input), out) in group.iter_mut().zip(ins).zip(outs) {
+            p.input = input;
+            p.out = out;
+        }
+        (result, exec_us)
+    }
+
+    /// Resolve one request as fulfilled (its result is in `p.out`), with
+    /// full latency accounting.
+    fn fulfill_one(
+        &self,
+        artifact: &Arc<ServedArtifact>,
+        mut p: Pending,
+        batch_start: Instant,
+        batch_size: usize,
+        exec_us: f64,
+    ) {
+        let done = self.now();
+        let total_us = done.duration_since(p.enqueued).as_secs_f64() * 1e6;
+        let queue_us = batch_start.duration_since(p.enqueued).as_secs_f64() * 1e6;
+        self.latency.record_us(total_us);
+        artifact.controller().record_us(total_us);
+        self.completed.inc();
+        p.tenant.runs.inc();
+        let out = std::mem::take(&mut p.out);
+        p.shared.complete(Ok(ServeOutput {
+            output: out,
+            batch_size,
+            device: artifact.device,
+            queue_us,
+            exec_us,
+            total_us,
+        }));
+    }
+
+    /// Resolve one request as failed.  Failed traffic is still traffic:
+    /// latency, the failure counter and the owning tenant all see it.
+    fn fail_one(&self, artifact: &Arc<ServedArtifact>, p: Pending, err: &AdmissionError) {
+        let done = self.now();
+        let total_us = done.duration_since(p.enqueued).as_secs_f64() * 1e6;
+        self.latency.record_us(total_us);
+        artifact.controller().record_us(total_us);
+        self.failed.inc();
+        p.tenant.runs.inc();
+        p.shared.complete(Err(err.clone()));
+    }
+
+    /// The degradation ladder after a failed batch: split the batch in
+    /// half and re-execute each half ([`SpineCore::reexec_group`]) to
+    /// bisect toward the poison request(s); singletons fall through to
+    /// the per-request naive rescue ([`SpineCore::rescue_one`]).
+    /// Returns whether *any* request was ultimately served.
+    fn degrade(
+        &self,
+        artifact: &Arc<ServedArtifact>,
+        mut group: Vec<Pending>,
+        err: AdmissionError,
+        batch_start: Instant,
+    ) -> bool {
+        if group.len() <= 1 {
+            let mut any = false;
+            for p in group {
+                any |= self.rescue_one(artifact, p, &err, batch_start);
+            }
+            return any;
+        }
+        let hi = group.split_off(group.len() / 2);
+        let a = self.reexec_group(artifact, group, batch_start);
+        let b = self.reexec_group(artifact, hi, batch_start);
+        a | b
+    }
+
+    /// One bisection rung: charge a retry to each still-live request
+    /// (deadline-expired members reject, budget-exhausted members fail),
+    /// re-execute the half as its own accounted batch, and recurse into
+    /// [`SpineCore::degrade`] if it fails again.
+    fn reexec_group(
+        &self,
+        artifact: &Arc<ServedArtifact>,
+        group: Vec<Pending>,
+        batch_start: Instant,
+    ) -> bool {
+        let now = self.now();
+        let mut live: Vec<Pending> = Vec::with_capacity(group.len());
+        for mut p in group {
+            if let Some(d) = p.deadline {
+                if now > d {
+                    self.expired.inc();
+                    let waited_us = now.duration_since(p.enqueued).as_micros() as u64;
+                    p.shared.complete(Err(AdmissionError::DeadlineExceeded { waited_us }));
+                    continue;
+                }
+            }
+            if p.retries >= self.cfg.max_retries {
+                let err = AdmissionError::Failed {
+                    reason: format!("retry budget exhausted ({} attempts)", p.retries),
+                };
+                self.fail_one(artifact, p, &err);
+                continue;
+            }
+            p.retries += 1;
+            self.retries.inc();
+            live.push(p);
+        }
+        if live.is_empty() {
+            return false;
+        }
+        let batch_size = live.len();
+        let (result, exec_us) = self.try_exec_group(artifact, &mut live);
+        self.batches.inc();
+        self.batch_max.set_max(batch_size as u64);
+        match result {
+            Ok(()) => {
+                for p in live {
+                    self.fulfill_one(artifact, p, batch_start, batch_size, exec_us);
+                }
+                true
+            }
+            Err(e) => self.degrade(artifact, live, e, batch_start),
+        }
+    }
+
+    /// The ladder's last rung for a lone request: spend one more retry
+    /// on the per-request **naive** path ([`ServedArtifact::run_naive`] —
+    /// reference kernels, no arena), injected at [`FaultSite::Naive`].
+    /// A request that still fails here, or arrives with no retry budget
+    /// left, is *poison*: isolated, counted, resolved `Failed`.
+    fn rescue_one(
+        &self,
+        artifact: &Arc<ServedArtifact>,
+        mut p: Pending,
+        batch_err: &AdmissionError,
+        batch_start: Instant,
+    ) -> bool {
+        let now = self.now();
+        if let Some(d) = p.deadline {
+            if now > d {
+                self.expired.inc();
+                let waited_us = now.duration_since(p.enqueued).as_micros() as u64;
+                p.shared.complete(Err(AdmissionError::DeadlineExceeded { waited_us }));
+                return false;
+            }
+        }
+        if p.retries >= self.cfg.max_retries {
+            self.poison.inc();
+            self.fail_one(artifact, p, batch_err);
+            return false;
+        }
+        p.retries += 1;
+        self.retries.inc();
+        let action =
+            self.injector.decide(artifact.device(), FaultSite::Naive, &[p.input.as_slice()]);
+        let t = metrics::Timer::start();
+        let result = if action == Some(FaultAction::Fail) {
+            Err(AdmissionError::Failed { reason: "injected naive fault".into() })
+        } else {
+            match catch_unwind(AssertUnwindSafe(|| {
+                if action == Some(FaultAction::Panic) {
+                    panic!("injected panic fault");
+                }
+                artifact.run_naive(&p.input)
+            })) {
+                Ok(r) => r.map_err(|e| AdmissionError::Failed { reason: e.to_string() }),
+                Err(e) => Err(AdmissionError::Failed {
+                    reason: format!("naive fallback panicked: {}", panic_reason(e)),
+                }),
+            }
+        };
+        let exec_us = t.us();
+        match result {
+            Ok(out) => {
+                p.out = out;
+                self.fulfill_one(artifact, p, batch_start, 1, exec_us);
+                true
+            }
+            Err(e) => {
+                self.poison.inc();
+                self.fail_one(artifact, p, &e);
+                false
+            }
+        }
+    }
+
+    /// The least-loaded *routable* same-family sibling of `artifact` on
+    /// a different device, if any — the failover destination.
+    fn healthy_sibling(
+        &self,
+        artifact: &Arc<ServedArtifact>,
+        now: Instant,
+    ) -> Option<Arc<ServedArtifact>> {
+        let families = lock(&self.families);
+        let members = families.get(&artifact.family())?;
+        let mut best: Option<(Arc<ServedArtifact>, usize)> = None;
+        for m in members {
+            if m.device() == artifact.device() || !self.breaker(m.device()).routable(now) {
+                continue;
+            }
+            let len = lock(&self.queue(m.device()).pending).len();
+            if best.as_ref().map_or(true, |(_, b)| len < *b) {
+                best = Some((m.clone(), len));
+            }
+        }
+        best.map(|(a, _)| a)
+    }
+
+    /// A drain hit a quarantined device inside its backoff window:
+    /// migrate the queued requests to routable same-family siblings
+    /// (drain-side failover), keep whatever has no healthy destination,
+    /// then drain the destination queues inline — migrated work must
+    /// never sit stranded waiting for a submit that may not come.
+    fn drain_quarantined(&self, device: DeviceId, retry_in_us: u64) -> DrainOutcome {
+        let q = self.queue(device);
+        let drained: Vec<Pending> = lock(&q.pending).drain(..).collect();
+        let now = self.now();
+        let mut kept: Vec<Pending> = Vec::new();
+        let mut dests: Vec<DeviceId> = Vec::new();
+        for mut p in drained {
+            let Some(sib) = self.healthy_sibling(&p.artifact, now) else {
+                kept.push(p);
+                continue;
+            };
+            let dest = sib.device();
+            p.artifact = sib;
+            lock(&self.queue(dest).pending).push_back(p);
+            self.failover.inc();
+            self.placed.inc();
+            if !dests.contains(&dest) {
+                dests.push(dest);
+            }
+        }
+        {
+            // un-migratable requests go back where they were, in order
+            let mut pending = lock(&q.pending);
+            for p in kept.into_iter().rev() {
+                pending.push_front(p);
+            }
+        }
+        if dests.is_empty() {
+            return DrainOutcome::Held { remaining_us: retry_in_us.max(1) };
+        }
+        let mut total = 0usize;
+        for dest in dests {
+            loop {
+                match self.drain_one(dest, false) {
+                    DrainOutcome::Completed(n) => total += n,
+                    DrainOutcome::Empty => break,
+                    DrainOutcome::Held { .. } => {
+                        // liveness beats coalescing for migrated work:
+                        // force one batch through the hold window
+                        match self.drain_one(dest, true) {
+                            DrainOutcome::Completed(n) => total += n,
+                            _ => break,
+                        }
+                    }
+                }
+            }
+        }
+        if total > 0 {
+            DrainOutcome::Completed(total)
+        } else {
+            DrainOutcome::Held { remaining_us: retry_in_us.max(1) }
+        }
     }
 }
 
@@ -937,9 +1393,29 @@ impl ServeSpine {
 
     /// Test hook: make the next `n` batch executions fail, exercising
     /// the failure-accounting path without a corruptible artifact.
+    /// (Sugar over [`ServeSpine::fault_injector`]'s scripted channel.)
     #[doc(hidden)]
     pub fn fail_next_batches_for_tests(&self, n: u64) {
-        self.core.fail_next.store(n, Ordering::Relaxed);
+        self.core.injector.fail_next_batches(n);
+    }
+
+    /// The spine's deterministic fault injector — scripted failures,
+    /// poison sentinels and seeded-probabilistic rules, shared with
+    /// `sol audit --fault` and the `sol chaos` harness.
+    pub fn fault_injector(&self) -> &FaultInjector {
+        &self.core.injector
+    }
+
+    /// Health snapshot of every device the spine has queued for:
+    /// `(device, health, trips, probes)`, device-name sorted.
+    pub fn device_health(&self) -> Vec<(DeviceId, DeviceHealth, u64, u64)> {
+        let breakers = lock(&self.core.breakers);
+        let mut rows: Vec<(DeviceId, DeviceHealth, u64, u64)> = breakers
+            .values()
+            .map(|b| (b.device(), b.health(), b.trips(), b.probes()))
+            .collect();
+        rows.sort_by_key(|(d, _, _, _)| format!("{d:?}"));
+        rows
     }
 
     pub fn stats(&self) -> SpineStats {
@@ -953,6 +1429,9 @@ impl ServeSpine {
             batch_max: self.core.batch_max.get(),
             held: self.core.held.get(),
             placed: self.core.placed.get(),
+            retries: self.core.retries.get(),
+            poison: self.core.poison.get(),
+            failover: self.core.failover.get(),
             queued: self.core.queued_total(),
         }
     }
@@ -1002,7 +1481,7 @@ impl ServeSpine {
         graph: &Graph,
         binding: &ParamBinding,
     ) -> Result<Arc<ServedArtifact>, AdmissionError> {
-        let mut arts = self.core.artifacts.lock().unwrap();
+        let mut arts = lock(&self.core.artifacts);
         if let Some(a) = arts.get(&key) {
             return Ok(a.clone());
         }
@@ -1010,7 +1489,7 @@ impl ServeSpine {
             .map_err(|e| AdmissionError::Failed { reason: e.to_string() })?;
         let a = Arc::new(built);
         arts.insert(key, a.clone());
-        self.core.families.lock().unwrap().entry(a.family()).or_default().push(a.clone());
+        lock(&self.core.families).entry(a.family()).or_default().push(a.clone());
         Ok(a)
     }
 
@@ -1054,7 +1533,7 @@ impl ServeSpine {
         }
         let shared = Arc::new(ReqShared::default());
         {
-            let mut pending = q.pending.lock().unwrap();
+            let mut pending = lock(&q.pending);
             if pending.len() >= self.core.cfg.queue_depth {
                 self.core.rejected_full.inc();
                 return Err(AdmissionError::QueueFull {
@@ -1069,6 +1548,7 @@ impl ServeSpine {
                 input,
                 enqueued: now,
                 deadline,
+                retries: 0,
                 shared: shared.clone(),
             });
         }

@@ -1,0 +1,352 @@
+//! Shared deterministic fault injection — one injector behind both
+//! `sol audit --fault` and the serving spine's resilience layer
+//! (`session::resilience`, `sol chaos`).
+//!
+//! Three fault sources, checked in a fixed order so every scenario is
+//! reproducible under the spine's manual pump + virtual clock:
+//!
+//! 1. **scripted** — "fail the next N batches" ([`FaultInjector::fail_next_batches`]),
+//!    the spine's original `#[doc(hidden)]` test hook, preserved
+//!    semantics-for-semantics (batch site only, consumed atomically);
+//! 2. **poison sentinel** — any request whose input's element 0 is
+//!    bit-identical to the sentinel fails wherever it executes
+//!    ([`FaultInjector::set_poison`]; bisection isolates it);
+//! 3. **rules** — seeded-probabilistic or persistent per-device /
+//!    per-site failures ([`FaultRule`]), drawn from an owned
+//!    [`XorShift`] so outcomes depend only on the seed and call order.
+//!
+//! The audit engine's `FaultSpec` (PR 6's `--fault DEVICE:PATH:OFFSET`
+//! output perturbation) lives here too, so device-name and fault-spec
+//! parsing have a single home.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::audit::ExecPath;
+use crate::devsim::DeviceId;
+use crate::util::XorShift;
+
+/// Parse a CLI device name (`cpu` / `aurora` / `p4000` / `titanv`, plus
+/// aliases) — shared by `sol`'s flag parsing and [`FaultSpec::parse`].
+pub fn parse_device_name(s: &str) -> Result<DeviceId> {
+    Ok(match s {
+        "cpu" | "xeon" => DeviceId::Xeon6126,
+        "aurora" | "ve" | "vpu" => DeviceId::AuroraVE10B,
+        "p4000" => DeviceId::QuadroP4000,
+        "titanv" | "gpu" => DeviceId::TitanV,
+        other => bail!("unknown device '{other}' (cpu|aurora|p4000|titanv)"),
+    })
+}
+
+/// Test-only fault injection: add `offset` to element 0 of the chosen
+/// (device, path) variant's output before comparison.  Drives the audit
+/// self-test (a perturbed kernel must be caught) and the hidden
+/// `--fault` CLI flag.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    pub device: DeviceId,
+    pub path: ExecPath,
+    pub offset: f32,
+}
+
+impl FaultSpec {
+    /// Parse the CLI form `DEVICE:PATH:OFFSET` (e.g. `cpu:arena:0.5`).
+    pub fn parse(spec: &str) -> Result<FaultSpec> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let &[dev, path, offset] = parts.as_slice() else {
+            bail!("--fault wants DEVICE:PATH:OFFSET, got '{spec}'");
+        };
+        Ok(FaultSpec {
+            device: parse_device_name(dev)?,
+            path: ExecPath::parse(path)?,
+            offset: offset.parse()?,
+        })
+    }
+}
+
+/// What an injected fault does at its site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// The execution returns an error (a faulting kernel / wedged device).
+    Fail,
+    /// The execution panics (an asserting kernel) — the spine must
+    /// contain it (`catch_unwind`) and still resolve every request.
+    Panic,
+}
+
+/// Where in the spine's execution ladder a fault fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// The batched `ArenaExec` run.
+    Batch,
+    /// The per-request naive fallback (`forward_on`).
+    Naive,
+}
+
+/// One standing fault rule: fire `action` at matching (device, site)
+/// decisions with probability `rate`, at most `remaining` times.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultRule {
+    /// `None` matches every device.
+    pub device: Option<DeviceId>,
+    /// `None` matches every site — a fully "down" device fails both the
+    /// batch path and the naive fallback.
+    pub site: Option<FaultSite>,
+    pub action: FaultAction,
+    /// Fire probability per decision; `>= 1.0` is deterministic.
+    pub rate: f32,
+    /// Remaining firings (`None` = unlimited); the rule is dropped when
+    /// it reaches zero.
+    pub remaining: Option<u64>,
+}
+
+#[derive(Debug)]
+struct InjectorState {
+    rules: Vec<FaultRule>,
+    rng: XorShift,
+    poison: Option<u32>, // sentinel bits, matched exactly
+}
+
+/// The shared deterministic fault injector.  One lives on each
+/// `SpineCore`; idle (no scripted count, no rules, no poison) it is a
+/// single relaxed atomic load on the drain path.
+#[derive(Debug)]
+pub struct FaultInjector {
+    fail_next: AtomicU64,
+    state: Mutex<InjectorState>,
+}
+
+impl Default for FaultInjector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FaultInjector {
+    pub fn new() -> FaultInjector {
+        FaultInjector {
+            fail_next: AtomicU64::new(0),
+            state: Mutex::new(InjectorState {
+                rules: Vec::new(),
+                rng: XorShift::new(0xFA_017),
+                poison: None,
+            }),
+        }
+    }
+
+    fn state(&self) -> std::sync::MutexGuard<'_, InjectorState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Scripted injection: fail the next `n` batch executions (the
+    /// spine's original test hook — batch site only, consumed
+    /// atomically, so exactly `n` batches fail).
+    pub fn fail_next_batches(&self, n: u64) {
+        self.fail_next.store(n, Ordering::Relaxed);
+    }
+
+    /// Re-seed the rule RNG — call before installing probabilistic
+    /// rules so a scenario replays bit-for-bit.
+    pub fn seed(&self, seed: u64) {
+        self.state().rng = XorShift::new(seed);
+    }
+
+    /// Install a standing [`FaultRule`].
+    pub fn push_rule(&self, rule: FaultRule) {
+        self.state().rules.push(rule);
+    }
+
+    /// Mark `sentinel` as the poison input signature: any request whose
+    /// input element 0 is bit-identical to it fails at every site
+    /// (`None` clears).
+    pub fn set_poison(&self, sentinel: Option<f32>) {
+        self.state().poison = sentinel.map(f32::to_bits);
+    }
+
+    /// Drop every rule targeting `device` (rules matching all devices
+    /// stay) — "the device came back".
+    pub fn clear_rules_for(&self, device: DeviceId) {
+        self.state().rules.retain(|r| r.device != Some(device));
+    }
+
+    /// Drop everything: scripted count, rules, poison.
+    pub fn clear(&self) {
+        self.fail_next.store(0, Ordering::Relaxed);
+        let mut st = self.state();
+        st.rules.clear();
+        st.poison = None;
+    }
+
+    /// Whether any fault source is armed (fast-path gate).
+    pub fn armed(&self) -> bool {
+        if self.fail_next.load(Ordering::Relaxed) > 0 {
+            return true;
+        }
+        let st = self.state();
+        !st.rules.is_empty() || st.poison.is_some()
+    }
+
+    /// Decide whether this (device, site) execution of `inputs` faults.
+    /// Order: scripted (batch site) → poison sentinel → rules; the
+    /// first match wins.  Mutates scripted/rule budgets and draws the
+    /// RNG only for probabilistic rules, so call order fully determines
+    /// outcomes.
+    pub fn decide(
+        &self,
+        device: DeviceId,
+        site: FaultSite,
+        inputs: &[&[f32]],
+    ) -> Option<FaultAction> {
+        if site == FaultSite::Batch
+            && self
+                .fail_next
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| n.checked_sub(1))
+                .is_ok()
+        {
+            return Some(FaultAction::Fail);
+        }
+        let mut guard = self.state();
+        let st = &mut *guard;
+        if let Some(bits) = st.poison {
+            if inputs.iter().any(|x| x.first().map(|v| v.to_bits()) == Some(bits)) {
+                return Some(FaultAction::Fail);
+            }
+        }
+        let mut fired = None;
+        for (i, rule) in st.rules.iter().enumerate() {
+            let dev_ok = rule.device.map_or(true, |d| d == device);
+            let site_ok = rule.site.map_or(true, |s| s == site);
+            if !dev_ok || !site_ok {
+                continue;
+            }
+            // draw per matching probabilistic rule: the seed and the
+            // decision sequence fully determine the outcome
+            if rule.rate < 1.0 && st.rng.f32() >= rule.rate {
+                continue;
+            }
+            fired = Some((i, rule.action));
+            break;
+        }
+        let (i, action) = fired?;
+        if let Some(rem) = &mut st.rules[i].remaining {
+            *rem = rem.saturating_sub(1);
+            if *rem == 0 {
+                st.rules.remove(i);
+            }
+        }
+        Some(action)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripted_faults_consume_exactly_n_batches() {
+        let inj = FaultInjector::new();
+        inj.fail_next_batches(2);
+        assert!(inj.armed());
+        let d = DeviceId::Xeon6126;
+        assert_eq!(inj.decide(d, FaultSite::Batch, &[]), Some(FaultAction::Fail));
+        // the naive site never consumes the scripted budget
+        assert_eq!(inj.decide(d, FaultSite::Naive, &[]), None);
+        assert_eq!(inj.decide(d, FaultSite::Batch, &[]), Some(FaultAction::Fail));
+        assert_eq!(inj.decide(d, FaultSite::Batch, &[]), None);
+        assert!(!inj.armed());
+    }
+
+    #[test]
+    fn poison_sentinel_matches_bitwise_on_element_zero() {
+        let inj = FaultInjector::new();
+        let sentinel = 1e30f32;
+        inj.set_poison(Some(sentinel));
+        let clean = [1.0f32, 2.0];
+        let poisoned = [sentinel, 2.0];
+        let d = DeviceId::Xeon6126;
+        assert_eq!(inj.decide(d, FaultSite::Batch, &[&clean]), None);
+        assert_eq!(
+            inj.decide(d, FaultSite::Batch, &[&clean, &poisoned]),
+            Some(FaultAction::Fail)
+        );
+        assert_eq!(inj.decide(d, FaultSite::Naive, &[&poisoned]), Some(FaultAction::Fail));
+        inj.set_poison(None);
+        assert_eq!(inj.decide(d, FaultSite::Batch, &[&poisoned]), None);
+    }
+
+    #[test]
+    fn rules_filter_by_device_and_site_and_respect_budgets() {
+        let inj = FaultInjector::new();
+        inj.push_rule(FaultRule {
+            device: Some(DeviceId::Xeon6126),
+            site: Some(FaultSite::Batch),
+            action: FaultAction::Panic,
+            rate: 1.0,
+            remaining: Some(2),
+        });
+        let (xeon, titan) = (DeviceId::Xeon6126, DeviceId::TitanV);
+        assert_eq!(inj.decide(titan, FaultSite::Batch, &[]), None, "wrong device");
+        assert_eq!(inj.decide(xeon, FaultSite::Naive, &[]), None, "wrong site");
+        assert_eq!(inj.decide(xeon, FaultSite::Batch, &[]), Some(FaultAction::Panic));
+        assert_eq!(inj.decide(xeon, FaultSite::Batch, &[]), Some(FaultAction::Panic));
+        assert_eq!(inj.decide(xeon, FaultSite::Batch, &[]), None, "budget spent");
+        assert!(!inj.armed(), "exhausted rules are dropped");
+    }
+
+    #[test]
+    fn wildcard_rule_hits_every_device_and_site() {
+        let inj = FaultInjector::new();
+        inj.push_rule(FaultRule {
+            device: None,
+            site: None,
+            action: FaultAction::Fail,
+            rate: 1.0,
+            remaining: None,
+        });
+        for d in [DeviceId::Xeon6126, DeviceId::TitanV] {
+            for s in [FaultSite::Batch, FaultSite::Naive] {
+                assert_eq!(inj.decide(d, s, &[]), Some(FaultAction::Fail));
+            }
+        }
+        inj.clear_rules_for(DeviceId::Xeon6126);
+        assert!(inj.armed(), "wildcard rules survive a per-device clear");
+        inj.clear();
+        assert!(!inj.armed());
+    }
+
+    #[test]
+    fn probabilistic_rules_are_seed_deterministic() {
+        let run = |seed: u64| -> Vec<bool> {
+            let inj = FaultInjector::new();
+            inj.seed(seed);
+            inj.push_rule(FaultRule {
+                device: None,
+                site: None,
+                action: FaultAction::Fail,
+                rate: 0.3,
+                remaining: None,
+            });
+            (0..64)
+                .map(|_| inj.decide(DeviceId::Xeon6126, FaultSite::Batch, &[]).is_some())
+                .collect()
+        };
+        let a = run(7);
+        assert_eq!(a, run(7), "same seed, same decisions");
+        assert!(a.iter().any(|&b| b) && a.iter().any(|&b| !b), "rate 0.3 mixes outcomes");
+        assert_ne!(a, run(8), "different seed diverges");
+    }
+
+    #[test]
+    fn fault_spec_parses_the_cli_form() {
+        let spec = FaultSpec::parse("cpu:arena:0.5").expect("parses");
+        assert_eq!(spec.device, DeviceId::Xeon6126);
+        assert_eq!(spec.path, ExecPath::Arena);
+        assert_eq!(spec.offset, 0.5);
+        assert!(FaultSpec::parse("cpu:arena").is_err(), "needs three parts");
+        assert!(FaultSpec::parse("warp:arena:0.5").is_err(), "unknown device");
+        assert!(FaultSpec::parse("cpu:warp:0.5").is_err(), "unknown path");
+        assert!(FaultSpec::parse("cpu:arena:x").is_err(), "offset must be numeric");
+    }
+}

@@ -1,6 +1,7 @@
 //! In-tree utilities (offline build: no serde/clap/criterion/proptest/rayon).
 
 pub mod alloc;
+pub mod fault;
 pub mod fnv;
 pub mod gen;
 pub mod json;

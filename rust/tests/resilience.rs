@@ -1,0 +1,404 @@
+//! Acceptance tests for the spine's fault-tolerance layer — the
+//! circuit-breaker health machine, failover placement, the
+//! batch-bisection degradation ladder, and panic containment — all
+//! driven in manual-pump mode (`workers: 0`) on the spine's virtual
+//! clock, so every assertion is deterministic (no sleeps, no timing
+//! flakes).
+//!
+//! Fault injection goes through the spine's own
+//! [`sol::util::fault::FaultInjector`] (the same instrument `sol chaos`
+//! and `sol audit --fault` use), never through ad-hoc test doubles: the
+//! tests exercise exactly the failure paths production would take.
+
+use std::sync::Arc;
+
+use sol::audit::fixed_workloads;
+use sol::backends::{BackendRegistry, Capabilities, DeviceBackend};
+use sol::devsim::DeviceId;
+use sol::dfp::Flavor;
+use sol::dnn::Library;
+use sol::framework::DeviceType;
+use sol::frontend::extract_graph;
+use sol::session::{
+    AdmissionError, DeviceHealth, DrainOutcome, RequestHandle, ServedArtifact, ServingConfig,
+    ServingSession, Session, SpineConfig, Tenant,
+};
+use sol::util::fault::{FaultAction, FaultRule, FaultSite};
+
+const XEON: DeviceId = DeviceId::Xeon6126;
+const TITAN: DeviceId = DeviceId::TitanV;
+
+fn assert_close(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (a, b)) in want.iter().zip(got).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-4 * (1.0 + a.abs().max(b.abs())),
+            "{ctx}: elem {i}: {a} vs {b}"
+        );
+    }
+}
+
+/// Manual-pump spine with the resilience knobs at test-friendly values.
+fn resilient(trip_after: u32) -> SpineConfig {
+    SpineConfig {
+        workers: 0,
+        queue_depth: 64,
+        max_batch: 4,
+        trip_after,
+        probe_backoff_us: 1_000,
+        probe_backoff_max_us: 8_000,
+        ..SpineConfig::default()
+    }
+}
+
+/// Single-device serving over the default registry.
+fn pump_spine(cfg: SpineConfig) -> ServingSession {
+    assert_eq!(cfg.workers, 0, "resilience tests must stay deterministic");
+    let serving = ServingSession::new(ServingConfig::default());
+    serving.spine_with(cfg);
+    serving
+}
+
+/// A host-executing backend on the Xeon (default capabilities already
+/// include the arena path).
+struct XeonHost;
+
+impl DeviceBackend for XeonHost {
+    fn name(&self) -> &'static str {
+        "xeon-host"
+    }
+    fn device(&self) -> DeviceId {
+        XEON
+    }
+    fn flavor(&self) -> Flavor {
+        Flavor::Ispc
+    }
+    fn libraries(&self) -> Vec<Library> {
+        vec![Library::OpenBlas]
+    }
+    fn framework_slot(&self) -> DeviceType {
+        DeviceType::Cpu
+    }
+}
+
+/// A host-executing backend on a second device: the same structural
+/// graph compiles into a sibling artifact the breaker can fail over to.
+struct TitanHost;
+
+impl DeviceBackend for TitanHost {
+    fn name(&self) -> &'static str {
+        "titan-host"
+    }
+    fn device(&self) -> DeviceId {
+        TITAN
+    }
+    fn flavor(&self) -> Flavor {
+        Flavor::Ispc
+    }
+    fn libraries(&self) -> Vec<Library> {
+        vec![Library::OpenBlas]
+    }
+    fn framework_slot(&self) -> DeviceType {
+        DeviceType::Cuda
+    }
+    fn capabilities(&self) -> Capabilities {
+        Capabilities { arena_exec: true, ..Capabilities::for_device(TITAN) }
+    }
+}
+
+fn two_device_serving(cfg: SpineConfig) -> ServingSession {
+    assert_eq!(cfg.workers, 0, "resilience tests must stay deterministic");
+    let mut reg = BackendRegistry::new();
+    reg.register(Box::new(XeonHost));
+    reg.register(Box::new(TitanHost));
+    let serving = ServingSession::over(Session::with_registry(reg), ServingConfig::default());
+    serving.spine_with(cfg);
+    serving
+}
+
+/// Load the mlp workload on `devices`, returning the tenant + artifacts.
+fn mlp_artifacts(
+    serving: &ServingSession,
+    devices: &[DeviceId],
+) -> (Tenant, Vec<Arc<ServedArtifact>>) {
+    let wl = &fixed_workloads()[2]; // mlp
+    let (g, b) = extract_graph(&wl.module, &wl.input_shape, "mlp").unwrap();
+    let t = serving.tenant("resilience");
+    let arts = devices.iter().map(|&d| t.load_artifact(&g, &b, d).unwrap()).collect();
+    (t, arts)
+}
+
+fn submit_n(t: &Tenant, art: &Arc<ServedArtifact>, n: usize, fill: f32) -> Vec<RequestHandle> {
+    (0..n).map(|_| t.submit(art, vec![fill; art.input_len()], None).unwrap()).collect()
+}
+
+fn health_of(serving: &ServingSession, d: DeviceId) -> (DeviceHealth, u64, u64) {
+    serving
+        .spine()
+        .device_health()
+        .into_iter()
+        .find(|(dev, _, _, _)| *dev == d)
+        .map(|(_, h, t, p)| (h, t, p))
+        .expect("device has a breaker row")
+}
+
+// ---------------------------------------------------------------------
+// panic containment + poison-recovering locks
+// ---------------------------------------------------------------------
+
+/// An injected panic inside a batch execution is contained
+/// (`catch_unwind`): every request still resolves, the spine's locks
+/// recover (a later wave drains normally instead of hitting a poisoned
+/// mutex), and the health section shows up in the serving report.
+#[test]
+fn injected_panic_is_contained_and_spine_stays_usable() {
+    let serving = pump_spine(resilient(3));
+    let (t, arts) = mlp_artifacts(&serving, &[XEON]);
+    let spine = serving.spine();
+    spine.fault_injector().push_rule(FaultRule {
+        device: None,
+        site: Some(FaultSite::Batch),
+        action: FaultAction::Panic,
+        rate: 1.0,
+        remaining: Some(1),
+    });
+
+    let handles = submit_n(&t, &arts[0], 4, 0.2);
+    spine.advance_clock_us(300);
+    assert_eq!(spine.drain_device(XEON), 4);
+    for h in handles {
+        h.wait().expect("the ladder rescues every request past a contained panic");
+    }
+    assert!(spine.stats().retries > 0, "the panic forced the ladder to retry");
+
+    // the spine survived the panic: a clean wave drains as usual
+    let handles = submit_n(&t, &arts[0], 4, 0.3);
+    spine.advance_clock_us(300);
+    assert_eq!(spine.drain_device(XEON), 4);
+    for h in handles {
+        h.wait().unwrap();
+    }
+    assert_eq!(health_of(&serving, XEON).0, DeviceHealth::Healthy);
+
+    let report = serving.serving_report();
+    assert!(report.contains("health:"), "report shows the health section:\n{report}");
+    assert!(report.contains("resilience:"), "report shows the resilience line:\n{report}");
+}
+
+// ---------------------------------------------------------------------
+// batch bisection
+// ---------------------------------------------------------------------
+
+/// One poison request in a batch of four is bisected out: exactly that
+/// request fails, its three batchmates are served (with correct
+/// outputs), and the device stays healthy — one bad request must never
+/// quarantine a device.
+#[test]
+fn poison_requests_are_bisected_out() {
+    const POISON: f32 = 1e30;
+    let serving = pump_spine(resilient(3));
+    let (t, arts) = mlp_artifacts(&serving, &[XEON]);
+    let spine = serving.spine();
+    spine.fault_injector().set_poison(Some(POISON));
+
+    let mut handles = Vec::new();
+    for i in 0..4 {
+        let mut x = vec![0.2 + 0.1 * i as f32; arts[0].input_len()];
+        if i == 2 {
+            x[0] = POISON;
+        }
+        handles.push((t.submit(&arts[0], x.clone(), None).unwrap(), x));
+    }
+    spine.advance_clock_us(300);
+    assert_eq!(spine.drain_device(XEON), 4);
+
+    for (i, (h, x)) in handles.into_iter().enumerate() {
+        if i == 2 {
+            let err = h.wait().unwrap_err();
+            assert!(
+                matches!(err, AdmissionError::Failed { .. }),
+                "poison resolves Failed, got {err:?}"
+            );
+        } else {
+            let out = h.wait().expect("innocent batchmates are served");
+            let mut want = Vec::new();
+            arts[0].run_blocking(&x, &mut want).unwrap();
+            assert_close(&out.output, &want, &format!("request {i}"));
+        }
+    }
+    let st = spine.stats();
+    assert_eq!(st.poison, 1, "exactly the sentinel request is poison");
+    assert!(st.retries > 0, "bisection consumed retries");
+    assert_eq!(health_of(&serving, XEON).0, DeviceHealth::Healthy);
+    assert_eq!(health_of(&serving, XEON).1, 0, "no trip for one poison request");
+}
+
+/// A fault that only hits the *batched* path degrades to the naive
+/// per-request fallback: every request is still served, with outputs
+/// matching a direct single-request execution, and the breaker hears
+/// success (no quarantine) because requests were ultimately served.
+#[test]
+fn batch_faults_fall_back_to_naive_execution() {
+    let serving = pump_spine(resilient(3));
+    let (t, arts) = mlp_artifacts(&serving, &[XEON]);
+    let spine = serving.spine();
+    spine.fault_injector().push_rule(FaultRule {
+        device: None,
+        site: Some(FaultSite::Batch),
+        action: FaultAction::Fail,
+        rate: 1.0,
+        remaining: None, // every arena execution fails, forever
+    });
+
+    let handles = submit_n(&t, &arts[0], 4, 0.4);
+    spine.advance_clock_us(300);
+    assert_eq!(spine.drain_device(XEON), 4);
+    let x = vec![0.4f32; arts[0].input_len()];
+    let mut want = Vec::new();
+    arts[0].run_blocking(&x, &mut want).unwrap();
+    for (i, h) in handles.into_iter().enumerate() {
+        let out = h.wait().expect("naive rescue serves every request");
+        assert_eq!(out.batch_size, 1, "rescues run per-request");
+        assert_close(&out.output, &want, &format!("request {i}"));
+    }
+    let st = spine.stats();
+    assert!(st.retries >= 4, "each request walked the ladder");
+    assert_eq!(st.poison, 0);
+    let (health, trips, _) = health_of(&serving, XEON);
+    assert_eq!((health, trips), (DeviceHealth::Healthy, 0), "served requests keep it closed");
+}
+
+/// With *every* path failing (batch and naive), the ladder is bounded:
+/// each request resolves `Failed` after exhausting its retry budget —
+/// no infinite retry loops, no lost waiters.
+#[test]
+fn retry_budget_bounds_the_ladder() {
+    let serving = pump_spine(resilient(3));
+    let (t, arts) = mlp_artifacts(&serving, &[XEON]);
+    let spine = serving.spine();
+    spine.fault_injector().push_rule(FaultRule {
+        device: None,
+        site: None, // batch *and* naive: nothing can serve this device
+        action: FaultAction::Fail,
+        rate: 1.0,
+        remaining: None,
+    });
+
+    let handles = submit_n(&t, &arts[0], 4, 0.5);
+    spine.advance_clock_us(300);
+    assert_eq!(spine.drain_device(XEON), 4);
+    for h in handles {
+        let err = h.wait().unwrap_err();
+        assert!(matches!(err, AdmissionError::Failed { .. }), "bounded failure, got {err:?}");
+    }
+    let st = spine.stats();
+    let max_retries = SpineConfig::default().max_retries as u64;
+    assert!(st.retries > 0 && st.retries <= 4 * max_retries, "ladder bounded: {}", st.retries);
+    assert_eq!(st.poison, 4, "every request exhausted its last rung");
+    assert_eq!(st.queued, 0, "no waiter left behind");
+}
+
+// ---------------------------------------------------------------------
+// circuit breaker: trip, failover placement, recovery
+// ---------------------------------------------------------------------
+
+/// Consecutive dead batches trip the device's breaker; new submits fail
+/// over to the healthy same-family sibling; once the fault clears and
+/// the backoff elapses, a half-open probe restores the device.
+#[test]
+fn tripped_device_fails_over_and_recovers() {
+    let serving = two_device_serving(resilient(2));
+    let (t, arts) = mlp_artifacts(&serving, &[XEON, TITAN]);
+    let spine = serving.spine();
+    spine.fault_injector().push_rule(FaultRule {
+        device: Some(XEON),
+        site: None, // the whole device is dead: naive can't rescue either
+        action: FaultAction::Fail,
+        rate: 1.0,
+        remaining: None,
+    });
+
+    // two consecutive dead batches → quarantine
+    for wave in 0..2 {
+        let handles = submit_n(&t, &arts[0], 4, 0.2);
+        spine.advance_clock_us(300);
+        assert_eq!(spine.drain_one(XEON), 4, "wave {wave} resolves");
+        for h in handles {
+            h.wait().unwrap_err();
+        }
+    }
+    let (health, trips, _) = health_of(&serving, XEON);
+    assert_eq!((health, trips), (DeviceHealth::Quarantined, 1));
+
+    // submits against the tripped device re-route to the sibling
+    let failover_before = spine.stats().failover;
+    let handles = submit_n(&t, &arts[0], 4, 0.3);
+    assert!(spine.stats().failover >= failover_before + 4, "placement failed over");
+    spine.advance_clock_us(300);
+    assert_eq!(spine.drain_one(TITAN), 4);
+    for h in handles {
+        let out = h.wait().expect("failed-over requests are served");
+        assert_eq!(out.device, TITAN);
+    }
+
+    // fault clears, backoff elapses → a half-open probe heals the device
+    spine.fault_injector().clear_rules_for(XEON);
+    spine.advance_clock_us(1_500); // past probe_backoff_us
+    let handles = submit_n(&t, &arts[0], 1, 0.4);
+    spine.advance_clock_us(300);
+    assert_eq!(spine.drain_one(XEON), 1, "the probe batch runs (capped at 1)");
+    let out = handles.into_iter().next().unwrap().wait().expect("probe succeeds");
+    assert_eq!(out.device, XEON);
+    let (health, trips, probes) = health_of(&serving, XEON);
+    assert_eq!((health, trips, probes), (DeviceHealth::Healthy, 1, 1));
+
+    // and normal service resumes on the healed device
+    let handles = submit_n(&t, &arts[0], 4, 0.5);
+    spine.advance_clock_us(300);
+    assert_eq!(spine.drain_device(XEON), 4);
+    for h in handles {
+        assert_eq!(h.wait().unwrap().device, XEON);
+    }
+}
+
+/// Requests already *queued* on a device when it trips are not stranded:
+/// the next (non-forced) drain migrates them to the healthy sibling's
+/// queue and drains them there inline.
+#[test]
+fn queued_requests_migrate_off_a_tripped_device() {
+    let serving = two_device_serving(resilient(1));
+    let (t, arts) = mlp_artifacts(&serving, &[XEON, TITAN]);
+    let spine = serving.spine();
+    spine.fault_injector().push_rule(FaultRule {
+        device: Some(XEON),
+        site: None,
+        action: FaultAction::Fail,
+        rate: 1.0,
+        remaining: None,
+    });
+
+    // 8 queued; the first batch of 4 dies and trips the breaker
+    // (trip_after: 1), leaving 4 stranded on the quarantined queue
+    let handles = submit_n(&t, &arts[0], 8, 0.2);
+    spine.advance_clock_us(300);
+    assert_eq!(spine.drain_one(XEON), 4);
+    assert_eq!(health_of(&serving, XEON).0, DeviceHealth::Quarantined);
+    assert_eq!(spine.stats().queued, 4);
+
+    // the next pump migrates the stranded 4 to the Titan and serves them
+    match spine.pump(XEON) {
+        DrainOutcome::Completed(4) => {}
+        other => panic!("migration drain: want Completed(4), got {other:?}"),
+    }
+    for (i, h) in handles.into_iter().enumerate() {
+        if i < 4 {
+            h.wait().unwrap_err();
+        } else {
+            let out = h.wait().expect("migrated requests are served");
+            assert_eq!(out.device, TITAN, "request {i} ran on the sibling");
+        }
+    }
+    let st = spine.stats();
+    assert!(st.failover >= 4, "migration counts as failover");
+    assert_eq!(st.queued, 0, "nothing left stranded");
+}

@@ -200,8 +200,14 @@ fn non_arena_backends_cannot_load_spine_artifacts() {
     let (g, b) = extract_graph(&wl.module, &wl.input_shape, "mlp").unwrap();
     let t = serving.tenant("aurora");
     let err = t.load_artifact(&g, &b, DeviceId::AuroraVE10B).unwrap_err();
+    // typed as Unsupported — a *permanent* rejection callers must be
+    // able to tell apart from transient QueueFull/Failed conditions
     assert!(
-        matches!(&err, AdmissionError::Failed { reason } if reason.contains("arena")),
+        matches!(
+            &err,
+            AdmissionError::Unsupported { device: DeviceId::AuroraVE10B, reason }
+                if reason.contains("arena")
+        ),
         "{err}"
     );
 }

@@ -109,7 +109,10 @@ fn already_expired_deadlines_reject_at_submit() {
 /// sample, no tenant attribution.)
 #[test]
 fn failed_batches_are_counted_and_recorded() {
-    let serving = pump_spine(fifo(8, 4));
+    // max_retries: 0 disables the degradation ladder — this test pins
+    // the bare failure-accounting path (the resilience tests own the
+    // bisection/rescue behavior)
+    let serving = pump_spine(SpineConfig { max_retries: 0, ..fifo(8, 4) });
     let wl = &fixed_workloads()[2];
     let (g, b) = extract_graph(&wl.module, &wl.input_shape, "mlp").unwrap();
     let t = serving.tenant("faulty");
