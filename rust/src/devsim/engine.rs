@@ -67,16 +67,8 @@ impl SimEngine {
     }
 
     fn transfer_us(&self, bytes: usize, packed: bool) -> f64 {
-        if !self.spec.is_offload_device() {
-            return 0.0; // host-resident: transfers are no-ops
-        }
-        let latency = if packed {
-            // one descriptor for the whole packed segment
-            self.spec.link_latency_us * 0.25
-        } else {
-            self.spec.link_latency_us
-        };
-        latency + bytes as f64 / (self.spec.link_gbs * 1e9) * 1e6
+        // single source of truth shared with the shard placement engine
+        self.spec.link_transfer_us(bytes, packed)
     }
 
     /// Replay a schedule and account the timeline.

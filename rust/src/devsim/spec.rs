@@ -166,6 +166,25 @@ impl DeviceSpec {
     pub fn is_offload_device(&self) -> bool {
         self.link_gbs > 0.0
     }
+
+    /// Time to move `bytes` across this device's host link, µs.
+    ///
+    /// Host-resident devices (`link_gbs == 0`) transfer for free; offload
+    /// devices pay the per-call link latency (`packed` transfers amortize
+    /// it to a quarter — one descriptor for a whole segment, the VEO-udma
+    /// path of §IV-C) plus `bytes / link bandwidth`.  This is the single
+    /// source of truth for link pricing: the timeline simulator
+    /// ([`crate::devsim::SimEngine`]) and the shard placement engine
+    /// ([`crate::shard`]) both cost boundary transfers through it, so a
+    /// pipeline cut is priced exactly as the H2D/D2H steps it induces.
+    pub fn link_transfer_us(&self, bytes: usize, packed: bool) -> f64 {
+        if !self.is_offload_device() {
+            return 0.0;
+        }
+        let latency =
+            if packed { self.link_latency_us * 0.25 } else { self.link_latency_us };
+        latency + bytes as f64 / (self.link_gbs * 1e9) * 1e6
+    }
 }
 
 #[cfg(test)]
@@ -207,5 +226,19 @@ mod tests {
     fn cpu_is_host_resident() {
         assert!(!DeviceId::Xeon6126.spec().is_offload_device());
         assert!(DeviceId::AuroraVE10B.spec().is_offload_device());
+    }
+
+    #[test]
+    fn link_pricing_latency_plus_bandwidth() {
+        // host-resident: free at any size
+        assert_eq!(DeviceId::Xeon6126.spec().link_transfer_us(1 << 30, false), 0.0);
+        // Aurora: 10µs latency + 12 GB/s line rate
+        let a = DeviceId::AuroraVE10B.spec();
+        let bytes = 12_000_000usize; // exactly 1ms of line time at 12 GB/s
+        let t = a.link_transfer_us(bytes, false);
+        assert!((t - (10.0 + 1000.0)).abs() < 1e-9, "got {t}");
+        // packed transfers amortize the latency to a quarter
+        let p = a.link_transfer_us(bytes, true);
+        assert!((t - p - 7.5).abs() < 1e-9, "unpacked {t} vs packed {p}");
     }
 }

@@ -20,6 +20,10 @@
 //!   batch/device failures, asserting the resilience invariants (no
 //!   lost requests, breaker trips and recovers) and reporting the tail
 //!   cost of degradation (`sol chaos --json`, `BENCH_9.json`).
+//! * [`shardbench`] — the cross-device sharding driver: plans a
+//!   cost-driven placement over the registry, executes it staged, and
+//!   differentially checks the sharded output against the unsharded
+//!   reference (`sol shard --json`).
 //!
 //! These modules build *step lists*; the stepping itself is unified
 //! behind [`crate::session::Executor`] (`BaselineExecutor` /
@@ -32,6 +36,7 @@ pub mod chaosbench;
 pub mod fig3;
 pub mod kernelbench;
 pub mod servebench;
+pub mod shardbench;
 pub mod solrun;
 
 pub use baseline::{baseline_infer_steps, baseline_train_steps, BaselineKind};

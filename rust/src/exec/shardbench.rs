@@ -1,0 +1,209 @@
+//! `sol shard` — the cross-device sharding driver.
+//!
+//! Plans a placement for one workload over the requested (or full)
+//! backend registry via [`plan_shards`], and — for the fig3 CNN, where
+//! a real framework module with parameters exists — executes the
+//! sharded plan end to end and differentially checks it against the
+//! unsharded [`SolModel::forward`] reference under the audit tolerance
+//! ([`SHARD_TOLERANCE`]).  Model-zoo graphs ([`NetId`]) are planned and
+//! priced only (they have no parameter binding to execute with).
+//!
+//! The JSON document (`sol shard --json`) wraps the placement report
+//! ([`crate::shard::plan_json`]) with the run mode and the equivalence
+//! verdict; `rust/tests/cli_shard.rs` pins it as a golden file.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail};
+
+use crate::audit::TolerancePolicy;
+use crate::devsim::DeviceId;
+use crate::exec::kernelbench::fig3_cnn_module;
+use crate::framework::Tensor;
+use crate::frontend::{extract_graph, SolModel};
+use crate::session::Session;
+use crate::shard::{plan_json, plan_shards, ShardConfig, ShardPlan, ShardedExec};
+use crate::util::Json;
+use crate::workloads::NetId;
+use crate::Result;
+
+/// The sharded-vs-unsharded acceptance tolerance: the audit engine's
+/// floating-point regime (different kernel fusion across a stage
+/// boundary reassociates sums; bit-exactness is not the contract).
+pub const SHARD_TOLERANCE: TolerancePolicy = TolerancePolicy::new(1e-6, 1e-4, 4);
+
+/// Knobs of one `sol shard` run.
+#[derive(Debug, Clone)]
+pub struct ShardBenchConfig {
+    /// `"fig3"` (the paper CNN, executed + equivalence-checked) or a
+    /// model-zoo net name (planned and priced only).
+    pub net: String,
+    pub batch: usize,
+    /// Candidate devices; empty = every registered backend.
+    pub devices: Vec<DeviceId>,
+    /// Forced pipeline depth; `None` = auto-search 1..=4.
+    pub stages: Option<usize>,
+    /// CI tier marker (recorded in the JSON `mode` field).
+    pub smoke: bool,
+}
+
+impl ShardBenchConfig {
+    pub fn new(smoke: bool) -> ShardBenchConfig {
+        ShardBenchConfig { net: "fig3".into(), batch: 1, devices: Vec::new(), stages: None, smoke }
+    }
+}
+
+/// Element-wise comparison of the sharded output against the unsharded
+/// reference.
+#[derive(Debug, Clone)]
+pub struct Equivalence {
+    /// Output elements compared.
+    pub checked: usize,
+    pub max_abs: f64,
+    pub max_rel: f64,
+    /// Every element accepted by [`SHARD_TOLERANCE`].
+    pub ok: bool,
+}
+
+/// What one `sol shard` run produced.
+#[derive(Debug, Clone)]
+pub struct ShardOutcome {
+    pub plan: ShardPlan,
+    /// Present only for workloads with a parameter binding (fig3).
+    pub equivalence: Option<Equivalence>,
+}
+
+fn resolve_net(name: &str) -> Result<NetId> {
+    NetId::ALL
+        .iter()
+        .copied()
+        .find(|n| {
+            n.name() == name || n.name().replace(['.', '_'], "") == name.replace(['.', '_'], "")
+        })
+        .ok_or_else(|| anyhow!("unknown net '{name}' (use fig3 or a model-zoo name)"))
+}
+
+fn compare(sharded: &Tensor, reference: &Tensor, tol: &TolerancePolicy) -> Result<Equivalence> {
+    let a = sharded.to_f32()?;
+    let b = reference.to_f32()?;
+    if a.len() != b.len() {
+        bail!("sharded output has {} elements, reference {}", a.len(), b.len());
+    }
+    let mut max_abs = 0.0f64;
+    let mut max_rel = 0.0f64;
+    let mut ok = true;
+    for (&x, &y) in a.iter().zip(&b) {
+        let d = (x as f64 - y as f64).abs();
+        max_abs = max_abs.max(d);
+        let denom = (x as f64).abs().max((y as f64).abs());
+        if denom > 0.0 {
+            max_rel = max_rel.max(d / denom);
+        }
+        ok &= tol.accepts(x, y);
+    }
+    Ok(Equivalence { checked: a.len(), max_abs, max_rel, ok })
+}
+
+/// Plan (and, for fig3, execute + differentially check) one sharded
+/// placement in a fresh default session.
+pub fn run_shard(cfg: &ShardBenchConfig) -> Result<ShardOutcome> {
+    let session = Session::new();
+    let shard_cfg = ShardConfig {
+        devices: cfg.devices.clone(),
+        stages: cfg.stages,
+        ..ShardConfig::default()
+    };
+    let batch = cfg.batch.max(1);
+    if cfg.net == "fig3" || cfg.net == "fig3_cnn" {
+        let (module, mut shape) = fig3_cnn_module();
+        shape[0] = batch;
+        let (g, binding) = extract_graph(&module, &shape, "fig3_cnn")?;
+        let plan = plan_shards(&session, &g, &shard_cfg)?;
+        let exec = ShardedExec::build(&session, &plan, &binding)?;
+        let x = Tensor::randn(&shape, 0xB0B, 0.5);
+        let sharded = exec.forward(&x)?;
+        // the unsharded reference: the same module through the ordinary
+        // whole-graph injection path on the host backend
+        let reference =
+            SolModel::optimize_in(&session, &module, &shape, "fig3_cnn", DeviceId::Xeon6126)?
+                .forward(&x)?;
+        let eq = compare(&sharded, &reference, &SHARD_TOLERANCE)?;
+        Ok(ShardOutcome { plan, equivalence: Some(eq) })
+    } else {
+        let net = resolve_net(&cfg.net)?;
+        let g = net.build(batch);
+        let plan = plan_shards(&session, &g, &shard_cfg)?;
+        Ok(ShardOutcome { plan, equivalence: None })
+    }
+}
+
+/// The `sol shard --json` document: run mode + the placement report +
+/// the equivalence verdict (null for plan-only workloads).
+pub fn shard_json(cfg: &ShardBenchConfig, out: &ShardOutcome) -> Json {
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("shard".into()));
+    top.insert(
+        "mode".to_string(),
+        Json::Str(if cfg.smoke { "smoke" } else { "full" }.into()),
+    );
+    top.insert(
+        "devices".to_string(),
+        Json::Arr(cfg.devices.iter().map(|d| Json::Str(format!("{d:?}"))).collect()),
+    );
+    top.insert("plan".to_string(), plan_json(&out.plan));
+    match &out.equivalence {
+        Some(eq) => {
+            let mut o = BTreeMap::new();
+            o.insert("checked".to_string(), Json::Num(eq.checked as f64));
+            o.insert("max_abs".to_string(), Json::Num(eq.max_abs));
+            o.insert("max_rel".to_string(), Json::Num(eq.max_rel));
+            o.insert("ok".to_string(), Json::Bool(eq.ok));
+            top.insert("equivalence".to_string(), Json::Obj(o));
+        }
+        None => {
+            top.insert("equivalence".to_string(), Json::Null);
+        }
+    }
+    Json::Obj(top)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_smoke_plans_fits_and_matches_the_reference() {
+        let cfg = ShardBenchConfig {
+            devices: vec![DeviceId::Xeon6126, DeviceId::TitanV],
+            ..ShardBenchConfig::new(true)
+        };
+        let out = run_shard(&cfg).expect("shard fig3");
+        assert!(out.plan.memory_fits(), "every shard must fit its device");
+        assert!(
+            out.plan.beats_single || out.plan.reason.is_some(),
+            "a losing plan must explain itself"
+        );
+        let eq = out.equivalence.expect("fig3 runs the equivalence check");
+        assert!(eq.checked > 0);
+        assert!(eq.ok, "sharded diverges: max_abs {} max_rel {}", eq.max_abs, eq.max_rel);
+        let doc = shard_json(&cfg, &out);
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("shard"));
+        assert_eq!(doc.get("mode").and_then(Json::as_str), Some("smoke"));
+        assert_eq!(Json::parse(&doc.to_string()).unwrap(), doc);
+    }
+
+    #[test]
+    fn zoo_nets_plan_without_an_equivalence_run() {
+        let cfg = ShardBenchConfig {
+            net: "mlp".into(),
+            batch: 4,
+            devices: vec![DeviceId::Xeon6126, DeviceId::TitanV],
+            stages: Some(2),
+            smoke: true,
+        };
+        let out = run_shard(&cfg).expect("shard mlp");
+        assert_eq!(out.plan.stages.len(), 2);
+        assert!(out.equivalence.is_none());
+        assert_eq!(shard_json(&cfg, &out).get("equivalence"), Some(&Json::Null));
+    }
+}

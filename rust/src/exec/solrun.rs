@@ -18,9 +18,15 @@ pub enum OffloadMode {
 }
 
 /// One `sol.call`: a single host-side entry (not one dispatch per layer).
-const SOL_CALL_US: f64 = 3.0;
+/// Public because the shard placement engine prices each pipeline stage
+/// as one `sol.call` of its own.
+pub const SOL_CALL_US: f64 = 3.0;
 
-fn kernel_steps(model: &OptimizedModel) -> Vec<SimStep> {
+/// Kernel-only timeline of a compiled schedule (no dispatch, transfers or
+/// sync).  Shared with the shard placement engine, which prices each
+/// pipeline stage's compute through the same mapping and adds its own
+/// explicit boundary transfers.
+pub fn kernel_steps(model: &OptimizedModel) -> Vec<SimStep> {
     let mut steps = Vec::new();
     for s in &model.steps {
         match s {

@@ -51,6 +51,27 @@ impl Graph {
         &self.nodes[id]
     }
 
+    /// Add an input node with an explicit, caller-supplied meta.  The
+    /// shard partitioner uses this to materialize a pipeline-stage
+    /// boundary as the stage's input (the boundary tensor's meta is
+    /// copied verbatim from the producer node of the previous stage).
+    pub fn input_meta(&mut self, meta: TensorMeta) -> NodeId {
+        self.push(Op::Input, vec![], meta)
+    }
+
+    /// Append a node with an explicit op, input edges and output meta.
+    ///
+    /// The typed builders below infer metas and should be preferred for
+    /// hand-built graphs; this escape hatch exists for consumers that
+    /// *copy* nodes between graphs (the shard partitioner reconstructs
+    /// stage subgraphs from an already-inferred parent graph, so
+    /// re-running inference would be redundant).  The caller is
+    /// responsible for supplying a meta consistent with the op — edges
+    /// must still point backwards (asserted).
+    pub fn append(&mut self, op: Op, inputs: Vec<NodeId>, meta: TensorMeta) -> NodeId {
+        self.push(op, inputs, meta)
+    }
+
     /// Add an image input `[n, c, h, w]`.
     pub fn input_image(&mut self, n: usize, c: usize, h: usize, w: usize) -> NodeId {
         self.push(Op::Input, vec![], TensorMeta::image(n, c, h, w, Layout::Nchw))
@@ -211,25 +232,36 @@ impl Graph {
             .sum()
     }
 
+    /// Forward FLOPs of a single node (0 for inputs).  [`Graph::flops`]
+    /// is exactly the sum of this over all nodes — the shard partitioner
+    /// leans on that identity to place stage cuts at FLOP quantiles.
+    pub fn node_flops(&self, id: NodeId) -> usize {
+        let n = &self.nodes[id];
+        let inp = n.inputs.first().map(|&i| &self.nodes[i].meta);
+        inp.map_or(0, |m| n.op.flops(m, &n.meta))
+    }
+
+    /// Bytes the node's output tensor materializes in an unfused,
+    /// per-layer execution (0 for inputs, which the caller owns).
+    /// [`Graph::intermediate_bytes`] is the sum of this over all nodes.
+    pub fn node_bytes(&self, id: NodeId) -> usize {
+        let n = &self.nodes[id];
+        if matches!(n.op, Op::Input) {
+            0
+        } else {
+            n.meta.bytes()
+        }
+    }
+
     /// Total forward FLOPs.
     pub fn flops(&self) -> usize {
-        self.nodes
-            .iter()
-            .map(|n| {
-                let inp = n.inputs.first().map(|&i| &self.nodes[i].meta);
-                inp.map_or(0, |m| n.op.flops(m, &n.meta))
-            })
-            .sum()
+        (0..self.nodes.len()).map(|id| self.node_flops(id)).sum()
     }
 
     /// Sum of all intermediate tensor bytes (the traffic an unfused,
     /// per-layer execution materializes — the baseline's burden).
     pub fn intermediate_bytes(&self) -> usize {
-        self.nodes
-            .iter()
-            .filter(|n| !matches!(n.op, Op::Input))
-            .map(|n| n.meta.bytes())
-            .sum()
+        (0..self.nodes.len()).map(|id| self.node_bytes(id)).sum()
     }
 
     /// Number of non-input layers (the baseline's dispatch count).
@@ -448,6 +480,63 @@ mod tests {
             n.name = format!("n{}", n.id);
         }
         assert_eq!((a1, b1), renamed.structural_hashes());
+    }
+
+    #[test]
+    fn node_flops_sum_to_graph_flops() {
+        for g in [tiny_cnn(), {
+            let mut g = Graph::new("res");
+            let x = g.input_image(2, 8, 16, 16);
+            let c1 = g.conv(x, 8, 3, 1, 1, 1);
+            let b = g.batch_norm(c1);
+            let a = g.add(b, x);
+            let p = g.global_avg_pool(a);
+            let f = g.flatten(p);
+            g.linear(f, 10);
+            g
+        }] {
+            let per_node: usize = (0..g.nodes.len()).map(|id| g.node_flops(id)).sum();
+            assert_eq!(per_node, g.flops(), "{}: per-node flops must pin the total", g.name);
+            assert_eq!(g.node_flops(0), 0, "input nodes cost nothing");
+        }
+    }
+
+    #[test]
+    fn node_bytes_sum_to_intermediate_bytes() {
+        let g = tiny_cnn();
+        let per_node: usize = (0..g.nodes.len()).map(|id| g.node_bytes(id)).sum();
+        assert_eq!(per_node, g.intermediate_bytes());
+        assert_eq!(g.node_bytes(0), 0, "input tensors are caller-owned");
+        // a non-input node reports exactly its meta bytes
+        assert_eq!(g.node_bytes(1), g.nodes[1].meta.bytes());
+    }
+
+    #[test]
+    fn append_copies_nodes_faithfully() {
+        let src = tiny_cnn();
+        // rebuild the tail (relu onwards) as a stage graph fed by an
+        // explicit boundary input — the shard partitioner's move
+        let mut stage = Graph::new("tiny::tail");
+        let b = stage.input_meta(src.nodes[1].meta.clone());
+        let mut map = vec![usize::MAX; src.nodes.len()];
+        map[1] = b;
+        for n in &src.nodes[2..] {
+            let inputs: Vec<NodeId> = n.inputs.iter().map(|&i| map[i]).collect();
+            map[n.id] = stage.append(n.op.clone(), inputs, n.meta.clone());
+        }
+        assert_eq!(stage.nodes.len(), src.nodes.len() - 1);
+        assert_eq!(stage.node(stage.output()).meta.shape(), src.node(src.output()).meta.shape());
+        // stage flops == source flops minus the nodes left behind
+        let skipped: usize = (0..2).map(|id| src.node_flops(id)).sum();
+        assert_eq!(stage.flops(), src.flops() - skipped);
+    }
+
+    #[test]
+    #[should_panic(expected = "topo order")]
+    fn append_rejects_forward_edges() {
+        let mut g = Graph::new("bad");
+        let x = g.input_image(1, 3, 8, 8);
+        g.append(Op::ReLU, vec![x + 1], TensorMeta::image(1, 3, 8, 8, Layout::Nchw));
     }
 
     #[test]

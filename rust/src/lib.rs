@@ -60,6 +60,11 @@
 //!   testing of every backend × execution path against the framework
 //!   reference under per-op-class tolerance policies (`sol audit`, the
 //!   CI divergence gate).
+//! * [`shard`] — cross-device sharding: graphs cut into pipeline stages
+//!   at single-value frontiers, placed onto registered backends by
+//!   simulated-makespan cost under memory/capability constraints, and
+//!   executed stage-by-stage output-equivalent to the unsharded model
+//!   (`sol shard`).
 
 pub mod audit;
 pub mod backends;
@@ -75,6 +80,7 @@ pub mod metrics;
 pub mod passes;
 pub mod runtime;
 pub mod session;
+pub mod shard;
 pub mod util;
 pub mod workloads;
 

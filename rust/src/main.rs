@@ -23,6 +23,11 @@
 //!   kernel/batch/device failures under live traffic, asserting the
 //!   resilience invariants (no lost or double-resolved request, tripped
 //!   devices quarantine and recover); writes `BENCH_9.json`
+//! * `shard`     — cross-device sharding: cut a graph into pipeline
+//!   stages, place them over the registered backends by simulated
+//!   makespan under memory limits, and (fig3) execute the staged plan
+//!   checked against the unsharded reference (`--json` = the
+//!   machine-readable placement report)
 
 use std::collections::HashMap;
 
@@ -79,7 +84,11 @@ fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
     (flags, pos)
 }
 
-fn cmd_devices() {
+fn cmd_devices(flags: &HashMap<String, String>) {
+    if flags.contains_key("json") {
+        println!("{}", devices_json().to_string());
+        return;
+    }
     let rows: Vec<Vec<String>> = DeviceId::ALL
         .iter()
         .map(|d| {
@@ -103,6 +112,61 @@ fn cmd_devices() {
         )
     );
     print!("{}", backend_listing());
+}
+
+/// `sol devices --json`: every `DeviceSpec` (kind, capacity, peak
+/// FLOP/s, bandwidths) plus the registered backends with their
+/// capability sheets — the machine-readable form of the default table.
+fn devices_json() -> sol::util::Json {
+    use sol::util::Json;
+    use std::collections::BTreeMap;
+    let devices: Vec<Json> = DeviceId::ALL
+        .iter()
+        .map(|d| {
+            let s = d.spec();
+            let mut o = BTreeMap::new();
+            o.insert("id".to_string(), Json::Str(format!("{d:?}")));
+            o.insert("vendor".to_string(), Json::Str(s.vendor.into()));
+            o.insert("model".to_string(), Json::Str(s.model.into()));
+            o.insert("kind".to_string(), Json::Str(format!("{:?}", s.kind)));
+            o.insert("tflops".to_string(), Json::Num(s.tflops));
+            o.insert("bandwidth_gbs".to_string(), Json::Num(s.bandwidth_gbs));
+            o.insert("cores".to_string(), Json::Num(s.cores as f64));
+            o.insert("vector_lanes".to_string(), Json::Num(s.vector_lanes as f64));
+            o.insert("link_gbs".to_string(), Json::Num(s.link_gbs));
+            o.insert("link_latency_us".to_string(), Json::Num(s.link_latency_us));
+            o.insert("mem_bytes".to_string(), Json::Num(s.mem_bytes as f64));
+            Json::Obj(o)
+        })
+        .collect();
+    let backends: Vec<Json> = sol::backends::default_registry()
+        .iter()
+        .map(|b| {
+            let caps = b.capabilities();
+            let mut o = BTreeMap::new();
+            o.insert("name".to_string(), Json::Str(b.name().into()));
+            o.insert("device".to_string(), Json::Str(format!("{:?}", b.device())));
+            o.insert("flavor".to_string(), Json::Str(format!("{:?}", b.flavor())));
+            o.insert("slot".to_string(), Json::Str(format!("{:?}", b.framework_slot())));
+            o.insert("offload".to_string(), Json::Bool(caps.offload));
+            o.insert("arena_exec".to_string(), Json::Bool(caps.arena_exec));
+            o.insert("layout".to_string(), Json::Str(format!("{:?}", caps.preferred_layout)));
+            o.insert("vector_width".to_string(), Json::Num(caps.vector_width as f64));
+            o.insert(
+                "libraries".to_string(),
+                Json::Arr(b.libraries().iter().map(|l| Json::Str(l.name().into())).collect()),
+            );
+            o.insert(
+                "pipeline".to_string(),
+                Json::Arr(b.pipeline_names().iter().map(|p| Json::Str((*p).into())).collect()),
+            );
+            Json::Obj(o)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("devices".to_string(), Json::Arr(devices));
+    top.insert("backends".to_string(), Json::Arr(backends));
+    Json::Obj(top)
 }
 
 /// The registered-backend plugin listing: per backend, its device, DFP
@@ -569,6 +633,55 @@ fn cmd_chaos(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `sol shard` — cost-driven cross-device sharding: plan a placement
+/// over the requested devices (default: the whole registry), print it
+/// (or the `--json` report), and — for fig3 — run the staged plan and
+/// differentially check it against the unsharded reference (exit code 2
+/// on divergence, mirroring the audit gate).
+fn cmd_shard(flags: &HashMap<String, String>) -> Result<()> {
+    use sol::exec::shardbench::{run_shard, shard_json, ShardBenchConfig};
+    let mut cfg = ShardBenchConfig::new(flags.contains_key("smoke"));
+    if cfg.smoke {
+        // the CI tier: a fixed two-device registry keeps the search tiny
+        cfg.devices = vec![DeviceId::Xeon6126, DeviceId::TitanV];
+    }
+    if let Some(v) = flags.get("net") {
+        cfg.net = v.clone();
+    }
+    if let Some(v) = flags.get("batch") {
+        cfg.batch = v.parse()?;
+    }
+    if let Some(v) = flags.get("devices") {
+        cfg.devices = v
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| parse_device(s.trim()))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(v) = flags.get("stages") {
+        cfg.stages = Some(v.parse()?);
+    }
+    let out = run_shard(&cfg)?;
+    if flags.contains_key("json") {
+        println!("{}", shard_json(&cfg, &out).to_string());
+    } else {
+        print!("{}", sol::shard::render_plan(&out.plan));
+        if let Some(eq) = &out.equivalence {
+            println!(
+                "  equivalence vs unsharded reference: {} ({} elements, max_abs {:.2e}, max_rel {:.2e})",
+                if eq.ok { "OK" } else { "DIVERGED" },
+                eq.checked,
+                eq.max_abs,
+                eq.max_rel
+            );
+        }
+    }
+    if out.equivalence.as_ref().is_some_and(|e| !e.ok) {
+        std::process::exit(2);
+    }
+    Ok(())
+}
+
 fn cmd_effort() {
     // measured lines of code per component, like §VI-A
     let count = |dir: &str| -> usize {
@@ -602,7 +715,8 @@ fn cmd_effort() {
 }
 
 const HELP: &str = "sol — SOL middleware reproduction
-USAGE: sol <devices|optimize|kernels|fig3|train-mlp|deploy|serve|bench|serve-bench|audit|chaos|effort|help> [--flags]
+USAGE: sol <devices|optimize|kernels|fig3|train-mlp|deploy|serve|bench|serve-bench|audit|chaos|shard|effort|help> [--flags]
+  devices   [--json]   Table I + registered backends (machine-readable with --json)
   optimize  --net resnet18 --device cpu [--batch 1]
   kernels   --net resnet18 --device aurora [--count 2]
   fig3      [--training] [--calibrate]
@@ -617,7 +731,11 @@ USAGE: sol <devices|optimize|kernels|fig3|train-mlp|deploy|serve|bench|serve-ben
   audit     [--seeds 8] [--json] [--tol abs=A,rel=R,ulp=U]   cross-backend differential
             consistency sweep; exits 2 on any finding (the CI divergence gate)
   chaos     [--seeds 8] [--smoke] [--json] [--out BENCH_9.json]   fault-injection soak
-            for the serving spine; errors if any resilience invariant breaks";
+            for the serving spine; errors if any resilience invariant breaks
+  shard     [--net fig3|NAME] [--batch 1] [--devices cpu,titanv,...] [--stages N]
+            [--json] [--smoke]   cross-device sharding: cost-driven placement over
+            the registry; fig3 also runs the staged plan and exits 2 if it
+            diverges from the unsharded reference";
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -625,7 +743,7 @@ fn main() -> Result<()> {
     let rest: Vec<String> = args.iter().skip(1).cloned().collect();
     let (flags, _pos) = parse_flags(&rest);
     match cmd {
-        "devices" => cmd_devices(),
+        "devices" => cmd_devices(&flags),
         "optimize" => cmd_optimize(&flags)?,
         "kernels" => cmd_kernels(&flags)?,
         "fig3" => cmd_fig3(&flags)?,
@@ -637,6 +755,7 @@ fn main() -> Result<()> {
         "serve-bench" => cmd_serve_bench(&flags)?,
         "audit" => cmd_audit(&flags)?,
         "chaos" => cmd_chaos(&flags)?,
+        "shard" => cmd_shard(&flags)?,
         "effort" => cmd_effort(),
         _ => println!("{HELP}"),
     }

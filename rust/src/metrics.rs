@@ -45,6 +45,15 @@
 //! | `audit.variants`           | executed (device × path) variant runs across audit sweeps |
 //! | `audit.comparisons`        | pairwise output comparisons the audits performed |
 //! | `audit.findings`           | above-tolerance divergences recorded (0 on healthy backends) |
+//! | `shard.plans`              | sharded placements planned (`crate::shard::plan_shards`, cumulative) |
+//! | `shard.stages`             | pipeline depth of the last plan (gauge) |
+//! | `shard.replicas`           | data-parallel replica count of the last plan, summed over stages (gauge; 0 = no stage replicated) |
+//! | `shard.transfer_bytes`     | bytes crossing inter-stage boundaries in the last plan (gauge; host in/out edges excluded) |
+//! | `shard.makespan_us`        | simulated end-to-end estimate of the last plan, µs rounded (gauge) |
+//! | `shard.compile_hit`        | stage-artifact compiles served from the shared cache (whole-graph baseline compiles excluded) |
+//! | `shard.compile_miss`       | stage-artifact compiles that ran the full pipeline |
+//! | `shard.single_wins`        | plans where the best single device beat the (forced-depth) sharded estimate — the report carries the reason |
+//! | `shard.runs`               | end-to-end `ShardedExec::forward` executions |
 //!
 //! Per-tenant counters are registered on first `ServingSession::tenant()`
 //! call for that name and appear in [`counters_snapshot`] from then on —

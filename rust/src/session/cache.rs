@@ -105,6 +105,10 @@ struct Entry {
     /// Wall-clock of the compile that produced this artifact, ms
     /// (the `MinCompileCost` eviction score).
     cost_ms: f64,
+    /// Pipeline-stage artifact from the shard engine ([`crate::shard`]),
+    /// not a whole model.  Kept out of the "models resident" count so a
+    /// 4-stage plan does not read as 4 resident models in reports.
+    shard: bool,
 }
 
 #[derive(Debug, Default)]
@@ -126,6 +130,18 @@ pub struct CacheStats {
     pub evictions: u64,
     pub len: usize,
     pub capacity: usize,
+    /// Resident entries tagged as pipeline-stage shards
+    /// ([`CompileCache::tag_shard`]).  `len - shards` is the honest
+    /// "distinct models resident" figure: per-shard keys from one
+    /// sharded plan must not inflate it.
+    pub shards: usize,
+}
+
+impl CacheStats {
+    /// Resident whole-model artifacts (`len` minus shard-tagged entries).
+    pub fn models(&self) -> usize {
+        self.len - self.shards
+    }
 }
 
 /// Thread-safe content-addressed store of compiled models.
@@ -294,7 +310,9 @@ impl CompileCache {
             let inner = &mut *guard;
             inner.clock += 1;
             let last_used = inner.clock;
-            inner.map.insert(key, Entry { model: model.clone(), last_used, cost_ms });
+            inner
+                .map
+                .insert(key, Entry { model: model.clone(), last_used, cost_ms, shard: false });
             Self::enforce(inner, self.capacity.load(Ordering::Relaxed), self.policy())
         };
         if evicted > 0 {
@@ -306,6 +324,18 @@ impl CompileCache {
     /// Peek without compiling (no counter updates, no LRU touch).
     pub fn peek(&self, key: &CacheKey) -> Option<Arc<OptimizedModel>> {
         self.inner.lock().unwrap().map.get(key).map(|e| e.model.clone())
+    }
+
+    /// Mark a resident entry as a pipeline-stage shard artifact
+    /// ([`crate::shard`] tags every stage compile).  Shard entries stay
+    /// fully cached — hits, pinning and eviction behave identically —
+    /// but [`CompileCache::stats`] counts them separately so per-shard
+    /// keys never inflate the "models resident" figure.  A no-op for
+    /// keys not (or no longer) resident.
+    pub fn tag_shard(&self, key: &CacheKey) {
+        if let Some(e) = self.inner.lock().unwrap().map.get_mut(key) {
+            e.shard = true;
+        }
     }
 
     pub fn hits(&self) -> u64 {
@@ -338,6 +368,7 @@ impl CompileCache {
             evictions: inner.evictions,
             len: inner.map.len(),
             capacity: self.capacity.load(Ordering::Relaxed),
+            shards: inner.map.values().filter(|e| e.shard).count(),
         }
     }
 
@@ -510,6 +541,28 @@ mod tests {
         drop(cache.get_or_compile(k3, || compile_for(&g3)));
         assert!(cache.peek(&k1).is_some(), "expensive artifact kept under cost policy");
         assert!(cache.peek(&k2).is_none(), "cheapest artifact evicted under cost policy");
+    }
+
+    #[test]
+    fn shard_tagging_separates_models_from_shards() {
+        let cache = CompileCache::new();
+        let g1 = NetId::Mlp.build(1);
+        let g2 = NetId::Mlp.build(2);
+        let (k1, k2) = (key_for(&g1), key_for(&g2));
+        drop(cache.get_or_compile(k1, || compile_for(&g1)));
+        drop(cache.get_or_compile(k2, || compile_for(&g2)));
+        let s = cache.stats();
+        assert_eq!((s.len, s.shards, s.models()), (2, 0, 2));
+        cache.tag_shard(&k2);
+        let s = cache.stats();
+        assert_eq!((s.len, s.shards, s.models()), (2, 1, 1));
+        // tagging is idempotent and a hit keeps the flag
+        cache.tag_shard(&k2);
+        drop(cache.get_or_compile(k2, || panic!("must hit")));
+        assert_eq!(cache.stats().shards, 1);
+        // tagging a non-resident key is a no-op
+        cache.tag_shard(&key_for(&NetId::Mlp.build(4)));
+        assert_eq!(cache.stats().shards, 1);
     }
 
     #[test]

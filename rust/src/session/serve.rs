@@ -622,8 +622,14 @@ impl ServingSession {
             s.capacity.to_string()
         };
         out.push_str(&format!(
-            "cache: {}/{} resident, {} hits / {} misses / {} evictions\n",
-            s.len, cap, s.hits, s.misses, s.evictions
+            "cache: {}/{} resident ({} models + {} shards), {} hits / {} misses / {} evictions\n",
+            s.len,
+            cap,
+            s.models(),
+            s.shards,
+            s.hits,
+            s.misses,
+            s.evictions
         ));
         if let Some(spine) = self.spine.get() {
             let st = spine.stats();
@@ -667,11 +673,15 @@ impl ServingSession {
         // the process (the `arena.*` gauges are high-water marks across
         // every compile the tenants drove; `exec.allocs_per_run` is the
         // last measured run; `audit.*` are cumulative sweep totals — a
-        // nonzero `audit.findings` means some backend pair diverged)
+        // nonzero `audit.findings` means some backend pair diverged;
+        // `shard.*` describes the last sharded placement planned)
         let mem: Vec<String> = metrics::counters_snapshot()
             .into_iter()
             .filter(|(k, _)| {
-                k.starts_with("arena.") || k.starts_with("exec.") || k.starts_with("audit.")
+                k.starts_with("arena.")
+                    || k.starts_with("exec.")
+                    || k.starts_with("audit.")
+                    || k.starts_with("shard.")
             })
             .map(|(k, v)| format!("{k}={v}"))
             .collect();

@@ -1,0 +1,136 @@
+//! Staged execution of a [`ShardPlan`]: each stage runs on its
+//! assigned backend's execution path and hands its output tensor to the
+//! next stage.
+//!
+//! Arena-capable stages (host-CPU backends, `capabilities().arena_exec`)
+//! go through the zero-allocation [`ArenaExec`] fast path; everything
+//! else takes the naive per-layer interpreter ([`naive_forward`]) over
+//! the default kernel registry — the same two paths the unsharded
+//! `SolModel::forward` routes between, which is what makes the
+//! sharded-vs-unsharded equivalence check (`tests/shard.rs`) meaningful.
+//! Replicated stages slice the batch by rows, run each replica's slice,
+//! and concatenate the outputs in replica order.
+
+use anyhow::{bail, Context};
+
+use crate::framework::ops_fast::register_cpu_fast_kernels;
+use crate::framework::{install_default, OperatorRegistry, Tensor};
+use crate::frontend::extract::ParamBinding;
+use crate::frontend::{naive_forward, ArenaExec};
+use crate::ir::Graph;
+use crate::metrics;
+use crate::session::Session;
+use crate::Result;
+
+use super::partition::stage_binding;
+use super::{ReplicaPlan, ShardPlan};
+
+struct StageExec {
+    graph: Graph,
+    binding: ParamBinding,
+    kernels: OperatorRegistry,
+    /// Zero-allocation fast path (host-CPU stages without replicas).
+    arena: Option<ArenaExec>,
+    replicas: Vec<ReplicaPlan>,
+}
+
+/// End-to-end executor for a sharded placement.
+pub struct ShardedExec {
+    stages: Vec<StageExec>,
+}
+
+impl ShardedExec {
+    /// Assemble per-stage executors from a plan plus the *parent*
+    /// graph's parameter binding (stage bindings rebase onto stage node
+    /// ids; tensors share storage, so framework-side parameter updates
+    /// reach sharded execution exactly as they reach `SolModel`).
+    pub fn build(
+        session: &Session,
+        plan: &ShardPlan,
+        binding: &ParamBinding,
+    ) -> Result<ShardedExec> {
+        let mut stages = Vec::with_capacity(plan.stages.len());
+        for sp in &plan.stages {
+            let sb = stage_binding(binding, sp.start, sp.end);
+            let caps = session.registry().capabilities_for(sp.device);
+            let mut kernels = install_default();
+            let mut arena = None;
+            if caps.arena_exec {
+                register_cpu_fast_kernels(&mut kernels, 1);
+                if sp.replicas.is_empty() {
+                    // arena refusal (unsupported shape) falls back to the
+                    // naive path below, same as SolModel::forward
+                    arena = ArenaExec::build(&sp.graph, &sb, 1).ok();
+                }
+            }
+            stages.push(StageExec {
+                graph: sp.graph.clone(),
+                binding: sb,
+                kernels,
+                arena,
+                replicas: sp.replicas.clone(),
+            });
+        }
+        Ok(ShardedExec { stages })
+    }
+
+    pub fn stage_count(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Run the staged plan end to end.
+    pub fn forward(&self, input: &Tensor) -> Result<Tensor> {
+        metrics::counter("shard.runs").inc();
+        let mut x = input.clone();
+        for (i, st) in self.stages.iter().enumerate() {
+            x = st.run(&x).with_context(|| format!("shard stage {i}"))?;
+        }
+        Ok(x)
+    }
+}
+
+impl StageExec {
+    fn run(&self, x: &Tensor) -> Result<Tensor> {
+        if self.replicas.len() >= 2 {
+            return self.run_replicated(x);
+        }
+        if let Some(arena) = &self.arena {
+            let xv = x.to_f32()?;
+            let mut out = vec![0.0f32; arena.output_len()];
+            arena.run_into(None, &xv, &mut out)?;
+            return Ok(Tensor::from_f32(out, &arena.output_shape()));
+        }
+        naive_forward(&self.graph, &self.binding, x, &self.kernels)
+    }
+
+    /// Data-parallel execution: slice the batch by replica rows, run
+    /// each slice through the naive path, concatenate along rows.
+    fn run_replicated(&self, x: &Tensor) -> Result<Tensor> {
+        let rows: usize = self.replicas.iter().map(|r| r.rows).sum();
+        if x.shape.is_empty() || x.shape[0] != rows {
+            bail!(
+                "replicated stage expects {} rows, input shape {:?}",
+                rows,
+                x.shape
+            );
+        }
+        let data = x.to_f32()?;
+        let per_row = data.len() / rows;
+        let mut out_data: Vec<f32> = Vec::new();
+        let mut out_tail: Vec<usize> = Vec::new();
+        let mut offset = 0usize;
+        for rep in &self.replicas {
+            let chunk = &data[offset * per_row..(offset + rep.rows) * per_row];
+            let mut shape = x.shape.clone();
+            shape[0] = rep.rows;
+            let sub = Tensor::from_f32(chunk.to_vec(), &shape);
+            let y = naive_forward(&self.graph, &self.binding, &sub, &self.kernels)?;
+            out_tail = y.shape[1..].to_vec();
+            out_data.extend_from_slice(&y.to_f32()?);
+            offset += rep.rows;
+        }
+        let mut out_shape = vec![rows];
+        out_shape.extend_from_slice(&out_tail);
+        Ok(Tensor::from_f32(out_data, &out_shape))
+    }
+}

@@ -1,0 +1,172 @@
+//! Layer 9 — cross-device sharding and cost-driven placement.
+//!
+//! SOL's hardware abstraction layer treats every artifact as a
+//! whole-graph unit bound to one device.  This subsystem lifts that
+//! restriction: an [`crate::ir::Graph`] is cut into **pipeline stages**
+//! at single-value frontiers ([`partition`]), each stage is compiled
+//! through the existing [`crate::session::Session`] pipeline as its own
+//! artifact (per-shard [`crate::session::CacheKey`]s — a warm re-shard
+//! is all cache hits), and a **placement engine** ([`place`]) assigns
+//! stages to registered backends by minimizing the *simulated makespan*
+//! under per-device [`crate::devsim::DeviceMemory`] capacity and
+//! [`crate::backends::Capabilities`] constraints.
+//!
+//! Cuts are honestly priced: every stage boundary becomes an explicit
+//! [`TransferEdge`] costed from devsim link bandwidth
+//! ([`crate::devsim::DeviceSpec::link_transfer_us`] — the same formula
+//! the timeline simulator charges for H2D/D2H steps), so a plan can
+//! only beat the best single-device estimate by paying for the bytes it
+//! moves.  Batch-splittable stages may additionally be replicated
+//! data-parallel across devices ([`ReplicaPlan`]).
+//!
+//! [`exec::ShardedExec`] runs a plan end to end on the naive/arena
+//! paths and is verified output-equivalent to the unsharded
+//! `SolModel::forward` reference (audit tolerance, `tests/shard.rs`).
+//! The CLI surface is `sol shard [--devices a,b,...] [--stages N]
+//! [--json]`; plan-level `shard.*` metrics land in
+//! [`crate::session::serve::ServingSession::serving_report`].
+
+pub mod exec;
+pub mod partition;
+pub mod place;
+pub mod report;
+
+use crate::devsim::DeviceId;
+use crate::ir::Graph;
+use crate::session::CacheKey;
+
+pub use exec::ShardedExec;
+pub use place::plan_shards;
+pub use report::{plan_json, render_plan};
+
+/// What to shard and over which resources.
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    /// Candidate devices; empty = every device in the session registry.
+    pub devices: Vec<DeviceId>,
+    /// Requested pipeline depth; `None` searches 1..=4 and keeps the
+    /// cheapest (so auto mode never loses to the single-device plan).
+    pub stages: Option<usize>,
+    /// Uniform per-device capacity override in bytes (what-if analysis
+    /// and tests); `None` uses each device's `DeviceSpec::mem_bytes`.
+    pub mem_cap: Option<u64>,
+    /// Try data-parallel replication of the bottleneck stage when the
+    /// batch is splittable (>= 2 rows).
+    pub replicate: bool,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig { devices: Vec::new(), stages: None, mem_cap: None, replicate: true }
+    }
+}
+
+/// One data-parallel replica of a stage: `rows` of the batch run on
+/// `device`.  A stage with fewer than two replicas is not replicated.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplicaPlan {
+    pub device: DeviceId,
+    pub rows: usize,
+}
+
+/// One pipeline stage of a sharded plan.
+#[derive(Debug, Clone)]
+pub struct StagePlan {
+    pub index: usize,
+    /// Node range `[start, end)` in the parent graph.
+    pub start: usize,
+    pub end: usize,
+    /// The stage subgraph (stage > 0 begins with an explicit boundary
+    /// input carrying the producer's meta).
+    pub graph: Graph,
+    pub device: DeviceId,
+    /// Content address of the stage artifact in the session's
+    /// `CompileCache` (tagged as a shard there).
+    pub key: CacheKey,
+    /// Whether the stage compile hit the cache (a warm re-shard of the
+    /// same graph is all hits).
+    pub cache_hit: bool,
+    /// Simulated stage compute time (dispatch + kernels + sync), µs.
+    pub est_us: f64,
+    pub flops: usize,
+    pub param_bytes: usize,
+    /// Intermediate activation bytes the stage materializes.
+    pub activation_bytes: usize,
+    /// Bytes the fit-check allocated for this stage (params +
+    /// activations + input, 64-byte aligned regions).
+    pub mem_required: u64,
+    /// Capacity of the assigned device (after any `mem_cap` override).
+    pub mem_capacity: u64,
+    /// Data-parallel replicas (empty = the stage runs whole on `device`).
+    pub replicas: Vec<ReplicaPlan>,
+}
+
+/// One priced boundary: bytes crossing between stages (or between the
+/// host and the first/last stage) and the link time they cost.
+#[derive(Debug, Clone)]
+pub struct TransferEdge {
+    /// Producer stage; `None` = the host-side model input.
+    pub from_stage: Option<usize>,
+    /// Consumer stage; `None` = the host-side model output.
+    pub to_stage: Option<usize>,
+    pub bytes: usize,
+    /// D2H on the producer's link + H2D on the consumer's link, µs
+    /// (0 when both endpoints are host-resident or the same device).
+    pub us: f64,
+}
+
+/// The best whole-graph-on-one-device alternative the placement engine
+/// found, for the "did sharding pay?" comparison.
+#[derive(Debug, Clone)]
+pub struct SingleDeviceEstimate {
+    pub device: DeviceId,
+    pub est_us: f64,
+}
+
+/// A complete placement: stages, priced boundaries, and the
+/// single-device bound the plan is audited against.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// Name of the source graph.
+    pub net: String,
+    pub batch: usize,
+    /// Cut positions in the parent graph (stage i = `[cuts[i-1], cuts[i])`).
+    pub cuts: Vec<usize>,
+    pub stages: Vec<StagePlan>,
+    pub transfers: Vec<TransferEdge>,
+    /// Simulated single-request makespan: stage compute + every
+    /// boundary transfer, µs.
+    pub est_total_us: f64,
+    /// Best feasible single-device estimate (`None` when no single
+    /// device fits the whole model — sharding is then *required*).
+    pub single: Option<SingleDeviceEstimate>,
+    /// `est_total_us` <= the single-device estimate (always true when
+    /// the stage count was auto-searched, since depth 1 is a candidate).
+    pub beats_single: bool,
+    /// Why the plan does not beat the single-device estimate, when it
+    /// does not — or why no single device was feasible.
+    pub reason: Option<String>,
+}
+
+impl ShardPlan {
+    /// Total bytes crossing priced boundaries (inter-stage only, not
+    /// the host input/output edges).
+    pub fn boundary_bytes(&self) -> usize {
+        self.transfers
+            .iter()
+            .filter(|t| t.from_stage.is_some() && t.to_stage.is_some())
+            .map(|t| t.bytes)
+            .sum()
+    }
+
+    /// Total transfer time across every priced edge, µs.
+    pub fn transfer_us(&self) -> f64 {
+        self.transfers.iter().map(|t| t.us).sum()
+    }
+
+    /// Do all stages fit their assigned device's memory?  (Plans
+    /// returned by `plan_shards` always do — kept for report assertions.)
+    pub fn memory_fits(&self) -> bool {
+        self.stages.iter().all(|s| s.mem_required <= s.mem_capacity)
+    }
+}

@@ -1,0 +1,280 @@
+//! Graph partitioning: cutting an [`Graph`] into pipeline stages.
+//!
+//! A cut position `p` is **feasible** when exactly one value is live
+//! across it: every node before `p-1` has all consumers before `p`, so
+//! the only tensor crossing the boundary is node `p-1`'s output.  Stage
+//! subgraphs then need exactly one boundary input each, and a chain of
+//! per-stage executions reproduces the whole-graph result by
+//! construction.  Residual blocks are handled for free: a cut *inside*
+//! a block would have two live values and is simply not feasible.
+//!
+//! Cut *selection* is cost-driven: the partitioner places `n-1` cuts at
+//! cumulative-FLOP quantiles (each stage carries ~`1/n` of the work,
+//! the balance a pipeline wants), restricted to feasible positions,
+//! tie-broken toward the cheapest boundary (fewest bytes crossing).
+//! Every stage must contain at least one FLOP-carrying node so each
+//! shard compiles to a non-empty schedule.
+
+use crate::frontend::extract::ParamBinding;
+use crate::ir::{Graph, NodeId, Op};
+
+/// All feasible cut positions of `g`, ascending.  Position `p` splits
+/// the node list into `[0, p)` / `[p, len)`; `0` and `len` are not
+/// cuts.  Feasible means single-value frontier: only node `p-1`'s
+/// output crosses the boundary.
+pub fn feasible_cuts(g: &Graph) -> Vec<usize> {
+    let cons = g.consumers();
+    // max_consumer[j]: the furthest node consuming j (j itself if none)
+    let max_consumer: Vec<usize> =
+        (0..g.nodes.len()).map(|j| cons[j].iter().copied().max().unwrap_or(j)).collect();
+    (1..g.nodes.len())
+        .filter(|&p| (0..p - 1).all(|j| max_consumer[j] < p))
+        .collect()
+}
+
+/// FLOP prefix sums: `cum[p]` = total FLOPs of nodes `< p`
+/// (`cum[len]` = `g.flops()`).
+fn flop_prefix(g: &Graph) -> Vec<usize> {
+    let mut cum = Vec::with_capacity(g.nodes.len() + 1);
+    cum.push(0);
+    for id in 0..g.nodes.len() {
+        cum.push(cum[id] + g.node_flops(id));
+    }
+    cum
+}
+
+/// Choose up to `stages - 1` cut positions at cumulative-FLOP
+/// quantiles, restricted to feasible single-value frontiers, skipping
+/// any cut that would leave a zero-FLOP segment (every stage must
+/// compile to at least one kernel).  Returns fewer cuts than requested
+/// when the graph does not admit that many stages.
+pub fn choose_cuts(g: &Graph, stages: usize) -> Vec<usize> {
+    if stages <= 1 || g.nodes.len() < 2 {
+        return Vec::new();
+    }
+    let feas = feasible_cuts(g);
+    let cum = flop_prefix(g);
+    let total = cum[g.nodes.len()];
+    if total == 0 {
+        return Vec::new();
+    }
+    let mut cuts: Vec<usize> = Vec::new();
+    for i in 1..stages {
+        let target = total * i / stages;
+        let prev = cuts.last().copied().unwrap_or(0);
+        let best = feas
+            .iter()
+            .copied()
+            // segment [prev, p) and the remainder [p, len) must both
+            // carry FLOPs — zero-work shards cannot compile
+            .filter(|&p| p > prev && cum[p] > cum[prev] && cum[g.nodes.len()] > cum[p])
+            .min_by(|&a, &b| {
+                let da = cum[a].abs_diff(target);
+                let db = cum[b].abs_diff(target);
+                da.cmp(&db).then(g.node_bytes(a - 1).cmp(&g.node_bytes(b - 1)))
+            });
+        match best {
+            Some(p) => cuts.push(p),
+            None => break,
+        }
+    }
+    cuts.sort_unstable();
+    cuts.dedup();
+    cuts
+}
+
+/// Stage bounds `[(start, end)); ...]` for a cut list over `len` nodes.
+pub fn stage_bounds(cuts: &[usize], len: usize) -> Vec<(usize, usize)> {
+    let mut bounds = Vec::with_capacity(cuts.len() + 1);
+    let mut start = 0;
+    for &c in cuts {
+        bounds.push((start, c));
+        start = c;
+    }
+    bounds.push((start, len));
+    bounds
+}
+
+/// Build the subgraph for stage `[a, b)` of `g`.
+///
+/// Stage 0 copies its nodes verbatim (it contains the original input).
+/// Later stages start with an explicit boundary input carrying the
+/// producer node `a-1`'s meta; node ids rebase to `old - a + 1`.  The
+/// cut must be a single-value frontier (asserted): any edge from before
+/// `a-1` would make the subgraph ill-formed.
+pub fn stage_graph(g: &Graph, a: usize, b: usize) -> Graph {
+    let mut sg = Graph::new(format!("{}::stage{a}-{b}", g.name));
+    if a == 0 {
+        for n in &g.nodes[..b] {
+            sg.append(n.op.clone(), n.inputs.clone(), n.meta.clone());
+        }
+    } else {
+        let boundary = a - 1;
+        sg.input_meta(g.nodes[boundary].meta.clone());
+        for n in &g.nodes[a..b] {
+            let inputs: Vec<NodeId> = n
+                .inputs
+                .iter()
+                .map(|&i| {
+                    assert!(
+                        i == boundary || i >= a,
+                        "cut at {a} in '{}' is not a single-value frontier (node {} reads {})",
+                        g.name,
+                        n.id,
+                        i
+                    );
+                    if i == boundary {
+                        0
+                    } else {
+                        i - a + 1
+                    }
+                })
+                .collect();
+            sg.append(n.op.clone(), inputs, n.meta.clone());
+        }
+    }
+    sg
+}
+
+/// Rebase the parameter binding of stage `[a, b)` onto the stage
+/// graph's node ids (tensors share storage with the parent binding, so
+/// framework-side updates propagate into sharded execution too).
+pub fn stage_binding(binding: &ParamBinding, a: usize, b: usize) -> ParamBinding {
+    binding
+        .iter()
+        .filter(|(id, _)| *id >= a && *id < b)
+        .map(|(id, ps)| (if a == 0 { *id } else { *id - a + 1 }, ps.clone()))
+        .collect()
+}
+
+/// Can the batch be split across data-parallel replicas?  Every shipped
+/// op is row-independent at inference (BatchNorm is per-channel affine,
+/// Softmax is per-row), so splittability is purely a question of having
+/// rows to split.
+pub fn batch_splittable(g: &Graph) -> bool {
+    g.batch() >= 2 && g.nodes.iter().any(|n| matches!(n.op, Op::Input))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::NetId;
+
+    fn chain() -> Graph {
+        let mut g = Graph::new("chain");
+        let x = g.input_image(1, 3, 16, 16);
+        let c1 = g.conv(x, 8, 3, 1, 1, 1);
+        let r1 = g.relu(c1);
+        let c2 = g.conv(r1, 8, 3, 1, 1, 1);
+        let r2 = g.relu(c2);
+        let f = g.flatten(r2);
+        g.linear(f, 10);
+        g
+    }
+
+    fn residual() -> Graph {
+        let mut g = Graph::new("res");
+        let x = g.input_image(1, 8, 8, 8);
+        let c1 = g.conv(x, 8, 3, 1, 1, 1);
+        let r1 = g.relu(c1);
+        let c2 = g.conv(r1, 8, 3, 1, 1, 1);
+        let a = g.add(c2, r1); // r1 live across any cut inside the block
+        let f = g.flatten(a);
+        g.linear(f, 5);
+        g
+    }
+
+    #[test]
+    fn every_position_of_a_chain_is_feasible() {
+        let g = chain();
+        assert_eq!(feasible_cuts(&g), (1..g.nodes.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn residual_interior_cuts_are_infeasible() {
+        let g = residual();
+        let feas = feasible_cuts(&g);
+        // r1 (node 2) is consumed by the add (node 4): cutting at 3 or 4
+        // would leave two live values
+        assert!(!feas.contains(&3));
+        assert!(!feas.contains(&4));
+        // cutting right after the add is fine again
+        assert!(feas.contains(&5));
+    }
+
+    #[test]
+    fn chosen_cuts_balance_flops_and_are_feasible() {
+        let g = chain();
+        let cuts = choose_cuts(&g, 2);
+        assert_eq!(cuts.len(), 1);
+        let feas = feasible_cuts(&g);
+        assert!(feas.contains(&cuts[0]));
+        // the cut lands near the FLOP midpoint: both halves carry work
+        let bounds = stage_bounds(&cuts, g.nodes.len());
+        for (a, b) in bounds {
+            let flops: usize = (a..b).map(|id| g.node_flops(id)).sum();
+            assert!(flops > 0, "stage [{a},{b}) carries no work");
+        }
+    }
+
+    #[test]
+    fn requesting_more_stages_than_feasible_degrades_gracefully() {
+        let mut g = Graph::new("tiny");
+        let x = g.input_image(1, 3, 8, 8);
+        g.conv(x, 4, 3, 1, 1, 1);
+        // one compute node: no cut can leave work on both sides
+        assert!(choose_cuts(&g, 4).is_empty());
+    }
+
+    #[test]
+    fn stage_graphs_chain_shapes() {
+        let g = chain();
+        let cuts = choose_cuts(&g, 3);
+        let bounds = stage_bounds(&cuts, g.nodes.len());
+        assert_eq!(bounds.len(), cuts.len() + 1);
+        let mut prev_out = None;
+        for &(a, b) in &bounds {
+            let sg = stage_graph(&g, a, b);
+            if let Some(meta) = prev_out {
+                assert_eq!(sg.nodes[0].meta.shape(), meta, "boundary meta mismatch at {a}");
+            }
+            prev_out = Some(sg.node(sg.output()).meta.shape());
+        }
+        assert_eq!(prev_out.unwrap(), g.node(g.output()).meta.shape());
+    }
+
+    #[test]
+    fn stage_flops_partition_the_total() {
+        for net in [NetId::Squeezenet1_1, NetId::Resnet18] {
+            let g = net.build(1);
+            let cuts = choose_cuts(&g, 3);
+            let bounds = stage_bounds(&cuts, g.nodes.len());
+            let total: usize = bounds
+                .iter()
+                .map(|&(a, b)| (a..b).map(|id| g.node_flops(id)).sum::<usize>())
+                .sum();
+            assert_eq!(total, g.flops(), "{:?}: stages must partition the FLOPs", net);
+        }
+    }
+
+    #[test]
+    fn stage_binding_rebases_ids() {
+        use crate::framework::Tensor;
+        let binding: ParamBinding = vec![
+            (1, vec![("weight".into(), Tensor::zeros(&[4]))]),
+            (3, vec![("weight".into(), Tensor::zeros(&[4]))]),
+            (6, vec![("weight".into(), Tensor::zeros(&[4]))]),
+        ];
+        let head = stage_binding(&binding, 0, 4);
+        assert_eq!(head.iter().map(|(id, _)| *id).collect::<Vec<_>>(), vec![1, 3]);
+        let tail = stage_binding(&binding, 4, 7);
+        // node 6 rebases to 6 - 4 + 1 = 3 (slot 0 is the boundary input)
+        assert_eq!(tail.iter().map(|(id, _)| *id).collect::<Vec<_>>(), vec![3]);
+    }
+
+    #[test]
+    fn splittability_is_about_rows() {
+        assert!(!batch_splittable(&chain()));
+        assert!(batch_splittable(&NetId::Mlp.build(4)));
+    }
+}

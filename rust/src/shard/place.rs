@@ -1,0 +1,508 @@
+//! Cost-driven placement: assign pipeline stages to backends by
+//! minimizing simulated makespan under memory and capability limits.
+//!
+//! Every candidate `(stage, device)` pair is compiled through the
+//! session's pipeline (content-addressed per-shard artifacts — a warm
+//! re-plan is all cache hits) and priced on the device simulator:
+//! compute as `dispatch + kernels + sync` through
+//! [`SimEngine`], boundaries as explicit [`TransferEdge`]s through
+//! [`crate::devsim::DeviceSpec::link_transfer_us`] (D2H on the
+//! producer's link + H2D on the consumer's; free between host-resident
+//! endpoints or within one device).  The search enumerates device
+//! assignments exhaustively (the registry is small), checks fit with a
+//! real [`DeviceMemory`] per device, and keeps the cheapest feasible
+//! plan.  The whole-graph-on-one-device estimate uses the *same*
+//! pricing, so a 1-stage plan ties it exactly and the auto-depth search
+//! can never lose to it.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::bail;
+
+use crate::devsim::{DeviceId, DeviceMemory, SimEngine, SimStep};
+use crate::exec::solrun::{kernel_steps, SOL_CALL_US};
+use crate::ir::{Graph, Op};
+use crate::metrics;
+use crate::passes::OptimizedModel;
+use crate::session::{CacheKey, Session};
+use crate::Result;
+
+use super::partition::{batch_splittable, choose_cuts, stage_bounds, stage_graph};
+use super::{ReplicaPlan, ShardConfig, ShardPlan, SingleDeviceEstimate, StagePlan, TransferEdge};
+
+/// One compiled-and-priced `(stage, device)` candidate.
+#[derive(Clone)]
+struct StageArtifact {
+    graph: Graph,
+    model: Arc<OptimizedModel>,
+    key: CacheKey,
+    cache_hit: bool,
+    compute_us: f64,
+    flops: usize,
+    param_bytes: usize,
+    activation_bytes: usize,
+    input_bytes: usize,
+}
+
+/// Memoized stage compiler: one pipeline compile + one simulator run per
+/// distinct `(node range, device)`, shared across every assignment and
+/// stage-count candidate the search visits.
+struct Planner<'a> {
+    session: &'a Session,
+    g: &'a Graph,
+    memo: HashMap<(usize, usize, DeviceId), StageArtifact>,
+    shard_hits: u64,
+    shard_misses: u64,
+}
+
+impl<'a> Planner<'a> {
+    fn new(session: &'a Session, g: &'a Graph) -> Self {
+        Planner { session, g, memo: HashMap::new(), shard_hits: 0, shard_misses: 0 }
+    }
+
+    fn artifact(&mut self, a: usize, b: usize, dev: DeviceId) -> StageArtifact {
+        if let Some(art) = self.memo.get(&(a, b, dev)) {
+            return art.clone();
+        }
+        let sg = stage_graph(self.g, a, b);
+        let outcome = self.session.compile_traced(&sg, dev);
+        let full_range = a == 0 && b == self.g.nodes.len();
+        if !full_range {
+            // a stage artifact, not a whole model: keep it out of the
+            // "models resident" figure and attribute its hit/miss
+            self.session.cache().tag_shard(&outcome.key);
+            if outcome.cache_hit {
+                self.shard_hits += 1;
+            } else {
+                self.shard_misses += 1;
+            }
+        }
+        let compute_us = compute_us(self.session, &outcome.model, 1.0);
+        let art = StageArtifact {
+            flops: sg.flops(),
+            param_bytes: outcome.model.param_bytes,
+            activation_bytes: sg.intermediate_bytes(),
+            input_bytes: outcome.model.input_bytes,
+            compute_us,
+            key: outcome.key,
+            cache_hit: outcome.cache_hit,
+            model: outcome.model,
+            graph: sg,
+        };
+        self.memo.insert((a, b, dev), art.clone());
+        art
+    }
+}
+
+/// Simulated stage compute (one `sol.call` dispatch + the compiled
+/// kernel timeline + sync) on the artifact's device, µs.  `frac`
+/// scales kernel FLOPs/bytes for data-parallel replicas running a
+/// fraction of the batch.
+fn compute_us(session: &Session, model: &OptimizedModel, frac: f64) -> f64 {
+    let mut steps = vec![SimStep::Dispatch { us: SOL_CALL_US }];
+    for s in kernel_steps(model) {
+        match s {
+            SimStep::Kernel { class, flops, bytes, parallel_fraction } => {
+                steps.push(SimStep::Kernel {
+                    class,
+                    flops: (flops as f64 * frac).ceil() as usize,
+                    bytes: (bytes as f64 * frac).ceil() as usize,
+                    parallel_fraction,
+                });
+            }
+            other => steps.push(other),
+        }
+    }
+    steps.push(SimStep::Sync);
+    let spec = model.device.spec();
+    SimEngine::new(spec, session.eff().clone(), true).run(&steps).total_us
+}
+
+/// Link time for `bytes` moving from `from` to `to` (either end `None`
+/// = the host).  Same device or host↔host is free; distinct devices
+/// stage through the host: D2H on the producer's link + H2D on the
+/// consumer's.
+fn edge_us(from: Option<DeviceId>, to: Option<DeviceId>, bytes: usize) -> f64 {
+    if from == to {
+        return 0.0;
+    }
+    let mut us = 0.0;
+    if let Some(d) = from {
+        us += d.spec().link_transfer_us(bytes, false);
+    }
+    if let Some(d) = to {
+        us += d.spec().link_transfer_us(bytes, false);
+    }
+    us
+}
+
+/// A fully-priced candidate assignment.
+struct Candidate {
+    cuts: Vec<usize>,
+    bounds: Vec<(usize, usize)>,
+    assign: Vec<DeviceId>,
+    arts: Vec<StageArtifact>,
+    /// Per-stage bytes the fit-check allocated.
+    reqs: Vec<u64>,
+    edges: Vec<TransferEdge>,
+    total_us: f64,
+    /// Per-stage replica sets (empty = not replicated).
+    replicas: Vec<Vec<ReplicaPlan>>,
+    /// Per-stage estimated compute (max over replicas when replicated).
+    stage_us: Vec<f64>,
+}
+
+/// Host-side input bytes of the graph (its `Op::Input` meta).
+fn host_in_bytes(g: &Graph) -> usize {
+    g.nodes
+        .iter()
+        .find(|n| matches!(n.op, Op::Input))
+        .map(|n| n.meta.bytes())
+        .unwrap_or(0)
+}
+
+/// Price a chain assignment: stage compute + every boundary edge.
+fn chain_cost(
+    g: &Graph,
+    bounds: &[(usize, usize)],
+    assign: &[DeviceId],
+    arts: &[StageArtifact],
+) -> (f64, Vec<TransferEdge>) {
+    let s = bounds.len();
+    let in_bytes = host_in_bytes(g);
+    let out_bytes = g.node(g.output()).meta.bytes();
+    let mut edges = Vec::with_capacity(s + 1);
+    edges.push(TransferEdge {
+        from_stage: None,
+        to_stage: Some(0),
+        bytes: in_bytes,
+        us: edge_us(None, Some(assign[0]), in_bytes),
+    });
+    for i in 0..s - 1 {
+        let bytes = g.nodes[bounds[i].1 - 1].meta.bytes();
+        edges.push(TransferEdge {
+            from_stage: Some(i),
+            to_stage: Some(i + 1),
+            bytes,
+            us: edge_us(Some(assign[i]), Some(assign[i + 1]), bytes),
+        });
+    }
+    edges.push(TransferEdge {
+        from_stage: Some(s - 1),
+        to_stage: None,
+        bytes: out_bytes,
+        us: edge_us(Some(assign[s - 1]), None, out_bytes),
+    });
+    let total = arts.iter().map(|a| a.compute_us).sum::<f64>()
+        + edges.iter().map(|e| e.us).sum::<f64>();
+    (total, edges)
+}
+
+/// Fit-check an assignment with a real `DeviceMemory` per device:
+/// params + activations + input per stage, 64-byte aligned regions,
+/// summed across stages sharing a device.  Returns per-stage allocated
+/// bytes or the first OOM.
+fn fit(
+    assign: &[DeviceId],
+    arts: &[StageArtifact],
+    cap_of: &dyn Fn(DeviceId) -> u64,
+) -> std::result::Result<Vec<u64>, String> {
+    let mut mems: HashMap<DeviceId, DeviceMemory> = HashMap::new();
+    let mut reqs = Vec::with_capacity(assign.len());
+    for (i, (&dev, art)) in assign.iter().zip(arts).enumerate() {
+        let mem = mems.entry(dev).or_insert_with(|| DeviceMemory::new(cap_of(dev)));
+        let before = mem.used;
+        for sz in [art.param_bytes, art.activation_bytes, art.input_bytes] {
+            if sz > 0 {
+                mem.alloc(sz as u64).map_err(|e| format!("stage {i} on {dev:?}: {e}"))?;
+            }
+        }
+        reqs.push(mem.used - before);
+    }
+    Ok(reqs)
+}
+
+/// Partition, place and price `g` over the session's backends.
+///
+/// Deterministic: candidate partitions, assignments and tie-breaks are
+/// all enumerated in a fixed order, so the same graph + registry +
+/// config always yields the same plan (and, warm, the same per-shard
+/// cache hits).
+pub fn plan_shards(session: &Session, g: &Graph, cfg: &ShardConfig) -> Result<ShardPlan> {
+    if g.nodes.len() < 2 || g.flops() == 0 {
+        bail!("graph '{}' has no compute to shard", g.name);
+    }
+    let registered = session.registry().devices();
+    let mut devices: Vec<DeviceId> =
+        if cfg.devices.is_empty() { registered.clone() } else { cfg.devices.clone() };
+    let mut seen = std::collections::HashSet::new();
+    devices.retain(|d| seen.insert(*d));
+    if devices.is_empty() {
+        bail!("no candidate devices for sharding");
+    }
+    for d in &devices {
+        if !registered.contains(d) {
+            bail!("device {d:?} has no registered backend");
+        }
+        let spec = d.spec();
+        for n in &g.nodes {
+            if !spec.supports_dtype(n.meta.dtype) {
+                bail!("device {d:?} does not support {:?} (node '{}')", n.meta.dtype, n.name);
+            }
+        }
+    }
+    let mem_cap = cfg.mem_cap;
+    let cap_of = move |d: DeviceId| mem_cap.unwrap_or(d.spec().mem_bytes as u64);
+
+    let stage_counts: Vec<usize> = match cfg.stages {
+        Some(s) => vec![s.max(1)],
+        None => (1..=4).collect(),
+    };
+    let mut partitions: Vec<Vec<usize>> = Vec::new();
+    for s in stage_counts {
+        let cuts = choose_cuts(g, s);
+        if !partitions.contains(&cuts) {
+            partitions.push(cuts);
+        }
+    }
+
+    let mut planner = Planner::new(session, g);
+    let mut best: Option<Candidate> = None;
+    let mut last_oom = String::new();
+    for cuts in &partitions {
+        let bounds = stage_bounds(cuts, g.nodes.len());
+        let s = bounds.len();
+        let combos = (devices.len() as u64)
+            .checked_pow(s as u32)
+            .filter(|&c| c <= 250_000)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "placement search space too large: {} devices ^ {s} stages",
+                    devices.len()
+                )
+            })?;
+        for idx in 0..combos {
+            let mut rem = idx;
+            let assign: Vec<DeviceId> = (0..s)
+                .map(|_| {
+                    let d = devices[(rem % devices.len() as u64) as usize];
+                    rem /= devices.len() as u64;
+                    d
+                })
+                .collect();
+            let arts: Vec<StageArtifact> = bounds
+                .iter()
+                .zip(&assign)
+                .map(|(&(a, b), &d)| planner.artifact(a, b, d))
+                .collect();
+            let reqs = match fit(&assign, &arts, &cap_of) {
+                Ok(r) => r,
+                Err(e) => {
+                    last_oom = e;
+                    continue;
+                }
+            };
+            let (total_us, edges) = chain_cost(g, &bounds, &assign, &arts);
+            if best.as_ref().map_or(true, |b| total_us < b.total_us) {
+                let stage_us = arts.iter().map(|a| a.compute_us).collect();
+                best = Some(Candidate {
+                    cuts: cuts.clone(),
+                    bounds: bounds.clone(),
+                    assign,
+                    arts,
+                    reqs,
+                    edges,
+                    total_us,
+                    replicas: vec![Vec::new(); s],
+                    stage_us,
+                });
+            }
+        }
+    }
+    let mut best = best.ok_or_else(|| {
+        anyhow::anyhow!(
+            "no feasible placement for '{}' over {devices:?}: {last_oom}",
+            g.name
+        )
+    })?;
+
+    // the speed-of-light comparison: the whole graph on each single
+    // device, priced identically (compute + host in/out edges)
+    let len = g.nodes.len();
+    let single = devices
+        .iter()
+        .filter_map(|&d| {
+            let art = planner.artifact(0, len, d);
+            fit(&[d], std::slice::from_ref(&art), &cap_of).ok()?;
+            let (est_us, _) = chain_cost(g, &[(0, len)], &[d], std::slice::from_ref(&art));
+            Some(SingleDeviceEstimate { device: d, est_us })
+        })
+        .min_by(|a, b| a.est_us.partial_cmp(&b.est_us).unwrap_or(std::cmp::Ordering::Equal));
+
+    if cfg.replicate && batch_splittable(g) {
+        try_replicate(&mut planner, g, &mut best, &devices, &cap_of);
+    }
+
+    let beats_single = single.as_ref().map_or(true, |s| {
+        best.total_us <= s.est_us * (1.0 + 1e-9) + 1e-6
+    });
+    let reason = if single.is_none() {
+        Some(format!(
+            "no single device fits '{}' ({last_oom}); sharding is required",
+            g.name
+        ))
+    } else if !beats_single {
+        let s = single.as_ref().unwrap();
+        Some(format!(
+            "forced depth {}: sharded estimate {:.1}µs vs {:?} alone at {:.1}µs — \
+             boundary transfers outweigh the pipeline split at this size",
+            best.bounds.len(),
+            best.total_us,
+            s.device,
+            s.est_us
+        ))
+    } else {
+        None
+    };
+
+    let stages: Vec<StagePlan> = best
+        .bounds
+        .iter()
+        .enumerate()
+        .map(|(i, &(a, b))| StagePlan {
+            index: i,
+            start: a,
+            end: b,
+            graph: best.arts[i].graph.clone(),
+            device: best.assign[i],
+            key: best.arts[i].key,
+            cache_hit: best.arts[i].cache_hit,
+            est_us: best.stage_us[i],
+            flops: best.arts[i].flops,
+            param_bytes: best.arts[i].param_bytes,
+            activation_bytes: best.arts[i].activation_bytes,
+            mem_required: best.reqs[i],
+            mem_capacity: cap_of(best.assign[i]),
+            replicas: best.replicas[i].clone(),
+        })
+        .collect();
+
+    let plan = ShardPlan {
+        net: g.name.clone(),
+        batch: g.batch(),
+        cuts: best.cuts,
+        stages,
+        transfers: best.edges,
+        est_total_us: best.total_us,
+        single,
+        beats_single,
+        reason,
+    };
+
+    metrics::counter("shard.plans").inc();
+    metrics::counter("shard.stages").set(plan.stages.len() as u64);
+    metrics::counter("shard.replicas")
+        .set(plan.stages.iter().map(|s| s.replicas.len() as u64).sum());
+    metrics::counter("shard.transfer_bytes").set(plan.boundary_bytes() as u64);
+    metrics::counter("shard.makespan_us").set(plan.est_total_us.round() as u64);
+    metrics::counter("shard.compile_hit").add(planner.shard_hits);
+    metrics::counter("shard.compile_miss").add(planner.shard_misses);
+    if !plan.beats_single {
+        metrics::counter("shard.single_wins").inc();
+    }
+    Ok(plan)
+}
+
+/// Try splitting the bottleneck stage's batch across a second device.
+/// Accepts the replication only when the re-priced makespan improves
+/// and the replica fits its device alongside everything already there.
+fn try_replicate(
+    planner: &mut Planner<'_>,
+    g: &Graph,
+    cand: &mut Candidate,
+    devices: &[DeviceId],
+    cap_of: &dyn Fn(DeviceId) -> u64,
+) {
+    let batch = g.batch();
+    let s = cand.bounds.len();
+    let bi = match (0..s).max_by(|&a, &b| {
+        cand.arts[a]
+            .compute_us
+            .partial_cmp(&cand.arts[b].compute_us)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    }) {
+        Some(i) => i,
+        None => return,
+    };
+    let (a, b) = cand.bounds[bi];
+    let dev1 = cand.assign[bi];
+    let prev = if bi == 0 { None } else { Some(cand.assign[bi - 1]) };
+    let next = if bi == s - 1 { None } else { Some(cand.assign[bi + 1]) };
+    // edges[bi] feeds stage bi; edges[bi+1] drains it (chain_cost layout)
+    let in_bytes = cand.edges[bi].bytes;
+    let out_bytes = cand.edges[bi + 1].bytes;
+    let rows2 = batch / 2;
+    let rows1 = batch - rows2;
+    let (f1, f2) = (rows1 as f64 / batch as f64, rows2 as f64 / batch as f64);
+    let art1 = cand.arts[bi].clone();
+    let branch = |session: &Session, art: &StageArtifact, dev: DeviceId, frac: f64| {
+        compute_us(session, &art.model, frac)
+            + edge_us(prev, Some(dev), (in_bytes as f64 * frac) as usize)
+            + edge_us(Some(dev), next, (out_bytes as f64 * frac) as usize)
+    };
+    let base1 = branch(planner.session, &art1, dev1, f1);
+    let mut accepted: Option<(DeviceId, StageArtifact, f64, f64)> = None;
+    let mut best_total = cand.total_us;
+    for &dev2 in devices.iter().filter(|&&d| d != dev1) {
+        let art2 = planner.artifact(a, b, dev2);
+        // the replica must fit dev2 on top of the stages already there
+        let mut assign_plus = cand.assign.clone();
+        assign_plus.push(dev2);
+        let mut arts_plus = cand.arts.clone();
+        arts_plus.push(art2.clone());
+        if fit(&assign_plus, &arts_plus, cap_of).is_err() {
+            continue;
+        }
+        let base2 = branch(planner.session, &art2, dev2, f2);
+        let new_total = cand.total_us - art1.compute_us - cand.edges[bi].us
+            - cand.edges[bi + 1].us
+            + base1.max(base2);
+        if new_total < best_total {
+            best_total = new_total;
+            accepted = Some((dev2, art2, base1.max(base2), new_total));
+        }
+    }
+    if let Some((dev2, _art2, stage_est, new_total)) = accepted {
+        let b1_in = in_bytes * rows1 / batch;
+        let b1_out = out_bytes * rows1 / batch;
+        // replace the feed/drain edges with per-replica fractions
+        let from = cand.edges[bi].from_stage;
+        let to = cand.edges[bi + 1].to_stage;
+        let feed = |dev: DeviceId, bytes: usize| TransferEdge {
+            from_stage: from,
+            to_stage: Some(bi),
+            bytes,
+            us: edge_us(prev, Some(dev), bytes),
+        };
+        let drain = |dev: DeviceId, bytes: usize| TransferEdge {
+            from_stage: Some(bi),
+            to_stage: to,
+            bytes,
+            us: edge_us(Some(dev), next, bytes),
+        };
+        let new_feed2 = feed(dev2, in_bytes - b1_in);
+        let new_drain2 = drain(dev2, out_bytes - b1_out);
+        cand.edges[bi] = feed(dev1, b1_in);
+        cand.edges[bi + 1] = drain(dev1, b1_out);
+        // insert replica edges next to the ones they split
+        cand.edges.insert(bi + 1, new_feed2);
+        cand.edges.insert(bi + 3, new_drain2);
+        cand.replicas[bi] = vec![
+            ReplicaPlan { device: dev1, rows: rows1 },
+            ReplicaPlan { device: dev2, rows: rows2 },
+        ];
+        cand.stage_us[bi] = stage_est;
+        cand.total_us = new_total;
+    }
+}

@@ -1,0 +1,161 @@
+//! Machine- and human-readable renderings of a [`ShardPlan`].
+//!
+//! The JSON form is the `sol shard --json` contract (golden-tested in
+//! `tests/cli_shard.rs`): per-shard device, estimated µs, transfer
+//! bytes and memory fit, plus the single-device bound and the
+//! `beats_single` verdict — everything a deployment script needs to
+//! audit a placement without parsing tables.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::{ShardPlan, StagePlan, TransferEdge};
+
+fn num(v: f64) -> Json {
+    // round to 3 decimals so goldens stay readable and stable
+    Json::Num((v * 1000.0).round() / 1000.0)
+}
+
+fn stage_json(s: &StagePlan) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("index".into(), Json::Num(s.index as f64));
+    o.insert("device".into(), Json::Str(format!("{:?}", s.device)));
+    o.insert(
+        "nodes".into(),
+        Json::Arr(vec![Json::Num(s.start as f64), Json::Num(s.end as f64)]),
+    );
+    o.insert("est_us".into(), num(s.est_us));
+    o.insert("flops".into(), Json::Num(s.flops as f64));
+    o.insert("param_bytes".into(), Json::Num(s.param_bytes as f64));
+    o.insert("activation_bytes".into(), Json::Num(s.activation_bytes as f64));
+    o.insert("mem_required".into(), Json::Num(s.mem_required as f64));
+    o.insert("mem_capacity".into(), Json::Num(s.mem_capacity as f64));
+    o.insert("mem_fit".into(), Json::Bool(s.mem_required <= s.mem_capacity));
+    o.insert("cache_hit".into(), Json::Bool(s.cache_hit));
+    o.insert(
+        "replicas".into(),
+        Json::Arr(
+            s.replicas
+                .iter()
+                .map(|r| {
+                    let mut ro = BTreeMap::new();
+                    ro.insert("device".into(), Json::Str(format!("{:?}", r.device)));
+                    ro.insert("rows".into(), Json::Num(r.rows as f64));
+                    Json::Obj(ro)
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(o)
+}
+
+fn transfer_json(t: &TransferEdge) -> Json {
+    let mut o = BTreeMap::new();
+    let endpoint = |s: Option<usize>| match s {
+        Some(i) => Json::Num(i as f64),
+        None => Json::Str("host".into()),
+    };
+    o.insert("from".into(), endpoint(t.from_stage));
+    o.insert("to".into(), endpoint(t.to_stage));
+    o.insert("bytes".into(), Json::Num(t.bytes as f64));
+    o.insert("us".into(), num(t.us));
+    Json::Obj(o)
+}
+
+/// The machine-readable placement report.
+pub fn plan_json(plan: &ShardPlan) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("net".into(), Json::Str(plan.net.clone()));
+    o.insert("batch".into(), Json::Num(plan.batch as f64));
+    o.insert("stage_count".into(), Json::Num(plan.stages.len() as f64));
+    o.insert(
+        "cuts".into(),
+        Json::Arr(plan.cuts.iter().map(|&c| Json::Num(c as f64)).collect()),
+    );
+    o.insert("stages".into(), Json::Arr(plan.stages.iter().map(stage_json).collect()));
+    o.insert(
+        "transfers".into(),
+        Json::Arr(plan.transfers.iter().map(transfer_json).collect()),
+    );
+    o.insert("transfer_bytes".into(), Json::Num(plan.boundary_bytes() as f64));
+    o.insert("transfer_us".into(), num(plan.transfer_us()));
+    o.insert("est_total_us".into(), num(plan.est_total_us));
+    match &plan.single {
+        Some(s) => {
+            let mut so = BTreeMap::new();
+            so.insert("device".into(), Json::Str(format!("{:?}", s.device)));
+            so.insert("est_us".into(), num(s.est_us));
+            o.insert("single_device".into(), Json::Obj(so));
+        }
+        None => {
+            o.insert("single_device".into(), Json::Null);
+        }
+    }
+    o.insert("beats_single".into(), Json::Bool(plan.beats_single));
+    match &plan.reason {
+        Some(r) => o.insert("reason".into(), Json::Str(r.clone())),
+        None => o.insert("reason".into(), Json::Null),
+    };
+    Json::Obj(o)
+}
+
+/// Human-readable placement table (the default `sol shard` output).
+pub fn render_plan(plan: &ShardPlan) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "shard plan for '{}' (batch {}): {} stage(s), est {:.1}µs\n",
+        plan.net,
+        plan.batch,
+        plan.stages.len(),
+        plan.est_total_us
+    ));
+    for s in &plan.stages {
+        out.push_str(&format!(
+            "  stage {}: nodes [{:>3}, {:>3}) on {:<12?} est {:>9.1}µs  params {:>10} B  mem {:>10}/{} B{}\n",
+            s.index,
+            s.start,
+            s.end,
+            s.device,
+            s.est_us,
+            s.param_bytes,
+            s.mem_required,
+            s.mem_capacity,
+            if s.replicas.is_empty() {
+                String::new()
+            } else {
+                format!(
+                    "  replicas {}",
+                    s.replicas
+                        .iter()
+                        .map(|r| format!("{:?}x{}", r.device, r.rows))
+                        .collect::<Vec<_>>()
+                        .join("+")
+                )
+            }
+        ));
+    }
+    for t in &plan.transfers {
+        let ep = |s: Option<usize>| s.map_or("host".to_string(), |i| format!("stage {i}"));
+        out.push_str(&format!(
+            "  transfer {} -> {}: {} B, {:.1}µs\n",
+            ep(t.from_stage),
+            ep(t.to_stage),
+            t.bytes,
+            t.us
+        ));
+    }
+    match &plan.single {
+        Some(s) => out.push_str(&format!(
+            "  best single device: {:?} at {:.1}µs — sharded plan {}\n",
+            s.device,
+            s.est_us,
+            if plan.beats_single { "matches or beats it" } else { "loses to it" }
+        )),
+        None => out.push_str("  no single device fits the whole model\n"),
+    }
+    if let Some(r) = &plan.reason {
+        out.push_str(&format!("  note: {r}\n"));
+    }
+    out
+}

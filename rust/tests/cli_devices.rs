@@ -46,6 +46,38 @@ fn sol_devices_backend_listing_matches_golden() {
 }
 
 #[test]
+fn sol_devices_json_reports_every_spec_and_backend() {
+    use sol::devsim::DeviceId;
+    use sol::util::Json;
+    let out = Command::new(env!("CARGO_BIN_EXE_sol"))
+        .args(["devices", "--json"])
+        .output()
+        .expect("run sol devices --json");
+    assert!(out.status.success(), "sol devices --json failed: {out:?}");
+    let doc = Json::parse(&String::from_utf8(out.stdout).unwrap())
+        .expect("devices stdout parses as JSON");
+    let devices = doc.get("devices").and_then(Json::as_arr).expect("devices array");
+    assert_eq!(devices.len(), DeviceId::ALL.len(), "one entry per DeviceSpec");
+    for d in devices {
+        let id = d.get("id").and_then(Json::as_str).expect("device id");
+        assert!(d.get("kind").and_then(Json::as_str).is_some(), "{id}: kind");
+        assert!(d.get("tflops").and_then(Json::as_f64).unwrap() > 0.0, "{id}: peak FLOP/s");
+        assert!(d.get("bandwidth_gbs").and_then(Json::as_f64).unwrap() > 0.0, "{id}: bw");
+        assert!(d.get("mem_bytes").and_then(Json::as_f64).unwrap() > 0.0, "{id}: capacity");
+        assert!(d.get("link_gbs").is_some() && d.get("model").is_some(), "{id}: spec fields");
+    }
+    let backends = doc.get("backends").and_then(Json::as_arr).expect("backends array");
+    let registry = sol::backends::default_registry();
+    assert_eq!(backends.len(), registry.len(), "one entry per registered backend");
+    for b in backends {
+        assert!(b.get("name").and_then(Json::as_str).is_some());
+        assert!(b.get("device").and_then(Json::as_str).is_some());
+        assert!(b.get("arena_exec").is_some() && b.get("offload").is_some());
+        assert!(!b.get("pipeline").and_then(Json::as_arr).unwrap().is_empty());
+    }
+}
+
+#[test]
 fn sol_devices_lists_every_registered_backend_and_device() {
     // structural sanity independent of the golden text: every backend in
     // the default registry appears with its device and pipeline line

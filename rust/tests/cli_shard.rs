@@ -1,0 +1,130 @@
+//! CLI tests for `sol shard --json`: the machine-readable placement
+//! report is the deployment-facing contract (per-shard device, cost,
+//! transfer bytes, memory fit), so its shape and deterministic values
+//! must change deliberately.
+//!
+//! The golden pins the zoo-net planning path (fully deterministic: no
+//! execution, simulator-priced estimates only).  Comparison is over
+//! *parsed* JSON.  The first run writes the golden if it does not exist
+//! yet (commit it); after an intentional change re-bless with
+//! `BLESS=1 cargo test --test cli_shard`.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use sol::util::Json;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/sol_shard.json")
+}
+
+fn run_shard(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_sol"))
+        .arg("shard")
+        .args(args)
+        .output()
+        .expect("run sol shard")
+}
+
+/// The golden invocation: plan-only (no equivalence floats), forced
+/// depth, fixed two-device registry — every value is deterministic.
+const GOLDEN_ARGS: &[&str] =
+    &["--json", "--net", "mlp", "--batch", "4", "--devices", "cpu,titanv", "--stages", "2"];
+
+#[test]
+fn sol_shard_json_matches_golden() {
+    let out = run_shard(GOLDEN_ARGS);
+    assert!(out.status.success(), "sol shard failed: {out:?}");
+    let stdout = String::from_utf8(out.stdout).expect("utf8 stdout");
+    if std::env::var_os("BLESS").is_some() || !golden_path().exists() {
+        std::fs::write(golden_path(), &stdout).expect("bless golden");
+        return;
+    }
+    let got = Json::parse(&stdout).expect("shard stdout parses as JSON");
+    let want = Json::parse(&std::fs::read_to_string(golden_path()).expect("read golden"))
+        .expect("golden parses as JSON");
+    assert_eq!(
+        got, want,
+        "`sol shard {}` drifted from the golden report \
+         (rust/tests/golden/sol_shard.json) — re-bless with BLESS=1 if intentional",
+        GOLDEN_ARGS.join(" ")
+    );
+}
+
+#[test]
+fn sol_shard_json_has_the_placement_contract_shape() {
+    let out = run_shard(GOLDEN_ARGS);
+    assert!(out.status.success(), "sol shard failed: {out:?}");
+    let doc = Json::parse(&String::from_utf8(out.stdout).unwrap()).unwrap();
+    assert_eq!(doc.get("bench").and_then(Json::as_str), Some("shard"));
+    assert_eq!(doc.get("mode").and_then(Json::as_str), Some("full"));
+    // zoo nets are planned and priced, not executed
+    assert_eq!(doc.get("equivalence"), Some(&Json::Null));
+
+    let plan = doc.get("plan").expect("plan object");
+    let stages = plan.get("stages").and_then(Json::as_arr).expect("stages array");
+    assert_eq!(stages.len(), 2, "forced depth 2");
+    for (i, s) in stages.iter().enumerate() {
+        assert_eq!(s.get("index").and_then(Json::as_f64), Some(i as f64));
+        let dev = s.get("device").and_then(Json::as_str).expect("stage device");
+        assert!(
+            dev == "Xeon6126" || dev == "TitanV",
+            "stage {i} placed on unrequested device {dev}"
+        );
+        // every shard fits its device's memory capacity
+        assert_eq!(s.get("mem_fit"), Some(&Json::Bool(true)), "stage {i} must fit");
+        let req = s.get("mem_required").and_then(Json::as_f64).unwrap();
+        let cap = s.get("mem_capacity").and_then(Json::as_f64).unwrap();
+        assert!(req > 0.0 && req <= cap, "stage {i}: {req} B of {cap} B");
+        assert!(s.get("est_us").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(s.get("flops").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+
+    // boundaries are priced end to end, host feed to host drain
+    let transfers = plan.get("transfers").and_then(Json::as_arr).expect("transfers");
+    assert!(transfers.len() >= 3, "host-in, inter-stage and host-out edges");
+    assert_eq!(transfers.first().unwrap().get("from").and_then(Json::as_str), Some("host"));
+    assert_eq!(transfers.last().unwrap().get("to").and_then(Json::as_str), Some("host"));
+    for t in transfers {
+        assert!(t.get("bytes").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+
+    // the single-device bound is present, and a losing forced-depth plan
+    // must explain itself
+    let single = plan.get("single_device").expect("single_device");
+    assert!(single.get("est_us").and_then(Json::as_f64).unwrap() > 0.0);
+    let beats = match plan.get("beats_single") {
+        Some(Json::Bool(b)) => *b,
+        other => panic!("beats_single must be a bool, got {other:?}"),
+    };
+    if !beats {
+        assert!(
+            plan.get("reason").and_then(Json::as_str).is_some(),
+            "a losing plan must carry a reason"
+        );
+    }
+    assert!(plan.get("est_total_us").and_then(Json::as_f64).unwrap() > 0.0);
+}
+
+#[test]
+fn sol_shard_smoke_executes_fig3_and_verifies_equivalence() {
+    // the CI shard-smoke gate: plans fig3 over the fixed two-device
+    // registry, runs the staged plan, and exits 2 on divergence
+    let out = run_shard(&["--smoke", "--json"]);
+    assert!(out.status.success(), "sol shard --smoke failed: {out:?}");
+    let doc = Json::parse(&String::from_utf8(out.stdout).unwrap()).unwrap();
+    assert_eq!(doc.get("mode").and_then(Json::as_str), Some("smoke"));
+    let eq = doc.get("equivalence").expect("fig3 runs the equivalence check");
+    assert_eq!(eq.get("ok"), Some(&Json::Bool(true)), "sharded fig3 diverged: {doc:?}");
+    assert!(eq.get("checked").and_then(Json::as_f64).unwrap() > 0.0);
+    let stages = doc.get("plan").unwrap().get("stages").and_then(Json::as_arr).unwrap();
+    assert!(stages.iter().all(|s| s.get("mem_fit") == Some(&Json::Bool(true))));
+}
+
+#[test]
+fn sol_shard_rejects_unknown_devices_and_nets() {
+    let out = run_shard(&["--devices", "cpu,warp9"]);
+    assert!(!out.status.success(), "unknown device must fail");
+    let out = run_shard(&["--net", "not-a-net"]);
+    assert!(!out.status.success(), "unknown net must fail");
+}
